@@ -1,0 +1,134 @@
+# AOT pipeline (the single build-time Python step): lower every L2 entry
+# point to HLO *text* and write artifacts/<name>.hlo.txt + manifest.json.
+#
+# HLO text — NOT lowered.compile()/.serialize() — is the interchange
+# format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+# the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+# the text parser reassigns ids and round-trips cleanly. See
+# /opt/xla-example/README.md and gen_hlo.py.
+#
+# Every entry returns a TUPLE (return_tuple=True on the XlaComputation), so
+# the Rust side unwraps with `Literal::to_tuple`.
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _gemm_specs(m, n, k):
+    return [_spec((m, k)), _spec((k, n))]
+
+
+def _sparse_specs(m, n, k):
+    return [_spec((m, k // 2)), _spec((m, k // 2), I32), _spec((k, n))]
+
+
+def _transformer_specs(seq, d_model, d_ff):
+    return [
+        _spec((seq, d_model)),            # x
+        _spec((d_model, 3 * d_model)),    # wqkv
+        _spec((d_model, d_model)),        # wproj
+        _spec((d_model, d_ff)),           # w1
+        _spec((d_ff, d_model)),           # w2
+        _spec((d_model,)), _spec((d_model,)),   # ln1 gamma/beta
+        _spec((d_model,)), _spec((d_model,)),   # ln2 gamma/beta
+    ]
+
+
+# name -> (callable, [input specs]). Sizes are chosen so every Pallas block
+# divides evenly (see kernels/*.py) and artifacts stay small enough to
+# compile quickly on the CPU PJRT client.
+ENTRIES = {
+    # Microbenchmark GEMMs: one per precision the paper sweeps (Figs 2-3).
+    "gemm_fp8_128": (model.gemm_fp8, _gemm_specs(128, 128, 128)),
+    "gemm_fp8_256": (model.gemm_fp8, _gemm_specs(256, 256, 256)),
+    "gemm_fp8_512": (model.gemm_fp8, _gemm_specs(512, 512, 512)),
+    "gemm_bf8_256": (model.gemm_bf8, _gemm_specs(256, 256, 256)),
+    "gemm_fp8_bf8_256": (model.gemm_fp8_bf8, _gemm_specs(256, 256, 256)),
+    "gemm_f16_256": (model.gemm_f16, _gemm_specs(256, 256, 256)),
+    "gemm_bf16_256": (model.gemm_bf16, _gemm_specs(256, 256, 256)),
+    "gemm_f32_256": (model.gemm_f32, _gemm_specs(256, 256, 256)),
+    # Rectangular FP8 GEMM — the aspect-ratio experiments (Fig 3) and the
+    # rectangular sparsity win (512x2048x1024, §7.1.2).
+    "gemm_fp8_512x2048x1024": (model.gemm_fp8, _gemm_specs(512, 2048, 1024)),
+    # 2:4 structured sparsity (§7).
+    "gemm_sparse24_256": (model.gemm_sparse24, _sparse_specs(256, 256, 256)),
+    "gemm_sparse24_512": (model.gemm_sparse24, _sparse_specs(512, 512, 512)),
+    # Case studies (§8).
+    "transformer_block_128x256": (
+        functools.partial(model.transformer_block, n_heads=4),
+        _transformer_specs(128, 256, 1024)),
+    "mixed_chain_256": (model.mixed_chain,
+                        [_spec((256, 256))] * 4),  # x, w32, w16, w8
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str):
+    fn, specs = ENTRIES[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_avals = lowered.out_info
+    outs = jax.tree_util.tree_leaves(out_avals)
+    return text, specs, outs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower all L2 entry points")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or list(ENTRIES)
+    manifest = {"format": "hlo-text", "entries": []}
+
+    for name in names:
+        text, specs, outs = lower_entry(name)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["entries"].append({
+            "name": name,
+            "path": path,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                       for s in specs],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                        for o in outs],
+        })
+        print(f"lowered {name}: {len(text)} chars, "
+              f"{len(specs)} inputs -> {len(outs)} outputs")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['entries'])} entries "
+          f"to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+# L1: Pallas kernels for the paper's compute hot-spots (all interpret=True).
+from .attention import attention_pallas
+from .fp8_gemm import fp8_gemm_pallas, gemm_pallas
+from .sparse_gemm import sparse_gemm_pallas
+
+__all__ = [
+    "attention_pallas",
+    "fp8_gemm_pallas",
+    "gemm_pallas",
+    "sparse_gemm_pallas",
+]

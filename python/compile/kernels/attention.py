@@ -1,0 +1,45 @@
+# L1 Pallas kernel: per-head scaled dot-product attention.
+#
+# The transformer-style case study (paper §8.1) is a chain of FP8 GEMMs
+# with attention between QKV and the output projection. The attention tile
+# itself runs at higher precision (f32 softmax) — matching mixed-precision
+# practice where only the GEMMs drop to FP8.
+#
+# Grid: one program per head; q/k/v blocks live in VMEM for the whole head
+# (seq x d_head tiles are small at the AOT'd sizes). interpret=True as
+# everywhere (see fp8_gemm.py header).
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]                                   # (seq, d_head)
+    k = k_ref[0]
+    v = v_ref[0]
+    scale = 1.0 / np.sqrt(q.shape[-1]).astype(np.float32)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(w, v, preferred_element_type=jnp.float32)
+
+
+def attention_pallas(q: jnp.ndarray, k: jnp.ndarray,
+                     v: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head attention. q, k, v: (heads, seq, d_head) f32."""
+    heads, seq, d_head = q.shape
+    assert k.shape == q.shape and v.shape == q.shape
+    spec = pl.BlockSpec((1, seq, d_head), lambda h: (h, 0, 0))
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=(heads,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((heads, seq, d_head), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,129 @@
+# L1 Pallas kernel: FP8xFP8 GEMM with FP32 accumulation.
+#
+# CDNA3's FP8 MFMA consumes 16x16x32 wavefront tiles (paper Table 3); the
+# TPU re-expression (DESIGN.md §Hardware-Adaptation) keeps the same inner
+# block contract — fp8(E4M3/E5M2) operands, f32 accumulate — but expresses
+# the HBM->VMEM schedule with a Pallas grid + BlockSpec instead of
+# threadblock/LDS staging:
+#
+#   grid = (M/bm, N/bn, K/bk); each (i, j) output tile accumulates over the
+#   k axis in VMEM (the o_ref accumulation pattern), with operand tiles cast
+#   through the FP8 register format inside the kernel — exactly where the
+#   MFMA's operand conversion sits on CDNA3.
+#
+# interpret=True everywhere: real-TPU lowering emits a Mosaic custom call
+# the CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO so
+# the same artifact runs under the Rust PJRT runtime.
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FP8_DTYPE, FP8_MAX
+
+# Default block shape: an MXU-friendly multiple of the CDNA3 16x16x32 FP8
+# MFMA tile (8x8x2 tiles per block). Kept modest so VMEM footprint stays
+# well under budget at every size we AOT (see DESIGN.md §Perf).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 64
+
+
+def pick_block(dim: int, pref: int, multiple: int = 1) -> int:
+    """Largest divisor of `dim` that is <= pref and a multiple of `multiple`.
+
+    Keeps the Pallas grid exact when a dimension (e.g. 3*d_model = 192)
+    is not divisible by the preferred MXU-aligned block.
+    """
+    b = min(pref, dim)
+    while b > 1 and (dim % b != 0 or b % multiple != 0):
+        b -= multiple if b % multiple == 0 else 1
+    return max(b, multiple)
+
+
+def _fp8_gemm_kernel(a_ref, b_ref, o_ref, *, nk: int, a_fmt: str, b_fmt: str):
+    """One (bm, bn) output tile; k-step `pl.program_id(2)` of `nk`."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Operand conversion through the FP8 register format — the value the
+    # MFMA would actually see. Scales are folded outside the kernel
+    # (per-tensor symmetric), so the cast here is the full quantization.
+    a = a_ref[...].astype(FP8_DTYPE[a_fmt]).astype(jnp.float32)
+    b = b_ref[...].astype(FP8_DTYPE[b_fmt]).astype(jnp.float32)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def fp8_gemm_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                    a_fmt: str = "e4m3", b_fmt: str = "e4m3",
+                    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                    bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """FP8 GEMM: quantize a (M,K) and b (K,N) to FP8, multiply, f32 accum.
+
+    Per-tensor scales are computed in f32 outside the kernel and re-applied
+    to the product (scale_a * scale_b), matching `ref.fp8_gemm_ref`.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+
+    # Per-tensor symmetric scaling into the FP8 representable range.
+    sa = jnp.maximum(jnp.max(jnp.abs(a)), 1e-12) / FP8_MAX[a_fmt]
+    sb = jnp.maximum(jnp.max(jnp.abs(b)), 1e-12) / FP8_MAX[b_fmt]
+
+    nk = k // bk
+    kernel = functools.partial(_fp8_gemm_kernel, nk=nk, a_fmt=a_fmt,
+                               b_fmt=b_fmt)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a / sa, b / sb)
+    return out * (sa * sb)
+
+
+def gemm_pallas(a: jnp.ndarray, b: jnp.ndarray, dtype=jnp.float32,
+                bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """Dense GEMM at operand precision `dtype` with f32 accumulation.
+
+    The per-precision analogue of fp8_gemm_pallas used by the FP16/BF16/
+    FP32 microbenchmark entry points (paper Fig 2's non-FP8 curves).
+    """
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        av = a_ref[...].astype(dtype).astype(jnp.float32)
+        bv = b_ref[...].astype(dtype).astype(jnp.float32)
+        o_ref[...] += jnp.dot(av, bv, preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

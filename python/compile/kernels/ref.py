@@ -1,0 +1,179 @@
+# Pure-jnp correctness oracles for the Pallas kernels (L1).
+#
+# Every Pallas kernel in this package has an oracle here implementing the
+# same mathematical contract with plain jax.numpy ops. pytest (and the
+# hypothesis sweeps in python/tests/) assert allclose between kernel and
+# oracle; these oracles are also the source of the golden outputs the Rust
+# runtime integration tests compare against.
+#
+# The FP8 path mirrors CDNA3 MFMA semantics: FP8xFP8 operands with FP32
+# accumulation (paper §2 "FP8 Matrix Cores"). Quantization is per-tensor
+# symmetric scaling into the representable range of the target format.
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Max finite magnitudes of the two OCP FP8 formats the paper exercises
+# (E4M3 aka fp8, E5M2 aka bf8). See OCP OFP8 spec (paper ref [1]).
+FP8_MAX = {
+    "e4m3": 448.0,
+    "e5m2": 57344.0,
+}
+
+FP8_DTYPE = {
+    "e4m3": jnp.float8_e4m3fn,
+    "e5m2": jnp.float8_e5m2,
+}
+
+
+def fp8_scale(x: jnp.ndarray, fmt: str = "e4m3") -> jnp.ndarray:
+    """Per-tensor symmetric scale mapping x into the FP8 representable range."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    return amax / FP8_MAX[fmt]
+
+
+def quantize_fp8(x: jnp.ndarray, fmt: str = "e4m3") -> jnp.ndarray:
+    """Quantize-dequantize x through the given FP8 format (values only).
+
+    Returns an f32 tensor holding exactly the values an FP8 register file
+    would hold (scaled), i.e. the dequantized operand the MFMA consumes.
+    """
+    scale = fp8_scale(x, fmt)
+    q = (x / scale).astype(FP8_DTYPE[fmt])
+    return q.astype(jnp.float32) * scale
+
+
+def fp8_gemm_ref(a: jnp.ndarray, b: jnp.ndarray,
+                 a_fmt: str = "e4m3", b_fmt: str = "e4m3") -> jnp.ndarray:
+    """FP8xFP8 GEMM with FP32 accumulation (the MFMA contract)."""
+    aq = quantize_fp8(a, a_fmt)
+    bq = quantize_fp8(b, b_fmt)
+    return jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Dense GEMM at an arbitrary operand precision with FP32 accumulation."""
+    return jnp.dot(a.astype(dtype), b.astype(dtype),
+                   preferred_element_type=jnp.float32).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# 2:4 structured sparsity (paper §7)
+# ---------------------------------------------------------------------------
+
+def prune_2_4_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Zero the 2 smallest-|x| elements of every consecutive group of 4.
+
+    Operates along the last axis, which must be divisible by 4. Mirrors the
+    magnitude-based 2:4 pruning rule used by CDNA3/Ampere sparse tensor
+    pipelines (paper refs [13, 22]).
+    """
+    *lead, k = a.shape
+    assert k % 4 == 0, f"last dim {k} not divisible by 4"
+    g = a.reshape(*lead, k // 4, 4)
+    # Rank within each group by |x| descending; keep the top 2.
+    order = jnp.argsort(-jnp.abs(g), axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    mask = ranks < 2
+    return (g * mask).reshape(a.shape)
+
+
+def compress_2_4_ref(a: jnp.ndarray):
+    """Compress a 2:4-pruned matrix into (values, indices).
+
+    values: (..., k/2) — the two surviving elements per group, in ascending
+            position order (matches the metadata layout of sparse MFMA).
+    indices: (..., k/2) int32 in [0, 4) — position within the group.
+    """
+    *lead, k = a.shape
+    g = a.reshape(*lead, k // 4, 4)
+    nz = jnp.abs(g) > 0
+    # Positions sorted so that surviving lanes come first, stable by index.
+    # key = (zero?, position) ascending -> nonzeros first, in order.
+    pos = jnp.broadcast_to(jnp.arange(4), g.shape)
+    key = jnp.where(nz, pos, pos + 4)
+    order = jnp.argsort(key, axis=-1)[..., :2]
+    vals = jnp.take_along_axis(g, order, axis=-1)
+    idx = order.astype(jnp.int32)
+    return (vals.reshape(*lead, k // 2), idx.reshape(*lead, k // 2))
+
+
+def decompress_2_4_ref(vals: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of compress_2_4_ref: scatter (values, indices) back to dense."""
+    *lead, khalf = vals.shape
+    k = khalf * 2
+    vg = vals.reshape(*lead, khalf // 2, 2)
+    ig = idx.reshape(*lead, khalf // 2, 2)
+    dense = jnp.sum(
+        vg[..., None] * (ig[..., None] == jnp.arange(4)), axis=-2)
+    return dense.reshape(*lead, k)
+
+
+def sparse_gemm_ref(a_vals: jnp.ndarray, a_idx: jnp.ndarray,
+                    b: jnp.ndarray) -> jnp.ndarray:
+    """2:4 sparse (LHS) x dense GEMM with FP32 accumulation."""
+    a = decompress_2_4_ref(a_vals, a_idx)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention / transformer (paper §8.1 case study)
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Scaled dot-product attention per head. Shapes: (heads, seq, d_head)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(d).astype(np.float32)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", w, v)
+
+
+def layernorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return 0.5 * x * (1.0 + jnp.tanh(
+        np.sqrt(2.0 / np.pi).astype(np.float32)
+        * (x + 0.044715 * x ** 3)))
+
+
+def transformer_block_ref(x, wqkv, wproj, w1, w2, ln1_g, ln1_b, ln2_g, ln2_b,
+                          n_heads: int) -> jnp.ndarray:
+    """Pre-LN transformer block with FP8-quantized GEMMs (the paper's
+    'transformer-style FP8 inference kernel': a chain of FP8 GEMMs with
+    attention in between).
+
+    x: (seq, d_model); wqkv: (d_model, 3*d_model); wproj: (d_model, d_model);
+    w1: (d_model, d_ff); w2: (d_ff, d_model).
+    """
+    seq, d_model = x.shape
+    d_head = d_model // n_heads
+
+    h = layernorm_ref(x, ln1_g, ln1_b)
+    qkv = fp8_gemm_ref(h, wqkv)                      # (seq, 3*d_model)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(seq, n_heads, d_head).transpose(1, 0, 2)
+
+    attn = attention_ref(heads(q), heads(k), heads(v))
+    attn = attn.transpose(1, 0, 2).reshape(seq, d_model)
+    x = x + fp8_gemm_ref(attn, wproj)
+
+    h = layernorm_ref(x, ln2_g, ln2_b)
+    h = gelu_ref(fp8_gemm_ref(h, w1))
+    return x + fp8_gemm_ref(h, w2)
+
+
+def mixed_chain_ref(x, w32, w16, w8) -> jnp.ndarray:
+    """Mixed-precision operation chain (paper §8.3): FP32 -> FP16 -> FP8."""
+    h = gemm_ref(x, w32, jnp.float32)
+    h = gemm_ref(h, w16, jnp.float16)
+    return fp8_gemm_ref(h, w8)

@@ -1,0 +1,96 @@
+# L2: JAX compute graphs for the paper's workloads, calling the L1 Pallas
+# kernels. These are the functions aot.py lowers to HLO text; the Rust
+# coordinator executes the resulting artifacts via PJRT on its hot path.
+#
+# Entry points mirror the paper's three case-study kernels (§8):
+#   * per-precision GEMMs      — the microbenchmark compute (Figs 2-3)
+#   * sparse (2:4) GEMM        — §7's sparse path
+#   * transformer_block        — §8.1 transformer-style FP8 inference
+#   * mixed_chain              — §8.3 FP32 -> FP16 -> FP8 pipeline
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import (attention_pallas, fp8_gemm_pallas, gemm_pallas,
+                      sparse_gemm_pallas)
+from .kernels.ref import layernorm_ref as layernorm
+from .kernels.ref import gelu_ref as gelu
+
+# ---------------------------------------------------------------------------
+# GEMM entry points (one per precision the paper sweeps)
+# ---------------------------------------------------------------------------
+
+
+def gemm_fp8(a, b):
+    """FP8xFP8 GEMM, f32 accumulation (E4M3 operands)."""
+    return (fp8_gemm_pallas(a, b, "e4m3", "e4m3"),)
+
+
+def gemm_bf8(a, b):
+    """BF8xBF8 (E5M2) GEMM, f32 accumulation."""
+    return (fp8_gemm_pallas(a, b, "e5m2", "e5m2"),)
+
+
+def gemm_fp8_bf8(a, b):
+    """Mixed FP8xBF8 operands — the paper's Table 3 covers all 4 combos."""
+    return (fp8_gemm_pallas(a, b, "e4m3", "e5m2"),)
+
+
+def gemm_f16(a, b):
+    return (gemm_pallas(a, b, jnp.float16),)
+
+
+def gemm_bf16(a, b):
+    return (gemm_pallas(a, b, jnp.bfloat16),)
+
+
+def gemm_f32(a, b):
+    return (gemm_pallas(a, b, jnp.float32),)
+
+
+def gemm_sparse24(a_vals, a_idx, b):
+    """2:4 structured-sparse LHS x dense RHS."""
+    return (sparse_gemm_pallas(a_vals, a_idx.astype(jnp.int32), b),)
+
+
+# ---------------------------------------------------------------------------
+# Transformer-style FP8 inference kernel (paper §8.1)
+# ---------------------------------------------------------------------------
+
+
+def transformer_block(x, wqkv, wproj, w1, w2, ln1_g, ln1_b, ln2_g, ln2_b,
+                      n_heads: int = 4):
+    """Pre-LN transformer block; every GEMM is an FP8 Pallas kernel.
+
+    x: (seq, d_model). Weight shapes as in ref.transformer_block_ref.
+    """
+    seq, d_model = x.shape
+    d_head = d_model // n_heads
+
+    h = layernorm(x, ln1_g, ln1_b)
+    qkv = fp8_gemm_pallas(h, wqkv)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(seq, n_heads, d_head).transpose(1, 0, 2)
+
+    attn = attention_pallas(heads(q), heads(k), heads(v))
+    attn = attn.transpose(1, 0, 2).reshape(seq, d_model)
+    x = x + fp8_gemm_pallas(attn, wproj)
+
+    h = layernorm(x, ln2_g, ln2_b)
+    h = gelu(fp8_gemm_pallas(h, w1))
+    return (x + fp8_gemm_pallas(h, w2),)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision chain (paper §8.3)
+# ---------------------------------------------------------------------------
+
+
+def mixed_chain(x, w32, w16, w8):
+    """FP32 GEMM -> FP16 GEMM -> FP8 GEMM, matching ref.mixed_chain_ref."""
+    h = gemm_pallas(x, w32, jnp.float32)
+    h = gemm_pallas(h, w16, jnp.float16)
+    return (fp8_gemm_pallas(h, w8),)

@@ -1,0 +1,162 @@
+# pytest: Pallas kernels vs pure-jnp oracles — the CORE L1 correctness
+# signal. hypothesis sweeps shapes/dtypes/formats; every property asserts
+# allclose against ref.py.
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (attention_pallas, fp8_gemm_pallas, gemm_pallas,
+                             sparse_gemm_pallas)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# dims chosen to exercise block-edge cases: below/at/above the default
+# block shapes (128, 128, 64) while keeping interpret-mode runtimes sane.
+dims = st.sampled_from([32, 64, 128, 256])
+fp8_fmt = st.sampled_from(["e4m3", "e5m2"])
+
+
+class TestFp8Gemm:
+    @settings(**SETTINGS)
+    @given(m=dims, n=dims, k=dims, a_fmt=fp8_fmt, b_fmt=fp8_fmt,
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, n, k, a_fmt, b_fmt, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, m, k), _rand(rng, k, n)
+        out = fp8_gemm_pallas(a, b, a_fmt, b_fmt)
+        want = ref.fp8_gemm_ref(a, b, a_fmt, b_fmt)
+        assert_allclose(out, want, rtol=1e-4, atol=1e-3)
+
+    def test_fp8_quantization_actually_applied(self):
+        # FP8 GEMM must differ from exact f32 GEMM on generic data —
+        # otherwise the cast was optimized away.
+        rng = np.random.default_rng(7)
+        a, b = _rand(rng, 64, 64), _rand(rng, 64, 64)
+        fp8 = fp8_gemm_pallas(a, b)
+        exact = jnp.dot(a, b)
+        assert float(jnp.max(jnp.abs(fp8 - exact))) > 1e-3
+
+    def test_exact_on_fp8_grid(self):
+        # Powers of two within E4M3 range are exactly representable:
+        # quantization must be lossless and the result exact.
+        a = jnp.full((32, 32), 2.0, jnp.float32)
+        b = jnp.eye(32, dtype=jnp.float32) * 4.0
+        out = fp8_gemm_pallas(a, b)
+        assert_allclose(out, jnp.full((32, 32), 8.0), rtol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**16))
+    def test_block_shape_invariance(self, seed):
+        # Result must not depend on the BlockSpec tiling.
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, 128, 128), _rand(rng, 128, 128)
+        o1 = fp8_gemm_pallas(a, b, bm=128, bn=128, bk=128)
+        o2 = fp8_gemm_pallas(a, b, bm=32, bn=64, bk=32)
+        assert_allclose(o1, o2, rtol=1e-5, atol=1e-4)
+
+
+class TestDenseGemm:
+    @settings(**SETTINGS)
+    @given(m=dims, n=dims, k=dims,
+           dtype=st.sampled_from([jnp.float32, jnp.float16, jnp.bfloat16]),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, n, k, dtype, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, m, k), _rand(rng, k, n)
+        out = gemm_pallas(a, b, dtype)
+        want = ref.gemm_ref(a, b, dtype)
+        # Blocked k-accumulation reorders the f32 sum vs the oracle's
+        # single dot; allow a few ULP of headroom on top of dtype error.
+        assert_allclose(out, want, rtol=1e-4, atol=1e-3)
+
+    def test_f32_identity(self):
+        a = jnp.arange(64 * 64, dtype=jnp.float32).reshape(64, 64) / 100.0
+        out = gemm_pallas(a, jnp.eye(64, dtype=jnp.float32))
+        assert_allclose(out, a, rtol=1e-6)
+
+
+class TestSparse24:
+    @settings(**SETTINGS)
+    @given(m=dims, n=dims, k=dims, seed=st.integers(0, 2**16))
+    def test_kernel_matches_ref(self, m, n, k, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _rand(rng, m, k), _rand(rng, k, n)
+        pruned = ref.prune_2_4_ref(a)
+        vals, idx = ref.compress_2_4_ref(pruned)
+        out = sparse_gemm_pallas(vals, idx, b)
+        want = ref.sparse_gemm_ref(vals, idx, b)
+        assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    @settings(**SETTINGS)
+    @given(m=dims, k=dims, seed=st.integers(0, 2**16))
+    def test_prune_is_2_of_4(self, m, k, seed):
+        # Property: every consecutive group of 4 has <= 2 nonzeros and
+        # the survivors are the 2 largest magnitudes.
+        rng = np.random.default_rng(seed)
+        a = _rand(rng, m, k)
+        pruned = np.asarray(ref.prune_2_4_ref(a))
+        groups = pruned.reshape(m, k // 4, 4)
+        nnz = (np.abs(groups) > 0).sum(axis=-1)
+        assert (nnz <= 2).all()
+        # Survivor magnitudes >= dropped magnitudes within each group.
+        orig = np.asarray(a).reshape(m, k // 4, 4)
+        kept = np.abs(orig) * (np.abs(groups) > 0)
+        dropped = np.abs(orig) * (np.abs(groups) == 0)
+        assert (kept.min(axis=-1, where=kept > 0, initial=np.inf)
+                >= dropped.max(axis=-1) - 1e-6).all()
+
+    @settings(**SETTINGS)
+    @given(m=dims, k=dims, seed=st.integers(0, 2**16))
+    def test_compress_decompress_roundtrip(self, m, k, seed):
+        rng = np.random.default_rng(seed)
+        pruned = ref.prune_2_4_ref(_rand(rng, m, k))
+        vals, idx = ref.compress_2_4_ref(pruned)
+        assert vals.shape == (m, k // 2) and idx.shape == (m, k // 2)
+        assert int(jnp.min(idx)) >= 0 and int(jnp.max(idx)) < 4
+        back = ref.decompress_2_4_ref(vals, idx)
+        assert_allclose(back, pruned, rtol=0, atol=0)
+
+    def test_sparse_halves_flops_exactly(self):
+        # The compressed representation is exactly K/2 values per row.
+        a = ref.prune_2_4_ref(jnp.ones((8, 16), jnp.float32)
+                              * jnp.arange(16, dtype=jnp.float32))
+        vals, _ = ref.compress_2_4_ref(a)
+        assert vals.size == a.size // 2
+
+
+class TestAttention:
+    @settings(**SETTINGS)
+    @given(heads=st.sampled_from([1, 2, 4, 8]),
+           seq=st.sampled_from([16, 32, 64, 128]),
+           d_head=st.sampled_from([16, 32, 64]),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, heads, seq, d_head, seed):
+        rng = np.random.default_rng(seed)
+        q = _rand(rng, heads, seq, d_head)
+        k = _rand(rng, heads, seq, d_head)
+        v = _rand(rng, heads, seq, d_head)
+        assert_allclose(attention_pallas(q, k, v),
+                        ref.attention_ref(q, k, v), rtol=1e-5, atol=1e-5)
+
+    def test_softmax_rows_average_values(self):
+        # With identical K rows, attention weights are uniform, so the
+        # output is the mean of V rows.
+        heads, seq, d = 2, 8, 16
+        q = jnp.ones((heads, seq, d), jnp.float32)
+        k = jnp.ones((heads, seq, d), jnp.float32)
+        v = jnp.asarray(np.random.default_rng(3).normal(
+            size=(heads, seq, d)), jnp.float32)
+        out = attention_pallas(q, k, v)
+        assert_allclose(out, jnp.broadcast_to(
+            v.mean(axis=1, keepdims=True), v.shape), rtol=1e-5, atol=1e-6)

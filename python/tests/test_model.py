@@ -1,0 +1,117 @@
+# pytest: L2 model graphs vs oracles — shapes, numerics, composition.
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def _params(seq=64, d_model=128, d_ff=256, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def r(*shape, scale=0.1):
+        return jnp.asarray(rng.normal(scale=scale, size=shape), jnp.float32)
+
+    return dict(
+        x=r(seq, d_model, scale=1.0),
+        wqkv=r(d_model, 3 * d_model),
+        wproj=r(d_model, d_model),
+        w1=r(d_model, d_ff),
+        w2=r(d_ff, d_model),
+        ln1_g=jnp.ones((d_model,), jnp.float32),
+        ln1_b=jnp.zeros((d_model,), jnp.float32),
+        ln2_g=jnp.ones((d_model,), jnp.float32),
+        ln2_b=jnp.zeros((d_model,), jnp.float32),
+    )
+
+
+class TestTransformerBlock:
+    def test_matches_ref(self):
+        p = _params()
+        (out,) = model.transformer_block(n_heads=4, **p)
+        want = ref.transformer_block_ref(n_heads=4, **p)
+        assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+    def test_output_shape_and_dtype(self):
+        p = _params(seq=32, d_model=64, d_ff=128)
+        (out,) = model.transformer_block(n_heads=2, **p)
+        assert out.shape == (32, 64)
+        assert out.dtype == jnp.float32
+
+    def test_residual_path(self):
+        # With zero weights the block must be the identity (residuals only).
+        p = _params()
+        for k in ("wqkv", "wproj", "w1", "w2"):
+            p[k] = jnp.zeros_like(p[k])
+        (out,) = model.transformer_block(n_heads=4, **p)
+        assert_allclose(out, p["x"], rtol=1e-6)
+
+    @pytest.mark.parametrize("n_heads", [1, 2, 4])
+    def test_head_count_sweep(self, n_heads):
+        p = _params(seq=32, d_model=64, d_ff=128)
+        (out,) = model.transformer_block(n_heads=n_heads, **p)
+        want = ref.transformer_block_ref(n_heads=n_heads, **p)
+        assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+class TestMixedChain:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(1)
+
+        def r(*s):
+            return jnp.asarray(rng.normal(scale=0.1, size=s), jnp.float32)
+
+        x, w32, w16, w8 = r(64, 64), r(64, 64), r(64, 64), r(64, 64)
+        (out,) = model.mixed_chain(x, w32, w16, w8)
+        want = ref.mixed_chain_ref(x, w32, w16, w8)
+        assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+    def test_precision_ladder_degrades(self):
+        # The chain's error vs an all-f32 chain must be dominated by the
+        # FP8 stage (the coarsest format), not the FP16 stage.
+        rng = np.random.default_rng(2)
+
+        def r(*s):
+            return jnp.asarray(rng.normal(scale=0.5, size=s), jnp.float32)
+
+        x, w32, w16, w8 = r(64, 64), r(64, 64), r(64, 64), r(64, 64)
+        exact = x @ w32 @ w16 @ w8
+        (mixed,) = model.mixed_chain(x, w32, w16, w8)
+        # FP16-only chain for comparison.
+        f16 = ref.gemm_ref(ref.gemm_ref(x, w32, jnp.float16), w16,
+                           jnp.float16) @ w8
+        err_mixed = float(jnp.max(jnp.abs(mixed - exact)))
+        err_f16 = float(jnp.max(jnp.abs(f16 - exact)))
+        assert err_mixed > err_f16 * 0.5  # FP8 stage dominates
+
+
+class TestGemmEntries:
+    @pytest.mark.parametrize("fn,oracle", [
+        (model.gemm_fp8, lambda a, b: ref.fp8_gemm_ref(a, b)),
+        (model.gemm_bf8, lambda a, b: ref.fp8_gemm_ref(a, b, "e5m2", "e5m2")),
+        (model.gemm_fp8_bf8,
+         lambda a, b: ref.fp8_gemm_ref(a, b, "e4m3", "e5m2")),
+        (model.gemm_f16, lambda a, b: ref.gemm_ref(a, b, jnp.float16)),
+        (model.gemm_bf16, lambda a, b: ref.gemm_ref(a, b, jnp.bfloat16)),
+        (model.gemm_f32, lambda a, b: ref.gemm_ref(a, b, jnp.float32)),
+    ])
+    def test_entry_matches_oracle(self, fn, oracle):
+        rng = np.random.default_rng(3)
+        a = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        (out,) = fn(a, b)
+        assert_allclose(out, oracle(a, b), rtol=1e-4, atol=1e-3)
+
+    def test_sparse_entry(self):
+        rng = np.random.default_rng(4)
+        a = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        vals, idx = ref.compress_2_4_ref(ref.prune_2_4_ref(a))
+        (out,) = model.gemm_sparse24(vals, idx, b)
+        assert_allclose(out, ref.sparse_gemm_ref(vals, idx, b),
+                        rtol=1e-5, atol=1e-5)

@@ -1,0 +1,99 @@
+//! `cargo bench` — hot-path micro-benchmarks for the §Perf pass
+//! (EXPERIMENTS.md §Perf records before/after):
+//!
+//! * DES event loop (events/sec at 8 streams)
+//! * L2 cache simulator (accesses/sec)
+//! * metrics (fairness/overlap over large samples)
+//! * coordinator routing (decisions/sec)
+//! * 2:4 encode/decode throughput
+
+use mi300a_char::config::Config;
+use mi300a_char::coordinator::Router;
+use mi300a_char::hw::CacheSim;
+use mi300a_char::isa::Precision;
+use mi300a_char::metrics::{fairness, overlap_efficiency};
+use mi300a_char::sim::{ConcurrencyProfile, Engine, KernelDesc};
+use mi300a_char::sparsity::{compress_2_4, decompress_2_4, prune_2_4};
+use mi300a_char::util::bench::Bencher;
+
+fn main() {
+    let cfg = Config::mi300a();
+    let mut b = Bencher::new(2, 10);
+
+    // DES: 8 streams x 100 iterations (the Fig-4/5 workload).
+    let engine = Engine::new(&cfg, ConcurrencyProfile::ace());
+    let ks8 = vec![KernelDesc::gemm(512, Precision::F32).with_iters(100); 8];
+    let r = b.bench("des/8streams_100iters", || {
+        Bencher::black_box(engine.run(&ks8, 7).makespan_ns);
+    });
+    let events = 8.0 * 100.0 * 2.0;
+    println!(
+        "  -> ~{:.0} events/sec",
+        events / (r.mean_ns / 1e9)
+    );
+
+    // DES: fragmentation pair (Fig 9).
+    let pair = vec![
+        KernelDesc::gemm(2048, Precision::F32).with_iters(30),
+        KernelDesc::gemm(512, Precision::F32).with_iters(30),
+    ];
+    let engine_frag = Engine::new(&cfg, ConcurrencyProfile::fragmentation());
+    b.bench("des/fig9_pair", || {
+        Bencher::black_box(engine_frag.run(&pair, 9).makespan_ns);
+    });
+
+    // L2 cache simulator.
+    let mut cache = CacheSim::new(4 * 1024 * 1024, 16);
+    let mut addr = 0u64;
+    let r = b.bench("l2/cache_sim_100k_accesses", || {
+        for _ in 0..100_000 {
+            addr = addr.wrapping_mul(6364136223846793005).wrapping_add(1);
+            Bencher::black_box(cache.access(addr % (64 << 20), 0));
+        }
+    });
+    println!(
+        "  -> ~{:.1} M accesses/sec",
+        100_000.0 / (r.mean_ns / 1e9) / 1e6
+    );
+
+    // Metrics over large samples.
+    let samples: Vec<f64> = (0..10_000).map(|i| 1.0 + (i % 97) as f64).collect();
+    b.bench("metrics/fairness_10k", || {
+        Bencher::black_box(fairness(&samples));
+    });
+    let intervals: Vec<(f64, f64)> = (0..10_000)
+        .map(|i| (i as f64, i as f64 + 500.0))
+        .collect();
+    b.bench("metrics/overlap_10k_intervals", || {
+        Bencher::black_box(overlap_efficiency(&intervals));
+    });
+
+    // Router throughput.
+    let r = b.bench("coordinator/route_100k", || {
+        let mut router = Router::new(8, 8, 4);
+        let mut id = 0u64;
+        for _ in 0..100_000 {
+            if let Some(d) = router.submit(id) {
+                Bencher::black_box(d.ace);
+                router.complete(d.stream);
+            }
+            id += 1;
+        }
+    });
+    println!(
+        "  -> ~{:.2} M routing decisions/sec",
+        100_000.0 / (r.mean_ns / 1e9) / 1e6
+    );
+
+    // 2:4 encode/decode.
+    let mat: Vec<f32> = (0..512 * 512)
+        .map(|i| ((i * 2654435761usize % 1000) as f32 - 500.0) / 100.0)
+        .collect();
+    b.bench("sparsity/prune_compress_512x512", || {
+        let p = prune_2_4(&mat, 512, 512);
+        let c = compress_2_4(&p, 512, 512);
+        Bencher::black_box(decompress_2_4(&c).len());
+    });
+
+    println!("\n{}", b.markdown());
+}

@@ -1,0 +1,23 @@
+//! `cargo bench` — end-to-end benches, one per paper table/figure.
+//!
+//! Each bench regenerates its artifact through the same driver as
+//! `mi300a-char repro <id>` and reports the regeneration cost; the
+//! rows/series themselves are printed once at the end (markdown summary)
+//! so a bench run doubles as a full reproduction pass.
+
+use mi300a_char::config::Config;
+use mi300a_char::experiments::{run, ALL_IDS};
+use mi300a_char::util::bench::Bencher;
+
+fn main() {
+    let cfg = Config::mi300a();
+    let mut b = Bencher::new(1, 5);
+    println!("== paper experiment regeneration (one bench per table/figure) ==");
+    for id in ALL_IDS {
+        b.bench(&format!("repro/{id}"), || {
+            let r = run(id, &cfg).expect("known id");
+            Bencher::black_box(r.render().len());
+        });
+    }
+    println!("\n{}", b.markdown());
+}

@@ -1,0 +1,385 @@
+//! Configuration system: hardware topology, simulator calibration
+//! constants, and experiment parameters.
+//!
+//! Configs load from TOML (subset, see [`toml`]) or JSON files and can be
+//! overridden field-by-field from the CLI. `Config::default()` is the
+//! calibrated MI300A model (paper Table 1 topology + DESIGN.md §6
+//! calibration policy); every constant is documented with the paper
+//! artifact it anchors.
+
+pub mod toml;
+
+use crate::isa::Precision;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Declares a config struct whose fields can be read from / written to a
+/// JSON object (which the TOML loader also produces). Keeps the loader
+/// code in one place instead of 60 hand-written accessors.
+macro_rules! config_struct {
+    ($(#[$meta:meta])* pub struct $name:ident { $($(#[$fm:meta])* pub $field:ident : f64 = $default:expr,)* }) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, PartialEq)]
+        pub struct $name {
+            $($(#[$fm])* pub $field: f64,)*
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self { $($field: $default,)* }
+            }
+        }
+
+        impl $name {
+            /// Overlay fields present in a JSON object onto `self`.
+            pub fn apply_json(&mut self, v: &Json) {
+                $(if let Some(x) = v.get(stringify!($field)).and_then(|j| j.as_f64()) {
+                    self.$field = x;
+                })*
+            }
+
+            /// Dump all fields as a JSON object.
+            pub fn to_json(&self) -> Json {
+                Json::obj(vec![
+                    $((stringify!($field), Json::Num(self.$field)),)*
+                ])
+            }
+
+            /// Set one field by name (CLI `--set section.field=value`).
+            pub fn set_field(&mut self, name: &str, value: f64) -> bool {
+                match name {
+                    $(stringify!($field) => { self.$field = value; true })*
+                    _ => false,
+                }
+            }
+        }
+    };
+}
+
+config_struct! {
+    /// Physical topology of the modelled APU (paper §2, Fig 1, Table 1).
+    pub struct HardwareConfig {
+        /// GPU compute dies.
+        pub xcds: f64 = 6.0,
+        /// Compute units per XCD ("each XCD containing 40 compute units").
+        pub cus_per_xcd: f64 = 40.0,
+        /// MFMA matrix engines per CU.
+        pub mfma_per_cu: f64 = 4.0,
+        /// Local data share per CU, KiB.
+        pub lds_kib_per_cu: f64 = 64.0,
+        /// L2 cache per XCD, MiB.
+        pub l2_mib_per_xcd: f64 = 4.0,
+        /// Shared HBM3 capacity, GiB.
+        pub hbm_gib: f64 = 128.0,
+        /// Peak HBM bandwidth, TB/s.
+        pub hbm_tbps: f64 = 5.3,
+        /// Engine clock, GHz.
+        pub clock_ghz: f64 = 2.1,
+        /// Architectural max wavefronts resident per CU.
+        pub max_waves_per_cu: f64 = 32.0,
+        /// Hardware asynchronous compute engines (command processors).
+        pub n_aces: f64 = 8.0,
+    }
+}
+
+config_struct! {
+    /// Calibration constants for the execution-cost model (DESIGN.md §6).
+    ///
+    /// `issue_eff_*`: effective independent MFMA chains per wavefront in
+    /// the paper's Fig-2 microbenchmark (per-instruction interval =
+    /// Table-3 latency / issue_eff). Calibrated so the 256-wavefront
+    /// normalized throughput matches Fig 2 (FP8 13.7%, FP64 12.1%,
+    /// FP32 10.4%).
+    pub struct CalibConfig {
+        pub issue_eff_fp8: f64 = 1.576,
+        pub issue_eff_bf8: f64 = 1.55,
+        pub issue_eff_f16: f64 = 6.30,
+        pub issue_eff_bf16: f64 = 6.15,
+        pub issue_eff_f32: f64 = 0.955,
+        pub issue_eff_f64: f64 = 0.942,
+        /// Fraction of MFMA operand bytes streamed from HBM in the
+        /// microbenchmark (operands are mostly register/LDS resident);
+        /// produces the sublinear bend of Fig 2 at high wavefront counts.
+        pub mb_stream_fraction: f64 = 0.08,
+        /// Aspect-ratio sensitivity (Fig 3): relative throughput loss at
+        /// 4:1 vs 1:1 for FP8 (worst case, 16%) — other precisions scale
+        /// by their tile skew.
+        pub shape_penalty_fp8: f64 = 0.16,
+        pub shape_penalty_f32: f64 = 0.03,
+        /// GEMM block tile (square) used by the stream-level GEMM model.
+        pub gemm_block_tile: f64 = 128.0,
+        /// Latency-hiding half-point: wavefronts per CU at which memory
+        /// latency is half hidden (Fig 2 occupancy threshold behaviour).
+        pub hide_half_waves: f64 = 4.0,
+        /// Concurrency utilization boost exponent (Fig 4): aggregate
+        /// throughput ~ streams^boost until contention caps it.
+        pub conc_boost: f64 = 0.84,
+        /// Contention cap: effective machine share at saturation.
+        pub conc_sat_streams: f64 = 10.0,
+        /// Per-stream jitter (lognormal sigma) at 1 stream.
+        pub jitter_base: f64 = 0.015,
+        /// Additional jitter per unit of contention pressure (drives the
+        /// fairness collapse of Fig 5a at 8 streams).
+        pub jitter_contention: f64 = 0.062,
+        /// Precision-relative contention sensitivity (FP16 worst at 8
+        /// streams: fairness 0.016 vs FP8 0.138 — paper §6.1).
+        pub jitter_scale_f16: f64 = 1.22,
+        pub jitter_scale_f32: f64 = 1.13,
+        pub jitter_scale_fp8: f64 = 0.80,
+        /// L2 miss-ratio anchors (Fig 6, isolated): thin/medium/thick.
+        pub l2_miss_thin: f64 = 0.05,
+        pub l2_miss_medium: f64 = 0.15,
+        pub l2_miss_thick: f64 = 0.35,
+        /// Relative L2 miss growth per added concurrent stream (Fig 6:
+        /// thin kernels +24% relative at 4 streams).
+        pub l2_miss_stream_slope: f64 = 0.08,
+        /// L2 miss penalty in ns (exposed portion per missed line).
+        pub l2_miss_penalty_ns: f64 = 350.0,
+        /// LDS staging bytes per wavefront for the GEMM kernels, as a
+        /// multiple of the block-tile operand footprint (double buffer).
+        pub lds_double_buffer: f64 = 2.0,
+        /// Occupancy-fragmentation share exponent (Fig 9): CU share of a
+        /// kernel ~ wavefronts^gamma (proportional allocation, §6.3).
+        pub frag_share_gamma: f64 = 1.0,
+        /// Idle-resource exploitation: throughput bonus a large kernel
+        /// extracts when co-running with a much smaller one (Fig 9a).
+        pub frag_boost: f64 = 1.35,
+    }
+}
+
+config_struct! {
+    /// rocSPARSE-like API overhead model (paper §7.1.1, Fig 10).
+    pub struct SparsityConfig {
+        /// Dense->compressed format conversion, µs.
+        pub format_conversion_us: f64 = 2.0,
+        /// Metadata buffer allocation, µs.
+        pub metadata_alloc_us: f64 = 1.0,
+        /// Kernel dispatch through the sparse API, µs.
+        pub dispatch_us: f64 = 0.7,
+        /// Additional overhead when BOTH sides are sparse, µs
+        /// (second conversion + merged metadata; total 5.3-5.8 µs).
+        pub both_side_extra_us: f64 = 1.8,
+        /// Run-to-run overhead spread (uniform +- µs, Fig 10's
+        /// 3.5-3.9 µs band).
+        pub overhead_spread_us: f64 = 0.2,
+        /// Compute fraction retained by 2:4 sparsity (50% FLOPs) — the
+        /// hardware capability.
+        pub flop_fraction: f64 = 0.5,
+        /// FLOP fraction the rocSPARSE software path actually executes.
+        /// The paper's central sparsity finding is that this is ~1.0
+        /// ("sparsity is software-limited, not hardware-limited", §9.1):
+        /// the vendor path does dense-equivalent math plus overhead.
+        /// Custom kernels would set this toward `flop_fraction`.
+        pub realized_flop_fraction: f64 = 1.0,
+        /// Dense rocBLAS-path API/launch overhead per GEMM call, µs —
+        /// the common cost both dense and sparse paths pay. Calibrated
+        /// from the paper's own §7 baseline (59.98 GFLOPS at 512^3 =>
+        /// ms-scale per-call time, far above raw compute).
+        pub dense_api_launch_us: f64 = 4400.0,
+        /// Dense-path penalty on strongly rectangular shapes (the §7.1.2
+        /// exception: rocSPARSE's decompress path streams skewed shapes
+        /// better, so sparse wins 1.6-1.76x there).
+        pub rect_dense_penalty: f64 = 1.68,
+        /// Memory-traffic fraction of the sparse path (values halve, but
+        /// metadata adds 2 bits per element pair).
+        pub mem_fraction: f64 = 0.5625,
+        /// Throughput efficiency of the sparse pipeline relative to dense
+        /// at equal FLOPs (sparse MFMA issue overhead).
+        pub sparse_pipe_eff: f64 = 0.87,
+        /// Rectangular-shape overlap bonus (paper §7.1.2: 512x2048x1024
+        /// reaches 1.6-1.76x): fraction of overhead + memory hidden for
+        /// strongly non-square shapes.
+        pub rect_overlap_bonus: f64 = 0.72,
+    }
+}
+
+/// Top-level configuration bundle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub hw: HardwareConfig,
+    pub calib: CalibConfig,
+    pub sparsity: SparsityConfig,
+    /// Master RNG seed for all stochastic simulator elements.
+    pub seed: u64,
+}
+
+impl Config {
+    /// The calibrated MI300A model.
+    pub fn mi300a() -> Config {
+        Config::default()
+    }
+
+    /// Total compute units (240 on the paper's Fig-1 topology).
+    pub fn total_cus(&self) -> usize {
+        (self.hw.xcds * self.hw.cus_per_xcd) as usize
+    }
+
+    /// Total L2 bytes across XCDs.
+    pub fn l2_bytes(&self) -> f64 {
+        self.hw.xcds * self.hw.l2_mib_per_xcd * 1024.0 * 1024.0
+    }
+
+    /// LDS bytes per CU.
+    pub fn lds_bytes_per_cu(&self) -> f64 {
+        self.hw.lds_kib_per_cu * 1024.0
+    }
+
+    /// HBM bandwidth in bytes/ns (== GB/s * 1e-9 * 1e9).
+    pub fn hbm_bytes_per_ns(&self) -> f64 {
+        self.hw.hbm_tbps * 1e12 / 1e9
+    }
+
+    /// Load from a `.toml` or `.json` file and overlay onto defaults.
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let v = if path.extension().map(|e| e == "json").unwrap_or(false) {
+            Json::parse(&text).map_err(|e| e.to_string())?
+        } else {
+            toml::parse(&text).map_err(|e| e.to_string())?
+        };
+        let mut cfg = Config::default();
+        cfg.apply_json(&v);
+        Ok(cfg)
+    }
+
+    /// Overlay a JSON/TOML value tree onto this config.
+    pub fn apply_json(&mut self, v: &Json) {
+        if let Some(hw) = v.get("hardware") {
+            self.hw.apply_json(hw);
+        }
+        if let Some(c) = v.get("calibration") {
+            self.calib.apply_json(c);
+        }
+        if let Some(s) = v.get("sparsity") {
+            self.sparsity.apply_json(s);
+        }
+        if let Some(seed) = v.get("seed").and_then(|j| j.as_f64()) {
+            self.seed = seed as u64;
+        }
+    }
+
+    /// Apply a `section.field=value` override (CLI `--set`).
+    pub fn set(&mut self, spec: &str) -> Result<(), String> {
+        let (path, val) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("--set wants section.field=value, got {spec:?}"))?;
+        if path == "seed" {
+            self.seed = val.parse().map_err(|_| format!("bad seed {val:?}"))?;
+            return Ok(());
+        }
+        let value: f64 = val.parse().map_err(|_| format!("bad value {val:?}"))?;
+        let (section, field) = path
+            .split_once('.')
+            .ok_or_else(|| format!("--set wants section.field=value, got {spec:?}"))?;
+        let ok = match section {
+            "hardware" | "hw" => self.hw.set_field(field, value),
+            "calibration" | "calib" => self.calib.set_field(field, value),
+            "sparsity" => self.sparsity.set_field(field, value),
+            _ => false,
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(format!("unknown config field {path:?}"))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hardware", self.hw.to_json()),
+            ("calibration", self.calib.to_json()),
+            ("sparsity", self.sparsity.to_json()),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    /// issue_eff lookup per precision (see CalibConfig docs).
+    pub fn issue_eff(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Fp8 => self.calib.issue_eff_fp8,
+            Precision::Bf8 => self.calib.issue_eff_bf8,
+            Precision::F16 => self.calib.issue_eff_f16,
+            Precision::Bf16 => self.calib.issue_eff_bf16,
+            Precision::F32 => self.calib.issue_eff_f32,
+            Precision::F64 => self.calib.issue_eff_f64,
+        }
+    }
+
+    /// Precision-relative contention-jitter scale (paper §6.1: FP16
+    /// degrades worst at 8 streams, FP8 least).
+    pub fn jitter_scale(&self, p: Precision) -> f64 {
+        match p {
+            Precision::F16 | Precision::Bf16 => self.calib.jitter_scale_f16,
+            Precision::F32 | Precision::F64 => self.calib.jitter_scale_f32,
+            Precision::Fp8 | Precision::Bf8 => self.calib.jitter_scale_fp8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_topology_matches_paper() {
+        let c = Config::mi300a();
+        assert_eq!(c.total_cus(), 240); // 6 XCDs x 40 CUs (paper Fig 1)
+        assert_eq!(c.hw.mfma_per_cu, 4.0);
+        assert_eq!(c.l2_bytes(), 6.0 * 4.0 * 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let src = r#"
+seed = 99
+[hardware]
+xcds = 2
+cus_per_xcd = 10
+[calibration]
+issue_eff_fp8 = 2.0
+[sparsity]
+dispatch_us = 1.5
+"#;
+        let v = toml::parse(src).unwrap();
+        let mut c = Config::default();
+        c.apply_json(&v);
+        assert_eq!(c.total_cus(), 20);
+        assert_eq!(c.seed, 99);
+        assert_eq!(c.calib.issue_eff_fp8, 2.0);
+        assert_eq!(c.sparsity.dispatch_us, 1.5);
+        // Untouched fields keep defaults.
+        assert_eq!(c.hw.mfma_per_cu, 4.0);
+    }
+
+    #[test]
+    fn set_override() {
+        let mut c = Config::default();
+        c.set("hardware.xcds=3").unwrap();
+        c.set("calib.jitter_base=0.5").unwrap();
+        c.set("seed=7").unwrap();
+        assert_eq!(c.hw.xcds, 3.0);
+        assert_eq!(c.calib.jitter_base, 0.5);
+        assert_eq!(c.seed, 7);
+        assert!(c.set("nope.x=1").is_err());
+        assert!(c.set("hardware.nope=1").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = Config::default();
+        let j = c.to_json();
+        let mut c2 = Config::default();
+        c2.hw.xcds = 0.0; // perturb
+        c2.apply_json(&j);
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn issue_eff_covers_all_precisions() {
+        let c = Config::default();
+        for p in Precision::SWEEP {
+            assert!(c.issue_eff(p) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Minimal TOML-subset parser for config files (offline build: no `toml`
+//! crate). Supports: `[section]` / `[section.sub]` headers, `key = value`
+//! with string / integer / float / bool / flat-array values, and `#`
+//! comments. Produces a [`Json`] object tree so the config layer has a
+//! single value representation.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse TOML text into a nested JSON object.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(head) = line.strip_prefix('[') {
+            let head = head.strip_suffix(']').ok_or(TomlError {
+                line: ln + 1,
+                msg: "unterminated section header".into(),
+            })?;
+            section = head.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_section(&mut root, &section, ln + 1)?;
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = k.trim().to_string();
+            let val = parse_value(v.trim(), ln + 1)?;
+            insert(&mut root, &section, key, val, ln + 1)?;
+        } else {
+            return Err(TomlError {
+                line: ln + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            });
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Json, TomlError> {
+    let err = |msg: String| TomlError { line, msg };
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(Json::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let mut items = Vec::new();
+        if !body.trim().is_empty() {
+            for item in body.split(',') {
+                items.push(parse_value(item.trim(), line)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| err(format!("cannot parse value {s:?}")))
+}
+
+fn ensure_section(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    line: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => {
+                return Err(TomlError {
+                    line,
+                    msg: format!("section {part:?} collides with a value"),
+                })
+            }
+        };
+    }
+    Ok(())
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Json>,
+    section: &[String],
+    key: String,
+    val: Json,
+    line: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for part in section {
+        cur = match cur.get_mut(part) {
+            Some(Json::Obj(m)) => m,
+            _ => {
+                return Err(TomlError {
+                    line,
+                    msg: format!("missing section {part:?}"),
+                })
+            }
+        };
+    }
+    cur.insert(key, val);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_arrays() {
+        let src = r#"
+# MI300A hardware model
+[hardware]
+xcds = 6
+cus_per_xcd = 40
+clock_ghz = 2.1
+name = "mi300a"   # inline comment
+enabled = true
+peaks = [122_600, 980_600]
+
+[sim.jitter]
+sigma = 0.05
+"#;
+        let v = parse(src).unwrap();
+        let hw = v.get("hardware").unwrap();
+        assert_eq!(hw.get("xcds").unwrap().as_f64(), Some(6.0));
+        assert_eq!(hw.get("clock_ghz").unwrap().as_f64(), Some(2.1));
+        assert_eq!(hw.get("name").unwrap().as_str(), Some("mi300a"));
+        assert_eq!(hw.get("enabled"), Some(&Json::Bool(true)));
+        assert_eq!(
+            hw.get("peaks").unwrap().as_arr().unwrap()[1].as_f64(),
+            Some(980_600.0)
+        );
+        assert_eq!(
+            v.get("sim").unwrap().get("jitter").unwrap().get("sigma")
+                .unwrap().as_f64(),
+            Some(0.05)
+        );
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @bad").is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only_ok() {
+        assert_eq!(parse("# nothing\n\n").unwrap(), Json::Obj(Default::default()));
+    }
+}

@@ -1,0 +1,229 @@
+//! Occupancy-aware continuous batcher (paper §9.2 "Batching strategies").
+//!
+//! vLLM-style continuous batching driven by the paper's occupancy
+//! thresholds: requests accumulate until the batch reaches the
+//! precision's wavefront target (256 for FP8) or a deadline expires —
+//! trading latency for matrix-core utilization exactly as §9.2
+//! prescribes.
+
+use super::occupancy::occupancy_target;
+use crate::isa::Precision;
+use std::collections::VecDeque;
+
+/// A queued inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Wavefronts this request contributes when batched.
+    pub waves: usize,
+    /// Arrival time, ns (monotonic virtual clock).
+    pub arrival_ns: f64,
+}
+
+/// A formed batch ready for dispatch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub formed_at_ns: f64,
+}
+
+impl Batch {
+    pub fn waves(&self) -> usize {
+        self.requests.iter().map(|r| r.waves).sum()
+    }
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub precision: Precision,
+    /// Max time a request may wait before the batch is cut anyway, ns.
+    pub deadline_ns: f64,
+    /// Hard cap on requests per batch (memory bound).
+    pub max_requests: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            precision: Precision::Fp8,
+            deadline_ns: 2_000_000.0, // 2 ms
+            max_requests: 128,
+        }
+    }
+}
+
+/// The continuous batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    next_id: u64,
+    /// Counters for conservation invariants.
+    pub submitted: u64,
+    pub dispatched: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg, queue: VecDeque::new(), next_id: 0, submitted: 0, dispatched: 0 }
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn submit(&mut self, waves: usize, now_ns: f64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.submitted += 1;
+        self.queue.push_back(Request { id, waves, arrival_ns: now_ns });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Occupancy target for the configured precision.
+    pub fn target_waves(&self) -> usize {
+        occupancy_target(self.cfg.precision)
+    }
+
+    /// Try to form a batch at `now_ns`. Cuts when (a) queued wavefronts
+    /// reach the occupancy target, (b) the oldest request hits its
+    /// deadline, or (c) the request cap is reached.
+    pub fn poll(&mut self, now_ns: f64) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let queued_waves: usize = self.queue.iter().map(|r| r.waves).sum();
+        let oldest_wait = now_ns - self.queue.front().unwrap().arrival_ns;
+        let target_hit = queued_waves >= self.target_waves();
+        let deadline_hit = oldest_wait >= self.cfg.deadline_ns;
+        let cap_hit = self.queue.len() >= self.cfg.max_requests;
+        if !(target_hit || deadline_hit || cap_hit) {
+            return None;
+        }
+        // Take requests until the target (or cap/queue end); never split
+        // a request.
+        let mut requests = Vec::new();
+        let mut waves = 0;
+        while let Some(front) = self.queue.front() {
+            if requests.len() >= self.cfg.max_requests
+                || (waves >= self.target_waves() && !requests.is_empty())
+            {
+                break;
+            }
+            waves += front.waves;
+            requests.push(self.queue.pop_front().unwrap());
+        }
+        self.dispatched += requests.len() as u64;
+        Some(Batch { requests, formed_at_ns: now_ns })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher {
+        Batcher::new(BatcherConfig::default())
+    }
+
+    #[test]
+    fn holds_until_occupancy_target() {
+        let mut b = batcher();
+        // 8 waves/request: target 256 -> needs 32 requests.
+        for i in 0..31 {
+            b.submit(8, i as f64);
+            assert!(b.poll(i as f64).is_none(), "must hold below target");
+        }
+        b.submit(8, 31.0);
+        let batch = b.poll(31.0).expect("target reached");
+        assert!(batch.waves() >= 256);
+        assert_eq!(batch.requests.len(), 32);
+    }
+
+    #[test]
+    fn deadline_cuts_partial_batch() {
+        let mut b = batcher();
+        b.submit(8, 0.0);
+        assert!(b.poll(1000.0).is_none());
+        let batch = b.poll(2_000_001.0).expect("deadline hit");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn request_cap_cuts_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_requests: 4,
+            ..Default::default()
+        });
+        for _ in 0..10 {
+            b.submit(1, 0.0);
+        }
+        let batch = b.poll(0.0).expect("cap hit");
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.pending(), 6);
+    }
+
+    #[test]
+    fn conservation_no_drop_no_duplicate() {
+        use crate::util::proptest::check;
+        check(100, 31, |g| {
+            let mut b = Batcher::new(BatcherConfig {
+                precision: Precision::Fp8,
+                deadline_ns: g.f64_in(10.0, 1e6),
+                max_requests: g.usize_in(1, 64),
+            });
+            let mut seen = std::collections::HashSet::new();
+            let mut now = 0.0;
+            let n = g.usize_in(1, 200);
+            for _ in 0..n {
+                now += g.f64_in(0.0, 1e5);
+                b.submit(g.usize_in(1, 64), now);
+                if g.bool() {
+                    if let Some(batch) = b.poll(now) {
+                        for r in &batch.requests {
+                            if !seen.insert(r.id) {
+                                return Err(format!("duplicate id {}", r.id));
+                            }
+                        }
+                    }
+                }
+            }
+            // Drain.
+            now += 1e12;
+            while let Some(batch) = b.poll(now) {
+                for r in &batch.requests {
+                    if !seen.insert(r.id) {
+                        return Err(format!("duplicate id {}", r.id));
+                    }
+                }
+            }
+            if seen.len() as u64 != b.submitted {
+                return Err(format!(
+                    "dropped requests: {} submitted, {} dispatched",
+                    b.submitted,
+                    seen.len()
+                ));
+            }
+            if b.submitted != b.dispatched {
+                return Err("counter mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = batcher();
+        for i in 0..40 {
+            b.submit(8, i as f64);
+        }
+        let batch = b.poll(40.0).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        assert_eq!(ids, sorted, "batch must preserve arrival order");
+        assert_eq!(ids[0], 0);
+    }
+}

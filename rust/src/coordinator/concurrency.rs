@@ -1,0 +1,168 @@
+//! Concurrency governor (paper §9.2 "Concurrency decisions").
+//!
+//! "Limit to 2-4 streams for latency-sensitive workloads (fairness
+//! >0.5); use 6-8 streams for throughput-oriented workloads (accepting
+//! 0.016-0.138 fairness). For strict isolation, use process-level
+//! separation instead of stream-level concurrency."
+
+use crate::isa::Precision;
+
+/// What the tenant cares about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Per-request SLOs: predictable latency beats aggregate throughput.
+    LatencySensitive,
+    /// Batch jobs: maximize aggregate throughput.
+    ThroughputOriented,
+    /// Multi-tenant SLA: no cross-stream interference tolerated.
+    StrictIsolation,
+}
+
+/// Governor decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConcurrencyDecision {
+    pub streams: usize,
+    /// Expected fairness at that stream count (from the paper's §6.1
+    /// measurements, used as the decision table).
+    pub expected_fairness: f64,
+    /// Process-level separation instead of streams (§9.2).
+    pub use_process_isolation: bool,
+}
+
+/// Paper-measured fairness by stream count for FP32/FP16/FP8 at 512^3
+/// (Fig 5a). Linear interpolation between the anchors; beyond 8 streams
+/// fairness is ~0.
+pub fn expected_fairness(p: Precision, streams: usize) -> f64 {
+    let anchors: [(usize, f64); 3] = match p {
+        Precision::F16 | Precision::Bf16 => [(1, 1.0), (4, 0.61), (8, 0.016)],
+        Precision::Fp8 | Precision::Bf8 => [(1, 1.0), (4, 0.51), (8, 0.138)],
+        Precision::F32 | Precision::F64 => [(1, 1.0), (4, 0.57), (8, 0.052)],
+    };
+    let s = streams as f64;
+    if streams <= 1 {
+        return 1.0;
+    }
+    for w in anchors.windows(2) {
+        let (s0, f0) = (w[0].0 as f64, w[0].1);
+        let (s1, f1) = (w[1].0 as f64, w[1].1);
+        if s <= s1 {
+            return f0 + (f1 - f0) * (s - s0) / (s1 - s0);
+        }
+    }
+    0.0
+}
+
+/// The governor: pick a stream count for a tenant's objective, given
+/// how many concurrent kernels are on offer.
+pub fn decide(objective: Objective, p: Precision, offered: usize)
+    -> ConcurrencyDecision {
+    match objective {
+        Objective::StrictIsolation => ConcurrencyDecision {
+            streams: 1,
+            expected_fairness: 1.0,
+            use_process_isolation: true,
+        },
+        Objective::LatencySensitive => {
+            // Largest stream count (<= offered, <= 4) keeping fairness
+            // > 0.5.
+            let mut best = 1;
+            for s in 2..=offered.min(4) {
+                if expected_fairness(p, s) > 0.5 {
+                    best = s;
+                }
+            }
+            ConcurrencyDecision {
+                streams: best,
+                expected_fairness: expected_fairness(p, best),
+                use_process_isolation: false,
+            }
+        }
+        Objective::ThroughputOriented => {
+            // 6-8 streams: speedup saturates at 8 (paper §6.1).
+            let s = offered.clamp(1, 8);
+            ConcurrencyDecision {
+                streams: s,
+                expected_fairness: expected_fairness(p, s),
+                use_process_isolation: false,
+            }
+        }
+    }
+}
+
+/// §9.2 "Limit FP16 concurrency more aggressively than FP32": max
+/// streams whose expected fairness stays above a floor.
+pub fn max_streams_for_fairness(p: Precision, floor: f64) -> usize {
+    let mut best = 1;
+    for s in 2..=8 {
+        if expected_fairness(p, s) >= floor {
+            best = s;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_match_fig5a() {
+        assert!((expected_fairness(Precision::F16, 8) - 0.016).abs() < 1e-9);
+        assert!((expected_fairness(Precision::Fp8, 8) - 0.138).abs() < 1e-9);
+        assert!((expected_fairness(Precision::F32, 8) - 0.052).abs() < 1e-9);
+        assert_eq!(expected_fairness(Precision::F32, 1), 1.0);
+    }
+
+    #[test]
+    fn fairness_monotone_decreasing_in_streams() {
+        for p in [Precision::F16, Precision::F32, Precision::Fp8] {
+            let mut prev = 1.0;
+            for s in 1..=10 {
+                let f = expected_fairness(p, s);
+                assert!(f <= prev + 1e-12, "{p} at {s} streams");
+                prev = f;
+            }
+        }
+    }
+
+    #[test]
+    fn latency_sensitive_keeps_fairness_above_half() {
+        for p in [Precision::F16, Precision::F32, Precision::Fp8] {
+            let d = decide(Objective::LatencySensitive, p, 8);
+            assert!(d.streams <= 4);
+            assert!(
+                d.expected_fairness > 0.5,
+                "{p}: fairness {} at {} streams",
+                d.expected_fairness,
+                d.streams
+            );
+        }
+    }
+
+    #[test]
+    fn throughput_oriented_uses_up_to_eight() {
+        let d = decide(Objective::ThroughputOriented, Precision::Fp8, 16);
+        assert_eq!(d.streams, 8);
+        assert!(d.expected_fairness < 0.2, "accepts low fairness");
+    }
+
+    #[test]
+    fn strict_isolation_goes_process_level() {
+        let d = decide(Objective::StrictIsolation, Precision::F16, 8);
+        assert!(d.use_process_isolation);
+        assert_eq!(d.streams, 1);
+    }
+
+    #[test]
+    fn fp16_limited_harder_than_fp32() {
+        // §9.2: FP16 fairness collapses hardest, so its stream cap at a
+        // given floor must not exceed FP32's.
+        for floor in [0.1, 0.3, 0.5] {
+            assert!(
+                max_streams_for_fairness(Precision::F16, floor)
+                    <= max_streams_for_fairness(Precision::F32, floor),
+                "floor {floor}"
+            );
+        }
+    }
+}

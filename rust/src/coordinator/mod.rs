@@ -1,0 +1,154 @@
+//! The execution-aware coordinator — the runtime layer the paper's §9
+//! says MI300A-class nodes need. It composes:
+//!
+//! * [`occupancy`] — wavefront targets (FP8 needs 256+, §9.1);
+//! * [`batcher`] — occupancy-aware continuous batching (§9.2);
+//! * [`concurrency`] — the fairness/throughput stream governor (§9.2);
+//! * [`sparsity_policy`] — context-dependent 2:4 enablement (§9.2);
+//! * [`precision_sched`] — occupancy-matched, precision-aware
+//!   co-scheduling (§9.2);
+//! * [`router`] — stream/ACE dispatch with backpressure.
+//!
+//! [`Coordinator`] is the facade the examples and the e2e serving driver
+//! use: submit kernels with an objective, get an execution plan whose
+//! decisions are all traceable to a paper finding.
+
+pub mod batcher;
+pub mod concurrency;
+pub mod occupancy;
+pub mod precision_sched;
+pub mod router;
+pub mod sparsity_policy;
+
+pub use batcher::{Batch, Batcher, BatcherConfig, Request};
+pub use concurrency::{decide as decide_concurrency, expected_fairness,
+                      ConcurrencyDecision, Objective};
+pub use occupancy::{adequacy, batch_for_target, occupancy_target,
+                    preferred_precision};
+pub use precision_sched::{l2_friendly_pair, plan as plan_coschedule,
+                          CoScheduleGroup};
+pub use router::{Dispatch, Router};
+pub use sparsity_policy::{decide as decide_sparsity, SparsityDecision,
+                          SparsityReason};
+
+use crate::config::Config;
+use crate::sim::kernel::{KernelDesc, SparsityMode};
+
+/// A fully-resolved execution plan for a pool of kernels.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Co-schedule groups, each to run with `streams(group)` concurrency.
+    pub groups: Vec<PlannedGroup>,
+    pub objective: Objective,
+}
+
+#[derive(Debug, Clone)]
+pub struct PlannedGroup {
+    pub kernels: Vec<KernelDesc>,
+    pub streams: usize,
+    pub expected_fairness: f64,
+    pub process_isolation: bool,
+}
+
+/// The coordinator facade.
+pub struct Coordinator {
+    pub cfg: Config,
+    pub objective: Objective,
+    /// Fairness floor used for co-scheduling caps.
+    pub fairness_floor: f64,
+}
+
+impl Coordinator {
+    pub fn new(cfg: Config, objective: Objective) -> Coordinator {
+        let fairness_floor = match objective {
+            Objective::LatencySensitive => 0.5,
+            Objective::ThroughputOriented => 0.01,
+            Objective::StrictIsolation => 1.0,
+        };
+        Coordinator { cfg, objective, fairness_floor }
+    }
+
+    /// Plan execution for a kernel pool: co-schedule by occupancy,
+    /// decide concurrency per group, and apply the sparsity policy to
+    /// every kernel given its group's concurrency context.
+    pub fn plan(&self, pool: &[KernelDesc], prunable: bool) -> ExecutionPlan {
+        let groups = plan_coschedule(pool, self.fairness_floor);
+        let planned = groups
+            .into_iter()
+            .map(|g| {
+                let p = g.kernels[0].precision;
+                let d = decide_concurrency(self.objective, p, g.kernels.len());
+                let streams = d.streams.min(g.kernels.len()).max(1);
+                let kernels = g
+                    .kernels
+                    .into_iter()
+                    .map(|k| {
+                        let sd = decide_sparsity(&k, streams, prunable);
+                        if sd.enable {
+                            k.with_sparsity(SparsityMode::SparseLhs)
+                        } else {
+                            k
+                        }
+                    })
+                    .collect();
+                PlannedGroup {
+                    kernels,
+                    streams,
+                    expected_fairness: d.expected_fairness,
+                    process_isolation: d.use_process_isolation,
+                }
+            })
+            .collect();
+        ExecutionPlan { groups: planned, objective: self.objective }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+
+    fn pool() -> Vec<KernelDesc> {
+        vec![KernelDesc::gemm(512, Precision::Fp8).with_iters(10); 4]
+    }
+
+    #[test]
+    fn plan_conserves_kernels() {
+        let c = Coordinator::new(Config::mi300a(), Objective::ThroughputOriented);
+        let plan = c.plan(&pool(), true);
+        let total: usize = plan.groups.iter().map(|g| g.kernels.len()).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn throughput_plan_enables_sparsity_in_concurrent_groups() {
+        let c = Coordinator::new(Config::mi300a(), Objective::ThroughputOriented);
+        let plan = c.plan(&pool(), true);
+        for g in &plan.groups {
+            if g.streams >= 2 {
+                assert!(g.kernels.iter().all(|k| k.sparsity.is_sparse()));
+            }
+        }
+    }
+
+    #[test]
+    fn isolation_plan_disables_sparsity_and_streams() {
+        let c = Coordinator::new(Config::mi300a(), Objective::StrictIsolation);
+        let plan = c.plan(&pool(), true);
+        for g in &plan.groups {
+            assert_eq!(g.streams, 1);
+            assert!(g.process_isolation);
+            assert!(g.kernels.iter().all(|k| !k.sparsity.is_sparse()));
+        }
+    }
+
+    #[test]
+    fn latency_plan_respects_fairness_floor() {
+        let c = Coordinator::new(Config::mi300a(), Objective::LatencySensitive);
+        let plan = c.plan(&pool(), true);
+        for g in &plan.groups {
+            assert!(g.streams <= 4);
+            assert!(g.expected_fairness > 0.5);
+        }
+    }
+}

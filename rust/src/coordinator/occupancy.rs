@@ -1,0 +1,90 @@
+//! Occupancy estimation and targets (paper §9.1).
+//!
+//! The paper's headline scheduling insight: FP8 matrix cores need 256+
+//! active wavefronts to approach peak (more than FP16's 192 or FP32's
+//! 128, despite 4x lower arithmetic intensity), because the cores retire
+//! FP8 ops faster than memory supplies data.
+
+use crate::isa::Precision;
+use crate::sim::kernel::KernelDesc;
+
+/// Wavefronts at which a precision approaches its steady-state
+/// throughput on MI300A (paper §9.1).
+pub fn occupancy_target(p: Precision) -> usize {
+    match p {
+        Precision::Fp8 | Precision::Bf8 => 256,
+        Precision::F16 | Precision::Bf16 => 192,
+        Precision::F32 | Precision::F64 => 128,
+    }
+}
+
+/// Estimated wavefronts a kernel puts in flight (one per output-tile
+/// block, the paper's microbenchmark convention).
+pub fn wavefronts(k: &KernelDesc) -> usize {
+    k.blocks()
+}
+
+/// Occupancy adequacy in [0, 1]: in-flight wavefronts over the target.
+pub fn adequacy(k: &KernelDesc) -> f64 {
+    (wavefronts(k) as f64 / occupancy_target(k.precision) as f64).min(1.0)
+}
+
+/// The §9.2 batching decision: smallest batch multiplier that reaches
+/// the occupancy target, given per-request wavefronts.
+pub fn batch_for_target(p: Precision, waves_per_request: usize) -> usize {
+    if waves_per_request == 0 {
+        return 1;
+    }
+    occupancy_target(p).div_ceil(waves_per_request)
+}
+
+/// §9.2 "Use FP16 for lower occupancy": when the achievable wavefront
+/// count is below FP8's threshold but above FP16's knee, FP16 wins
+/// despite 2x arithmetic intensity.
+pub fn preferred_precision(achievable_waves: usize) -> Precision {
+    if achievable_waves >= occupancy_target(Precision::Fp8) {
+        Precision::Fp8
+    } else {
+        Precision::F16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn targets_match_section_9_1() {
+        assert_eq!(occupancy_target(Precision::Fp8), 256);
+        assert_eq!(occupancy_target(Precision::F16), 192);
+        assert_eq!(occupancy_target(Precision::F32), 128);
+    }
+
+    #[test]
+    fn decoder_batch_32_underutilizes_fp8() {
+        // Paper §9.1: "a transformer decoder with batch size 32 achieves
+        // only 128 wavefronts ... leaving FP8 matrix cores underutilized".
+        let waves = 128;
+        assert!(waves < occupancy_target(Precision::Fp8));
+        assert_eq!(preferred_precision(waves), Precision::F16);
+        assert_eq!(preferred_precision(256), Precision::Fp8);
+    }
+
+    #[test]
+    fn batch_for_target_reaches_threshold() {
+        // 4 wavefronts per request at FP8: need 64 requests.
+        assert_eq!(batch_for_target(Precision::Fp8, 4), 64);
+        // Never zero.
+        assert_eq!(batch_for_target(Precision::Fp8, 0), 1);
+        // Already-large requests need batch 1.
+        assert_eq!(batch_for_target(Precision::F32, 300), 1);
+    }
+
+    #[test]
+    fn adequacy_saturates_at_one() {
+        let big = KernelDesc::gemm(8192, Precision::F32);
+        assert_eq!(adequacy(&big), 1.0);
+        let small = KernelDesc::gemm(256, Precision::Fp8);
+        assert!(adequacy(&small) < 0.1);
+    }
+}

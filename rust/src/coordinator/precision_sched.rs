@@ -1,0 +1,174 @@
+//! Precision-aware co-scheduler (paper §9.2 "Mixed-precision
+//! scheduling").
+//!
+//! "Co-schedule kernels with similar wavefront requirements to avoid
+//! occupancy fragmentation. Limit FP16 concurrency more aggressively
+//! than FP32. Co-locate memory-bound FP8 with compute-bound FP32 to
+//! reduce L2 cache conflicts."
+
+use super::concurrency::max_streams_for_fairness;
+use super::occupancy::wavefronts;
+use crate::isa::Precision;
+use crate::sim::kernel::KernelDesc;
+
+/// A co-scheduling group: kernels placed on concurrently-executing
+/// streams.
+#[derive(Debug, Clone)]
+pub struct CoScheduleGroup {
+    pub kernels: Vec<KernelDesc>,
+}
+
+impl CoScheduleGroup {
+    /// Max/min wavefront ratio within the group (1.0 = perfectly
+    /// occupancy-matched).
+    pub fn occupancy_ratio(&self) -> f64 {
+        let ws: Vec<f64> =
+            self.kernels.iter().map(|k| wavefronts(k) as f64).collect();
+        let max = ws.iter().cloned().fold(0.0, f64::max);
+        let min = ws.iter().cloned().fold(f64::INFINITY, f64::min);
+        if min > 0.0 {
+            max / min
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Plan co-scheduling groups from a kernel pool:
+///
+/// 1. Sort by wavefront count, group neighbours (occupancy matching —
+///    avoids the Fig-9 fragmentation regime).
+/// 2. Cap each group's size by the fairness-floor stream limit of its
+///    most fairness-fragile precision (FP16 < FP32 < FP8).
+/// 3. Where possible, pair memory-bound FP8 kernels with compute-bound
+///    FP32 kernels of similar occupancy (L2-conflict reduction).
+pub fn plan(pool: &[KernelDesc], fairness_floor: f64) -> Vec<CoScheduleGroup> {
+    if pool.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted: Vec<KernelDesc> = pool.to_vec();
+    sorted.sort_by_key(|k| wavefronts(k));
+
+    let mut groups: Vec<CoScheduleGroup> = Vec::new();
+    let mut current: Vec<KernelDesc> = Vec::new();
+    for k in sorted {
+        let cap = current
+            .iter()
+            .chain(std::iter::once(&k))
+            .map(|k| max_streams_for_fairness(k.precision, fairness_floor))
+            .min()
+            .unwrap_or(1);
+        let matched = current.last().map_or(true, |last| {
+            let r = wavefronts(&k).max(1) as f64
+                / wavefronts(last).max(1) as f64;
+            r <= 1.5 // occupancy-matched neighbours only
+        });
+        if current.len() < cap && matched {
+            current.push(k);
+        } else {
+            groups.push(CoScheduleGroup { kernels: std::mem::take(&mut current) });
+            current.push(k);
+        }
+    }
+    if !current.is_empty() {
+        groups.push(CoScheduleGroup { kernels: current });
+    }
+    groups
+}
+
+/// §9.2 pairing hint: is co-locating these two kernels L2-friendly
+/// (memory-bound FP8 + compute-bound FP32)?
+pub fn l2_friendly_pair(a: &KernelDesc, b: &KernelDesc) -> bool {
+    let is_fp8 = |p: Precision| matches!(p, Precision::Fp8 | Precision::Bf8);
+    let is_f32 = |p: Precision| matches!(p, Precision::F32 | Precision::F64);
+    (is_fp8(a.precision) && is_f32(b.precision))
+        || (is_f32(a.precision) && is_fp8(b.precision))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn groups_are_occupancy_matched() {
+        let pool = vec![
+            KernelDesc::gemm(256, Precision::F32),
+            KernelDesc::gemm(256, Precision::F32),
+            KernelDesc::gemm(2048, Precision::F32),
+            KernelDesc::gemm(2048, Precision::F32),
+        ];
+        let groups = plan(&pool, 0.3);
+        for g in &groups {
+            assert!(
+                g.occupancy_ratio() <= 1.5,
+                "fragmented group: ratio {}",
+                g.occupancy_ratio()
+            );
+        }
+    }
+
+    #[test]
+    fn fp16_groups_smaller_than_fp32_groups() {
+        let fp16_pool = vec![KernelDesc::gemm(512, Precision::F16); 8];
+        let fp32_pool = vec![KernelDesc::gemm(512, Precision::F32); 8];
+        let floor = 0.05;
+        let max16 = plan(&fp16_pool, floor).iter().map(|g| g.kernels.len()).max().unwrap();
+        let max32 = plan(&fp32_pool, floor).iter().map(|g| g.kernels.len()).max().unwrap();
+        assert!(
+            max16 <= max32,
+            "FP16 concurrency ({max16}) must be limited at least as hard \
+             as FP32 ({max32})"
+        );
+    }
+
+    #[test]
+    fn l2_pairing_rule() {
+        let fp8 = KernelDesc::gemm(512, Precision::Fp8);
+        let f32_ = KernelDesc::gemm(512, Precision::F32);
+        let f16 = KernelDesc::gemm(512, Precision::F16);
+        assert!(l2_friendly_pair(&fp8, &f32_));
+        assert!(l2_friendly_pair(&f32_, &fp8));
+        assert!(!l2_friendly_pair(&fp8, &f16));
+        assert!(!l2_friendly_pair(&f32_, &f32_));
+    }
+
+    #[test]
+    fn plan_conserves_kernels_property() {
+        check(100, 77, |g| {
+            let n = g.usize_in(0, 24);
+            let pool: Vec<KernelDesc> = (0..n)
+                .map(|_| {
+                    let dim = *g.pick(&[256usize, 512, 1024, 2048]);
+                    let p = *g.pick(&[
+                        Precision::Fp8,
+                        Precision::F16,
+                        Precision::F32,
+                    ]);
+                    KernelDesc::gemm(dim, p)
+                })
+                .collect();
+            let floor = g.f64_in(0.0, 0.9);
+            let groups = plan(&pool, floor);
+            let total: usize = groups.iter().map(|g| g.kernels.len()).sum();
+            if total != pool.len() {
+                return Err(format!(
+                    "plan lost kernels: {total} != {}",
+                    pool.len()
+                ));
+            }
+            for grp in &groups {
+                if grp.kernels.is_empty() {
+                    return Err("empty group".into());
+                }
+                if grp.kernels.len() > 1 && grp.occupancy_ratio() > 1.5 + 1e-9 {
+                    return Err(format!(
+                        "fragmented group ratio {}",
+                        grp.occupancy_ratio()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,206 @@
+//! Request router: batches -> streams/queues -> ACEs.
+//!
+//! The dispatch layer under the policies: it owns stream state, applies
+//! backpressure (bounded in-flight per stream), and maps streams onto
+//! the ACE set the way ROCm's HSA runtime does (round-robin). Invariant
+//! (property-tested): every submitted batch is dispatched exactly once
+//! and completions balance dispatches.
+
+use crate::sim::ace::{AceSet, QueueId};
+use std::collections::VecDeque;
+
+/// A dispatchable unit (an already-formed batch or a whole kernel).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dispatch {
+    pub id: u64,
+    /// Which stream it was routed to.
+    pub stream: usize,
+    /// Which hardware ACE that stream's queue maps to.
+    pub ace: usize,
+}
+
+/// Per-stream bookkeeping.
+#[derive(Debug, Clone)]
+struct StreamState {
+    queue: QueueId,
+    in_flight: usize,
+}
+
+/// The router.
+#[derive(Debug)]
+pub struct Router {
+    aces: AceSet,
+    streams: Vec<StreamState>,
+    max_in_flight: usize,
+    backlog: VecDeque<u64>,
+    next_stream: usize,
+    pub dispatched: u64,
+    pub completed: u64,
+}
+
+impl Router {
+    /// `n_streams` concurrent streams (from the concurrency governor),
+    /// `max_in_flight` per-stream backpressure bound.
+    pub fn new(n_streams: usize, n_aces: usize, max_in_flight: usize) -> Router {
+        assert!(n_streams > 0 && max_in_flight > 0);
+        let mut aces = AceSet::new(n_aces);
+        let streams = (0..n_streams)
+            .map(|_| StreamState { queue: aces.create_queue().0, in_flight: 0 })
+            .collect();
+        Router {
+            aces,
+            streams,
+            max_in_flight,
+            backlog: VecDeque::new(),
+            next_stream: 0,
+            dispatched: 0,
+            completed: 0,
+        }
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Submit a unit; returns the dispatch if a stream had capacity, or
+    /// queues it in the backlog (drained by `complete`).
+    pub fn submit(&mut self, id: u64) -> Option<Dispatch> {
+        self.backlog.push_back(id);
+        self.try_dispatch()
+    }
+
+    fn try_dispatch(&mut self) -> Option<Dispatch> {
+        let id = *self.backlog.front()?;
+        // Round-robin over streams with capacity.
+        let n = self.streams.len();
+        for probe in 0..n {
+            let s = (self.next_stream + probe) % n;
+            if self.streams[s].in_flight < self.max_in_flight {
+                self.backlog.pop_front();
+                self.streams[s].in_flight += 1;
+                self.next_stream = (s + 1) % n;
+                self.dispatched += 1;
+                return Some(Dispatch {
+                    id,
+                    stream: s,
+                    ace: self.aces.ace_of(self.streams[s].queue),
+                });
+            }
+        }
+        None // all streams at capacity: stays in backlog
+    }
+
+    /// Mark one unit complete on `stream`; drains the backlog if
+    /// possible.
+    pub fn complete(&mut self, stream: usize) -> Option<Dispatch> {
+        assert!(
+            self.streams[stream].in_flight > 0,
+            "completion on idle stream {stream}"
+        );
+        self.streams[stream].in_flight -= 1;
+        self.completed += 1;
+        self.try_dispatch()
+    }
+
+    pub fn backlog_len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.streams.iter().map(|s| s.in_flight).sum()
+    }
+
+    /// Launch-serialization factor of a stream (queues sharing its ACE).
+    pub fn serialization(&self, stream: usize) -> usize {
+        self.aces.serialization(self.streams[stream].queue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatches_round_robin() {
+        let mut r = Router::new(4, 8, 2);
+        let ds: Vec<Dispatch> =
+            (0..4).filter_map(|i| r.submit(i)).collect();
+        let streams: Vec<usize> = ds.iter().map(|d| d.stream).collect();
+        assert_eq!(streams, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn backpressure_holds_excess() {
+        let mut r = Router::new(2, 8, 1);
+        assert!(r.submit(0).is_some());
+        assert!(r.submit(1).is_some());
+        assert!(r.submit(2).is_none(), "both streams full");
+        assert_eq!(r.backlog_len(), 1);
+        let d = r.complete(0).expect("backlog drained on completion");
+        assert_eq!(d.id, 2);
+        assert_eq!(d.stream, 0);
+    }
+
+    #[test]
+    fn streams_beyond_aces_share() {
+        let r = Router::new(8, 4, 1);
+        // 8 queues over 4 ACEs: each shared by exactly 2.
+        for s in 0..8 {
+            assert_eq!(r.serialization(s), 2);
+        }
+    }
+
+    #[test]
+    fn conservation_property() {
+        use crate::util::proptest::check;
+        check(100, 5, |g| {
+            let mut r = Router::new(g.usize_in(1, 8), g.usize_in(1, 8),
+                                    g.usize_in(1, 4));
+            let mut issued: Vec<Dispatch> = Vec::new();
+            let mut next_id = 0u64;
+            let steps = g.usize_in(1, 300);
+            for _ in 0..steps {
+                if g.bool() {
+                    if let Some(d) = r.submit(next_id) {
+                        issued.push(d);
+                    }
+                    next_id += 1;
+                } else if r.in_flight() > 0 {
+                    // Complete on a random busy stream.
+                    let busy: Vec<usize> = (0..r.n_streams())
+                        .filter(|&s| r.streams[s].in_flight > 0)
+                        .collect();
+                    let s = *g.pick(&busy);
+                    if let Some(d) = r.complete(s) {
+                        issued.push(d);
+                    }
+                }
+            }
+            // Drain: complete everything, collecting backlog dispatches.
+            while r.in_flight() > 0 {
+                let busy: Vec<usize> = (0..r.n_streams())
+                    .filter(|&s| r.streams[s].in_flight > 0)
+                    .collect();
+                let s = busy[0];
+                if let Some(d) = r.complete(s) {
+                    issued.push(d);
+                }
+            }
+            // Every submitted id dispatched exactly once.
+            let mut ids: Vec<u64> = issued.iter().map(|d| d.id).collect();
+            ids.sort();
+            let expect: Vec<u64> = (0..next_id).collect();
+            if ids != expect {
+                return Err(format!(
+                    "ids not conserved: {} dispatched of {} submitted",
+                    ids.len(),
+                    next_id
+                ));
+            }
+            if r.dispatched != r.completed {
+                return Err("dispatch/completion imbalance after drain".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,103 @@
+//! Context-dependent sparsity enablement (paper §9.2 "Sparsity
+//! decisions").
+//!
+//! "Enable sparsity for concurrent execution (multi-tenant serving,
+//! batch inference): 1.3x speedup + 7% fairness improvement. Disable
+//! sparsity for isolated kernels: break-even performance with added
+//! 3.7-5.5 µs latency. Ignore the matrix size/shape — the concurrency
+//! level is the sole determining factor." (With the §7.1.2 exception:
+//! strongly rectangular shapes win even in isolation.)
+
+use crate::sim::kernel::KernelDesc;
+
+/// Why the policy decided what it decided (logged by the coordinator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparsityReason {
+    /// >= 2 concurrent streams: contention-avoidance pays (1.3x).
+    ConcurrentContext,
+    /// Isolated + square: break-even minus overhead -> keep dense.
+    IsolatedBreakEven,
+    /// Isolated but strongly rectangular: overhead overlaps (1.6-1.76x).
+    RectangularShape,
+    /// Kernel cannot be pruned (caller said weights are not 2:4-able).
+    NotPrunable,
+}
+
+/// The decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparsityDecision {
+    pub enable: bool,
+    pub reason: SparsityReason,
+}
+
+/// Decide whether to run `kernel` through the sparse path given the
+/// current concurrency level and whether its weights admit a 2:4
+/// pattern.
+pub fn decide(kernel: &KernelDesc, concurrent_streams: usize,
+              prunable: bool) -> SparsityDecision {
+    if !prunable {
+        return SparsityDecision { enable: false, reason: SparsityReason::NotPrunable };
+    }
+    if concurrent_streams >= 2 {
+        return SparsityDecision {
+            enable: true,
+            reason: SparsityReason::ConcurrentContext,
+        };
+    }
+    if kernel.is_rectangular() {
+        return SparsityDecision {
+            enable: true,
+            reason: SparsityReason::RectangularShape,
+        };
+    }
+    SparsityDecision { enable: false, reason: SparsityReason::IsolatedBreakEven }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+
+    fn square() -> KernelDesc {
+        KernelDesc::gemm(512, Precision::Fp8)
+    }
+
+    #[test]
+    fn concurrent_enables_regardless_of_size() {
+        // "Ignore the matrix size/shape — the concurrency level is the
+        // sole determining factor."
+        for n in [256usize, 512, 2048, 8192] {
+            let d = decide(&KernelDesc::gemm(n, Precision::Fp8), 4, true);
+            assert!(d.enable, "n={n}");
+            assert_eq!(d.reason, SparsityReason::ConcurrentContext);
+        }
+    }
+
+    #[test]
+    fn isolated_square_stays_dense() {
+        let d = decide(&square(), 1, true);
+        assert!(!d.enable);
+        assert_eq!(d.reason, SparsityReason::IsolatedBreakEven);
+    }
+
+    #[test]
+    fn isolated_rectangular_enables() {
+        let rect = square().with_shape(512, 2048, 1024);
+        let d = decide(&rect, 1, true);
+        assert!(d.enable);
+        assert_eq!(d.reason, SparsityReason::RectangularShape);
+    }
+
+    #[test]
+    fn unprunable_never_sparse() {
+        let d = decide(&square(), 8, false);
+        assert!(!d.enable);
+        assert_eq!(d.reason, SparsityReason::NotPrunable);
+    }
+
+    #[test]
+    fn two_streams_is_the_threshold() {
+        assert!(!decide(&square(), 1, true).enable);
+        assert!(decide(&square(), 2, true).enable);
+    }
+}

@@ -1,0 +1,286 @@
+//! §5 experiments: Tables 1-3 and Figs 2-3 (matrix-core microbenchmarks).
+
+use super::ExperimentReport;
+use crate::config::Config;
+use crate::isa::{Precision, OPCODES};
+use crate::report::{ascii_plot, Table};
+use crate::sim::MicrobenchModel;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Table 1: system configuration (documented; ours is the simulated
+/// substitute, reported side by side).
+pub fn table1(cfg: &Config) -> ExperimentReport {
+    let mut t = Table::new(
+        "Table 1 — system configuration (paper vs this reproduction)",
+        &["component", "paper", "this repo"],
+    );
+    t.row(vec!["OS".into(), "RHEL 8.10".into(), "any (simulated)".into()]);
+    t.row(vec![
+        "GPU".into(),
+        "AMD MI300A APU (CDNA3, gfx942)".into(),
+        format!(
+            "apusim: {} XCD x {} CU, {} MFMA/CU",
+            cfg.hw.xcds, cfg.hw.cus_per_xcd, cfg.hw.mfma_per_cu
+        ),
+    ]);
+    t.row(vec![
+        "Memory".into(),
+        "128 GB shared HBM3".into(),
+        format!("{} GiB @ {} TB/s (model)", cfg.hw.hbm_gib, cfg.hw.hbm_tbps),
+    ]);
+    t.row(vec![
+        "Toolchain".into(),
+        "ROCm 7.2.0, hipcc gfx942".into(),
+        "rust + JAX/Pallas AOT via PJRT".into(),
+    ]);
+    ExperimentReport {
+        id: "table1",
+        title: "System configuration".into(),
+        json: cfg.to_json(),
+        tables: vec![t],
+        plots: vec![],
+        notes: vec![
+            "hardware gate: no MI300A available; apusim substitutes \
+             (DESIGN.md §1)".into(),
+        ],
+    }
+}
+
+/// Table 2: microbenchmark coverage.
+pub fn table2(_cfg: &Config) -> ExperimentReport {
+    let mut t = Table::new(
+        "Table 2 — microbenchmark coverage",
+        &["class", "targeted execution behavior", "drivers"],
+    );
+    t.row(vec![
+        "FP8 matrix execution".into(),
+        "throughput scaling, occupancy sensitivity, shape effects".into(),
+        "fig2 fig3 table3".into(),
+    ]);
+    t.row(vec![
+        "ACE".into(),
+        "overlap efficiency, fairness, saturation under concurrency".into(),
+        "fig4 fig5 fig6 fig7 fig8 fig9".into(),
+    ]);
+    t.row(vec![
+        "Structured sparsity (2:4)".into(),
+        "realized speedups, overheads, break-even regimes".into(),
+        "fig10 fig11 fig12 fig13".into(),
+    ]);
+    ExperimentReport {
+        id: "table2",
+        title: "Microbenchmark classes".into(),
+        json: Json::Null,
+        tables: vec![t],
+        plots: vec![],
+        notes: vec![],
+    }
+}
+
+/// Fig 2: throughput vs total active wavefronts, normalized to peak.
+pub fn fig2(cfg: &Config) -> ExperimentReport {
+    let m = MicrobenchModel::new(cfg);
+    let counts: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64, 96, 128, 192, 256];
+    let mut t = Table::new(
+        "Fig 2 — normalized throughput vs active wavefronts",
+        &["waves", "FP64", "FP32", "FP16", "BF16", "FP8"],
+    );
+    let mut series: Vec<(&str, Vec<f64>)> = Vec::new();
+    let mut json_rows = Vec::new();
+    let sweeps: Vec<(Precision, Vec<f64>)> = Precision::SWEEP
+        .iter()
+        .map(|&p| {
+            (
+                p,
+                m.occupancy_sweep(p, &counts)
+                    .iter()
+                    .map(|pt| pt.normalized)
+                    .collect(),
+            )
+        })
+        .collect();
+    for (i, &w) in counts.iter().enumerate() {
+        let mut row = vec![w.to_string()];
+        let mut jrow = vec![("waves", Json::Num(w as f64))];
+        for (p, ys) in &sweeps {
+            row.push(format!("{:.2}%", ys[i] * 100.0));
+            jrow.push((p.name(), Json::Num(ys[i])));
+        }
+        t.row(row);
+        json_rows.push(Json::obj(jrow));
+    }
+    for (p, ys) in &sweeps {
+        series.push((p.name(), ys.clone()));
+    }
+    let x: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+    let plot = ascii_plot("Fig 2: normalized throughput vs wavefronts",
+                          &x, &series, 14);
+    let at256: Vec<String> = sweeps
+        .iter()
+        .map(|(p, ys)| format!("{}={:.1}%", p.name(), ys.last().unwrap() * 100.0))
+        .collect();
+    ExperimentReport {
+        id: "fig2",
+        title: "FP8 matrix-core occupancy scaling".into(),
+        tables: vec![t],
+        plots: vec![plot],
+        notes: vec![
+            format!("at 256 wavefronts: {}", at256.join(", ")),
+            "paper: FP8 13.7%, FP64 12.1%, FP32 10.4% at 256 waves; ~7% \
+             (FP8) at 128".into(),
+        ],
+        json: Json::Arr(json_rows),
+    }
+}
+
+/// Fig 3: absolute GFLOPS vs aspect ratio at fixed total blocks.
+pub fn fig3(cfg: &Config) -> ExperimentReport {
+    let m = MicrobenchModel::new(cfg);
+    // Fixed total blocks chosen to reproduce the paper's absolute scale
+    // (FP8 ~4200 GFLOPS at favorable ratios) — see EXPERIMENTS.md.
+    let blocks = 4;
+    let aspects = [0.25, 0.5, 1.0, 2.0, 4.0];
+    let mut t = Table::new(
+        "Fig 3 — absolute GFLOPS vs aspect ratio (fixed blocks)",
+        &["aspect M/N", "FP64", "FP32", "FP16", "BF16", "FP8"],
+    );
+    let mut series = Vec::new();
+    let mut json_rows = Vec::new();
+    let sweeps: Vec<(Precision, Vec<f64>)> = Precision::SWEEP
+        .iter()
+        .map(|&p| {
+            (
+                p,
+                aspects
+                    .iter()
+                    .map(|&a| m.shape_throughput(p, a, blocks))
+                    .collect(),
+            )
+        })
+        .collect();
+    for (i, &a) in aspects.iter().enumerate() {
+        let mut row = vec![format!("{a}")];
+        let mut jrow = vec![("aspect", Json::Num(a))];
+        for (p, ys) in &sweeps {
+            row.push(format!("{:.0}", ys[i]));
+            jrow.push((p.name(), Json::Num(ys[i])));
+        }
+        t.row(row);
+        json_rows.push(Json::obj(jrow));
+    }
+    for (p, ys) in &sweeps {
+        series.push((p.name(), ys.clone()));
+    }
+    let plot = ascii_plot(
+        "Fig 3: GFLOPS vs aspect ratio",
+        &aspects.to_vec(),
+        &series,
+        12,
+    );
+    let fp8 = &sweeps.iter().find(|(p, _)| *p == Precision::Fp8).unwrap().1;
+    let loss = (fp8[2] - fp8[4]) / fp8[2];
+    ExperimentReport {
+        id: "fig3",
+        title: "Matrix shape effects".into(),
+        tables: vec![t],
+        plots: vec![plot],
+        notes: vec![
+            format!("FP8 loses {:.0}% at 4:1 vs 1:1 (paper: up to 16%)", loss * 100.0),
+            "paper: FP8 ~4200 GFLOPS vs FP32 ~400 at favorable ratios".into(),
+        ],
+        json: Json::Arr(json_rows),
+    }
+}
+
+/// Table 3: MFMA dependency-chain latency per opcode, re-measured
+/// through the simulated instruction-targeted microbenchmark.
+pub fn table3(cfg: &Config) -> ExperimentReport {
+    let m = MicrobenchModel::new(cfg);
+    let mut rng = Rng::new(cfg.seed ^ 0x7ab1e3);
+    let mut t = Table::new(
+        "Table 3 — MFMA single-issue latency (1e-5 ms)",
+        &["instruction", "MxNxK", "paper", "measured", "dev%"],
+    );
+    let mut json_rows = Vec::new();
+    let mut worst_dev = 0.0f64;
+    for op in OPCODES {
+        let measured_ns = m.measure_chain_latency_ns(op, &mut rng);
+        let measured = measured_ns / 10.0; // to 1e-5 ms units
+        let dev = (measured - op.latency_e5_ms()).abs() / op.latency_e5_ms();
+        worst_dev = worst_dev.max(dev);
+        t.row(vec![
+            op.name.to_string(),
+            op.tile.to_string(),
+            format!("{:.3}", op.latency_e5_ms()),
+            format!("{measured:.3}"),
+            format!("{:.2}", dev * 100.0),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("name", Json::Str(op.name.to_string())),
+            ("tile", Json::Str(op.tile.to_string())),
+            ("paper_e5ms", Json::Num(op.latency_e5_ms())),
+            ("measured_e5ms", Json::Num(measured)),
+        ]));
+    }
+    ExperimentReport {
+        id: "table3",
+        title: "MFMA opcode coverage and baseline latency".into(),
+        tables: vec![t],
+        plots: vec![],
+        notes: vec![
+            format!("worst deviation from Table 3: {:.2}%", worst_dev * 100.0),
+            "Table 3 values are the simulator's calibration inputs \
+             (DESIGN.md §6); this driver validates the measurement path \
+             recovers them through the dependency-chain harness".into(),
+        ],
+        json: Json::Arr(json_rows),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_normalized_values_bounded() {
+        let r = fig2(&Config::mi300a());
+        for row in r.json.as_arr().unwrap() {
+            for p in Precision::SWEEP {
+                let v = row.get(p.name()).unwrap().as_f64().unwrap();
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_fp8_beats_fp32_absolute() {
+        let r = fig3(&Config::mi300a());
+        for row in r.json.as_arr().unwrap() {
+            let fp8 = row.get("FP8").unwrap().as_f64().unwrap();
+            let f32_ = row.get("FP32").unwrap().as_f64().unwrap();
+            assert!(fp8 > f32_, "FP8 must dominate in absolute GFLOPS");
+        }
+    }
+
+    #[test]
+    fn table3_covers_all_25_opcodes() {
+        let r = table3(&Config::mi300a());
+        assert_eq!(r.json.as_arr().unwrap().len(), 25);
+        assert_eq!(r.tables[0].rows.len(), 25);
+    }
+
+    #[test]
+    fn table3_measurements_within_1pct() {
+        let r = table3(&Config::mi300a());
+        for row in r.json.as_arr().unwrap() {
+            let paper = row.get("paper_e5ms").unwrap().as_f64().unwrap();
+            let meas = row.get("measured_e5ms").unwrap().as_f64().unwrap();
+            assert!(
+                ((meas - paper) / paper).abs() < 0.01,
+                "{:?}: {meas} vs {paper}",
+                row.get("name")
+            );
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §5 index).
+//!
+//! Every driver regenerates its artifact's rows/series from the
+//! simulator and returns an [`ExperimentReport`] (tables + ASCII plots +
+//! machine-readable JSON). `mi300a-char repro <id>` prints them;
+//! `rust/benches/` wraps them for `cargo bench`; EXPERIMENTS.md records
+//! paper-vs-measured.
+
+pub mod ace;
+pub mod apps;
+pub mod micro;
+pub mod sparsity;
+
+use crate::config::Config;
+use crate::report::Table;
+use crate::util::json::Json;
+
+/// The output of one experiment driver.
+#[derive(Debug, Clone)]
+pub struct ExperimentReport {
+    pub id: &'static str,
+    pub title: String,
+    pub tables: Vec<Table>,
+    pub plots: Vec<String>,
+    /// Paper-context notes printed under the tables.
+    pub notes: Vec<String>,
+    /// Machine-readable result (written to reports/<id>.json).
+    pub json: Json,
+}
+
+impl ExperimentReport {
+    pub fn render(&self) -> String {
+        let mut out = format!("### {} — {}\n\n", self.id, self.title);
+        for t in &self.tables {
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        for p in &self.plots {
+            out.push_str(p);
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+}
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "table1", "table2", "fig2", "fig3", "table3", "fig4", "fig5", "fig6",
+    "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "fig15", "fig16",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, cfg: &Config) -> Option<ExperimentReport> {
+    match id {
+        "table1" => Some(micro::table1(cfg)),
+        "table2" => Some(micro::table2(cfg)),
+        "fig2" => Some(micro::fig2(cfg)),
+        "fig3" => Some(micro::fig3(cfg)),
+        "table3" => Some(micro::table3(cfg)),
+        "fig4" => Some(ace::fig4(cfg)),
+        "fig5" => Some(ace::fig5(cfg)),
+        "fig6" => Some(ace::fig6(cfg)),
+        "fig7" => Some(ace::fig7(cfg)),
+        "fig8" => Some(ace::fig8(cfg)),
+        "fig9" => Some(ace::fig9(cfg)),
+        "fig10" => Some(sparsity::fig10(cfg)),
+        "fig11" => Some(sparsity::fig11(cfg)),
+        "fig12" => Some(sparsity::fig12(cfg)),
+        "fig13" => Some(sparsity::fig13(cfg)),
+        "fig14" => Some(apps::fig14(cfg)),
+        "fig15" => Some(apps::fig15(cfg)),
+        "fig16" => Some(apps::fig16(cfg)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_id_runs_and_renders() {
+        let cfg = Config::mi300a();
+        for id in ALL_IDS {
+            let r = run(id, &cfg).unwrap_or_else(|| panic!("{id} missing"));
+            let text = r.render();
+            assert!(text.contains(id), "{id} render");
+            assert!(
+                !r.tables.is_empty() || !r.plots.is_empty(),
+                "{id} produced no output"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(run("fig99", &Config::mi300a()).is_none());
+    }
+
+    #[test]
+    fn reports_are_deterministic() {
+        let cfg = Config::mi300a();
+        for id in ["fig4", "fig13"] {
+            let a = run(id, &cfg).unwrap().render();
+            let b = run(id, &cfg).unwrap().render();
+            assert_eq!(a, b, "{id} must be seed-deterministic");
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! §7 experiments: structured sparsity (Figs 10-13).
+
+use super::ExperimentReport;
+use crate::config::Config;
+use crate::isa::Precision;
+use crate::metrics::fairness_minmax;
+use crate::report::{ascii_plot, Table};
+use crate::sim::{ConcurrencyProfile, CostModel, Engine, KernelDesc, SparsityMode};
+use crate::sparsity::{OverheadModel, SpeedupModel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+const SIZES: [usize; 4] = [256, 512, 2048, 8192];
+const PATTERNS: [SparsityMode; 3] = [
+    SparsityMode::SparseLhs,
+    SparsityMode::SparseRhs,
+    SparsityMode::SparseBoth,
+];
+
+/// Fig 10: sparsity encoding overhead vs matrix size (constant).
+pub fn fig10(cfg: &Config) -> ExperimentReport {
+    let model = OverheadModel::new(cfg);
+    let mut rng = Rng::new(cfg.seed ^ 0xf16_10);
+    let mut t = Table::new(
+        "Fig 10 — sparsity encoding overhead vs matrix size (µs)",
+        &["size", "LHS-only", "RHS-only", "both-side"],
+    );
+    let mut json_rows = Vec::new();
+    let mut series: Vec<(&str, Vec<f64>)> = vec![
+        ("LHS", Vec::new()),
+        ("RHS", Vec::new()),
+        ("both", Vec::new()),
+    ];
+    for &n in &SIZES {
+        let mut row = vec![format!("{n}^3")];
+        let mut jrow = vec![("size", Json::Num(n as f64))];
+        for (i, &mode) in PATTERNS.iter().enumerate() {
+            // Stable average over repeated samples (paper: 50 runs).
+            let us: f64 = (0..50)
+                .map(|_| model.sample_ns(mode, n, &mut rng) / 1e3)
+                .sum::<f64>()
+                / 50.0;
+            row.push(format!("{us:.2}"));
+            jrow.push((mode.name(), Json::Num(us)));
+            series[i].1.push(us);
+        }
+        t.row(row);
+        json_rows.push(Json::obj(jrow));
+    }
+    let x: Vec<f64> = SIZES.iter().map(|&n| (n as f64).log2()).collect();
+    let plot = ascii_plot("Fig 10: overhead (µs) vs log2 size", &x, &series, 8);
+    // Component breakdown (paper §7.1.1 rocprof profile).
+    let b = model.mean(SparsityMode::SparseLhs);
+    let mut tb = Table::new(
+        "overhead components (rocprof-equivalent decomposition)",
+        &["component", "µs"],
+    );
+    tb.row(vec!["format conversion".into(),
+                format!("{:.1}", b.format_conversion_ns / 1e3)]);
+    tb.row(vec!["metadata alloc".into(),
+                format!("{:.1}", b.metadata_alloc_ns / 1e3)]);
+    tb.row(vec!["API dispatch".into(), format!("{:.1}", b.dispatch_ns / 1e3)]);
+    ExperimentReport {
+        id: "fig10",
+        title: "Sparsity overhead characterization".into(),
+        tables: vec![t, tb],
+        plots: vec![plot],
+        notes: vec![
+            "paper: 3.5-3.9 µs single-side, 5.3-5.8 µs both-side, \
+             constant across sizes (prevents amortization)".into(),
+        ],
+        json: Json::Arr(json_rows),
+    }
+}
+
+/// Fig 11: isolated sparsity speedup vs matrix size per pattern.
+pub fn fig11(cfg: &Config) -> ExperimentReport {
+    let model = SpeedupModel::new(cfg);
+    let mut t = Table::new(
+        "Fig 11 — isolated sparse speedup vs size",
+        &["size", "LHS-only", "RHS-only", "both-side"],
+    );
+    let mut json_rows = Vec::new();
+    for &n in &SIZES {
+        let dense = KernelDesc::gemm(n, Precision::Fp8);
+        let mut row = vec![format!("{n}^3")];
+        let mut jrow = vec![("size", Json::Num(n as f64))];
+        for &mode in &PATTERNS {
+            let s = model.isolated(&dense, mode).speedup();
+            row.push(format!("{s:.3}x"));
+            jrow.push((mode.name(), Json::Num(s)));
+        }
+        t.row(row);
+        json_rows.push(Json::obj(jrow));
+    }
+    // The §7.1.2 rectangular exception.
+    let rect = KernelDesc::gemm(512, Precision::Fp8).with_shape(512, 2048, 1024);
+    let rect_speedup = model.isolated(&rect, SparsityMode::SparseLhs).speedup();
+    ExperimentReport {
+        id: "fig11",
+        title: "Sparsity speedup across problem sizes".into(),
+        tables: vec![t],
+        plots: vec![],
+        notes: vec![
+            "paper: 0.98-1.02x across all square sizes (break-even)".into(),
+            format!(
+                "rectangular 512x2048x1024: {rect_speedup:.2}x (paper \
+                 1.6-1.76x)"
+            ),
+        ],
+        json: Json::obj(vec![
+            ("square", Json::Arr(json_rows)),
+            ("rect_512x2048x1024", Json::Num(rect_speedup)),
+        ]),
+    }
+}
+
+/// Fig 12: the 60-configuration speedup heatmap (4 sizes x 5 aspect
+/// ratios x 3 patterns), isolated execution.
+pub fn fig12(cfg: &Config) -> ExperimentReport {
+    let model = SpeedupModel::new(cfg);
+    let aspects: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+    let mut t = Table::new(
+        "Fig 12 — speedup heatmap (rows: size x pattern, cols: aspect)",
+        &["config", "0.25", "0.5", "1.0", "2.0", "4.0"],
+    );
+    let mut cells = Vec::new();
+    let (mut min_s, mut max_s) = (f64::INFINITY, 0.0f64);
+    for &n in &SIZES {
+        for &mode in &PATTERNS {
+            let mut row = vec![format!("{n}^3 {}", mode.name())];
+            for &a in &aspects {
+                // Aspect-swept square-total-work shape: M = n*sqrt(a),
+                // N = n/sqrt(a) (total work constant), K = n.
+                let m = ((n as f64) * a.sqrt()).round() as usize;
+                let nn = ((n as f64) / a.sqrt()).round() as usize;
+                let k = KernelDesc::gemm(n, Precision::Fp8)
+                    .with_shape(m.max(4), nn.max(4), n);
+                // Square-equivalent policy: the heatmap varies aspect but
+                // the paper reports square configs as break-even; only
+                // >=2x skews trigger the rectangular overlap path.
+                let s = model.isolated(&k, mode).speedup();
+                min_s = min_s.min(s);
+                max_s = max_s.max(s);
+                row.push(format!("{s:.2}"));
+                cells.push(Json::obj(vec![
+                    ("size", Json::Num(n as f64)),
+                    ("aspect", Json::Num(a)),
+                    ("pattern", Json::Str(mode.name().into())),
+                    ("speedup", Json::Num(s)),
+                ]));
+            }
+            t.row(row);
+        }
+    }
+    ExperimentReport {
+        id: "fig12",
+        title: "Comprehensive parameter sweep (60 configs)".into(),
+        tables: vec![t],
+        plots: vec![],
+        notes: vec![
+            format!("speedup range {min_s:.2}-{max_s:.2} over 60 configs"),
+            "paper: predominantly 0.97-1.02x (break-even) for square-work \
+             configs; strong skews benefit from overhead overlap".into(),
+        ],
+        json: Json::Arr(cells),
+    }
+}
+
+/// Fig 13: sparsity under contention — (a) min/max fairness,
+/// (b) aggregate throughput, (c) per-stream sparse/dense speedup.
+pub fn fig13(cfg: &Config) -> ExperimentReport {
+    let engine = Engine::new(cfg, ConcurrencyProfile::sparsity());
+    let speedup_model = SpeedupModel::new(cfg);
+    let cost = CostModel::new(cfg);
+    let dense_k = KernelDesc::gemm(512, Precision::Fp8).with_iters(50);
+    let sparse_k = dense_k.clone().with_sparsity(SparsityMode::SparseLhs);
+
+    let mut ta = Table::new(
+        "Fig 13a — fairness (min/max) vs streams",
+        &["streams", "dense", "sparse", "mixed"],
+    );
+    let mut tb = Table::new(
+        "Fig 13b — aggregate throughput (GFLOPS) vs streams",
+        &["streams", "dense", "sparse", "mixed"],
+    );
+    let mut json_rows = Vec::new();
+    for &s in &[1usize, 2, 4] {
+        let dense_set = vec![dense_k.clone(); s];
+        let sparse_set = vec![sparse_k.clone(); s];
+        let mixed_set: Vec<KernelDesc> = (0..s)
+            .map(|i| if i % 2 == 0 { sparse_k.clone() } else { dense_k.clone() })
+            .collect();
+
+        let runs = [
+            ("dense", &dense_set),
+            ("sparse", &sparse_set),
+            ("mixed", &mixed_set),
+        ];
+        let mut fa = vec![s.to_string()];
+        let mut fb = vec![s.to_string()];
+        let mut jrow = vec![("streams", Json::Num(s as f64))];
+        for (name, set) in &runs {
+            // Fairness is a stable average over repeated runs (the
+            // paper's 50-run protocol); throughput from the first run.
+            let reps = 12u64;
+            let f = if s == 1 {
+                1.0
+            } else {
+                (0..reps)
+                    .map(|r| {
+                        fairness_minmax(
+                            &engine
+                                .run(set, cfg.seed + 130 + r * 7)
+                                .per_stream_totals(),
+                        )
+                    })
+                    .sum::<f64>()
+                    / reps as f64
+            };
+            let run = engine.run(set, cfg.seed + 130);
+            // Dense-equivalent FLOPs per iteration for each stream.
+            let flops: Vec<f64> = match *name {
+                "dense" => vec![dense_k.flops(); s],
+                "sparse" => vec![dense_k.flops(); s],
+                _ => (0..s).map(|_| dense_k.flops()).collect(),
+            };
+            let gflops = run.aggregate_gflops(&flops);
+            fa.push(format!("{f:.2}"));
+            fb.push(format!("{gflops:.1}"));
+            jrow.push((
+                *name,
+                Json::obj(vec![
+                    ("fairness", Json::Num(f)),
+                    ("gflops", Json::Num(gflops)),
+                ]),
+            ));
+        }
+        ta.row(fa);
+        tb.row(fb);
+        json_rows.push(Json::obj(jrow));
+    }
+
+    // (c) per-stream sparse/dense speedup: model + DES cross-check.
+    let mut tc = Table::new(
+        "Fig 13c — per-stream sparse vs dense speedup",
+        &["streams", "speedup"],
+    );
+    let mut json_c = Vec::new();
+    for &s in &[1usize, 2, 3, 4] {
+        let sp = speedup_model.concurrent_per_stream(&dense_k, s);
+        tc.row(vec![s.to_string(), format!("{sp:.2}x")]);
+        json_c.push(Json::obj(vec![
+            ("streams", Json::Num(s as f64)),
+            ("speedup", Json::Num(sp)),
+        ]));
+    }
+
+    let d1 = cost.solo_gflops(&dense_k);
+    ExperimentReport {
+        id: "fig13",
+        title: "Sparsity under resource contention".into(),
+        tables: vec![ta, tb, tc],
+        plots: vec![],
+        notes: vec![
+            format!("modeled dense solo rate: {d1:.0} GFLOPS (scaled by the \
+                     §7 profile's work_scale to the paper's 59.98)"),
+            "paper: dense 59.98/116.69/213.93, sparse 52.1/109.4/234.2, \
+             mixed 60.8/112.1/235.5 GFLOPS; fairness @4: dense 0.91, \
+             sparse 0.98, mixed 0.97; per-stream speedup constant 1.3x".into(),
+        ],
+        json: Json::obj(vec![
+            ("scaling", Json::Arr(json_rows)),
+            ("per_stream", Json::Arr(json_c)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_overhead_constant_across_sizes() {
+        let r = fig10(&Config::mi300a());
+        let rows = r.json.as_arr().unwrap();
+        let first = rows[0].get("lhs").unwrap().as_f64().unwrap();
+        let last = rows.last().unwrap().get("lhs").unwrap().as_f64().unwrap();
+        assert!(
+            (first - last).abs() < 0.5,
+            "overhead must be ~constant: {first} vs {last} µs"
+        );
+    }
+
+    #[test]
+    fn fig11_square_break_even() {
+        let r = fig11(&Config::mi300a());
+        for row in r.json.get("square").unwrap().as_arr().unwrap() {
+            for mode in ["lhs", "rhs", "both"] {
+                let s = row.get(mode).unwrap().as_f64().unwrap();
+                assert!((0.9..=1.1).contains(&s), "{mode}: {s}");
+            }
+        }
+        let rect = r.json.get("rect_512x2048x1024").unwrap().as_f64().unwrap();
+        assert!(rect > 1.3, "rectangular exception: {rect}");
+    }
+
+    #[test]
+    fn fig12_has_60_cells() {
+        let r = fig12(&Config::mi300a());
+        assert_eq!(r.json.as_arr().unwrap().len(), 60);
+    }
+
+    #[test]
+    fn fig13_sparse_overtakes_dense_at_4_streams() {
+        let r = fig13(&Config::mi300a());
+        let rows = r.json.get("scaling").unwrap().as_arr().unwrap();
+        let at = |s: f64, name: &str, field: &str| {
+            rows.iter()
+                .find(|x| x.get("streams").unwrap().as_f64() == Some(s))
+                .unwrap()
+                .get(name).unwrap()
+                .get(field).unwrap()
+                .as_f64().unwrap()
+        };
+        // Crossover: dense wins solo, sparse wins at 4 streams.
+        assert!(at(1.0, "dense", "gflops") > at(1.0, "sparse", "gflops"));
+        assert!(at(4.0, "sparse", "gflops") > at(4.0, "dense", "gflops"));
+        // Fairness: sparse at 4 streams more balanced than dense.
+        assert!(at(4.0, "sparse", "fairness") > at(4.0, "dense", "fairness"));
+    }
+
+    #[test]
+    fn fig13c_speedup_stable() {
+        let r = fig13(&Config::mi300a());
+        let c = r.json.get("per_stream").unwrap().as_arr().unwrap();
+        for row in c.iter().skip(1) {
+            let s = row.get("speedup").unwrap().as_f64().unwrap();
+            assert!((1.2..=1.4).contains(&s), "~1.3x expected: {s}");
+        }
+    }
+}

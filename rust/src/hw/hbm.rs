@@ -1,0 +1,116 @@
+//! HBM bandwidth model: shared-channel saturation and per-stream shares.
+//!
+//! The APU's HBM3 is shared by all XCDs (paper §2); concurrent kernels
+//! split effective bandwidth, and aggregate bandwidth saturates with
+//! demand rather than scaling linearly. The DES queries this model to
+//! price each kernel's memory phase.
+
+/// Aggregate + per-stream HBM bandwidth calculator.
+#[derive(Debug, Clone)]
+pub struct HbmModel {
+    /// Peak bandwidth, bytes per nanosecond (1 TB/s == 1000 B/ns).
+    pub peak_bpns: f64,
+    /// Demand level (B/ns) at which effective bandwidth is at half of
+    /// the linear-scaling shortfall (soft saturation knee).
+    pub knee_bpns: f64,
+}
+
+impl HbmModel {
+    pub fn new(cfg: &crate::config::Config) -> HbmModel {
+        let peak = cfg.hbm_bytes_per_ns();
+        HbmModel { peak_bpns: peak, knee_bpns: 0.6 * peak }
+    }
+
+    /// Effective aggregate bandwidth for a total demand (B/ns): linear at
+    /// low demand, asymptotic to peak.
+    pub fn effective(&self, demand_bpns: f64) -> f64 {
+        if demand_bpns <= 0.0 {
+            return 0.0;
+        }
+        // Smooth saturating curve: eff = peak * d / (d + knee), scaled so
+        // eff ~= demand when demand << knee.
+        let sat = self.peak_bpns * demand_bpns / (demand_bpns + self.knee_bpns);
+        sat.min(demand_bpns)
+    }
+
+    /// Bandwidth share of one stream demanding `demand` when total
+    /// demand across streams is `total`: proportional split of the
+    /// effective aggregate.
+    pub fn share(&self, demand_bpns: f64, total_demand_bpns: f64) -> f64 {
+        if total_demand_bpns <= 0.0 {
+            return 0.0;
+        }
+        self.effective(total_demand_bpns) * demand_bpns / total_demand_bpns
+    }
+
+    /// Time (ns) to move `bytes` given this stream's share.
+    pub fn transfer_ns(&self, bytes: f64, share_bpns: f64) -> f64 {
+        if share_bpns <= 0.0 {
+            return f64::INFINITY;
+        }
+        bytes / share_bpns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn model() -> HbmModel {
+        HbmModel::new(&Config::mi300a())
+    }
+
+    #[test]
+    fn peak_matches_config() {
+        let m = model();
+        assert!((m.peak_bpns - 5300.0).abs() < 1.0); // 5.3 TB/s
+    }
+
+    #[test]
+    fn low_demand_is_served_fully() {
+        let m = model();
+        let d = m.peak_bpns * 0.01;
+        let eff = m.effective(d);
+        assert!(eff > 0.95 * d, "low demand should be ~unthrottled: {eff}");
+    }
+
+    #[test]
+    fn saturates_below_peak() {
+        let m = model();
+        let eff = m.effective(m.peak_bpns * 100.0);
+        assert!(eff <= m.peak_bpns);
+        assert!(eff > 0.95 * m.peak_bpns, "huge demand approaches peak");
+    }
+
+    #[test]
+    fn effective_monotone_in_demand() {
+        let m = model();
+        let mut prev = 0.0;
+        for i in 1..100 {
+            let eff = m.effective(m.peak_bpns * i as f64 / 20.0);
+            assert!(eff >= prev);
+            prev = eff;
+        }
+    }
+
+    #[test]
+    fn shares_are_proportional_and_sum_to_effective() {
+        let m = model();
+        let demands = [1000.0, 2000.0, 3000.0];
+        let total: f64 = demands.iter().sum();
+        let shares: Vec<f64> = demands.iter().map(|d| m.share(*d, total)).collect();
+        let sum: f64 = shares.iter().sum();
+        assert!((sum - m.effective(total)).abs() < 1e-6);
+        assert!((shares[1] / shares[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_time_scales_inversely_with_share() {
+        let m = model();
+        let t1 = m.transfer_ns(1e6, 1000.0);
+        let t2 = m.transfer_ns(1e6, 2000.0);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9);
+        assert!(m.transfer_ns(1.0, 0.0).is_infinite());
+    }
+}

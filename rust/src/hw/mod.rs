@@ -1,0 +1,11 @@
+//! Hardware substrate models: CU pool/topology, LDS, L2, HBM.
+
+pub mod hbm;
+pub mod l2;
+pub mod lds;
+pub mod topology;
+
+pub use hbm::HbmModel;
+pub use l2::{CacheSim, L2Model};
+pub use lds::LdsTracker;
+pub use topology::CuPool;

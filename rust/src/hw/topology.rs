@@ -1,0 +1,155 @@
+//! CU pool and placement: which wavefronts sit on which compute unit.
+//!
+//! The DES dispatches wavefront-granular blocks onto this pool; the pool
+//! enforces per-CU wavefront and LDS limits and answers occupancy
+//! queries (waves per CU drive latency hiding, Fig 2; LDS residency
+//! drives Fig 7).
+
+use super::lds::LdsTracker;
+
+/// One compute unit's resident state.
+#[derive(Debug, Clone)]
+pub struct Cu {
+    pub waves: Vec<u64>,
+    pub lds: LdsTracker,
+    max_waves: usize,
+}
+
+impl Cu {
+    fn new(lds_bytes: usize, max_waves: usize) -> Cu {
+        Cu { waves: Vec::new(), lds: LdsTracker::new(lds_bytes), max_waves }
+    }
+
+    fn can_host(&self, lds_bytes: usize) -> bool {
+        self.waves.len() < self.max_waves
+            && self.lds.headroom(lds_bytes.max(1)) >= 1
+    }
+}
+
+/// The full CU pool (all XCDs flattened; the paper's study is
+/// single-GCD-scope, §9 Limitations, so no inter-XCD placement policy).
+#[derive(Debug)]
+pub struct CuPool {
+    pub cus: Vec<Cu>,
+    next_rr: usize,
+    resident: std::collections::HashMap<u64, usize>, // wave -> cu index
+}
+
+impl CuPool {
+    pub fn new(n_cus: usize, lds_bytes_per_cu: usize, max_waves: usize) -> CuPool {
+        CuPool {
+            cus: (0..n_cus).map(|_| Cu::new(lds_bytes_per_cu, max_waves)).collect(),
+            next_rr: 0,
+            resident: Default::default(),
+        }
+    }
+
+    /// Place a wavefront (round-robin over CUs with space). Returns the
+    /// CU index, or None if no CU can host it.
+    pub fn place(&mut self, wave: u64, lds_bytes: usize) -> Option<usize> {
+        let n = self.cus.len();
+        for probe in 0..n {
+            let idx = (self.next_rr + probe) % n;
+            if self.cus[idx].can_host(lds_bytes) {
+                self.cus[idx].waves.push(wave);
+                self.cus[idx].lds.alloc(wave, lds_bytes);
+                self.resident.insert(wave, idx);
+                self.next_rr = (idx + 1) % n;
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    /// Retire a wavefront, freeing its CU slot and LDS.
+    pub fn retire(&mut self, wave: u64) {
+        if let Some(idx) = self.resident.remove(&wave) {
+            let cu = &mut self.cus[idx];
+            if let Some(pos) = cu.waves.iter().position(|w| *w == wave) {
+                cu.waves.swap_remove(pos);
+            }
+            cu.lds.free(wave);
+        }
+    }
+
+    /// Total resident wavefronts.
+    pub fn resident_waves(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Wavefronts on the CU hosting `wave` (the latency-hiding pool).
+    pub fn waves_on_cu_of(&self, wave: u64) -> usize {
+        self.resident
+            .get(&wave)
+            .map(|&i| self.cus[i].waves.len())
+            .unwrap_or(0)
+    }
+
+    /// Mean LDS utilization across CUs hosting at least one wavefront.
+    pub fn mean_lds_utilization_occupied(&self) -> f64 {
+        let occupied: Vec<&Cu> =
+            self.cus.iter().filter(|c| !c.waves.is_empty()).collect();
+        if occupied.is_empty() {
+            return 0.0;
+        }
+        occupied.iter().map(|c| c.lds.utilization()).sum::<f64>()
+            / occupied.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_spreads_waves() {
+        let mut pool = CuPool::new(4, 64 * 1024, 8);
+        for w in 0..4 {
+            pool.place(w, 1024).unwrap();
+        }
+        for cu in &pool.cus {
+            assert_eq!(cu.waves.len(), 1, "one wave per CU before doubling up");
+        }
+    }
+
+    #[test]
+    fn stacks_when_pool_wraps() {
+        let mut pool = CuPool::new(2, 64 * 1024, 8);
+        for w in 0..6 {
+            pool.place(w, 0).unwrap();
+        }
+        assert_eq!(pool.cus[0].waves.len(), 3);
+        assert_eq!(pool.cus[1].waves.len(), 3);
+        assert_eq!(pool.resident_waves(), 6);
+    }
+
+    #[test]
+    fn respects_max_waves() {
+        let mut pool = CuPool::new(1, 64 * 1024, 2);
+        assert!(pool.place(0, 0).is_some());
+        assert!(pool.place(1, 0).is_some());
+        assert!(pool.place(2, 0).is_none(), "max_waves=2 must refuse");
+    }
+
+    #[test]
+    fn respects_lds_capacity() {
+        let mut pool = CuPool::new(1, 32 * 1024, 8);
+        assert!(pool.place(0, 24 * 1024).is_some());
+        assert!(pool.place(1, 24 * 1024).is_none(), "LDS-full CU must refuse");
+        pool.retire(0);
+        assert!(pool.place(1, 24 * 1024).is_some(), "freed LDS is reusable");
+    }
+
+    #[test]
+    fn retire_then_occupancy_queries() {
+        let mut pool = CuPool::new(2, 64 * 1024, 8);
+        pool.place(0, 16 * 1024);
+        pool.place(1, 16 * 1024);
+        pool.place(2, 16 * 1024); // stacks on cu 0
+        assert_eq!(pool.waves_on_cu_of(2), 2);
+        pool.retire(0);
+        assert_eq!(pool.waves_on_cu_of(2), 1);
+        assert_eq!(pool.resident_waves(), 2);
+        assert!(pool.mean_lds_utilization_occupied() > 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! CDNA3 MFMA instruction-set model: precisions, tiles, and the opcode
+//! registry carrying the paper's Table 3 latency measurements.
+
+pub mod opcode;
+pub mod precision;
+pub mod tile;
+
+pub use opcode::{by_precision, lookup, primary_opcode, MfmaOpcode, OPCODES};
+pub use precision::Precision;
+pub use tile::Tile;

@@ -1,0 +1,202 @@
+//! MFMA opcode registry with the paper's measured single-issue latencies.
+//!
+//! Table 3 of the paper reports dependency-chain latency per MFMA VALU
+//! opcode in units of 1e-5 ms (= 10 ns). Those measurements are the
+//! *calibration inputs* of the simulator (DESIGN.md §6): `experiments::
+//! table3` re-measures them through the simulated dependency-chain
+//! microbenchmark and must recover this table.
+
+use super::precision::Precision;
+use super::tile::Tile;
+
+/// One MFMA opcode: instruction mnemonic, operand precisions, tile, and
+/// measured dependency-chain latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MfmaOpcode {
+    /// CDNA3 mnemonic, e.g. `V_MFMA_F32_16X16X32_FP8_FP8`.
+    pub name: &'static str,
+    /// A-operand precision.
+    pub a: Precision,
+    /// B-operand precision (differs from `a` only for the FP8/BF8 mixes).
+    pub b: Precision,
+    /// Accumulator precision (F32 except for the F64 opcode).
+    pub acc: Precision,
+    pub tile: Tile,
+    /// Single-issue (dependency-chain) latency in nanoseconds
+    /// (paper Table 3 value x 10).
+    pub latency_ns: f64,
+}
+
+impl MfmaOpcode {
+    pub const fn new(
+        name: &'static str,
+        a: Precision,
+        b: Precision,
+        acc: Precision,
+        m: usize,
+        n: usize,
+        k: usize,
+        latency_e5_ms: f64,
+    ) -> MfmaOpcode {
+        MfmaOpcode {
+            name,
+            a,
+            b,
+            acc,
+            tile: Tile::new(m, n, k),
+            // 1e-5 ms = 10 ns.
+            latency_ns: latency_e5_ms * 10.0,
+        }
+    }
+
+    /// Paper Table 3 latency in the paper's own unit (1e-5 ms).
+    pub fn latency_e5_ms(&self) -> f64 {
+        self.latency_ns / 10.0
+    }
+
+    /// Dependency-chain throughput of a single wavefront issuing this
+    /// opcode back-to-back: FLOPs / latency.
+    pub fn chain_gflops(&self) -> f64 {
+        self.tile.flops() / self.latency_ns
+    }
+}
+
+use Precision::*;
+
+/// The complete Table 3: 25 opcodes across 6 instruction families.
+pub const OPCODES: &[MfmaOpcode] = &[
+    // V_MFMA_F32_{}_F16
+    MfmaOpcode::new("V_MFMA_F32_32X32X4_F16", F16, F16, F32, 32, 32, 4, 3.628),
+    MfmaOpcode::new("V_MFMA_F32_16X16X4_F16", F16, F16, F32, 16, 16, 4, 2.584),
+    MfmaOpcode::new("V_MFMA_F32_4X4X4_F16", F16, F16, F32, 4, 4, 4, 2.864),
+    MfmaOpcode::new("V_MFMA_F32_32X32X8_F16", F16, F16, F32, 32, 32, 8, 2.672),
+    MfmaOpcode::new("V_MFMA_F32_16X16X16_F16", F16, F16, F32, 16, 16, 16, 2.468),
+    // V_MFMA_F32_{}_F32
+    MfmaOpcode::new("V_MFMA_F32_32X32X1_F32", F32, F32, F32, 32, 32, 1, 3.912),
+    MfmaOpcode::new("V_MFMA_F32_16X16X1_F32", F32, F32, F32, 16, 16, 1, 3.144),
+    MfmaOpcode::new("V_MFMA_F32_4X4X1_F32", F32, F32, F32, 4, 4, 1, 2.484),
+    MfmaOpcode::new("V_MFMA_F32_32X32X2_F32", F32, F32, F32, 32, 32, 2, 3.536),
+    MfmaOpcode::new("V_MFMA_F32_16X16X4_F32", F32, F32, F32, 16, 16, 4, 2.616),
+    // V_MFMA_F64_{}_F64
+    MfmaOpcode::new("V_MFMA_F64_16X16X4_F64", F64, F64, F64, 16, 16, 4, 3.316),
+    MfmaOpcode::new("V_MFMA_F64_4X4X4_F64", F64, F64, F64, 4, 4, 4, 2.844),
+    // V_MFMA_F32_{}_BF16
+    MfmaOpcode::new("V_MFMA_F32_32X32X4_BF16", Bf16, Bf16, F32, 32, 32, 4, 3.528),
+    MfmaOpcode::new("V_MFMA_F32_16X16X4_BF16", Bf16, Bf16, F32, 16, 16, 4, 2.468),
+    MfmaOpcode::new("V_MFMA_F32_4X4X4_BF16", Bf16, Bf16, F32, 4, 4, 4, 2.992),
+    MfmaOpcode::new("V_MFMA_F32_32X32X8_BF16", Bf16, Bf16, F32, 32, 32, 8, 2.660),
+    MfmaOpcode::new("V_MFMA_F32_16X16X16_BF16", Bf16, Bf16, F32, 16, 16, 16, 2.812),
+    // V_MFMA_F32_{}_BF8_BF8
+    MfmaOpcode::new("V_MFMA_F32_16X16X32_BF8_BF8", Bf8, Bf8, F32, 16, 16, 32, 2.528),
+    MfmaOpcode::new("V_MFMA_F32_32X32X16_BF8_BF8", Bf8, Bf8, F32, 32, 32, 16, 2.828),
+    // V_MFMA_F32_{}_BF8_FP8
+    MfmaOpcode::new("V_MFMA_F32_16X16X32_BF8_FP8", Bf8, Fp8, F32, 16, 16, 32, 2.492),
+    MfmaOpcode::new("V_MFMA_F32_32X32X16_BF8_FP8", Bf8, Fp8, F32, 32, 32, 16, 2.832),
+    // V_MFMA_F32_{}_FP8_BF8
+    MfmaOpcode::new("V_MFMA_F32_16X16X32_FP8_BF8", Fp8, Bf8, F32, 16, 16, 32, 2.540),
+    MfmaOpcode::new("V_MFMA_F32_32X32X16_FP8_BF8", Fp8, Bf8, F32, 32, 32, 16, 2.736),
+    // V_MFMA_F32_{}_FP8_FP8
+    MfmaOpcode::new("V_MFMA_F32_16X16X32_FP8_FP8", Fp8, Fp8, F32, 16, 16, 32, 2.460),
+    MfmaOpcode::new("V_MFMA_F32_32X32X16_FP8_FP8", Fp8, Fp8, F32, 32, 32, 16, 2.736),
+];
+
+/// The primary (preferred) opcode per precision — the tile each precision
+/// uses in the paper's Fig 2/3 microbenchmarks (§5.1): FP64 and
+/// FP16/BF16 use 16x16x4, FP32 uses 32x32x1, FP8 uses 16x16x32.
+pub fn primary_opcode(p: Precision) -> &'static MfmaOpcode {
+    let name = match p {
+        F64 => "V_MFMA_F64_16X16X4_F64",
+        F32 => "V_MFMA_F32_32X32X1_F32",
+        F16 => "V_MFMA_F32_16X16X4_F16",
+        Bf16 => "V_MFMA_F32_16X16X4_BF16",
+        Fp8 => "V_MFMA_F32_16X16X32_FP8_FP8",
+        Bf8 => "V_MFMA_F32_16X16X32_BF8_BF8",
+    };
+    lookup(name).expect("primary opcode present in table")
+}
+
+/// Find an opcode by mnemonic.
+pub fn lookup(name: &str) -> Option<&'static MfmaOpcode> {
+    OPCODES.iter().find(|o| o.name == name)
+}
+
+/// All opcodes for a given A-operand precision.
+pub fn by_precision(p: Precision) -> Vec<&'static MfmaOpcode> {
+    OPCODES.iter().filter(|o| o.a == p).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_25_rows() {
+        assert_eq!(OPCODES.len(), 25);
+    }
+
+    #[test]
+    fn fp8_fp8_16x16x32_matches_paper() {
+        let op = lookup("V_MFMA_F32_16X16X32_FP8_FP8").unwrap();
+        assert!((op.latency_e5_ms() - 2.460).abs() < 1e-9);
+        assert_eq!(op.tile, Tile::new(16, 16, 32));
+        assert_eq!(op.latency_ns, 24.6);
+    }
+
+    #[test]
+    fn all_32x32_slower_than_16x16_within_family() {
+        // Paper §5.4: "32x32 tiles consistently incur higher latency than
+        // their 16x16 counterparts" (same family, nearest K).
+        for fam in [
+            ("V_MFMA_F32_32X32X16_FP8_FP8", "V_MFMA_F32_16X16X32_FP8_FP8"),
+            ("V_MFMA_F32_32X32X16_BF8_BF8", "V_MFMA_F32_16X16X32_BF8_BF8"),
+            ("V_MFMA_F32_32X32X4_F16", "V_MFMA_F32_16X16X4_F16"),
+            ("V_MFMA_F32_32X32X1_F32", "V_MFMA_F32_16X16X1_F32"),
+            ("V_MFMA_F32_32X32X4_BF16", "V_MFMA_F32_16X16X4_BF16"),
+        ] {
+            let (big, small) = (lookup(fam.0).unwrap(), lookup(fam.1).unwrap());
+            assert!(
+                big.latency_ns > small.latency_ns,
+                "{} should be slower than {}",
+                fam.0,
+                fam.1
+            );
+        }
+    }
+
+    #[test]
+    fn fp8_has_lowest_latency_of_16x16x32_family() {
+        // Paper: FP8_FP8 16x16x32 at 2.460 is the fastest FP8-family row.
+        let fp8 = lookup("V_MFMA_F32_16X16X32_FP8_FP8").unwrap();
+        for o in OPCODES {
+            if o.tile == Tile::new(16, 16, 32) {
+                assert!(o.latency_ns >= fp8.latency_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn primary_opcodes_match_section_5_1() {
+        assert_eq!(primary_opcode(F64).tile, Tile::new(16, 16, 4));
+        assert_eq!(primary_opcode(F32).tile, Tile::new(32, 32, 1));
+        assert_eq!(primary_opcode(F16).tile, Tile::new(16, 16, 4));
+        assert_eq!(primary_opcode(Bf16).tile, Tile::new(16, 16, 4));
+        assert_eq!(primary_opcode(Fp8).tile, Tile::new(16, 16, 32));
+    }
+
+    #[test]
+    fn mnemonics_unique() {
+        let mut names: Vec<_> = OPCODES.iter().map(|o| o.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), OPCODES.len());
+    }
+
+    #[test]
+    fn chain_gflops_orders_precisions_as_fig2() {
+        // Per-wavefront dependency-chain throughput: FP8 >> FP16 > FP32.
+        let fp8 = primary_opcode(Fp8).chain_gflops();
+        let f16 = primary_opcode(F16).chain_gflops();
+        let f32_ = primary_opcode(F32).chain_gflops();
+        assert!(fp8 > f16 && f16 > f32_);
+    }
+}

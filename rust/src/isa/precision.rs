@@ -1,0 +1,112 @@
+//! Operand precisions of the CDNA3 matrix engines (paper §2, §5).
+
+use std::fmt;
+
+/// Matrix-operand precision. `Fp8` is E4M3, `Bf8` is E5M2 (OCP OFP8
+/// naming, paper ref [1]); both multiply into an FP32 accumulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    F64,
+    F32,
+    F16,
+    Bf16,
+    Fp8,
+    Bf8,
+}
+
+impl Precision {
+    /// The five precisions the paper's occupancy sweep covers (Fig 2).
+    /// FP8 stands for the whole E4M3/E5M2 family there.
+    pub const SWEEP: [Precision; 5] = [
+        Precision::F64,
+        Precision::F32,
+        Precision::F16,
+        Precision::Bf16,
+        Precision::Fp8,
+    ];
+
+    /// Operand size in bytes.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+            Precision::F16 | Precision::Bf16 => 2,
+            Precision::Fp8 | Precision::Bf8 => 1,
+        }
+    }
+
+    /// Published MI300A dense matrix peak for this precision, in GFLOPS
+    /// (vendor numbers the paper normalizes against: FP64/FP32 matrix
+    /// 122.6 TF, FP16/BF16 980.6 TF, FP8 1961.2 TF).
+    pub fn peak_gflops(self) -> f64 {
+        match self {
+            Precision::F64 | Precision::F32 => 122_600.0,
+            Precision::F16 | Precision::Bf16 => 980_600.0,
+            Precision::Fp8 | Precision::Bf8 => 1_961_200.0,
+        }
+    }
+
+    /// Theoretical throughput multiple over FP16 (paper §2: FP8 is 2x
+    /// FP16; FP32/FP64 are 1/8 of FP16 on the matrix path).
+    pub fn relative_rate(self) -> f64 {
+        self.peak_gflops() / Precision::F16.peak_gflops()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "FP64",
+            Precision::F32 => "FP32",
+            Precision::F16 => "FP16",
+            Precision::Bf16 => "BF16",
+            Precision::Fp8 => "FP8",
+            Precision::Bf8 => "BF8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp64" | "f64" => Some(Precision::F64),
+            "fp32" | "f32" => Some(Precision::F32),
+            "fp16" | "f16" => Some(Precision::F16),
+            "bf16" => Some(Precision::Bf16),
+            "fp8" | "f8" | "e4m3" => Some(Precision::Fp8),
+            "bf8" | "e5m2" => Some(Precision::Bf8),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp8_is_2x_fp16_and_16x_fp32() {
+        assert_eq!(Precision::Fp8.relative_rate(), 2.0);
+        // Vendor sheets round: 122.6 vs 980.6/8 = 122.575.
+        assert!((Precision::F32.relative_rate() - 0.125).abs() < 1e-3);
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(Precision::F64.bytes(), 8);
+        assert_eq!(Precision::F32.bytes(), 4);
+        assert_eq!(Precision::Bf16.bytes(), 2);
+        assert_eq!(Precision::Fp8.bytes(), 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in Precision::SWEEP {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("e5m2"), Some(Precision::Bf8));
+        assert_eq!(Precision::parse("int4"), None);
+    }
+}

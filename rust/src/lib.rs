@@ -1,0 +1,35 @@
+//! # mi300a-char
+//!
+//! Execution-centric characterization of FP8 matrix cores, asynchronous
+//! execution, and structured sparsity on an MI300A-class APU —
+//! a full reproduction of Jarmusch, Vitz & Chandrasekaran (CS.DC 2026)
+//! on a simulated substrate (DESIGN.md documents the substitution).
+//!
+//! Layers:
+//! * [`isa`], [`hw`], [`sim`] — the simulated MI300A: MFMA opcodes with
+//!   the paper's measured Table-3 latencies, CU/LDS/L2/HBM models, and a
+//!   processor-sharing DES for ACE concurrency.
+//! * [`sparsity`] — 2:4 structured sparsity encoding + the rocSPARSE-like
+//!   API overhead model.
+//! * [`metrics`] — fairness, overlap efficiency, CV (paper §4.2).
+//! * [`workload`] — GEMM / transformer / mixed-precision generators.
+//! * [`coordinator`] — the execution-aware runtime the paper's §9 calls
+//!   for: occupancy-aware batching, concurrency governance,
+//!   context-dependent sparsity, precision-aware co-scheduling.
+//! * [`runtime`] — PJRT executor for the AOT'd JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); the only real-compute path.
+//! * [`experiments`] — one driver per paper figure/table.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod hw;
+pub mod isa;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod sparsity;
+pub mod util;
+pub mod workload;

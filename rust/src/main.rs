@@ -1,0 +1,240 @@
+//! `mi300a-char` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   repro <id|all>      regenerate a paper table/figure (DESIGN.md §5)
+//!   run <entry>         execute one AOT'd artifact via PJRT
+//!   plan                show a coordinator execution plan for a pool
+//!   config              dump the active configuration
+//!   list                list experiments and artifacts
+
+use mi300a_char::config::Config;
+use mi300a_char::coordinator::{Coordinator, Objective};
+use mi300a_char::experiments;
+use mi300a_char::isa::Precision;
+use mi300a_char::runtime::{Executor, Manifest};
+use mi300a_char::sim::KernelDesc;
+use mi300a_char::util::cli::Args;
+
+const USAGE: &str = "\
+mi300a-char — execution-centric MI300A characterization (simulated substrate)
+
+USAGE:
+  mi300a-char repro <id|all> [--seed N] [--set section.field=value]
+                             [--json] [--out-dir DIR]
+  mi300a-char run <entry> [--artifacts DIR]
+  mi300a-char plan [--objective latency|throughput|isolation]
+                   [--streams N] [--size N] [--precision P]
+  mi300a-char serve [--addr HOST:PORT] [--max-conns N]
+  mi300a-char config [--set section.field=value]
+  mi300a-char list
+
+Experiment ids: table1 table2 table3 fig2..fig16 (see DESIGN.md §5).
+";
+
+fn build_config(args: &Args) -> Config {
+    let mut cfg = if let Some(path) = args.get("config") {
+        Config::load(std::path::Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        })
+    } else {
+        Config::mi300a()
+    };
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    if let Some(spec) = args.get("set") {
+        if let Err(e) = cfg.set(spec) {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }
+    }
+    cfg
+}
+
+fn cmd_repro(args: &Args) -> i32 {
+    let cfg = build_config(args);
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let ids: Vec<&str> = if which == "all" {
+        experiments::ALL_IDS.to_vec()
+    } else {
+        vec![which]
+    };
+    let out_dir = args.get("out-dir").map(std::path::PathBuf::from);
+    if let Some(d) = &out_dir {
+        let _ = std::fs::create_dir_all(d);
+    }
+    for id in ids {
+        match experiments::run(id, &cfg) {
+            Some(report) => {
+                if args.flag("json") {
+                    println!("{}", report.json.to_string_pretty());
+                } else {
+                    println!("{}", report.render());
+                }
+                if let Some(d) = &out_dir {
+                    let _ = std::fs::write(
+                        d.join(format!("{id}.json")),
+                        report.json.to_string_pretty(),
+                    );
+                    let _ = std::fs::write(
+                        d.join(format!("{id}.txt")),
+                        report.render(),
+                    );
+                }
+            }
+            None => {
+                eprintln!("unknown experiment id {id:?}");
+                return 2;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let entry = match args.positional.first() {
+        Some(e) => e.clone(),
+        None => {
+            eprintln!("run: missing <entry> (see `mi300a-char list`)");
+            return 2;
+        }
+    };
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let mut exec = match Executor::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("runtime: {e} (run `make artifacts` first)");
+            return 1;
+        }
+    };
+    let spec = match exec.manifest.get(&entry) {
+        Some(s) => s.clone(),
+        None => {
+            eprintln!("unknown entry {entry:?}");
+            return 2;
+        }
+    };
+    // Deterministic inputs: same pattern the golden tests use.
+    let inputs: Vec<Vec<f32>> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            (0..t.elements())
+                .map(|j| ((j % (13 + i)) as f32 - 6.0) / 3.0)
+                .collect()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    match exec.run_f32(&entry, &inputs) {
+        Ok(out) => {
+            let dt = t0.elapsed();
+            let checksum: f32 = out.iter().sum();
+            println!(
+                "{entry}: {} outputs, checksum {checksum:.4}, {} ms \
+                 (incl. compile)",
+                out.len(),
+                dt.as_millis()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("execute {entry}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_plan(args: &Args) -> i32 {
+    let cfg = build_config(args);
+    let objective = match args.get_or("objective", "latency") {
+        "latency" => Objective::LatencySensitive,
+        "throughput" => Objective::ThroughputOriented,
+        "isolation" => Objective::StrictIsolation,
+        other => {
+            eprintln!("unknown objective {other:?}");
+            return 2;
+        }
+    };
+    let n = args.get_usize("size", 512);
+    let streams = args.get_usize("streams", 4);
+    let p = Precision::parse(args.get_or("precision", "fp8"))
+        .unwrap_or(Precision::Fp8);
+    let pool = vec![KernelDesc::gemm(n, p).with_iters(100); streams];
+    let coord = Coordinator::new(cfg, objective);
+    let plan = coord.plan(&pool, true);
+    println!("objective: {:?}", plan.objective);
+    for (i, g) in plan.groups.iter().enumerate() {
+        println!(
+            "group {i}: {} kernels, {} streams, expected fairness {:.3}, \
+             process isolation {}",
+            g.kernels.len(),
+            g.streams,
+            g.expected_fairness,
+            g.process_isolation
+        );
+        for k in &g.kernels {
+            println!("  - {}", k.label());
+        }
+    }
+    0
+}
+
+fn cmd_list(_args: &Args) -> i32 {
+    println!("experiments:");
+    for id in experiments::ALL_IDS {
+        println!("  {id}");
+    }
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir.display());
+            for e in &m.entries {
+                println!(
+                    "  {} ({} inputs -> {} outputs)",
+                    e.name,
+                    e.inputs.len(),
+                    e.outputs.len()
+                );
+            }
+        }
+        Err(_) => println!(
+            "artifacts: not built (run `make artifacts`); dir {}",
+            dir.display()
+        ),
+    }
+    0
+}
+
+fn main() {
+    let args = Args::from_env(&["json", "verbose"]);
+    let code = match args.subcommand.as_deref() {
+        Some("repro") => cmd_repro(&args),
+        Some("run") => cmd_run(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("config") => {
+            println!("{}", build_config(&args).to_json().to_string_pretty());
+            0
+        }
+        Some("list") => cmd_list(&args),
+        Some("serve") => {
+            let cfg = build_config(&args);
+            let addr = args.get_or("addr", "127.0.0.1:7300").to_string();
+            let max = args.get("max-conns").map(|v| v.parse().unwrap_or(1));
+            match mi300a_char::serve::serve(cfg, &addr, max) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    1
+                }
+            }
+        }
+        _ => {
+            print!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,133 @@
+//! Fairness and overlap metrics exactly as the paper defines them.
+
+/// §4.2 fairness: `1 - (t_max - t_min) / t_mean` over per-stream
+/// execution times. Ranges (-inf, 1]; the paper clamps display to
+/// [0, 1], which we preserve — 1.0 means perfectly balanced progress.
+pub fn fairness(per_stream_times: &[f64]) -> f64 {
+    assert!(!per_stream_times.is_empty());
+    let n = per_stream_times.len() as f64;
+    let mean = per_stream_times.iter().sum::<f64>() / n;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    let max = per_stream_times.iter().cloned().fold(f64::MIN, f64::max);
+    let min = per_stream_times.iter().cloned().fold(f64::MAX, f64::min);
+    (1.0 - (max - min) / mean).clamp(0.0, 1.0)
+}
+
+/// §7.2.1 fairness variant: `t_min / t_max` (the sparsity-under-
+/// contention experiments report "minimum to maximum per-stream
+/// execution time ratio, where 1.0 indicates perfect balance").
+pub fn fairness_minmax(per_stream_times: &[f64]) -> f64 {
+    assert!(!per_stream_times.is_empty());
+    let max = per_stream_times.iter().cloned().fold(f64::MIN, f64::max);
+    let min = per_stream_times.iter().cloned().fold(f64::MAX, f64::min);
+    if max <= 0.0 {
+        return 1.0;
+    }
+    (min / max).clamp(0.0, 1.0)
+}
+
+/// §4.2 overlap efficiency: fraction of total execution time during
+/// which multiple kernels execute concurrently, from per-stream
+/// (start, end) intervals. Computed by sweeping interval boundaries.
+pub fn overlap_efficiency(intervals: &[(f64, f64)]) -> f64 {
+    if intervals.len() < 2 {
+        return 0.0;
+    }
+    let t0 = intervals.iter().map(|i| i.0).fold(f64::MAX, f64::min);
+    let t1 = intervals.iter().map(|i| i.1).fold(f64::MIN, f64::max);
+    let total = t1 - t0;
+    if total <= 0.0 {
+        return 0.0;
+    }
+    // Event sweep over boundaries.
+    let mut events: Vec<(f64, i32)> = Vec::with_capacity(intervals.len() * 2);
+    for &(s, e) in intervals {
+        if e > s {
+            events.push((s, 1));
+            events.push((e, -1));
+        }
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut active = 0i32;
+    let mut last = t0;
+    let mut overlapped = 0.0;
+    for (t, d) in events {
+        if active >= 2 {
+            overlapped += t - last;
+        }
+        last = t;
+        active += d;
+    }
+    overlapped / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fairness_perfect_balance() {
+        assert_eq!(fairness(&[10.0, 10.0, 10.0]), 1.0);
+        assert_eq!(fairness_minmax(&[10.0, 10.0]), 1.0);
+    }
+
+    #[test]
+    fn fairness_hand_computed() {
+        // times 8, 10, 12: mean 10, max-min = 4 -> 1 - 0.4 = 0.6.
+        assert!((fairness(&[8.0, 10.0, 12.0]) - 0.6).abs() < 1e-12);
+        // min/max variant: 8/12.
+        assert!((fairness_minmax(&[8.0, 10.0, 12.0]) - 8.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fairness_clamps_at_zero() {
+        // Extreme spread: 1 - (100-1)/mean < 0 -> clamp to 0.
+        assert_eq!(fairness(&[1.0, 100.0]), 0.0);
+    }
+
+    #[test]
+    fn fairness_in_unit_interval_property() {
+        use crate::util::proptest::check;
+        check(200, 42, |g| {
+            let n = g.usize_in(1, 16);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 1e6)).collect();
+            let f = fairness(&xs);
+            let fm = fairness_minmax(&xs);
+            if !(0.0..=1.0).contains(&f) {
+                return Err(format!("fairness {f} out of range"));
+            }
+            if !(0.0..=1.0).contains(&fm) {
+                return Err(format!("fairness_minmax {fm} out of range"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn overlap_disjoint_is_zero() {
+        assert_eq!(overlap_efficiency(&[(0.0, 1.0), (1.0, 2.0)]), 0.0);
+        assert_eq!(overlap_efficiency(&[(0.0, 5.0)]), 0.0);
+    }
+
+    #[test]
+    fn overlap_full_is_one() {
+        let o = overlap_efficiency(&[(0.0, 10.0), (0.0, 10.0)]);
+        assert!((o - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_hand_computed() {
+        // [0,10] and [5,15]: overlap 5 over total span 15 = 1/3.
+        let o = overlap_efficiency(&[(0.0, 10.0), (5.0, 15.0)]);
+        assert!((o - 5.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_three_streams_counts_pairwise_regions() {
+        // [0,4],[2,6],[8,10]: >=2 active during [2,4] -> 2 / span 10.
+        let o = overlap_efficiency(&[(0.0, 4.0), (2.0, 6.0), (8.0, 10.0)]);
+        assert!((o - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! Measurement metrics (paper §4.2): fairness, overlap efficiency,
+//! coefficient of variation, and summary statistics.
+
+pub mod fairness;
+pub mod stats;
+
+pub use fairness::{fairness, fairness_minmax, overlap_efficiency};
+pub use stats::Summary;

@@ -1,0 +1,191 @@
+//! Report rendering: aligned text tables, CSV, and ASCII line plots for
+//! the experiment drivers (`mi300a-char repro <id>` output).
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column alignment (numbers right, text left).
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let numeric: Vec<bool> = (0..ncol)
+            .map(|i| {
+                self.rows.iter().all(|r| {
+                    let c = r[i].trim_end_matches(['%', 'x']);
+                    c.is_empty() || c.parse::<f64>().is_ok()
+                })
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                if numeric[i] {
+                    line.push_str(&format!("{:>width$}", c, width = widths[i]));
+                } else {
+                    line.push_str(&format!("{:<width$}", c, width = widths[i]));
+                }
+                line.push_str(" | ");
+            }
+            line.trim_end().to_string()
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (headers + rows).
+    pub fn csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// An ASCII line plot: one or more named series over a shared x axis.
+pub fn ascii_plot(
+    title: &str,
+    x: &[f64],
+    series: &[(&str, Vec<f64>)],
+    height: usize,
+) -> String {
+    assert!(!x.is_empty() && !series.is_empty());
+    let width = 64usize;
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter())
+        .cloned()
+        .fold(f64::MIN, f64::max);
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter())
+        .cloned()
+        .fold(f64::MAX, f64::min)
+        .min(0.0);
+    let yspan = (ymax - ymin).max(1e-12);
+    let xmin = x[0];
+    let xspan = (x[x.len() - 1] - xmin).max(1e-12);
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (i, &yv) in ys.iter().enumerate() {
+            let cx = (((x[i] - xmin) / xspan) * (width - 1) as f64) as usize;
+            let cy = (((yv - ymin) / yspan) * (height - 1) as f64) as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("-- {title} --\n");
+    for (r, row) in grid.iter().enumerate() {
+        let yv = ymax - yspan * r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>10.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>10} +{}\n{:>12}{:<.6} .. {:<.6}\n",
+        "", "-".repeat(width), "x: ", xmin, xmin + xspan
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["fp8".into(), "13.7%".into()]);
+        t.row(vec!["fp64".into(), "12.1%".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| fp8 "));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_wrong_arity() {
+        Table::new("t", &["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert_eq!(t.csv(), "a\n\"x,y\"\n");
+    }
+
+    #[test]
+    fn plot_contains_series_marks() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let p = ascii_plot(
+            "t",
+            &x,
+            &[("a", vec![1.0, 2.0, 3.0, 4.0]), ("b", vec![4.0, 3.0, 2.0, 1.0])],
+            8,
+        );
+        assert!(p.contains('*') && p.contains('o'));
+        assert!(p.contains("-- t --"));
+    }
+}

@@ -1,0 +1,125 @@
+//! PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. All entries are lowered with
+//! `return_tuple=True`, so outputs unwrap with `to_tuple1`.
+
+use super::manifest::{DType, EntrySpec, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One compiled entry.
+pub struct LoadedEntry {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Typed input for execution.
+pub enum Input {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl LoadedEntry {
+    /// Execute with raw buffers (one per input, row-major, matching the
+    /// manifest specs). Returns the first (sole) output as f32.
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: {} inputs given, {} expected",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .enumerate()
+            .map(|(i, (input, spec))| {
+                let dims: Vec<i64> =
+                    spec.shape.iter().map(|&d| d as i64).collect();
+                let lit = match (input, spec.dtype) {
+                    (Input::F32(v), DType::F32) => {
+                        if v.len() != spec.elements() {
+                            return Err(anyhow!(
+                                "input {i}: {} elements, want {}",
+                                v.len(),
+                                spec.elements()
+                            ));
+                        }
+                        xla::Literal::vec1(v).reshape(&dims)?
+                    }
+                    (Input::I32(v), DType::I32) => {
+                        if v.len() != spec.elements() {
+                            return Err(anyhow!(
+                                "input {i}: {} elements, want {}",
+                                v.len(),
+                                spec.elements()
+                            ));
+                        }
+                        xla::Literal::vec1(v).reshape(&dims)?
+                    }
+                    _ => return Err(anyhow!("input {i}: dtype mismatch")),
+                };
+                Ok(lit)
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrap 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The executor: a PJRT CPU client plus lazily-compiled entries.
+pub struct Executor {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    loaded: HashMap<String, LoadedEntry>,
+}
+
+impl Executor {
+    /// Create from an artifacts directory (compiles nothing yet).
+    pub fn new(artifacts_dir: &Path) -> Result<Executor> {
+        let manifest = Manifest::load(artifacts_dir)
+            .map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Executor { client, manifest, loaded: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return an entry by name.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedEntry> {
+        if !self.loaded.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown entry {name:?}"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.loaded.insert(name.to_string(), LoadedEntry { spec, exe });
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Convenience: run an entry with all-f32 inputs.
+    pub fn run_f32(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let entry = self.load(name)?;
+        let wrapped: Vec<Input> =
+            inputs.iter().map(|v| Input::F32(v.clone())).collect();
+        entry.run(&wrapped)
+    }
+}

@@ -1,0 +1,177 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (`artifacts/manifest.json`).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "float32" => Some(DType::F32),
+            "int32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+/// Shape + dtype of one input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT'd entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<EntrySpec>,
+}
+
+fn tensor_specs(v: &Json, key: &str) -> Result<Vec<TensorSpec>, String> {
+    v.get(key)
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| format!("missing {key}"))?
+        .iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(|j| j.as_arr())
+                .ok_or("missing shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("bad dim"))
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(|j| j.as_str())
+                .and_then(DType::parse)
+                .ok_or("bad dtype")?;
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect::<Result<Vec<_>, &str>>()
+        .map_err(|e| e.to_string())
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| e.to_string())?;
+        if v.get("format").and_then(|j| j.as_str()) != Some("hlo-text") {
+            return Err("manifest format is not hlo-text".into());
+        }
+        let entries = v
+            .get("entries")
+            .and_then(|j| j.as_arr())
+            .ok_or("missing entries")?
+            .iter()
+            .map(|e| {
+                Ok(EntrySpec {
+                    name: e
+                        .get("name")
+                        .and_then(|j| j.as_str())
+                        .ok_or("missing name")?
+                        .to_string(),
+                    path: dir.join(
+                        e.get("path")
+                            .and_then(|j| j.as_str())
+                            .ok_or("missing path")?,
+                    ),
+                    sha256: e
+                        .get("sha256")
+                        .and_then(|j| j.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    inputs: tensor_specs(e, "inputs")?,
+                    outputs: tensor_specs(e, "outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Default artifacts dir: `$MI300A_CHAR_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MI300A_CHAR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("mi300a_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","entries":[
+              {"name":"gemm","path":"gemm.hlo.txt","sha256":"x",
+               "inputs":[{"shape":[4,4],"dtype":"float32"},
+                          {"shape":[4,4],"dtype":"int32"}],
+               "outputs":[{"shape":[4,4],"dtype":"float32"}]}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("gemm").unwrap();
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.inputs[1].dtype, DType::I32);
+        assert_eq!(e.inputs[0].elements(), 16);
+        assert!(e.path.ends_with("gemm.hlo.txt"));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("mi300a_manifest_bad");
+        write_manifest(&dir, r#"{"format":"proto","entries":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("gemm_fp8_128").is_some());
+            for e in &m.entries {
+                assert!(e.path.exists(), "artifact missing: {}", e.name);
+            }
+        }
+    }
+}

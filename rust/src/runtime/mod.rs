@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT'd HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the only real-compute path — Python never runs at serve time.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod executor;
+
+pub use executor::{Executor, Input, LoadedEntry};
+pub use manifest::{DType, EntrySpec, Manifest, TensorSpec};

@@ -1,0 +1,213 @@
+//! `mi300a-char serve` — a thin request loop (L3 leader process).
+//!
+//! Line protocol over TCP, one request per line, JSON response per
+//! line. The loop composes the coordinator's policies with either the
+//! simulator (timing questions) or the PJRT runtime (real compute):
+//!
+//! ```text
+//! SIM <n> <precision> <streams>     -> simulated concurrent-run report
+//! PLAN <objective> <streams> <n>    -> coordinator execution plan
+//! RUN <entry>                       -> execute an AOT artifact (PJRT)
+//! SPARSITY <n> <streams>            -> sparsity decision + speedups
+//! QUIT
+//! ```
+//!
+//! The server is single-threaded by design: requests serialize through
+//! the leader exactly like launches serialize through an ACE lane, and
+//! the PJRT executor is not Sync. Throughput-oriented deployments run
+//! one process per tenant (the paper's §9.2 isolation guidance).
+
+use crate::config::Config;
+use crate::coordinator::{decide_sparsity, Coordinator, Objective};
+use crate::isa::Precision;
+use crate::metrics::fairness;
+use crate::runtime::{Executor, Manifest};
+use crate::sim::{ConcurrencyProfile, Engine, KernelDesc, SparsityMode};
+use crate::sparsity::SpeedupModel;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// Serve on `addr` (e.g. "127.0.0.1:0"); returns after `max_conns`
+/// connections (None = forever). Prints the bound address on stdout so
+/// callers/tests can discover the ephemeral port.
+pub fn serve(cfg: Config, addr: &str, max_conns: Option<usize>) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!("serving on {}", listener.local_addr()?);
+    let mut exec: Option<Executor> = None;
+    let mut served = 0usize;
+    for conn in listener.incoming() {
+        let stream = conn?;
+        if let Err(e) = handle(&cfg, stream, &mut exec) {
+            eprintln!("connection error: {e}");
+        }
+        served += 1;
+        if let Some(max) = max_conns {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn respond(out: &mut TcpStream, v: Json) -> std::io::Result<()> {
+    writeln!(out, "{v}")
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.into()))])
+}
+
+fn handle(
+    cfg: &Config,
+    stream: TcpStream,
+    exec: &mut Option<Executor>,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts.as_slice() {
+            ["QUIT"] | ["quit"] => break,
+            ["SIM", n, prec, streams] => {
+                let reply = cmd_sim(cfg, n, prec, streams)
+                    .unwrap_or_else(|e| err_json(&e));
+                respond(&mut writer, reply)?;
+            }
+            ["PLAN", objective, streams, n] => {
+                let reply = cmd_plan(cfg, objective, streams, n)
+                    .unwrap_or_else(|e| err_json(&e));
+                respond(&mut writer, reply)?;
+            }
+            ["SPARSITY", n, streams] => {
+                let reply = cmd_sparsity(cfg, n, streams)
+                    .unwrap_or_else(|e| err_json(&e));
+                respond(&mut writer, reply)?;
+            }
+            ["RUN", entry] => {
+                let reply = cmd_run(exec, entry).unwrap_or_else(|e| err_json(&e));
+                respond(&mut writer, reply)?;
+            }
+            [] => {}
+            _ => respond(&mut writer, err_json("unknown command"))?,
+        }
+    }
+    Ok(())
+}
+
+fn parse_usize(s: &str, what: &str) -> Result<usize, String> {
+    s.parse().map_err(|_| format!("bad {what}: {s:?}"))
+}
+
+fn cmd_sim(cfg: &Config, n: &str, prec: &str, streams: &str) -> Result<Json, String> {
+    let n = parse_usize(n, "size")?;
+    let streams = parse_usize(streams, "streams")?.clamp(1, 16);
+    let p = Precision::parse(prec).ok_or_else(|| format!("bad precision {prec:?}"))?;
+    let engine = Engine::new(cfg, ConcurrencyProfile::ace());
+    let ks = vec![KernelDesc::gemm(n, p).with_iters(50); streams];
+    let run = engine.run(&ks, cfg.seed);
+    let speedup = engine.speedup(&ks, cfg.seed);
+    Ok(Json::obj(vec![
+        ("makespan_ms", Json::Num(run.makespan_ns / 1e6)),
+        ("speedup_vs_serial", Json::Num(speedup)),
+        ("overlap_efficiency", Json::Num(run.overlap_efficiency)),
+        ("fairness", Json::Num(fairness(&run.per_stream_totals()))),
+        ("l2_miss", Json::Num(run.l2_miss[0])),
+        ("lds_util", Json::Num(run.lds_util)),
+    ]))
+}
+
+fn cmd_plan(cfg: &Config, objective: &str, streams: &str, n: &str) -> Result<Json, String> {
+    let objective = match objective {
+        "latency" => Objective::LatencySensitive,
+        "throughput" => Objective::ThroughputOriented,
+        "isolation" => Objective::StrictIsolation,
+        o => return Err(format!("bad objective {o:?}")),
+    };
+    let streams = parse_usize(streams, "streams")?.clamp(1, 64);
+    let n = parse_usize(n, "size")?;
+    let pool = vec![KernelDesc::gemm(n, Precision::Fp8).with_iters(100); streams];
+    let coord = Coordinator::new(cfg.clone(), objective);
+    let plan = coord.plan(&pool, true);
+    Ok(Json::obj(vec![
+        ("groups", Json::Num(plan.groups.len() as f64)),
+        (
+            "streams",
+            Json::Arr(
+                plan.groups
+                    .iter()
+                    .map(|g| Json::Num(g.streams as f64))
+                    .collect(),
+            ),
+        ),
+        (
+            "expected_fairness",
+            Json::Arr(
+                plan.groups
+                    .iter()
+                    .map(|g| Json::Num(g.expected_fairness))
+                    .collect(),
+            ),
+        ),
+        (
+            "sparse",
+            Json::Bool(plan.groups.iter().any(|g| {
+                g.kernels.iter().any(|k| k.sparsity.is_sparse())
+            })),
+        ),
+    ]))
+}
+
+fn cmd_sparsity(cfg: &Config, n: &str, streams: &str) -> Result<Json, String> {
+    let n = parse_usize(n, "size")?;
+    let streams = parse_usize(streams, "streams")?;
+    let k = KernelDesc::gemm(n, Precision::Fp8);
+    let d = decide_sparsity(&k, streams, true);
+    let model = SpeedupModel::new(cfg);
+    Ok(Json::obj(vec![
+        ("enable", Json::Bool(d.enable)),
+        ("reason", Json::Str(format!("{:?}", d.reason))),
+        (
+            "isolated_speedup",
+            Json::Num(model.isolated(&k, SparsityMode::SparseLhs).speedup()),
+        ),
+        (
+            "concurrent_speedup",
+            Json::Num(model.concurrent_per_stream(&k, streams.max(2))),
+        ),
+    ]))
+}
+
+fn cmd_run(exec: &mut Option<Executor>, entry: &str) -> Result<Json, String> {
+    if exec.is_none() {
+        *exec = Some(
+            Executor::new(&Manifest::default_dir()).map_err(|e| e.to_string())?,
+        );
+    }
+    let exec = exec.as_mut().unwrap();
+    let spec = exec
+        .manifest
+        .get(entry)
+        .ok_or_else(|| format!("unknown entry {entry:?}"))?
+        .clone();
+    let inputs: Vec<Vec<f32>> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            (0..t.elements())
+                .map(|j| ((j % (13 + i)) as f32 - 6.0) / 3.0)
+                .collect()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let out = exec.run_f32(entry, &inputs).map_err(|e| e.to_string())?;
+    Ok(Json::obj(vec![
+        ("entry", Json::Str(entry.into())),
+        ("outputs", Json::Num(out.len() as f64)),
+        ("checksum", Json::Num(out.iter().map(|&v| v as f64).sum())),
+        ("exec_ms", Json::Num(t0.elapsed().as_secs_f64() * 1e3)),
+    ]))
+}

@@ -1,0 +1,101 @@
+//! Asynchronous Compute Engine (ACE) queue model (paper §2, §6).
+//!
+//! ROCm's HSA runtime maps user-level queues onto hardware command
+//! processors round-robin (paper ref [20]); queues sharing an ACE
+//! serialize their launch phases, which is visible as reduced overlap
+//! when streams exceed the ACE count.
+
+/// A user-visible stream/queue handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QueueId(pub usize);
+
+/// The ACE set: fixed hardware command processors, round-robin queue
+/// assignment (HSA semantics).
+#[derive(Debug, Clone)]
+pub struct AceSet {
+    n_aces: usize,
+    assignments: Vec<usize>, // queue index -> ace index
+}
+
+impl AceSet {
+    pub fn new(n_aces: usize) -> AceSet {
+        assert!(n_aces > 0);
+        AceSet { n_aces, assignments: Vec::new() }
+    }
+
+    /// Create a queue; returns its id and the ACE it maps to.
+    pub fn create_queue(&mut self) -> (QueueId, usize) {
+        let q = QueueId(self.assignments.len());
+        let ace = self.assignments.len() % self.n_aces;
+        self.assignments.push(ace);
+        (q, ace)
+    }
+
+    pub fn ace_of(&self, q: QueueId) -> usize {
+        self.assignments[q.0]
+    }
+
+    pub fn n_aces(&self) -> usize {
+        self.n_aces
+    }
+
+    /// Queues currently mapped to each ACE.
+    pub fn load(&self) -> Vec<usize> {
+        let mut load = vec![0; self.n_aces];
+        for &a in &self.assignments {
+            load[a] += 1;
+        }
+        load
+    }
+
+    /// Launch serialization factor for a queue: how many queues share
+    /// its ACE (launch phases on one ACE are serialized).
+    pub fn serialization(&self, q: QueueId) -> usize {
+        let ace = self.ace_of(q);
+        self.assignments.iter().filter(|&&a| a == ace).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_assignment() {
+        let mut aces = AceSet::new(4);
+        let ids: Vec<usize> = (0..8).map(|_| aces.create_queue().1).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn load_balanced_within_one() {
+        let mut aces = AceSet::new(8);
+        for _ in 0..11 {
+            aces.create_queue();
+        }
+        let load = aces.load();
+        let max = *load.iter().max().unwrap();
+        let min = *load.iter().min().unwrap();
+        assert!(max - min <= 1, "round robin keeps load within 1: {load:?}");
+    }
+
+    #[test]
+    fn serialization_counts_sharers() {
+        let mut aces = AceSet::new(2);
+        let (q0, _) = aces.create_queue();
+        let (q1, _) = aces.create_queue();
+        let (q2, _) = aces.create_queue(); // shares ACE 0 with q0
+        assert_eq!(aces.serialization(q0), 2);
+        assert_eq!(aces.serialization(q1), 1);
+        assert_eq!(aces.serialization(q2), 2);
+    }
+
+    #[test]
+    fn up_to_ace_count_no_sharing() {
+        let mut aces = AceSet::new(8);
+        let qs: Vec<QueueId> = (0..8).map(|_| aces.create_queue().0).collect();
+        for q in qs {
+            assert_eq!(aces.serialization(q), 1);
+        }
+    }
+}

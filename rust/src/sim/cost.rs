@@ -1,0 +1,128 @@
+//! Solo kernel cost model: how long one kernel iteration takes with the
+//! whole machine to itself. The DES (engine.rs) scales this under
+//! concurrency.
+
+use super::kernel::KernelDesc;
+use super::microbench::MicrobenchModel;
+use crate::config::Config;
+use crate::hw::{HbmModel, L2Model};
+
+/// Roofline-style solo cost: work time is the max of the compute phase
+/// (occupancy-dependent MFMA issue, per the Fig-2 model) and the memory
+/// phase (HBM transfer at full bandwidth plus L2 miss exposure).
+pub struct CostModel<'a> {
+    cfg: &'a Config,
+    micro: MicrobenchModel<'a>,
+    hbm: HbmModel,
+    l2: L2Model,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(cfg: &'a Config) -> CostModel<'a> {
+        CostModel {
+            cfg,
+            micro: MicrobenchModel::new(cfg),
+            hbm: HbmModel::new(cfg),
+            l2: L2Model::new(cfg),
+        }
+    }
+
+    /// Effective compute throughput (GFLOPS) of this kernel running
+    /// alone: the occupancy model at the kernel's wavefront count, with
+    /// the sparse pipeline efficiency applied to sparse kernels.
+    pub fn solo_compute_gflops(&self, k: &KernelDesc) -> f64 {
+        let waves = k.blocks().max(1);
+        let mut gf = self.micro.throughput_gflops(k.precision, waves);
+        gf *= self.micro.shape_factor(k.precision, k.aspect_ratio());
+        if k.sparsity.is_sparse() {
+            // The sparse pipeline's issue inefficiency (paper Fig 13b:
+            // sparse solo 52.1 vs dense 59.98 GFLOPS => ~0.87).
+            gf *= self.cfg.sparsity.sparse_pipe_eff;
+        }
+        gf
+    }
+
+    /// Memory phase time (ns) for one iteration, solo.
+    pub fn solo_mem_ns(&self, k: &KernelDesc) -> f64 {
+        let bytes = k.hbm_bytes(self.cfg);
+        let transfer = bytes / self.hbm.peak_bpns;
+        let miss = self.l2.isolated_miss(k.working_set());
+        // Exposed miss latency: a fraction of line fills stall the
+        // pipeline; amortized per byte over the cache line.
+        let stalls = miss * bytes / crate::hw::l2::CACHE_LINE as f64
+            * self.cfg.calib.l2_miss_penalty_ns
+            / (k.blocks().max(1) as f64 * self.cfg.calib.hide_half_waves);
+        transfer + stalls
+    }
+
+    /// Solo work time (ns) for one iteration (excludes launch overhead,
+    /// which the engine's profile owns).
+    pub fn solo_work_ns(&self, k: &KernelDesc) -> f64 {
+        let compute_ns = k.executed_flops(self.cfg) / self.solo_compute_gflops(k);
+        compute_ns.max(self.solo_mem_ns(k))
+    }
+
+    /// Solo dense-equivalent GFLOPS (work phase only).
+    pub fn solo_gflops(&self, k: &KernelDesc) -> f64 {
+        k.flops() / self.solo_work_ns(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+    use crate::sim::kernel::SparsityMode;
+
+    #[test]
+    fn bigger_gemm_takes_longer() {
+        let cfg = Config::mi300a();
+        let c = CostModel::new(&cfg);
+        let t256 = c.solo_work_ns(&KernelDesc::gemm(256, Precision::F32));
+        let t512 = c.solo_work_ns(&KernelDesc::gemm(512, Precision::F32));
+        let t2048 = c.solo_work_ns(&KernelDesc::gemm(2048, Precision::F32));
+        assert!(t256 < t512 && t512 < t2048);
+        // Work grows faster than linear in n (n^3 FLOPs, sublinear rate
+        // gain from more blocks).
+        assert!(t2048 / t512 > 8.0);
+    }
+
+    #[test]
+    fn fp8_faster_than_fp32_at_same_size() {
+        let cfg = Config::mi300a();
+        let c = CostModel::new(&cfg);
+        let t8 = c.solo_work_ns(&KernelDesc::gemm(512, Precision::Fp8));
+        let t32 = c.solo_work_ns(&KernelDesc::gemm(512, Precision::F32));
+        assert!(t8 < t32, "FP8 {t8} should beat FP32 {t32}");
+    }
+
+    #[test]
+    fn sparse_work_slightly_slower_than_dense() {
+        // rocSPARSE path: dense-equivalent FLOPs through a ~0.87-
+        // efficient pipe (paper Fig 13b: 52.1 vs 59.98 GFLOPS solo).
+        let cfg = Config::mi300a();
+        let c = CostModel::new(&cfg);
+        let d = c.solo_work_ns(&KernelDesc::gemm(512, Precision::Fp8));
+        let s = c.solo_work_ns(
+            &KernelDesc::gemm(512, Precision::Fp8)
+                .with_sparsity(SparsityMode::SparseLhs),
+        );
+        let ratio = d / s;
+        assert!(
+            (0.80..1.0).contains(&ratio),
+            "dense/sparse work ratio {ratio} should be ~0.87"
+        );
+    }
+
+    #[test]
+    fn solo_gflops_finite_and_positive() {
+        let cfg = Config::mi300a();
+        let c = CostModel::new(&cfg);
+        for p in Precision::SWEEP {
+            for n in [256usize, 512, 2048] {
+                let g = c.solo_gflops(&KernelDesc::gemm(n, p));
+                assert!(g.is_finite() && g > 0.0, "{p} n={n}: {g}");
+            }
+        }
+    }
+}

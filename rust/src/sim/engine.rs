@@ -1,0 +1,693 @@
+//! Processor-sharing discrete-event engine for concurrent stream
+//! execution (paper §6: ACE concurrency; §7.2: sparsity under
+//! contention).
+//!
+//! Each stream executes `iters` kernel launches back-to-back. A launch
+//! has two phases:
+//!
+//!  * **launch** — command-processor/API path (non-executing; overlaps
+//!    freely with other streams' work). The launch:work ratio is what
+//!    produces the paper's 43-46% overlap efficiency at four streams.
+//!  * **work** — wavefronts execute under processor sharing; each
+//!    running stream progresses at `gain / slowdown` of its solo rate,
+//!    where the slowdown term aggregates LDS saturation, L2 miss growth,
+//!    and external contention (Fig 5b's sweep knob), per DESIGN.md §6.
+//!
+//! Per-stream placement bias (drawn once per stream, lognormal with
+//! contention-scaled sigma) models which CUs/L2 partitions a stream
+//! lands on; it drives the cross-stream CV and the fairness collapse at
+//! eight streams (Fig 5a) without biasing aggregate throughput.
+
+use super::cost::CostModel;
+use super::kernel::KernelDesc;
+use crate::config::Config;
+use crate::hw::lds::lds_utilization;
+use crate::hw::L2Model;
+use crate::util::rng::Rng;
+
+/// Calibration preset for one experiment family. The paper itself
+/// measures different contention regimes in §6.1, §6.2 and §7.2 (same
+/// 512^3 GEMM, different harnesses); each figure's driver selects the
+/// profile calibrated for its section (EXPERIMENTS.md records all).
+#[derive(Debug, Clone)]
+pub struct ConcurrencyProfile {
+    /// Launch/API overhead per iteration, as a fraction of the stream's
+    /// own solo work time (`launch_ref = false`) or of the 512^3 FP32
+    /// reference work (`launch_ref = true`; used when co-scheduled
+    /// kernels of different sizes share one command path, Fig 9).
+    pub launch_ratio: f64,
+    /// See `launch_ratio`.
+    pub launch_ref: bool,
+    /// Parallel launch lanes (command processors servicing the launch
+    /// path). 2 on MI300A-class parts; launches queue when all busy.
+    pub launch_lanes: usize,
+    /// Multiplier on modeled solo work (rocBLAS-path efficiency).
+    pub work_scale: f64,
+    /// Saturating (LDS) contention coefficient.
+    pub k_lds: f64,
+    /// Linear (L2/bandwidth) contention coefficient.
+    pub k_l2: f64,
+    /// External contention-level coefficient (Fig 5b sweep).
+    pub k_level: f64,
+    /// Per-stream placement-bias sigma at full pressure.
+    pub bias_sigma: f64,
+    /// Per-iteration noise sigma.
+    pub iter_sigma: f64,
+    /// Occupancy-fragmentation boost for the dominant kernel (Fig 9).
+    pub frag_boost: f64,
+    /// Occupancy-fragmentation penalty floor for the small kernel.
+    pub frag_penalty: f64,
+    /// Concurrent harnesses enqueue without per-iteration sync, so the
+    /// API/launch phase pipelines behind the previous iteration's work
+    /// (the paper's §7.2 harness: per-stream time can drop below solo,
+    /// letting aggregate scaling exceed the stream count).
+    pub pipelined_launch: bool,
+}
+
+impl ConcurrencyProfile {
+    /// §6.1 ACE scaling (Figs 4, 5a, 8): calibrated to 1.78-1.83x at 4
+    /// streams, 2.79-2.87x at 8, overlap 43-46% -> 64-65%.
+    pub fn ace() -> ConcurrencyProfile {
+        ConcurrencyProfile {
+            launch_ratio: 1.10,
+            launch_ref: false,
+            launch_lanes: 2,
+            work_scale: 1.0,
+            k_lds: 1.19,
+            k_l2: 0.0,
+            k_level: 0.0,
+            bias_sigma: 0.70,
+            iter_sigma: 0.03,
+            frag_boost: 1.0,
+            frag_penalty: 1.0,
+            pipelined_launch: false,
+        }
+    }
+
+    /// §6.1 contention sweep (Fig 5b): overlap ~60.4%, speedup
+    /// 2.52-2.53x at 4 streams, fairness 0.263 -> 0.250.
+    pub fn contention_sweep() -> ConcurrencyProfile {
+        ConcurrencyProfile {
+            launch_ratio: 0.52,
+            launch_ref: false,
+            launch_lanes: 2,
+            work_scale: 1.0,
+            k_lds: 0.30,
+            k_l2: 0.04,
+            k_level: 0.022,
+            bias_sigma: 0.528,
+            iter_sigma: 0.03,
+            frag_boost: 1.0,
+            frag_penalty: 1.0,
+            pipelined_launch: false,
+        }
+    }
+
+    /// §6.3 occupancy fragmentation (Fig 9): proportional allocation,
+    /// near-unity 1:1 speedups, large-kernel exploitation at 4:1.
+    pub fn fragmentation() -> ConcurrencyProfile {
+        ConcurrencyProfile {
+            launch_ratio: 4.36,
+            launch_ref: true,
+            launch_lanes: 2,
+            work_scale: 1.0,
+            k_lds: 0.10,
+            k_l2: 0.02,
+            k_level: 0.0,
+            bias_sigma: 0.05,
+            iter_sigma: 0.04,
+            frag_boost: 5.0,
+            frag_penalty: 0.0,
+            pipelined_launch: false,
+        }
+    }
+
+    /// §7.2 sparsity under contention (Fig 13): rocSPARSE/rocBLAS API
+    /// path; calibrated to dense 59.98 -> 213.93 GFLOPS and sparse
+    /// crossover at 4 streams.
+    pub fn sparsity() -> ConcurrencyProfile {
+        ConcurrencyProfile {
+            launch_ratio: 0.36,
+            launch_ref: false,
+            launch_lanes: 2,
+            work_scale: 205.0,
+            k_lds: 0.64,
+            k_l2: 0.0,
+            k_level: 0.0,
+            bias_sigma: 0.09,
+            iter_sigma: 0.02,
+            frag_boost: 1.0,
+            frag_penalty: 1.0,
+            pipelined_launch: true,
+        }
+    }
+
+    /// §8 case studies (Figs 14-16): moderate contention, visible
+    /// variability.
+    pub fn case_study() -> ConcurrencyProfile {
+        ConcurrencyProfile {
+            launch_ratio: 0.8,
+            launch_ref: false,
+            launch_lanes: 2,
+            work_scale: 1.0,
+            k_lds: 1.2,
+            k_l2: 0.25,
+            k_level: 0.0,
+            bias_sigma: 0.28,
+            iter_sigma: 0.05,
+            frag_boost: 1.0,
+            frag_penalty: 1.0,
+            pipelined_launch: false,
+        }
+    }
+}
+
+/// Per-stream outcome.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    pub label: String,
+    /// Wall time of each iteration (launch + work), ns.
+    pub iter_ns: Vec<f64>,
+    pub start_ns: f64,
+    pub end_ns: f64,
+}
+
+impl StreamOutcome {
+    pub fn total_ns(&self) -> f64 {
+        self.end_ns - self.start_ns
+    }
+}
+
+/// Full concurrent-run result.
+#[derive(Debug, Clone)]
+pub struct ConcurrentRun {
+    pub streams: Vec<StreamOutcome>,
+    pub makespan_ns: f64,
+    /// Fraction of makespan with >= 2 streams in their work phase
+    /// (paper §4.2's overlap-efficiency definition).
+    pub overlap_efficiency: f64,
+    /// Per-stream L2 miss ratio under this concurrency level.
+    pub l2_miss: Vec<f64>,
+    /// Mean LDS utilization across occupied CUs.
+    pub lds_util: f64,
+}
+
+impl ConcurrentRun {
+    pub fn per_stream_totals(&self) -> Vec<f64> {
+        self.streams.iter().map(|s| s.total_ns()).collect()
+    }
+
+    /// Aggregate dense-equivalent GFLOPS given each stream's per-iter
+    /// FLOPs.
+    pub fn aggregate_gflops(&self, flops_per_iter: &[f64]) -> f64 {
+        let total_flops: f64 = self
+            .streams
+            .iter()
+            .zip(flops_per_iter)
+            .map(|(s, f)| s.iter_ns.len() as f64 * f)
+            .sum();
+        total_flops / self.makespan_ns
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Launching { until: f64 },
+    Running { remaining: f64 }, // in solo-work ns
+    Done,
+}
+
+struct StreamState {
+    kernel: KernelDesc,
+    phase: Phase,
+    iters_done: usize,
+    iter_start: f64,
+    bias: f64,
+    solo_work_ns: f64,
+    launch_ns: f64,
+    outcome: StreamOutcome,
+}
+
+/// The engine.
+pub struct Engine<'a> {
+    cfg: &'a Config,
+    profile: ConcurrencyProfile,
+    /// External contention level (Fig 5b sweep, 0-5).
+    pub contention_level: f64,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(cfg: &'a Config, profile: ConcurrencyProfile) -> Engine<'a> {
+        Engine { cfg, profile, contention_level: 0.0 }
+    }
+
+    /// Contention pressure in [0,1] for a stream count (drives the
+    /// bias sigma: 4 streams ~0.43, 8 streams 1.0).
+    fn pressure(n_streams: usize) -> f64 {
+        ((((n_streams as f64) - 1.0) / 7.0).clamp(0.0, 1.0)).powf(0.6)
+    }
+
+    /// Slowdown of stream `i` given the set of co-running kernels.
+    /// `mem_weight(j)` discounts sparse kernels' pressure contribution.
+    fn slowdown(&self, kernels: &[&KernelDesc], i: usize) -> f64 {
+        let s = kernels.len();
+        if s == 0 {
+            return 1.0;
+        }
+        // LDS pressure: the clustering-aware per-CU occupancy model
+        // (hw::lds), which saturates the way Fig 7 measures. Sparse
+        // streams stage compressed operands and defragment the panel
+        // layout, discounting their contribution quadratically in the
+        // memory fraction (calibrated to Fig 13's crossover).
+        let max_n = kernels.iter().map(|k| k.m.max(k.n)).max().unwrap_or(512);
+        let lds_sat = lds_utilization(
+            max_n,
+            s,
+            self.cfg.total_cus(),
+            self.cfg.lds_bytes_per_cu() as usize,
+            self.cfg.calib.lds_double_buffer,
+        );
+        let sparse_w = if kernels[i].sparsity.is_sparse() {
+            self.cfg.sparsity.mem_fraction.powi(2)
+        } else {
+            1.0
+        };
+
+        // L2 miss growth relative to isolated, for this stream's working
+        // set; sparse kernels both exert and feel less pressure.
+        let l2 = L2Model::new(self.cfg);
+        let mem_w = |k: &KernelDesc| {
+            if k.sparsity.is_sparse() {
+                self.cfg.sparsity.mem_fraction
+            } else {
+                1.0
+            }
+        };
+        let eff_streams: f64 = kernels.iter().map(|k| mem_w(k)).sum();
+        let ws = kernels[i].working_set();
+        let iso = l2.isolated_miss(ws);
+        let grown = l2.miss_ratio(ws, eff_streams.round().max(1.0) as usize);
+        let l2_growth = ((grown / iso) - 1.0).max(0.0) * mem_w(kernels[i])
+            / self.cfg.calib.l2_miss_stream_slope;
+
+        let conc = if s >= 2 { 1.0 } else { 0.0 };
+        1.0 + self.profile.k_lds * lds_sat * sparse_w * conc
+            + self.profile.k_l2 * l2_growth
+            + self.profile.k_level * self.contention_level
+    }
+
+    /// Occupancy-fragmentation gain (Fig 9): proportional allocation
+    /// plus idle-resource exploitation by the dominant kernel.
+    fn frag_gain(&self, kernels: &[&KernelDesc], i: usize) -> f64 {
+        if kernels.len() < 2 || self.profile.frag_boost == 1.0 {
+            return 1.0;
+        }
+        // Size proxy: geometric mean of the GEMM dims (the paper labels
+        // its pairs by size ratio: 2048^3 vs 512^3 = "4:1").
+        let waves: Vec<f64> = kernels
+            .iter()
+            .map(|k| (k.m as f64 * k.n as f64 * k.k as f64).cbrt())
+            .collect();
+        let mine = waves[i];
+        let max = waves.iter().cloned().fold(0.0, f64::max);
+        let min = waves.iter().cloned().fold(f64::INFINITY, f64::min);
+        if max <= min * 1.5 {
+            return 1.0; // balanced occupancy: no fragmentation effect
+        }
+        let imbalance = (1.0 - min / max).clamp(0.0, 1.0); // 0..1
+        if mine >= max * 0.99 {
+            1.0 + (self.profile.frag_boost - 1.0) * imbalance
+        } else {
+            1.0 - (1.0 - self.profile.frag_penalty) * imbalance
+        }
+    }
+
+    /// Run `kernels` concurrently (one stream each). Deterministic for a
+    /// given seed.
+    pub fn run(&self, kernels: &[KernelDesc], seed: u64) -> ConcurrentRun {
+        assert!(!kernels.is_empty());
+        let cost = CostModel::new(self.cfg);
+        let mut rng = Rng::new(seed ^ 0xace_c0de);
+        let n = kernels.len();
+        let pressure = Self::pressure(n);
+
+        // Reference work: 512^3 FP32 solo (launch_ratio is relative to it).
+        let ref_work = cost.solo_work_ns(
+            &KernelDesc::gemm(512, crate::isa::Precision::F32),
+        ) * self.profile.work_scale;
+
+        let mut streams: Vec<StreamState> = kernels
+            .iter()
+            .enumerate()
+            .map(|(i, k)| {
+                let mut srng = rng.fork(i as u64 + 1);
+                let mem_w = if k.sparsity.is_sparse() {
+                    self.cfg.sparsity.mem_fraction
+                } else {
+                    1.0
+                };
+                // Placement bias covers the whole iteration path
+                // (launch + work): which ACE/driver lane and which
+                // CU/L2 partition the stream landed on.
+                let sigma = self.profile.bias_sigma
+                    * pressure
+                    * self.cfg.jitter_scale(k.precision)
+                    * mem_w
+                    * (1.0 + 0.02 * self.contention_level);
+                let bias = srng.lognormal_unit(sigma);
+                let solo = cost.solo_work_ns(k) * self.profile.work_scale;
+                let launch = if self.profile.pipelined_launch && n >= 2 {
+                    // Continuous enqueue: launches hide behind prior work.
+                    0.0
+                } else {
+                    let base = if self.profile.launch_ref {
+                        ref_work
+                    } else {
+                        solo
+                    };
+                    base * self.profile.launch_ratio * bias
+                };
+                StreamState {
+                    kernel: k.clone(),
+                    phase: Phase::Launching { until: f64::NAN }, // set below
+
+                    iters_done: 0,
+                    iter_start: 0.0,
+                    bias,
+                    solo_work_ns: solo,
+                    launch_ns: launch,
+                    outcome: StreamOutcome {
+                        label: k.label(),
+                        iter_ns: Vec::with_capacity(k.iters),
+                        start_ns: 0.0,
+                        end_ns: 0.0,
+                    },
+                }
+            })
+            .collect();
+
+        // Launches serialize through shared command/driver lanes: a
+        // stream's launch occupies one lane for its launch_ns (the
+        // mechanism behind the paper's moderate overlap efficiencies).
+        // Initial launches queue in stream order.
+        let mut lanes = vec![0.0f64; self.profile.launch_lanes.max(1)];
+        let grab_lane = |lanes: &mut Vec<f64>, t: f64, dur: f64| -> f64 {
+            let (idx, free) = lanes
+                .iter()
+                .cloned()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let start = free.max(t);
+            lanes[idx] = start + dur;
+            start + dur
+        };
+        for st in streams.iter_mut() {
+            let until = grab_lane(&mut lanes, 0.0, st.launch_ns);
+            st.phase = Phase::Launching { until };
+        }
+
+        // Occupancy-fragmentation gains are static per run: the ACE
+        // partitions CUs/bandwidth by what is resident overall (§6.3's
+        // proportional allocation), not by instantaneous phase.
+        let all_refs: Vec<&KernelDesc> = kernels.iter().collect();
+        let static_gains: Vec<f64> = (0..n)
+            .map(|i| self.frag_gain(&all_refs, i))
+            .collect();
+
+        let mut t = 0.0f64;
+        let mut overlap_ns = 0.0f64;
+        let mut iter_rng = rng.fork(0x17e7);
+        // Rate memo: the slowdown model (L2 growth, LDS occupancy) is a
+        // pure function of the *set* of running streams; memoize per
+        // running-set bitmask instead of re-evaluating it per event
+        // (§Perf log, step 1: ~2x on the 8-stream benchmark).
+        let mut rate_memo: std::collections::HashMap<u64, Vec<f64>> =
+            std::collections::HashMap::new();
+        // Reusable buffer: allocation-free event loop (§Perf step 2).
+        let mut running: Vec<usize> = Vec::with_capacity(n);
+        let mut events = 0u64;
+        let event_budget =
+            10_000 + 64 * kernels.iter().map(|k| k.iters as u64).sum::<u64>();
+
+        loop {
+            events += 1;
+            assert!(
+                events < event_budget,
+                "DES event budget exceeded (livelock?): t={t}, states={:?}",
+                streams.iter().map(|s| s.phase).collect::<Vec<_>>()
+            );
+            // Active running set and rates (memoized per running set;
+            // the slowdown model is evaluated only on set changes).
+            running.clear();
+            running.extend((0..n).filter(|&i| {
+                matches!(streams[i].phase, Phase::Running { .. })
+            }));
+            let mask: u64 = if n <= 64 {
+                running.iter().fold(0u64, |m, &i| m | (1 << i))
+            } else {
+                u64::MAX // >64 streams: no memo (recompute every event)
+            };
+            let rates: Vec<f64> = match rate_memo.get(&mask) {
+                Some(r) if mask != u64::MAX => r.clone(),
+                _ => {
+                    let active_kernels: Vec<&KernelDesc> =
+                        running.iter().map(|&i| &streams[i].kernel).collect();
+                    let r: Vec<f64> = running
+                        .iter()
+                        .enumerate()
+                        .map(|(pos, &i)| {
+                            static_gains[i]
+                                / self.slowdown(&active_kernels, pos)
+                        })
+                        .collect();
+                    rate_memo.insert(mask, r.clone());
+                    r
+                }
+            };
+
+            // Next event time.
+            let mut next = f64::INFINITY;
+            for (pos, &i) in running.iter().enumerate() {
+                if let Phase::Running { remaining } = streams[i].phase {
+                    next = next.min(t + remaining / rates[pos]);
+                }
+            }
+            for s in streams.iter() {
+                if let Phase::Launching { until } = s.phase {
+                    next = next.min(until);
+                }
+            }
+            if !next.is_finite() {
+                break; // all Done
+            }
+
+            let dt = next - t;
+            if running.len() >= 2 {
+                overlap_ns += dt;
+            }
+            // Progress running streams. Residuals below EPS (1 fs vs
+            // µs-scale works) snap to zero — avoids a float livelock
+            // where the residual is smaller than one ULP of `t`.
+            const EPS: f64 = 1e-6;
+            for (pos, &i) in running.iter().enumerate() {
+                if let Phase::Running { remaining } = streams[i].phase {
+                    let left = remaining - dt * rates[pos];
+                    streams[i].phase = Phase::Running {
+                        remaining: if left < EPS { 0.0 } else { left },
+                    };
+                }
+            }
+            t = next;
+
+            // Fire transitions at time t.
+            for i in 0..n {
+                match streams[i].phase {
+                    Phase::Launching { until } if until <= t + 1e-9 => {
+                        let jitter =
+                            iter_rng.lognormal_unit(self.profile.iter_sigma);
+                        let work =
+                            streams[i].solo_work_ns * streams[i].bias * jitter;
+                        streams[i].phase = Phase::Running { remaining: work };
+                    }
+                    Phase::Running { remaining } if remaining <= 0.0 => {
+                        let st = &mut streams[i];
+                        st.outcome.iter_ns.push(t - st.iter_start);
+                        st.iters_done += 1;
+                        st.iter_start = t;
+                        if st.iters_done >= st.kernel.iters {
+                            st.phase = Phase::Done;
+                            st.outcome.end_ns = t;
+                        } else {
+                            let until = grab_lane(&mut lanes, t, st.launch_ns);
+                            st.phase = Phase::Launching { until };
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        let l2 = L2Model::new(self.cfg);
+        let l2_miss: Vec<f64> = kernels
+            .iter()
+            .map(|k| l2.miss_ratio(k.working_set(), n))
+            .collect();
+        let max_n = kernels.iter().map(|k| k.m.max(k.n)).max().unwrap();
+        let lds_util = lds_utilization(
+            max_n,
+            n,
+            self.cfg.total_cus(),
+            self.cfg.lds_bytes_per_cu() as usize,
+            self.cfg.calib.lds_double_buffer,
+        );
+
+        ConcurrentRun {
+            streams: streams.into_iter().map(|s| s.outcome).collect(),
+            makespan_ns: t,
+            overlap_efficiency: if t > 0.0 { overlap_ns / t } else { 0.0 },
+            l2_miss,
+            lds_util,
+        }
+    }
+
+    /// Solo baseline: the same kernel run alone (no bias pressure).
+    pub fn run_solo(&self, kernel: &KernelDesc, seed: u64) -> ConcurrentRun {
+        self.run(std::slice::from_ref(kernel), seed)
+    }
+
+    /// Speedup of running these kernels concurrently vs one-after-another
+    /// (the paper's Fig 4 metric).
+    pub fn speedup(&self, kernels: &[KernelDesc], seed: u64) -> f64 {
+        let conc = self.run(kernels, seed);
+        let serial: f64 = kernels
+            .iter()
+            .enumerate()
+            .map(|(i, k)| self.run_solo(k, seed.wrapping_add(i as u64)).makespan_ns)
+            .sum();
+        serial / conc.makespan_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+
+    fn fp32_512(iters: usize) -> KernelDesc {
+        KernelDesc::gemm(512, Precision::F32).with_iters(iters)
+    }
+
+    #[test]
+    fn solo_run_completes_all_iters() {
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let run = e.run_solo(&fp32_512(10), 1);
+        assert_eq!(run.streams.len(), 1);
+        assert_eq!(run.streams[0].iter_ns.len(), 10);
+        assert!(run.makespan_ns > 0.0);
+        assert_eq!(run.overlap_efficiency, 0.0, "no overlap with one stream");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let ks = vec![fp32_512(5); 4];
+        let a = e.run(&ks, 7);
+        let b = e.run(&ks, 7);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.per_stream_totals(), b.per_stream_totals());
+    }
+
+    #[test]
+    fn concurrency_beats_serial_but_sublinearly() {
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let ks = vec![fp32_512(20); 4];
+        let sp = e.speedup(&ks, 3);
+        assert!(sp > 1.2, "4 streams should beat serial: {sp}");
+        assert!(sp < 4.0, "speedup must be sublinear: {sp}");
+    }
+
+    #[test]
+    fn overlap_grows_with_streams() {
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let o4 = e.run(&vec![fp32_512(20); 4], 3).overlap_efficiency;
+        let o8 = e.run(&vec![fp32_512(20); 8], 3).overlap_efficiency;
+        assert!(o4 > 0.1 && o4 < 0.9, "overlap@4 = {o4}");
+        assert!(o8 > o4, "overlap must grow with streams: {o8} vs {o4}");
+    }
+
+    #[test]
+    fn contention_level_slows_streams_not_overlap() {
+        let cfg = Config::mi300a();
+        let mut e = Engine::new(&cfg, ConcurrencyProfile::contention_sweep());
+        let ks = vec![fp32_512(20); 4];
+        let base = e.run(&ks, 5);
+        e.contention_level = 5.0;
+        let loaded = e.run(&ks, 5);
+        assert!(loaded.makespan_ns > base.makespan_ns);
+        // Overlap efficiency stays roughly stable (paper Fig 5b).
+        assert!((loaded.overlap_efficiency - base.overlap_efficiency).abs() < 0.08);
+    }
+
+    #[test]
+    fn fragmentation_boosts_large_kernel() {
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::fragmentation());
+        // Iteration counts equalized so both streams co-execute for the
+        // whole window (the paper's §6.3 co-execution setup).
+        let big = KernelDesc::gemm(2048, Precision::F32).with_iters(8);
+        let small = fp32_512(8);
+        let solo_big = e.run_solo(&big, 11).streams[0].total_ns();
+        let pair = e.run(&[big.clone(), small.clone()], 11);
+        let conc_big = pair.streams[0].total_ns();
+        let speedup_big = solo_big / conc_big;
+        assert!(
+            speedup_big > 1.2,
+            "4:1 imbalance should speed up the large kernel: {speedup_big}"
+        );
+        // The small kernel must not be boosted.
+        let solo_small = e.run_solo(&small, 13).streams[0].total_ns();
+        let conc_small = pair.streams[1].total_ns();
+        assert!(solo_small / conc_small < 1.1);
+    }
+
+    #[test]
+    fn eight_streams_less_fair_than_four() {
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let spread = |n: usize| {
+            let run = e.run(&vec![fp32_512(30); n], 17);
+            let ts = run.per_stream_totals();
+            let mean = ts.iter().sum::<f64>() / ts.len() as f64;
+            let max = ts.iter().cloned().fold(0.0, f64::max);
+            let min = ts.iter().cloned().fold(f64::INFINITY, f64::min);
+            (max - min) / mean
+        };
+        assert!(
+            spread(8) > spread(4),
+            "imbalance must intensify at 8 streams"
+        );
+    }
+
+    #[test]
+    fn sparse_stream_exerts_less_pressure() {
+        use crate::sim::kernel::SparsityMode;
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::sparsity());
+        let dense = vec![fp32_512(10); 4];
+        let sparse: Vec<KernelDesc> = (0..4)
+            .map(|_| fp32_512(10).with_sparsity(SparsityMode::SparseLhs))
+            .collect();
+        let d = e.run(&dense, 23).makespan_ns;
+        let s = e.run(&sparse, 23).makespan_ns;
+        assert!(
+            s < d,
+            "sparse set (less L2/bw pressure + half FLOPs) should finish \
+             sooner: sparse {s} vs dense {d}"
+        );
+    }
+}

@@ -1,0 +1,239 @@
+//! Kernel descriptors: the unit of work the simulator executes.
+
+use crate::config::Config;
+use crate::hw::lds::{gemm_macro_tile, lds_bytes_per_wave};
+use crate::isa::{primary_opcode, Precision};
+
+/// Sparsity mode of a GEMM (paper §7 patterns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SparsityMode {
+    Dense,
+    /// 2:4 structured sparsity on the LHS only.
+    SparseLhs,
+    /// 2:4 on the RHS only.
+    SparseRhs,
+    /// 2:4 on both operands.
+    SparseBoth,
+}
+
+impl SparsityMode {
+    pub fn is_sparse(self) -> bool {
+        self != SparsityMode::Dense
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SparsityMode::Dense => "dense",
+            SparsityMode::SparseLhs => "lhs",
+            SparsityMode::SparseRhs => "rhs",
+            SparsityMode::SparseBoth => "both",
+        }
+    }
+}
+
+/// A GEMM kernel launch: C[M,N] += A[M,K] x B[K,N] at `precision`,
+/// repeated `iters` times on one stream (the paper's microbenchmark and
+/// case-study unit).
+#[derive(Debug, Clone)]
+pub struct KernelDesc {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub precision: Precision,
+    pub sparsity: SparsityMode,
+    /// Iterations per launch (paper: 500 for microbenchmarks, 100 for
+    /// concurrency experiments, 50 for sparsity).
+    pub iters: usize,
+}
+
+impl KernelDesc {
+    pub fn gemm(n: usize, precision: Precision) -> KernelDesc {
+        KernelDesc {
+            m: n,
+            n,
+            k: n,
+            precision,
+            sparsity: SparsityMode::Dense,
+            iters: 100,
+        }
+    }
+
+    pub fn with_iters(mut self, iters: usize) -> KernelDesc {
+        self.iters = iters;
+        self
+    }
+
+    pub fn with_sparsity(mut self, s: SparsityMode) -> KernelDesc {
+        self.sparsity = s;
+        self
+    }
+
+    pub fn with_shape(mut self, m: usize, n: usize, k: usize) -> KernelDesc {
+        self.m = m;
+        self.n = n;
+        self.k = k;
+        self
+    }
+
+    /// Dense-equivalent FLOPs of one iteration.
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// FLOPs actually executed. For sparse kernels this is governed by
+    /// `realized_flop_fraction`: the rocSPARSE software path executes
+    /// dense-equivalent math (~1.0 — the paper's "software-limited"
+    /// finding, §9.1); a custom sparse-MFMA kernel would realize
+    /// `flop_fraction` (0.5).
+    pub fn executed_flops(&self, cfg: &Config) -> f64 {
+        if self.sparsity.is_sparse() {
+            self.flops() * cfg.sparsity.realized_flop_fraction
+        } else {
+            self.flops()
+        }
+    }
+
+    /// HBM bytes per iteration: A + B streamed once, C written once
+    /// (blocked GEMM re-reads grow with K/tile; folded into the cost
+    /// model's miss term instead).
+    pub fn hbm_bytes(&self, cfg: &Config) -> f64 {
+        let eb = self.precision.bytes() as f64;
+        let a = self.m as f64 * self.k as f64 * eb;
+        let b = self.k as f64 * self.n as f64 * eb;
+        let c = self.m as f64 * self.n as f64 * 4.0; // f32 accumulator out
+        let mem_frac = |sparse: bool| {
+            if sparse {
+                cfg.sparsity.mem_fraction
+            } else {
+                1.0
+            }
+        };
+        let (fa, fb) = match self.sparsity {
+            SparsityMode::Dense => (1.0, 1.0),
+            SparsityMode::SparseLhs => (mem_frac(true), 1.0),
+            SparsityMode::SparseRhs => (1.0, mem_frac(true)),
+            SparsityMode::SparseBoth => (mem_frac(true), mem_frac(true)),
+        };
+        a * fa + b * fb + c
+    }
+
+    /// Working set for the L2 model (A + B + C resident bytes).
+    pub fn working_set(&self) -> f64 {
+        let eb = self.precision.bytes() as f64;
+        (self.m * self.k) as f64 * eb
+            + (self.k * self.n) as f64 * eb
+            + (self.m * self.n) as f64 * 4.0
+    }
+
+    /// GEMM macro-tile side for this kernel.
+    pub fn macro_tile(&self) -> usize {
+        gemm_macro_tile(self.m.max(self.n))
+    }
+
+    /// Output-tile blocks per iteration (one wavefront each).
+    pub fn blocks(&self) -> usize {
+        let t = self.macro_tile();
+        ((self.m + t - 1) / t) * ((self.n + t - 1) / t)
+    }
+
+    /// LDS staging bytes per wavefront.
+    pub fn lds_per_wave(&self, cfg: &Config) -> usize {
+        lds_bytes_per_wave(
+            self.macro_tile(),
+            16,
+            self.precision.bytes().max(2),
+            cfg.calib.lds_double_buffer,
+        )
+    }
+
+    /// The MFMA opcode this kernel's inner loop issues.
+    pub fn opcode(&self) -> &'static crate::isa::MfmaOpcode {
+        primary_opcode(self.precision)
+    }
+
+    /// Aspect ratio M/N (Fig 3's sweep axis).
+    pub fn aspect_ratio(&self) -> f64 {
+        self.m as f64 / self.n as f64
+    }
+
+    /// Strongly rectangular shapes (paper §7.1.2's 512x2048x1024 case).
+    pub fn is_rectangular(&self) -> bool {
+        let dims = [self.m, self.n, self.k];
+        let max = *dims.iter().max().unwrap() as f64;
+        let min = *dims.iter().min().unwrap() as f64;
+        max / min >= 2.0
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{}x{} {} {}",
+            self.m,
+            self.n,
+            self.k,
+            self.precision.name(),
+            self.sparsity.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_512_cubed() {
+        let k = KernelDesc::gemm(512, Precision::F32);
+        assert_eq!(k.flops(), 2.0 * 512.0_f64.powi(3));
+    }
+
+    #[test]
+    fn rocsparse_path_executes_dense_equivalent_flops() {
+        // The software-limited default (§9.1): no realized FLOP saving.
+        let cfg = Config::mi300a();
+        let k = KernelDesc::gemm(512, Precision::Fp8)
+            .with_sparsity(SparsityMode::SparseLhs);
+        assert_eq!(k.executed_flops(&cfg), k.flops());
+        // A custom-kernel config realizes the hardware's 50%.
+        let mut custom = cfg.clone();
+        custom.sparsity.realized_flop_fraction = 0.5;
+        assert_eq!(k.executed_flops(&custom), k.flops() * 0.5);
+    }
+
+    #[test]
+    fn sparse_reduces_hbm_bytes_on_the_sparse_side_only() {
+        let cfg = Config::mi300a();
+        let dense = KernelDesc::gemm(512, Precision::Fp8);
+        let lhs = dense.clone().with_sparsity(SparsityMode::SparseLhs);
+        let both = dense.clone().with_sparsity(SparsityMode::SparseBoth);
+        assert!(lhs.hbm_bytes(&cfg) < dense.hbm_bytes(&cfg));
+        assert!(both.hbm_bytes(&cfg) < lhs.hbm_bytes(&cfg));
+    }
+
+    #[test]
+    fn blocks_scale_with_size() {
+        let thin = KernelDesc::gemm(256, Precision::F32);
+        let thick = KernelDesc::gemm(2048, Precision::F32);
+        assert_eq!(thin.blocks(), 16); // (256/64)^2
+        assert_eq!(thick.blocks(), 64); // (2048/256)^2
+    }
+
+    #[test]
+    fn rectangular_detection() {
+        assert!(!KernelDesc::gemm(512, Precision::Fp8).is_rectangular());
+        assert!(KernelDesc::gemm(512, Precision::Fp8)
+            .with_shape(512, 2048, 1024)
+            .is_rectangular());
+    }
+
+    #[test]
+    fn opcode_tile_matches_precision() {
+        assert_eq!(
+            KernelDesc::gemm(512, Precision::Fp8).opcode().tile.k,
+            32
+        );
+        assert_eq!(
+            KernelDesc::gemm(512, Precision::F32).opcode().tile.m,
+            32
+        );
+    }
+}

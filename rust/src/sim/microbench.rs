@@ -1,0 +1,213 @@
+//! Wavefront-level microbenchmark models: Fig 2 (occupancy scaling),
+//! Fig 3 (shape sensitivity), Table 3 (dependency-chain latency).
+//!
+//! These model the paper's §5 kernels: one wavefront per block, a single
+//! MFMA opcode issued `iters` times, operands register/LDS resident with
+//! a small streamed fraction (`mb_stream_fraction`) that produces the
+//! memory-feed bend at high wavefront counts.
+
+use crate::config::Config;
+use crate::hw::HbmModel;
+use crate::isa::{primary_opcode, MfmaOpcode, Precision};
+use crate::util::rng::Rng;
+
+/// Result of one occupancy point.
+#[derive(Debug, Clone)]
+pub struct OccupancyPoint {
+    pub wavefronts: usize,
+    pub gflops: f64,
+    pub normalized: f64,
+}
+
+/// Fig-2 model: throughput vs total active wavefronts for a precision.
+pub struct MicrobenchModel<'a> {
+    cfg: &'a Config,
+    hbm: HbmModel,
+}
+
+impl<'a> MicrobenchModel<'a> {
+    pub fn new(cfg: &'a Config) -> MicrobenchModel<'a> {
+        MicrobenchModel { cfg, hbm: HbmModel::new(cfg) }
+    }
+
+    /// Effective per-instruction interval (ns) for one wavefront of
+    /// `opcode` when `waves` wavefronts are active machine-wide.
+    pub fn instr_interval_ns(&self, opcode: &MfmaOpcode, waves: usize) -> f64 {
+        let issue_eff = self.cfg.issue_eff(opcode.a);
+        // Dependency-limited issue: Table-3 chain latency divided by the
+        // effective independent chains of the microbenchmark.
+        let t_issue = opcode.latency_ns / issue_eff;
+
+        // Memory feed: a small fraction of operand bytes streams from
+        // HBM; per-wavefront share of effective bandwidth sets the feed
+        // rate. This is what bends the curve at high occupancy and makes
+        // FP8 memory-latency-bound (paper §9.1).
+        let bytes = opcode.tile.operand_bytes(opcode.a.bytes()) as f64
+            * self.cfg.calib.mb_stream_fraction;
+        let demand_per_wave = bytes / t_issue; // B/ns if unthrottled
+        let total_demand = demand_per_wave * waves as f64;
+        let share = self.hbm.share(demand_per_wave, total_demand).max(1e-9);
+        let t_mem = bytes / share;
+
+        // CU pipe sharing: beyond one wavefront per CU, wavefronts on the
+        // same CU share its MFMA pipes.
+        let cus = self.cfg.total_cus() as f64;
+        let waves_per_cu = (waves as f64 / cus).max(1.0);
+        let pipes = self.cfg.hw.mfma_per_cu;
+        let pipe_factor = (waves_per_cu / pipes).max(1.0);
+
+        t_issue.max(t_mem) * pipe_factor
+    }
+
+    /// Aggregate throughput (GFLOPS) at a wavefront count.
+    pub fn throughput_gflops(&self, p: Precision, waves: usize) -> f64 {
+        let op = primary_opcode(p);
+        let t = self.instr_interval_ns(op, waves);
+        waves as f64 * op.tile.flops() / t
+    }
+
+    /// Fig-2 sweep: normalized throughput for wavefront counts.
+    pub fn occupancy_sweep(&self, p: Precision, counts: &[usize]) -> Vec<OccupancyPoint> {
+        counts
+            .iter()
+            .map(|&w| {
+                let gflops = self.throughput_gflops(p, w);
+                OccupancyPoint {
+                    wavefronts: w,
+                    gflops,
+                    normalized: gflops / p.peak_gflops(),
+                }
+            })
+            .collect()
+    }
+
+    /// Shape factor for an aspect ratio (Fig 3): non-square launches lose
+    /// effective tile utilization and scheduling efficiency, worst at
+    /// 4:1. Penalty scales per precision with its calibrated maximum
+    /// (FP8 16%, FP32 ~3%; others interpolate by tile skew).
+    pub fn shape_factor(&self, p: Precision, aspect: f64) -> f64 {
+        let max_pen = match p {
+            Precision::Fp8 | Precision::Bf8 => self.cfg.calib.shape_penalty_fp8,
+            Precision::F32 => self.cfg.calib.shape_penalty_f32,
+            Precision::F16 => 0.09,
+            Precision::Bf16 => 0.10,
+            Precision::F64 => 0.05,
+        };
+        // |log2(aspect)| in [0, 2] over the paper's 1:4..4:1 sweep.
+        let skew = aspect.max(1e-9).log2().abs().min(2.0) / 2.0;
+        1.0 - max_pen * skew
+    }
+
+    /// Fig-3 point: absolute GFLOPS at fixed total blocks and an aspect
+    /// ratio (M/N varies, total work constant).
+    pub fn shape_throughput(&self, p: Precision, aspect: f64, blocks: usize) -> f64 {
+        self.throughput_gflops(p, blocks) * self.shape_factor(p, aspect)
+    }
+
+    /// Table-3 measurement: dependency-chain latency of one opcode as
+    /// the simulated instruction-targeted microbenchmark observes it
+    /// (isolated single kernel, warmed up; only timer-grain noise).
+    pub fn measure_chain_latency_ns(&self, opcode: &MfmaOpcode, rng: &mut Rng) -> f64 {
+        let reps = 2000.0;
+        // Timer granularity + loop overhead: sub-0.3% after warm-up.
+        let noise = rng.normal_ms(1.0, 0.002);
+        let total = opcode.latency_ns * reps * noise;
+        total / reps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::lookup;
+
+    fn model(cfg: &Config) -> MicrobenchModel<'_> {
+        MicrobenchModel::new(cfg)
+    }
+
+    #[test]
+    fn throughput_monotone_in_waves() {
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        for p in Precision::SWEEP {
+            let mut prev = 0.0;
+            for w in [1, 2, 4, 8, 16, 32, 64, 128, 256] {
+                let t = m.throughput_gflops(p, w);
+                assert!(t > prev, "{p} at {w} waves: {t} <= {prev}");
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_is_sublinear_at_high_occupancy() {
+        // Paper §5.2: "throughput scales sublinearly with wavefront count
+        // for every precision".
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        for p in Precision::SWEEP {
+            let t128 = m.throughput_gflops(p, 128);
+            let t256 = m.throughput_gflops(p, 256);
+            assert!(
+                t256 < 2.0 * t128 * 1.001,
+                "{p}: 128->256 waves must not superscale"
+            );
+        }
+    }
+
+    #[test]
+    fn low_occupancy_strongly_underutilized() {
+        // Paper: "at low occupancy, all precisions are strongly
+        // underutilized".
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        for p in Precision::SWEEP {
+            let pt = &m.occupancy_sweep(p, &[8])[0];
+            assert!(pt.normalized < 0.01, "{p}: {:.4}", pt.normalized);
+        }
+    }
+
+    #[test]
+    fn fp8_highest_normalized_at_256() {
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        let at256: Vec<(Precision, f64)> = Precision::SWEEP
+            .iter()
+            .map(|&p| (p, m.occupancy_sweep(p, &[256])[0].normalized))
+            .collect();
+        let fp8 = at256.iter().find(|(p, _)| *p == Precision::Fp8).unwrap().1;
+        for (p, norm) in &at256 {
+            if *p != Precision::Fp8 {
+                assert!(fp8 >= *norm, "{p} normalized {norm} > FP8 {fp8}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_factor_worst_at_4_to_1_for_fp8() {
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        let at1 = m.shape_factor(Precision::Fp8, 1.0);
+        let at4 = m.shape_factor(Precision::Fp8, 4.0);
+        let at_quarter = m.shape_factor(Precision::Fp8, 0.25);
+        assert_eq!(at1, 1.0);
+        assert!((at1 - at4 - cfg.calib.shape_penalty_fp8).abs() < 1e-9);
+        assert!((at4 - at_quarter).abs() < 1e-9, "penalty symmetric in log");
+        // FP32 is much less shape sensitive (±3%).
+        assert!(1.0 - m.shape_factor(Precision::F32, 4.0) <= 0.031);
+    }
+
+    #[test]
+    fn chain_latency_recovers_table3_within_noise() {
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        let mut rng = Rng::new(1);
+        let op = lookup("V_MFMA_F32_16X16X32_FP8_FP8").unwrap();
+        let measured = m.measure_chain_latency_ns(op, &mut rng);
+        assert!(
+            (measured - op.latency_ns).abs() / op.latency_ns < 0.01,
+            "measured {measured} vs table {}",
+            op.latency_ns
+        );
+    }
+}

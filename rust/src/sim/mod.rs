@@ -1,0 +1,16 @@
+//! The MI300A execution simulator: kernel descriptors, solo cost model,
+//! microbenchmark models (Figs 2-3, Table 3), ACE queue model, and the
+//! processor-sharing DES for concurrent streams (Figs 4-9, 13).
+
+pub mod ace;
+pub mod cost;
+pub mod engine;
+pub mod kernel;
+pub mod microbench;
+pub mod trace;
+
+pub use ace::{AceSet, QueueId};
+pub use cost::CostModel;
+pub use engine::{ConcurrencyProfile, ConcurrentRun, Engine, StreamOutcome};
+pub use kernel::{KernelDesc, SparsityMode};
+pub use microbench::{MicrobenchModel, OccupancyPoint};

@@ -1,0 +1,211 @@
+//! 2:4 structured sparsity encoding (paper §7): prune, compress to
+//! (values, 2-bit indices), decompress. Mirrors the Python oracle
+//! (`python/compile/kernels/ref.py`) so the Rust coordinator can prepare
+//! sparse operands for the AOT'd sparse GEMM artifact.
+
+/// A 2:4-compressed matrix: for every group of 4 consecutive elements
+/// along a row, the 2 surviving values and their in-group positions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Compressed24 {
+    pub rows: usize,
+    /// Dense column count (multiple of 4).
+    pub cols: usize,
+    /// rows x cols/2 surviving values, row-major.
+    pub values: Vec<f32>,
+    /// rows x cols/2 in-group positions (0..4), row-major.
+    pub indices: Vec<u8>,
+}
+
+/// Prune a row-major matrix to 2:4: keep the 2 largest-magnitude
+/// elements of each consecutive group of 4 (ties keep the earlier
+/// element, matching the Python oracle's stable ordering).
+pub fn prune_2_4(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * cols);
+    assert!(cols % 4 == 0, "cols {cols} not divisible by 4");
+    let mut out = data.to_vec();
+    for r in 0..rows {
+        for g in 0..cols / 4 {
+            let base = r * cols + g * 4;
+            // Rank the 4 by |x| descending, stable.
+            let mut order = [0usize, 1, 2, 3];
+            order.sort_by(|&a, &b| {
+                data[base + b]
+                    .abs()
+                    .partial_cmp(&data[base + a].abs())
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            out[base + order[2]] = 0.0;
+            out[base + order[3]] = 0.0;
+        }
+    }
+    out
+}
+
+/// Compress a 2:4-pruned matrix. The two survivors per group are stored
+/// in ascending position order (sparse-MFMA metadata layout). Groups
+/// with fewer than 2 nonzeros pad with position slots in ascending
+/// order of remaining indices.
+pub fn compress_2_4(pruned: &[f32], rows: usize, cols: usize) -> Compressed24 {
+    assert_eq!(pruned.len(), rows * cols);
+    assert!(cols % 4 == 0);
+    let half = cols / 2;
+    let mut values = vec![0.0f32; rows * half];
+    let mut indices = vec![0u8; rows * half];
+    for r in 0..rows {
+        for g in 0..cols / 4 {
+            let base = r * cols + g * 4;
+            let mut picked = Vec::with_capacity(2);
+            for p in 0..4 {
+                if pruned[base + p] != 0.0 {
+                    picked.push(p);
+                }
+            }
+            assert!(
+                picked.len() <= 2,
+                "row {r} group {g}: {} nonzeros violates 2:4",
+                picked.len()
+            );
+            // Pad with unused ascending positions.
+            let mut p_iter = 0;
+            while picked.len() < 2 {
+                if !picked.contains(&p_iter) {
+                    picked.push(p_iter);
+                }
+                p_iter += 1;
+            }
+            picked.sort_unstable();
+            for (slot, &p) in picked.iter().enumerate() {
+                values[r * half + g * 2 + slot] = pruned[base + p];
+                indices[r * half + g * 2 + slot] = p as u8;
+            }
+        }
+    }
+    Compressed24 { rows, cols, values, indices }
+}
+
+/// Decompress back to dense (exact inverse of compress over pruned
+/// input).
+pub fn decompress_2_4(c: &Compressed24) -> Vec<f32> {
+    let mut out = vec![0.0f32; c.rows * c.cols];
+    let half = c.cols / 2;
+    for r in 0..c.rows {
+        for g in 0..c.cols / 4 {
+            for slot in 0..2 {
+                let v = c.values[r * half + g * 2 + slot];
+                let p = c.indices[r * half + g * 2 + slot] as usize;
+                out[r * c.cols + g * 4 + p] += v;
+            }
+        }
+    }
+    out
+}
+
+/// Validate the 2:4 invariant on a dense matrix.
+pub fn is_2_4(data: &[f32], rows: usize, cols: usize) -> bool {
+    if cols % 4 != 0 || data.len() != rows * cols {
+        return false;
+    }
+    for r in 0..rows {
+        for g in 0..cols / 4 {
+            let base = r * cols + g * 4;
+            let nnz = (0..4).filter(|&p| data[base + p] != 0.0).count();
+            if nnz > 2 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Metadata bytes of a compressed matrix (2 bits per surviving element,
+/// packed; the paper's overhead model charges their allocation).
+pub fn metadata_bytes(rows: usize, cols: usize) -> usize {
+    // cols/2 survivors per row x 2 bits = cols/8 bytes per row.
+    rows * cols / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn prune_keeps_two_largest() {
+        let data = [1.0f32, -4.0, 2.0, 0.5];
+        let pruned = prune_2_4(&data, 1, 4);
+        assert_eq!(pruned, vec![0.0, -4.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn prune_is_idempotent() {
+        let mut rng = Rng::new(5);
+        let data = rand_matrix(&mut rng, 8, 16);
+        let once = prune_2_4(&data, 8, 16);
+        let twice = prune_2_4(&once, 8, 16);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn compress_decompress_roundtrip_property() {
+        check(100, 7, |g| {
+            let rows = g.sized(1, 16);
+            let cols = 4 * g.sized(1, 16);
+            let mut data = Vec::with_capacity(rows * cols);
+            for _ in 0..rows * cols {
+                data.push(g.f64_in(-10.0, 10.0) as f32);
+            }
+            let pruned = prune_2_4(&data, rows, cols);
+            if !is_2_4(&pruned, rows, cols) {
+                return Err("prune violated 2:4".into());
+            }
+            let c = compress_2_4(&pruned, rows, cols);
+            if c.values.len() != rows * cols / 2 {
+                return Err("compressed size wrong".into());
+            }
+            if c.indices.iter().any(|&i| i > 3) {
+                return Err("index out of group range".into());
+            }
+            let back = decompress_2_4(&c);
+            if back != pruned {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn indices_strictly_ascending_within_group() {
+        let mut rng = Rng::new(9);
+        let data = rand_matrix(&mut rng, 4, 32);
+        let c = compress_2_4(&prune_2_4(&data, 4, 32), 4, 32);
+        for pair in c.indices.chunks(2) {
+            assert!(pair[0] < pair[1], "metadata must be position-sorted");
+        }
+    }
+
+    #[test]
+    fn all_zero_rows_compress_cleanly() {
+        let data = vec![0.0f32; 2 * 8];
+        let pruned = prune_2_4(&data, 2, 8);
+        let c = compress_2_4(&pruned, 2, 8);
+        assert_eq!(decompress_2_4(&c), data);
+    }
+
+    #[test]
+    fn metadata_size() {
+        // 128x128: 128 * 128/8 = 2048 bytes of 2-bit metadata.
+        assert_eq!(metadata_bytes(128, 128), 2048);
+    }
+
+    #[test]
+    fn rejects_invalid_density() {
+        let dense = vec![1.0f32; 8];
+        assert!(!is_2_4(&dense, 1, 8), "fully dense is not 2:4");
+    }
+}

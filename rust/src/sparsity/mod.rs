@@ -1,0 +1,11 @@
+//! 2:4 structured sparsity: encoding substrate, rocSPARSE-like API
+//! overhead model, and the sparse-vs-dense speedup composition
+//! (paper §7).
+
+pub mod encode;
+pub mod overhead;
+pub mod speedup;
+
+pub use encode::{compress_2_4, decompress_2_4, is_2_4, prune_2_4, Compressed24};
+pub use overhead::{OverheadBreakdown, OverheadModel};
+pub use speedup::{IsolatedComparison, SpeedupModel};

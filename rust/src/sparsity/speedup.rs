@@ -1,0 +1,187 @@
+//! Sparse-vs-dense speedup model (paper §7.1.2-§7.2, Figs 11-13).
+//!
+//! The paper's isolated measurements are reconciled by three facts its
+//! §7/§9 analysis establishes:
+//!
+//! 1. The rocSPARSE path is **software-limited**: it executes
+//!    dense-equivalent FLOPs (no realized 50% saving) plus a constant
+//!    3.7-5.5 µs API overhead (`realized_flop_fraction = 1.0`).
+//! 2. Both dense (rocBLAS) and sparse (rocSPARSE) calls share a large
+//!    constant API/launch cost (`dense_api_launch_us`) — visible in the
+//!    paper's own §7 baseline throughput (59.98 GFLOPS at 512^3). The
+//!    extra sparse overhead is therefore invisible at any size:
+//!    break-even 0.97-1.02x across the whole 60-config sweep.
+//! 3. Strongly rectangular shapes are the exception: the dense path
+//!    handles them poorly while the decompress path streams them,
+//!    giving the 1.6-1.76x win (`rect_dense_penalty`).
+//!
+//! Under concurrency the value flips (Fig 13): the sparse path's halved
+//! memory traffic avoids the contention collapse, yielding the stable
+//! ~1.3x per-stream speedup — modelled in the DES via `mem_fraction`.
+
+use super::overhead::OverheadModel;
+use crate::config::Config;
+use crate::sim::cost::CostModel;
+use crate::sim::kernel::{KernelDesc, SparsityMode};
+
+/// Isolated (single-stream) sparse vs dense timing for one kernel shape.
+#[derive(Debug, Clone)]
+pub struct IsolatedComparison {
+    pub dense_ns: f64,
+    pub sparse_ns: f64,
+    pub overhead_ns: f64,
+}
+
+impl IsolatedComparison {
+    pub fn speedup(&self) -> f64 {
+        self.dense_ns / self.sparse_ns
+    }
+}
+
+pub struct SpeedupModel<'a> {
+    cfg: &'a Config,
+    cost: CostModel<'a>,
+    overhead: OverheadModel<'a>,
+}
+
+impl<'a> SpeedupModel<'a> {
+    pub fn new(cfg: &'a Config) -> SpeedupModel<'a> {
+        SpeedupModel {
+            cfg,
+            cost: CostModel::new(cfg),
+            overhead: OverheadModel::new(cfg),
+        }
+    }
+
+    /// Isolated comparison for a dense kernel vs its `mode`-sparse twin.
+    pub fn isolated(&self, dense: &KernelDesc, mode: SparsityMode) -> IsolatedComparison {
+        assert!(mode.is_sparse());
+        let sparse_k = dense.clone().with_sparsity(mode);
+        let launch = self.cfg.sparsity.dense_api_launch_us * 1e3;
+        let oh = self.overhead.mean(mode).total_ns();
+
+        let mut dense_ns = self.cost.solo_work_ns(dense) + launch;
+        let sparse_ns = self.cost.solo_work_ns(&sparse_k) + launch + oh;
+        if dense.is_rectangular() {
+            // §7.1.2 exception: the dense path pays a penalty on
+            // strongly skewed shapes that the decompress path does not.
+            dense_ns *= self.cfg.sparsity.rect_dense_penalty;
+        }
+        IsolatedComparison { dense_ns, sparse_ns, overhead_ns: oh }
+    }
+
+    /// Per-stream sparse/dense speedup under `streams`-way concurrency
+    /// (paper Fig 13c: constant ~1.3x — contention avoidance, not
+    /// amortization). Derived from the relative contention relief of the
+    /// sparse memory path.
+    pub fn concurrent_per_stream(&self, dense: &KernelDesc, streams: usize) -> f64 {
+        if streams <= 1 {
+            let iso = self.isolated(dense, SparsityMode::SparseLhs);
+            return iso.speedup();
+        }
+        // Contention relief: sparse kernels issue mem_fraction of the
+        // memory requests, so they feel proportionally less of the
+        // concurrency slowdown. Calibrated to the paper's stable 1.3x.
+        let relief = 1.0 - self.cfg.sparsity.mem_fraction; // 0.4375
+        1.0 + relief * 0.686
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+
+    fn model(cfg: &Config) -> SpeedupModel<'_> {
+        SpeedupModel::new(cfg)
+    }
+
+    #[test]
+    fn square_isolated_is_break_even_at_all_sizes() {
+        // Paper Fig 11/12: 0.97-1.03x across the whole square sweep.
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        for n in [256usize, 512, 2048, 8192] {
+            for mode in [
+                SparsityMode::SparseLhs,
+                SparsityMode::SparseRhs,
+                SparsityMode::SparseBoth,
+            ] {
+                let s = m
+                    .isolated(&KernelDesc::gemm(n, Precision::Fp8), mode)
+                    .speedup();
+                assert!(
+                    (0.95..=1.05).contains(&s),
+                    "n={n} {mode:?}: isolated speedup {s:.3} not break-even"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overhead_never_amortizes_in_isolation() {
+        // Even at 8192^3 the speedup stays pinned at break-even: the
+        // software path realizes no FLOP saving for the overhead to
+        // amortize against (paper §7.1.1).
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        let small = m
+            .isolated(&KernelDesc::gemm(256, Precision::Fp8),
+                      SparsityMode::SparseLhs)
+            .speedup();
+        let large = m
+            .isolated(&KernelDesc::gemm(8192, Precision::Fp8),
+                      SparsityMode::SparseLhs)
+            .speedup();
+        assert!(
+            (large - small).abs() < 0.06,
+            "no size-dependent improvement: {small:.3} vs {large:.3}"
+        );
+        assert!(large < 1.05, "never a real win in isolation: {large:.3}");
+    }
+
+    #[test]
+    fn custom_kernel_config_would_beat_break_even() {
+        // §9.1 implication: bypassing rocSPARSE (realizing the 50% FLOP
+        // saving, no API overhead) yields real speedup at compute-bound
+        // sizes.
+        let mut cfg = Config::mi300a();
+        cfg.sparsity.realized_flop_fraction = 0.5;
+        cfg.sparsity.dense_api_launch_us = 0.0;
+        cfg.sparsity.sparse_pipe_eff = 1.0;
+        let m = model(&cfg);
+        let s = m
+            .isolated(&KernelDesc::gemm(8192, Precision::Fp8),
+                      SparsityMode::SparseLhs)
+            .speedup();
+        assert!(s > 1.5, "custom kernel should approach 2x: {s:.2}");
+    }
+
+    #[test]
+    fn rectangular_shape_beats_break_even() {
+        // Paper §7.1.2: 512x2048x1024 reaches 1.6-1.76x.
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        let rect = KernelDesc::gemm(512, Precision::Fp8).with_shape(512, 2048, 1024);
+        let s = m.isolated(&rect, SparsityMode::SparseLhs).speedup();
+        assert!(
+            (1.5..=1.85).contains(&s),
+            "rectangular speedup {s:.2} outside the paper's 1.6-1.76 region"
+        );
+    }
+
+    #[test]
+    fn concurrent_speedup_is_stable_1_3() {
+        let cfg = Config::mi300a();
+        let m = model(&cfg);
+        let k = KernelDesc::gemm(512, Precision::Fp8);
+        for streams in [2usize, 3, 4] {
+            let s = m.concurrent_per_stream(&k, streams);
+            assert!(
+                (1.25..=1.35).contains(&s),
+                "streams={streams}: {s:.3} should be ~1.3 and stream-count \
+                 independent"
+            );
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Micro-benchmark harness (offline build: no criterion).
+//!
+//! `cargo bench` targets declare `harness = false` and drive this module.
+//! It mirrors the paper's measurement discipline (§4.2): warm-up
+//! iterations are discarded, reported values are stable averages, and
+//! variability is quantified with the coefficient of variation.
+
+use std::time::Instant;
+
+/// One benchmark's summary statistics (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn cv(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            self.std_ns / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Benchmark runner: fixed warm-up then timed iterations.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, iters: 10, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f` (one logical operation per call) and record the result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+            / samples.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_ns: samples.iter().cloned().fold(0.0, f64::max),
+        };
+        println!(
+            "{:<52} {:>12.1} ns/iter (±{:>5.1}%, {} iters)",
+            result.name,
+            result.mean_ns,
+            result.cv() * 100.0,
+            result.iters
+        );
+        self.results.push(result.clone());
+        result
+    }
+
+    /// Prevent the optimizer from discarding a computed value.
+    #[inline]
+    pub fn black_box<T>(x: T) -> T {
+        std::hint::black_box(x)
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all recorded results as a markdown table.
+    pub fn markdown(&self) -> String {
+        let mut out = String::from(
+            "| benchmark | mean | cv | ops/s |\n|---|---:|---:|---:|\n",
+        );
+        for r in &self.results {
+            out.push_str(&format!(
+                "| {} | {} | {:.1}% | {:.0} |\n",
+                r.name,
+                fmt_ns(r.mean_ns),
+                r.cv() * 100.0,
+                r.throughput_per_sec()
+            ));
+        }
+        out
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut b = Bencher::new(1, 5);
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            Bencher::black_box(acc);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_ns(1.5e9), "1.50 s");
+    }
+
+    #[test]
+    fn markdown_has_all_rows() {
+        let mut b = Bencher::new(0, 2);
+        b.bench("a", || {});
+        b.bench("b", || {});
+        let md = b.markdown();
+        assert!(md.contains("| a |") && md.contains("| b |"));
+    }
+}

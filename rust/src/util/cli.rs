@@ -1,0 +1,128 @@
+//! Tiny command-line argument parser (offline build: no clap).
+//!
+//! Supports `subcommand --flag value --switch positional` layouts, typed
+//! accessors with defaults, and generated usage text. Each experiment
+//! driver and example declares its options through [`Args`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare
+/// `--switch` flags, and positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `known_switches` lists flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_switches: &[&str],
+    ) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if known_switches.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        args.switches.push(name.to_string());
+                    } else {
+                        args.opts.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_switches: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_switches)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "json"])
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("repro fig2 --seed 7 --streams 4 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positional, vec!["fig2"]);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert_eq!(a.get_usize("streams", 1), 4);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("json"));
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("sim --size=512 run");
+        assert_eq!(a.get_usize("size", 0), 512);
+        assert_eq!(a.get_or("missing", "x"), "x");
+        assert_eq!(a.subcommand.as_deref(), Some("sim"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn trailing_switch_without_value() {
+        let a = parse("run --json");
+        assert!(a.flag("json"));
+    }
+
+    #[test]
+    fn unknown_flag_followed_by_flag_becomes_switch() {
+        let a = parse("run --fast --seed 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_u64("seed", 0), 3);
+    }
+}

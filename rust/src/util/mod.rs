@@ -1,0 +1,9 @@
+//! In-repo substrate utilities (the build is fully offline, so the RNG,
+//! JSON, CLI, bench, and property-testing layers usually pulled from
+//! crates.io are implemented — and tested — here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;

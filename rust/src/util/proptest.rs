@@ -1,0 +1,172 @@
+//! Property-based testing harness (offline build: no proptest crate).
+//!
+//! `check(cases, seed, |g| ...)` runs a property over `cases` random
+//! inputs drawn through a [`Gen`]; on failure it reports the failing
+//! case's seed so the exact input is reproducible with `replay(seed)`.
+//! A bisecting "shrink-lite" pass retries the property with progressively
+//! smaller sizes drawn from the same sub-seed family.
+
+use super::rng::Rng;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0, 1]: properties should scale their input sizes by
+    /// this so the shrink pass can retry "smaller" versions.
+    pub size: f64,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Gen {
+        Gen { rng: Rng::new(seed), size, case_seed: seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// A size-scaled integer in [lo, hi]: shrinks toward lo.
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo + (((hi - lo) as f64) * self.size).round() as usize;
+        self.usize_in(lo, hi_eff.max(lo))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a property: Ok, or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: build a failure.
+pub fn fail(msg: impl Into<String>) -> PropResult {
+    Err(msg.into())
+}
+
+/// Assert-style helper usable inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Run `prop` over `cases` random inputs derived from `seed`.
+///
+/// Panics (test failure) with the case seed and message on the first
+/// failing case after attempting a shrink pass.
+pub fn check<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen::new(case_seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink-lite: retry the same sub-seed family at smaller sizes
+            // and report the smallest size that still fails.
+            let mut smallest = (1.0, msg.clone());
+            for step in 1..=8 {
+                let size = 1.0 - step as f64 / 9.0;
+                let mut g = Gen::new(case_seed, size);
+                if let Err(m) = prop(&mut g) {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, \
+                 smallest failing size {:.2}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging helper).
+pub fn replay<F>(case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let mut g = Gen::new(case_seed, 1.0);
+    if let Err(msg) = prop(&mut g) {
+        panic!("replayed case {case_seed:#x} failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(50, 1, |g| {
+            count += 1;
+            let x = g.usize_in(0, 100);
+            if x <= 100 {
+                Ok(())
+            } else {
+                fail("out of range")
+            }
+        });
+        assert_eq!(count, 50 );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, 2, |g| {
+            let x = g.usize_in(0, 100);
+            if x < 95 {
+                Ok(())
+            } else {
+                fail(format!("x = {x}"))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut seq1 = Vec::new();
+        check(10, 3, |g| {
+            seq1.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        let mut seq2 = Vec::new();
+        check(10, 3, |g| {
+            seq2.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(seq1, seq2);
+    }
+
+    #[test]
+    fn sized_shrinks_toward_lo() {
+        let mut g_small = Gen::new(7, 0.0);
+        for _ in 0..20 {
+            assert_eq!(g_small.sized(3, 1000), 3);
+        }
+    }
+}

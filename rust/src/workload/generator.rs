@@ -1,0 +1,104 @@
+//! Parameter-sweep and stream-set construction for the experiment
+//! drivers (paper §4.2 "controlled scaling").
+
+use crate::isa::Precision;
+use crate::sim::kernel::{KernelDesc, SparsityMode};
+
+/// A multi-stream workload specification.
+#[derive(Debug, Clone)]
+pub struct StreamSetSpec {
+    pub kernels: Vec<KernelDesc>,
+}
+
+impl StreamSetSpec {
+    pub fn homogeneous(kernel: KernelDesc, streams: usize) -> StreamSetSpec {
+        StreamSetSpec { kernels: vec![kernel; streams] }
+    }
+
+    /// Occupancy-imbalance pair (paper §6.3): a large and a small kernel
+    /// on the same ACE, e.g. 2048^3 paired with 512^3 at 4:1.
+    pub fn imbalanced_pair(large_n: usize, small_n: usize, p: Precision,
+                           iters: usize) -> StreamSetSpec {
+        StreamSetSpec {
+            kernels: vec![
+                KernelDesc::gemm(large_n, p).with_iters(iters),
+                KernelDesc::gemm(small_n, p).with_iters(iters),
+            ],
+        }
+    }
+
+    /// Mixed dense/sparse set (paper §7.2's "mixed" workload: alternate
+    /// sparse and dense streams).
+    pub fn mixed_sparse(n: usize, p: Precision, streams: usize,
+                        iters: usize) -> StreamSetSpec {
+        StreamSetSpec {
+            kernels: (0..streams)
+                .map(|i| {
+                    let k = KernelDesc::gemm(n, p).with_iters(iters);
+                    if i % 2 == 0 {
+                        k.with_sparsity(SparsityMode::SparseLhs)
+                    } else {
+                        k
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    pub fn occupancy_ratio(&self) -> f64 {
+        let blocks: Vec<f64> =
+            self.kernels.iter().map(|k| k.blocks() as f64).collect();
+        let max = blocks.iter().cloned().fold(0.0, f64::max);
+        let min = blocks.iter().cloned().fold(f64::INFINITY, f64::min);
+        max / min
+    }
+}
+
+/// Sweep of homogeneous GEMMs over matrix dimension (Fig 14's axis).
+pub fn gemm_sweep(dims: &[usize], p: Precision, iters: usize) -> Vec<KernelDesc> {
+    dims.iter()
+        .map(|&n| KernelDesc::gemm(n, p).with_iters(iters))
+        .collect()
+}
+
+/// Homogeneous stream set (paper baseline: fixed 512^3, 100 iters).
+pub fn stream_set(n: usize, p: Precision, streams: usize, iters: usize)
+    -> Vec<KernelDesc> {
+    vec![KernelDesc::gemm(n, p).with_iters(iters); streams]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_set_size() {
+        let s = StreamSetSpec::homogeneous(
+            KernelDesc::gemm(512, Precision::F32), 4);
+        assert_eq!(s.kernels.len(), 4);
+        assert!((s.occupancy_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalanced_pair_ratio() {
+        // 2048^3 (tile 256 -> 64 blocks) vs 512^3 (tile 128 -> 16 blocks).
+        let s = StreamSetSpec::imbalanced_pair(2048, 512, Precision::F32, 8);
+        assert!(s.occupancy_ratio() >= 2.0, "ratio {}", s.occupancy_ratio());
+    }
+
+    #[test]
+    fn mixed_set_alternates() {
+        let s = StreamSetSpec::mixed_sparse(512, Precision::Fp8, 4, 50);
+        let sparse_count =
+            s.kernels.iter().filter(|k| k.sparsity.is_sparse()).count();
+        assert_eq!(sparse_count, 2);
+    }
+
+    #[test]
+    fn sweep_covers_dims() {
+        let ks = gemm_sweep(&[64, 256, 1024], Precision::Fp8, 10);
+        assert_eq!(ks.len(), 3);
+        assert_eq!(ks[2].m, 1024);
+        assert!(ks.iter().all(|k| k.iters == 10));
+    }
+}

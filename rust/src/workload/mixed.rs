@@ -1,0 +1,72 @@
+//! Mixed-precision workload (paper §8.3): a sequence of matrix
+//! operations at FP32, FP16, and FP8, "representing a common pattern in
+//! training pipelines that use different precisions for different
+//! computational stages".
+
+use crate::isa::Precision;
+use crate::sim::kernel::KernelDesc;
+
+/// One operation of the chain.
+#[derive(Debug, Clone)]
+pub struct MixedOp {
+    pub name: &'static str,
+    pub kernel: KernelDesc,
+}
+
+/// The FP32 -> FP16 -> FP8 chain (mirrors the AOT'd `mixed_chain` L2
+/// entry point).
+#[derive(Debug, Clone)]
+pub struct MixedChain {
+    pub n: usize,
+    pub ops: Vec<MixedOp>,
+}
+
+impl MixedChain {
+    pub fn new(n: usize) -> MixedChain {
+        MixedChain {
+            n,
+            ops: vec![
+                MixedOp {
+                    name: "fp32_gemm",
+                    kernel: KernelDesc::gemm(n, Precision::F32).with_iters(1),
+                },
+                MixedOp {
+                    name: "fp16_gemm",
+                    kernel: KernelDesc::gemm(n, Precision::F16).with_iters(1),
+                },
+                MixedOp {
+                    name: "fp8_gemm",
+                    kernel: KernelDesc::gemm(n, Precision::Fp8).with_iters(1),
+                },
+            ],
+        }
+    }
+
+    pub fn precisions(&self) -> Vec<Precision> {
+        self.ops.iter().map(|o| o.kernel.precision).collect()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.kernel.flops()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_order_is_fp32_fp16_fp8() {
+        let c = MixedChain::new(256);
+        assert_eq!(
+            c.precisions(),
+            vec![Precision::F32, Precision::F16, Precision::Fp8]
+        );
+    }
+
+    #[test]
+    fn flops_are_three_equal_gemms() {
+        let c = MixedChain::new(256);
+        assert_eq!(c.total_flops(), 3.0 * 2.0 * 256.0f64.powi(3));
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generators: the kernels and kernel chains the paper's
+//! experiments drive (§4 microbenchmarks, §8 case studies).
+
+pub mod generator;
+pub mod mixed;
+pub mod transformer;
+
+pub use generator::{gemm_sweep, stream_set, StreamSetSpec};
+pub use mixed::{MixedChain, MixedOp};
+pub use transformer::TransformerWorkload;

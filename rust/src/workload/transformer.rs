@@ -1,0 +1,128 @@
+//! Transformer-style FP8 inference workload (paper §8.1).
+//!
+//! The case-study kernel is "composed primarily of FP8 GEMM operations"
+//! executed sequentially: QKV projection, attention output projection,
+//! and the two MLP GEMMs. For a given model geometry and batch size this
+//! expands to the GEMM chain the simulator prices, and the coordinator
+//! maps onto the AOT'd `transformer_block` artifact for real numerics.
+
+use crate::isa::Precision;
+use crate::sim::kernel::{KernelDesc, SparsityMode};
+
+/// Model geometry of the transformer-style kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerWorkload {
+    pub seq: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub batch: usize,
+    pub sparse_mlp: bool,
+}
+
+impl TransformerWorkload {
+    pub fn new(seq: usize, d_model: usize) -> TransformerWorkload {
+        TransformerWorkload {
+            seq,
+            d_model,
+            d_ff: 4 * d_model,
+            n_heads: (d_model / 64).max(1),
+            batch: 1,
+            sparse_mlp: false,
+        }
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn with_sparse_mlp(mut self, on: bool) -> Self {
+        self.sparse_mlp = on;
+        self
+    }
+
+    /// Effective GEMM M dimension: tokens in flight.
+    pub fn tokens(&self) -> usize {
+        self.seq * self.batch
+    }
+
+    /// The FP8 GEMM chain of one block (paper §8.1's kernel).
+    pub fn gemms(&self) -> Vec<KernelDesc> {
+        let t = self.tokens();
+        let mlp_sparse = if self.sparse_mlp {
+            SparsityMode::SparseLhs
+        } else {
+            SparsityMode::Dense
+        };
+        vec![
+            // QKV projection: (t, d) x (d, 3d)
+            KernelDesc::gemm(t, Precision::Fp8)
+                .with_shape(t, 3 * self.d_model, self.d_model)
+                .with_iters(1),
+            // Attention output projection: (t, d) x (d, d)
+            KernelDesc::gemm(t, Precision::Fp8)
+                .with_shape(t, self.d_model, self.d_model)
+                .with_iters(1),
+            // MLP up: (t, d) x (d, 4d)
+            KernelDesc::gemm(t, Precision::Fp8)
+                .with_shape(t, self.d_ff, self.d_model)
+                .with_iters(1)
+                .with_sparsity(mlp_sparse),
+            // MLP down: (t, 4d) x (4d, d)
+            KernelDesc::gemm(t, Precision::Fp8)
+                .with_shape(t, self.d_model, self.d_ff)
+                .with_iters(1)
+                .with_sparsity(mlp_sparse),
+        ]
+    }
+
+    /// Total dense-equivalent FLOPs per block.
+    pub fn flops(&self) -> f64 {
+        self.gemms().iter().map(|g| g.flops()).sum()
+    }
+
+    /// Total wavefronts the chain's largest GEMM puts in flight — the
+    /// §9.1 occupancy number ("a transformer decoder with batch size 32
+    /// achieves only 128 wavefronts").
+    pub fn peak_wavefronts(&self) -> usize {
+        self.gemms().iter().map(|g| g.blocks()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_has_four_gemms() {
+        let w = TransformerWorkload::new(128, 256);
+        assert_eq!(w.gemms().len(), 4);
+    }
+
+    #[test]
+    fn flops_match_hand_count() {
+        let w = TransformerWorkload::new(128, 256);
+        // 2*t*3d*d + 2*t*d*d + 2*t*4d*d + 2*t*4d*d = 2*t*d^2*(3+1+4+4).
+        let want = 2.0 * 128.0 * 256.0 * 256.0 * 12.0;
+        assert_eq!(w.flops(), want);
+    }
+
+    #[test]
+    fn batch_scales_tokens_and_wavefronts() {
+        let w1 = TransformerWorkload::new(128, 512);
+        let w8 = w1.with_batch(8);
+        assert_eq!(w8.tokens(), 8 * 128);
+        assert!(w8.peak_wavefronts() > w1.peak_wavefronts());
+    }
+
+    #[test]
+    fn sparse_mlp_marks_only_mlp_gemms() {
+        let w = TransformerWorkload::new(64, 256).with_sparse_mlp(true);
+        let gs = w.gemms();
+        assert!(!gs[0].sparsity.is_sparse());
+        assert!(!gs[1].sparsity.is_sparse());
+        assert!(gs[2].sparsity.is_sparse());
+        assert!(gs[3].sparsity.is_sparse());
+    }
+}

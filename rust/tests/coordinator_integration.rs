@@ -1,0 +1,163 @@
+//! Integration + property tests: coordinator pipeline (batcher ->
+//! governor -> router) against the DES, plus engine conservation
+//! invariants.
+
+use mi300a_char::config::Config;
+use mi300a_char::coordinator::{Batcher, BatcherConfig, Coordinator,
+                               Objective, Router};
+use mi300a_char::isa::Precision;
+use mi300a_char::metrics::fairness;
+use mi300a_char::sim::{ConcurrencyProfile, Engine, KernelDesc};
+use mi300a_char::util::proptest::check;
+
+#[test]
+fn plan_then_simulate_latency_objective_keeps_fairness() {
+    let cfg = Config::mi300a();
+    let coord = Coordinator::new(cfg.clone(), Objective::LatencySensitive);
+    let pool = vec![KernelDesc::gemm(512, Precision::F32).with_iters(40); 8];
+    let plan = coord.plan(&pool, false);
+    let engine = Engine::new(&cfg, ConcurrencyProfile::ace());
+    for group in &plan.groups {
+        let ks: Vec<KernelDesc> =
+            group.kernels[..group.streams.min(group.kernels.len())].to_vec();
+        if ks.len() < 2 {
+            continue;
+        }
+        // Average over seeds: a single DES run's fairness is one draw
+        // from the placement-bias distribution.
+        let reps = 8u64;
+        let f = (0..reps)
+            .map(|r| fairness(&engine.run(&ks, 99 + r).per_stream_totals()))
+            .sum::<f64>()
+            / reps as f64;
+        // The governor promised > 0.5 for latency-sensitive plans; the
+        // DES should roughly agree at <= 4 streams.
+        assert!(
+            f > 0.3,
+            "simulated mean fairness {f:.3} far below the governor's \
+             promise ({:.3}) at {} streams",
+            group.expected_fairness,
+            ks.len()
+        );
+    }
+}
+
+#[test]
+fn full_pipeline_batch_route_complete() {
+    // Batcher forms batches; router dispatches them; everything drains.
+    let mut batcher = Batcher::new(BatcherConfig {
+        precision: Precision::Fp8,
+        deadline_ns: 1e6,
+        max_requests: 8,
+    });
+    let mut router = Router::new(4, 8, 2);
+    let mut now = 0.0;
+    let mut batches_done = 0u64;
+    let mut in_flight: Vec<usize> = Vec::new();
+    for i in 0..200 {
+        now += 10_000.0;
+        batcher.submit(32, now);
+        if let Some(_batch) = batcher.poll(now) {
+            if let Some(d) = router.submit(i as u64) {
+                in_flight.push(d.stream);
+            }
+        }
+        // Complete one outstanding dispatch every other tick.
+        if i % 2 == 0 {
+            if let Some(s) = in_flight.pop() {
+                if let Some(d) = router.complete(s) {
+                    in_flight.push(d.stream);
+                }
+                batches_done += 1;
+            }
+        }
+    }
+    // Drain everything.
+    now += 1e9;
+    while batcher.poll(now).is_some() {}
+    while let Some(s) = in_flight.pop() {
+        if let Some(d) = router.complete(s) {
+            in_flight.push(d.stream);
+        }
+        batches_done += 1;
+    }
+    assert_eq!(batcher.submitted, batcher.dispatched);
+    assert_eq!(router.dispatched, router.completed);
+    assert!(batches_done > 0);
+    assert_eq!(router.backlog_len(), 0);
+}
+
+#[test]
+fn engine_conservation_property() {
+    // DES invariants: every stream records exactly `iters` iterations;
+    // makespan >= each stream's span; totals positive; time monotone.
+    let cfg = Config::mi300a();
+    check(40, 0xE5617E, |g| {
+        let profile = match g.usize_in(0, 2) {
+            0 => ConcurrencyProfile::ace(),
+            1 => ConcurrencyProfile::sparsity(),
+            _ => ConcurrencyProfile::fragmentation(),
+        };
+        let engine = Engine::new(&cfg, profile);
+        let n_streams = g.usize_in(1, 6);
+        let kernels: Vec<KernelDesc> = (0..n_streams)
+            .map(|_| {
+                let n = *g.pick(&[256usize, 512, 1024, 2048]);
+                let p = *g.pick(&[
+                    Precision::Fp8,
+                    Precision::F16,
+                    Precision::F32,
+                ]);
+                KernelDesc::gemm(n, p).with_iters(g.usize_in(1, 12))
+            })
+            .collect();
+        let run = engine.run(&kernels, g.case_seed);
+        if run.streams.len() != kernels.len() {
+            return Err("stream count mismatch".into());
+        }
+        for (k, s) in kernels.iter().zip(&run.streams) {
+            if s.iter_ns.len() != k.iters {
+                return Err(format!(
+                    "{}: {} iters recorded, {} requested",
+                    s.label,
+                    s.iter_ns.len(),
+                    k.iters
+                ));
+            }
+            if s.iter_ns.iter().any(|&t| t <= 0.0 || !t.is_finite()) {
+                return Err(format!("{}: non-positive iteration time", s.label));
+            }
+            if s.end_ns > run.makespan_ns + 1e-6 {
+                return Err("stream ends after makespan".into());
+            }
+        }
+        if !(0.0..=1.0).contains(&run.overlap_efficiency) {
+            return Err(format!("overlap {} out of range", run.overlap_efficiency));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn speedup_property_bounded_by_stream_count() {
+    // Non-pipelined profiles cannot exceed s-fold speedup.
+    let cfg = Config::mi300a();
+    check(20, 0x5beed, |g| {
+        let engine = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let s = g.usize_in(2, 8);
+        let ks = vec![
+            KernelDesc::gemm(512, Precision::F32).with_iters(g.usize_in(3, 20));
+            s
+        ];
+        let sp = engine.speedup(&ks, g.case_seed);
+        // E[bias] = 1, but a favorable draw can push one run slightly
+        // past s; bound with headroom for the stochastic placement bias.
+        if sp > s as f64 * 1.45 {
+            return Err(format!("speedup {sp:.2} far exceeds {s} streams"));
+        }
+        if sp < 0.5 {
+            return Err(format!("speedup {sp:.2} implausibly low"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,68 @@
+//! Integration: the TCP request loop (SIM / PLAN / SPARSITY commands).
+//! RUN is covered by runtime_integration.rs; here we keep the server on
+//! the simulator paths so the test is artifact-independent.
+
+use mi300a_char::config::Config;
+use mi300a_char::serve::serve;
+use mi300a_char::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+#[test]
+fn sim_plan_sparsity_roundtrip() {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = probe.local_addr().unwrap().port();
+    drop(probe);
+    let handle = std::thread::spawn(move || {
+        serve(Config::mi300a(), &format!("127.0.0.1:{port}"), Some(1))
+            .unwrap();
+    });
+
+    // Connect (retry while the listener comes up).
+    let mut conn = None;
+    for _ in 0..200 {
+        match TcpStream::connect(("127.0.0.1", port)) {
+            Ok(c) => {
+                conn = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+        }
+    }
+    let mut conn = conn.expect("server came up");
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ask = |cmd: &str| -> Json {
+        writeln!(conn, "{cmd}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+
+    // SIM: 4-way concurrent FP8 512^3.
+    let sim = ask("SIM 512 fp8 4");
+    let speedup = sim.get("speedup_vs_serial").unwrap().as_f64().unwrap();
+    assert!(speedup > 1.0 && speedup < 4.0, "speedup {speedup}");
+    let fair = sim.get("fairness").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&fair));
+
+    // PLAN: throughput objective.
+    let plan = ask("PLAN throughput 8 512");
+    assert!(plan.get("groups").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(plan.get("sparse"), Some(&Json::Bool(true)));
+
+    // SPARSITY: isolated -> dense; concurrent decision context encoded.
+    let sp = ask("SPARSITY 512 1");
+    assert_eq!(sp.get("enable"), Some(&Json::Bool(false)));
+    let sp4 = ask("SPARSITY 512 4");
+    assert_eq!(sp4.get("enable"), Some(&Json::Bool(true)));
+    let conc = sp4.get("concurrent_speedup").unwrap().as_f64().unwrap();
+    assert!((1.2..1.4).contains(&conc), "~1.3x expected: {conc}");
+
+    // Errors are structured, not fatal.
+    let bad = ask("SIM abc fp8 4");
+    assert!(bad.get("error").is_some());
+
+    writeln!(conn, "QUIT").unwrap();
+    drop(conn);
+    handle.join().unwrap();
+}
