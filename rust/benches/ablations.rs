@@ -19,7 +19,7 @@ use mi300a_char::util::bench::Bencher;
 
 fn main() {
     let cfg = Config::mi300a();
-    let mut b = Bencher::new(1, 3);
+    let mut b = Bencher::from_env(1, 3);
 
     println!("== ablation 1: launch lanes (Fig 4 @4/@8 streams, FP32) ==");
     for lanes in [1usize, 2, 4] {
@@ -102,4 +102,8 @@ fn main() {
     }
 
     println!("\n{}", b.markdown());
+    match b.write_json("ablations", vec![]) {
+        Ok(path) => println!("baseline written: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_ablations.json: {e}"),
+    }
 }

@@ -1,36 +1,46 @@
 //! `cargo bench` — hot-path micro-benchmarks for the §Perf pass
-//! (EXPERIMENTS.md §Perf records before/after):
+//! (PERF.md records before/after; `BENCH_hotpath.json` is the
+//! machine-readable baseline future PRs diff against):
 //!
 //! * DES event loop (events/sec at 8 streams)
 //! * L2 cache simulator (accesses/sec)
 //! * metrics (fairness/overlap over large samples)
 //! * coordinator routing (decisions/sec)
 //! * 2:4 encode/decode throughput
+//! * parallel `repro all` sweep vs serial (wall-clock speedup)
+//!
+//! Smoke mode: `MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench`
+//! (scripts/ci.sh) keeps the targets compiling and running cheaply.
 
 use mi300a_char::config::Config;
 use mi300a_char::coordinator::Router;
+use mi300a_char::experiments;
 use mi300a_char::hw::CacheSim;
 use mi300a_char::isa::Precision;
 use mi300a_char::metrics::{fairness, overlap_efficiency};
 use mi300a_char::sim::{ConcurrencyProfile, Engine, KernelDesc};
 use mi300a_char::sparsity::{compress_2_4, decompress_2_4, prune_2_4};
 use mi300a_char::util::bench::Bencher;
+use mi300a_char::util::json::Json;
+use mi300a_char::util::pool;
 
 fn main() {
     let cfg = Config::mi300a();
-    let mut b = Bencher::new(2, 10);
+    let mut b = Bencher::from_env(2, 10);
+    let mut extra: Vec<(&str, Json)> = Vec::new();
 
-    // DES: 8 streams x 100 iterations (the Fig-4/5 workload).
+    // DES: 8 streams x 100 iterations (the Fig-4/5 workload). The
+    // engine reports its processed event count, so events/sec is exact.
     let engine = Engine::new(&cfg, ConcurrencyProfile::ace());
     let ks8 = vec![KernelDesc::gemm(512, Precision::F32).with_iters(100); 8];
+    let events = engine.run(&ks8, 7).events as f64;
     let r = b.bench("des/8streams_100iters", || {
         Bencher::black_box(engine.run(&ks8, 7).makespan_ns);
     });
-    let events = 8.0 * 100.0 * 2.0;
-    println!(
-        "  -> ~{:.0} events/sec",
-        events / (r.mean_ns / 1e9)
-    );
+    let events_per_sec = events / (r.mean_ns / 1e9);
+    println!("  -> {events:.0} events, ~{events_per_sec:.0} events/sec");
+    extra.push(("des_8streams_events", Json::Num(events)));
+    extra.push(("des_8streams_events_per_sec", Json::Num(events_per_sec)));
 
     // DES: fragmentation pair (Fig 9).
     let pair = vec![
@@ -41,6 +51,31 @@ fn main() {
     b.bench("des/fig9_pair", || {
         Bencher::black_box(engine_frag.run(&pair, 9).makespan_ns);
     });
+
+    // Parallel experiment sweep vs serial (the `repro all` hot path).
+    // run_all(cfg, 1) is truly serial end to end: the pool's worker
+    // budget pins every nested driver fan-out to one thread. Each sweep
+    // runs the full 16-experiment suite, so measure the ratio with few
+    // iterations instead of the micro-bench counts.
+    let workers = pool::default_workers();
+    let (full_warmup, full_iters) = (b.warmup, b.iters);
+    b.warmup = full_warmup.min(1);
+    b.iters = full_iters.min(3);
+    let rs = b.bench("sweep/repro_all_serial", || {
+        Bencher::black_box(experiments::run_all(&cfg, 1).len());
+    });
+    let rp = b.bench("sweep/repro_all_parallel", || {
+        Bencher::black_box(experiments::run_all(&cfg, workers).len());
+    });
+    b.warmup = full_warmup;
+    b.iters = full_iters;
+    let sweep_speedup = rs.mean_ns / rp.mean_ns;
+    println!(
+        "  -> repro all: serial/parallel = {sweep_speedup:.2}x on {workers} \
+         workers"
+    );
+    extra.push(("sweep_workers", Json::Num(workers as f64)));
+    extra.push(("sweep_parallel_speedup", Json::Num(sweep_speedup)));
 
     // L2 cache simulator.
     let mut cache = CacheSim::new(4 * 1024 * 1024, 16);
@@ -96,4 +131,8 @@ fn main() {
     });
 
     println!("\n{}", b.markdown());
+    match b.write_json("hotpath", extra) {
+        Ok(path) => println!("baseline written: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -11,7 +11,7 @@ use mi300a_char::util::bench::Bencher;
 
 fn main() {
     let cfg = Config::mi300a();
-    let mut b = Bencher::new(1, 5);
+    let mut b = Bencher::from_env(1, 5);
     println!("== paper experiment regeneration (one bench per table/figure) ==");
     for id in ALL_IDS {
         b.bench(&format!("repro/{id}"), || {
@@ -20,4 +20,8 @@ fn main() {
         });
     }
     println!("\n{}", b.markdown());
+    match b.write_json("paper_experiments", vec![]) {
+        Ok(path) => println!("baseline written: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_paper_experiments.json: {e}"),
+    }
 }

@@ -9,6 +9,7 @@ use crate::metrics::{fairness, overlap_efficiency, Summary};
 use crate::report::{ascii_plot, Table};
 use crate::sim::{ConcurrencyProfile, Engine, KernelDesc};
 use crate::util::json::Json;
+use crate::util::pool;
 
 const PRECISIONS: [Precision; 3] =
     [Precision::F32, Precision::F16, Precision::Fp8];
@@ -28,23 +29,36 @@ pub fn fig4(cfg: &Config) -> ExperimentReport {
     let mut json_rows = Vec::new();
     let mut series: Vec<(&str, Vec<f64>)> =
         PRECISIONS.iter().map(|p| (p.name(), Vec::new())).collect();
-    for &s in &stream_counts {
+    // Per-stream-count replications are independent and deterministic:
+    // fan out across the pool. One concurrent run per cell — speedup is
+    // derived from it plus the serial makespan, not re-simulated.
+    let cells: Vec<(Vec<f64>, f64)> =
+        pool::scoped_map(&stream_counts, pool::default_workers(), |_, &s| {
+            let mut sps = Vec::with_capacity(PRECISIONS.len());
+            let mut overlap32 = 0.0;
+            for &p in &PRECISIONS {
+                let ks = vec![baseline(p, 100); s];
+                let run = engine.run(&ks, cfg.seed + 40);
+                let sp = engine.serial_makespan_ns(&ks, cfg.seed + 40)
+                    / run.makespan_ns;
+                if p == Precision::F32 {
+                    overlap32 = run.overlap_efficiency;
+                }
+                sps.push(sp);
+            }
+            (sps, overlap32)
+        });
+    for (&s, (sps, overlap32)) in stream_counts.iter().zip(&cells) {
         let mut row = vec![s.to_string()];
         let mut jrow = vec![("streams", Json::Num(s as f64))];
-        let mut overlap32 = 0.0;
         for (pi, &p) in PRECISIONS.iter().enumerate() {
-            let ks = vec![baseline(p, 100); s];
-            let sp = engine.speedup(&ks, cfg.seed + 40);
-            let run = engine.run(&ks, cfg.seed + 40);
-            if p == Precision::F32 {
-                overlap32 = run.overlap_efficiency;
-            }
+            let sp = sps[pi];
             series[pi].1.push(sp);
             row.push(format!("{sp:.2}x"));
             jrow.push((p.name(), Json::Num(sp)));
         }
         row.push(format!("{:.1}%", overlap32 * 100.0));
-        jrow.push(("overlap_fp32", Json::Num(overlap32)));
+        jrow.push(("overlap_fp32", Json::Num(*overlap32)));
         t.row(row);
         json_rows.push(Json::obj(jrow));
     }
@@ -72,8 +86,13 @@ pub fn fig5(cfg: &Config) -> ExperimentReport {
         &["precision", "streams", "overlap", "fairness", "cv"],
     );
     let mut json_a = Vec::new();
-    for &s in &[4usize, 8] {
-        for &p in &PRECISIONS {
+    // (stream count x precision) cells are independent runs: fan out.
+    let combos: Vec<(usize, Precision)> = [4usize, 8]
+        .iter()
+        .flat_map(|&s| PRECISIONS.iter().map(move |&p| (s, p)))
+        .collect();
+    let cells_a: Vec<(f64, f64, f64, f64)> =
+        pool::scoped_map(&combos, pool::default_workers(), |_, &(s, p)| {
             let run = engine.run(&vec![baseline(p, 100); s], cfg.seed + 50);
             let totals = run.per_stream_totals();
             let f = fairness(&totals);
@@ -85,22 +104,24 @@ pub fn fig5(cfg: &Config) -> ExperimentReport {
                 .collect();
             let ov = overlap_efficiency(&intervals)
                 .max(run.overlap_efficiency);
-            ta.row(vec![
-                p.name().into(),
-                s.to_string(),
-                format!("{:.1}%", run.overlap_efficiency * 100.0),
-                format!("{f:.3}"),
-                format!("{cv:.2}"),
-            ]);
-            json_a.push(Json::obj(vec![
-                ("precision", Json::Str(p.name().into())),
-                ("streams", Json::Num(s as f64)),
-                ("overlap", Json::Num(run.overlap_efficiency)),
-                ("overlap_interval", Json::Num(ov)),
-                ("fairness", Json::Num(f)),
-                ("cv", Json::Num(cv)),
-            ]));
-        }
+            (run.overlap_efficiency, ov, f, cv)
+        });
+    for (&(s, p), &(overlap, ov, f, cv)) in combos.iter().zip(&cells_a) {
+        ta.row(vec![
+            p.name().into(),
+            s.to_string(),
+            format!("{:.1}%", overlap * 100.0),
+            format!("{f:.3}"),
+            format!("{cv:.2}"),
+        ]);
+        json_a.push(Json::obj(vec![
+            ("precision", Json::Str(p.name().into())),
+            ("streams", Json::Num(s as f64)),
+            ("overlap", Json::Num(overlap)),
+            ("overlap_interval", Json::Num(ov)),
+            ("fairness", Json::Num(f)),
+            ("cv", Json::Num(cv)),
+        ]));
     }
 
     let mut tb = Table::new(
@@ -108,23 +129,31 @@ pub fn fig5(cfg: &Config) -> ExperimentReport {
         &["level", "overlap", "speedup", "fairness"],
     );
     let mut json_b = Vec::new();
-    let mut sweep_engine =
-        Engine::new(cfg, ConcurrencyProfile::contention_sweep());
-    for level in 0..=5 {
-        sweep_engine.contention_level = level as f64;
-        let ks = vec![baseline(Precision::F32, 100); 4];
-        let run = sweep_engine.run(&ks, cfg.seed + 51);
-        let sp = sweep_engine.speedup(&ks, cfg.seed + 51);
-        let f = fairness(&run.per_stream_totals());
+    // Contention levels are independent sweeps: one engine per level
+    // (contention_level is per-engine state), fanned out.
+    let levels: [f64; 6] = [0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+    let cells_b: Vec<(f64, f64, f64)> =
+        pool::scoped_map(&levels, pool::default_workers(), |_, &level| {
+            let mut sweep =
+                Engine::new(cfg, ConcurrencyProfile::contention_sweep());
+            sweep.contention_level = level;
+            let ks = vec![baseline(Precision::F32, 100); 4];
+            let run = sweep.run(&ks, cfg.seed + 51);
+            let sp = sweep.serial_makespan_ns(&ks, cfg.seed + 51)
+                / run.makespan_ns;
+            let f = fairness(&run.per_stream_totals());
+            (run.overlap_efficiency, sp, f)
+        });
+    for (level, &(overlap, sp, f)) in (0..=5).zip(&cells_b) {
         tb.row(vec![
             level.to_string(),
-            format!("{:.1}%", run.overlap_efficiency * 100.0),
+            format!("{:.1}%", overlap * 100.0),
             format!("{sp:.2}x"),
             format!("{f:.3}"),
         ]);
         json_b.push(Json::obj(vec![
             ("level", Json::Num(level as f64)),
-            ("overlap", Json::Num(run.overlap_efficiency)),
+            ("overlap", Json::Num(overlap)),
             ("speedup", Json::Num(sp)),
             ("fairness", Json::Num(f)),
         ]));
@@ -246,17 +275,21 @@ pub fn fig8(cfg: &Config) -> ExperimentReport {
         &["streams", "p50 (ms)", "p95 (ms)", "max (ms)", "max/p50"],
     );
     let mut json_rows = Vec::new();
-    for &s in &[1usize, 2, 4] {
-        let run = engine.run(
-            &vec![baseline(Precision::F32, 100); s],
-            cfg.seed + 80,
-        );
-        let all: Vec<f64> = run
-            .streams
-            .iter()
-            .flat_map(|st| st.iter_ns.iter().cloned())
-            .collect();
-        let sm = Summary::of(&all);
+    let counts = [1usize, 2, 4];
+    let summaries: Vec<Summary> =
+        pool::scoped_map(&counts, pool::default_workers(), |_, &s| {
+            let run = engine.run(
+                &vec![baseline(Precision::F32, 100); s],
+                cfg.seed + 80,
+            );
+            let all: Vec<f64> = run
+                .streams
+                .iter()
+                .flat_map(|st| st.iter_ns.iter().cloned())
+                .collect();
+            Summary::of(&all)
+        });
+    for (&s, sm) in counts.iter().zip(&summaries) {
         t.row(vec![
             s.to_string(),
             format!("{:.3}", sm.p50 / 1e6),
@@ -299,25 +332,29 @@ pub fn fig9(cfg: &Config) -> ExperimentReport {
         &["ratio", "large speedup", "small speedup", "fairness"],
     );
     let mut json_rows = Vec::new();
-    for (name, big_n, small_n) in pairs {
-        // The §6.3 harness is launch-dominated (fragmentation profile),
-        // so equal iteration counts already co-execute the whole window.
-        let big = KernelDesc::gemm(big_n, Precision::F32).with_iters(30);
-        let small = KernelDesc::gemm(small_n, Precision::F32).with_iters(30);
-        let solo_big =
-            engine.run_solo(&big, cfg.seed + 90).streams[0].total_ns();
-        let solo_small =
-            engine.run_solo(&small, cfg.seed + 91).streams[0].total_ns();
-        let pair = engine.run(
-            &[big.clone(), small.clone()],
-            cfg.seed + 92,
-        );
-        let sp_big = solo_big / pair.streams[0].total_ns();
-        let sp_small = solo_small / pair.streams[1].total_ns();
-        // §6.3 fairness: §4.2 formula on raw per-stream times — the
-        // launch-dominated regime plus proportional allocation keeps
-        // them balanced despite the size gap (paper: 0.93-0.99).
-        let f = fairness(&pair.per_stream_totals());
+    // Each occupancy-ratio pair is an independent trio of runs: fan out.
+    let cells: Vec<(f64, f64, f64)> =
+        pool::scoped_map(&pairs, pool::default_workers(), |_, &(_, big_n, small_n)| {
+            // The §6.3 harness is launch-dominated (fragmentation
+            // profile), so equal iteration counts already co-execute
+            // the whole window.
+            let big = KernelDesc::gemm(big_n, Precision::F32).with_iters(30);
+            let small =
+                KernelDesc::gemm(small_n, Precision::F32).with_iters(30);
+            let solo_big =
+                engine.run_solo(&big, cfg.seed + 90).streams[0].total_ns();
+            let solo_small =
+                engine.run_solo(&small, cfg.seed + 91).streams[0].total_ns();
+            let pair = engine.run(&[big, small], cfg.seed + 92);
+            let sp_big = solo_big / pair.streams[0].total_ns();
+            let sp_small = solo_small / pair.streams[1].total_ns();
+            // §6.3 fairness: §4.2 formula on raw per-stream times — the
+            // launch-dominated regime plus proportional allocation keeps
+            // them balanced despite the size gap (paper: 0.93-0.99).
+            let f = fairness(&pair.per_stream_totals());
+            (sp_big, sp_small, f)
+        });
+    for (&(name, _, _), &(sp_big, sp_small, f)) in pairs.iter().zip(&cells) {
         t.row(vec![
             name.into(),
             format!("{sp_big:.2}x"),

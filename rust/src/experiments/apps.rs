@@ -7,6 +7,7 @@ use crate::metrics::Summary;
 use crate::report::{ascii_plot, Table};
 use crate::sim::{ConcurrencyProfile, CostModel, Engine, KernelDesc};
 use crate::util::json::Json;
+use crate::util::pool;
 use crate::workload::{MixedChain, TransformerWorkload};
 
 /// Fig 14: transformer-style FP8 GEMM throughput (normalized to best)
@@ -18,16 +19,14 @@ pub fn fig14(cfg: &Config) -> ExperimentReport {
     // with the dimension (occupancy climbs toward the Fig-2 knee), and
     // past ~2048 the working set blows L2 and the realized rate
     // collapses — producing the paper's peak at moderate dimensions.
-    let gflops: Vec<f64> = dims
-        .iter()
-        .map(|&n| {
+    let gflops: Vec<f64> =
+        pool::scoped_map(&dims, pool::default_workers(), |_, &n| {
             let waves = ((n + 127) / 128).pow(2);
             let compute = micro.throughput_gflops(Precision::Fp8, waves);
             let ws = KernelDesc::gemm(n, Precision::Fp8).working_set();
             let over = (ws / cfg.l2_bytes() - 1.0).max(0.0);
             compute / (1.0 + 4.0 * over)
-        })
-        .collect();
+        });
     let best = gflops.iter().cloned().fold(0.0, f64::max);
     let normalized: Vec<f64> = gflops.iter().map(|g| g / best).collect();
 
@@ -94,12 +93,18 @@ pub fn fig15(cfg: &Config) -> ExperimentReport {
         .unwrap()
         .with_iters(50);
 
-    let solo = engine.run_solo(&dominant, cfg.seed + 150);
-    let duo = engine.run(&vec![dominant.clone(); 2], cfg.seed + 150);
+    // Solo and duo runs are independent: run them concurrently, then
+    // derive the speedup from the same duo run (no re-simulation).
+    let duo_set = vec![dominant.clone(); 2];
+    let (solo, duo) = pool::join(
+        || engine.run_solo(&dominant, cfg.seed + 150),
+        || engine.run(&duo_set, cfg.seed + 150),
+    );
     let flops = vec![dominant.flops(); 2];
     let agg_solo = solo.aggregate_gflops(&flops[..1]);
     let agg_duo = duo.aggregate_gflops(&flops);
-    let speedup = engine.speedup(&vec![dominant.clone(); 2], cfg.seed + 150);
+    let speedup = engine.serial_makespan_ns(&duo_set, cfg.seed + 150)
+        / duo.makespan_ns;
 
     let mut t = Table::new(
         "Fig 15 — two concurrent FP8 workloads",

@@ -6,6 +6,7 @@ use crate::isa::{Precision, OPCODES};
 use crate::report::{ascii_plot, Table};
 use crate::sim::MicrobenchModel;
 use crate::util::json::Json;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 /// Table 1: system configuration (documented; ours is the simulated
@@ -88,9 +89,9 @@ pub fn fig2(cfg: &Config) -> ExperimentReport {
     );
     let mut series: Vec<(&str, Vec<f64>)> = Vec::new();
     let mut json_rows = Vec::new();
-    let sweeps: Vec<(Precision, Vec<f64>)> = Precision::SWEEP
-        .iter()
-        .map(|&p| {
+    // One occupancy sweep per precision, fanned out across the pool.
+    let sweeps: Vec<(Precision, Vec<f64>)> =
+        pool::scoped_map(&Precision::SWEEP, pool::default_workers(), |_, &p| {
             (
                 p,
                 m.occupancy_sweep(p, &counts)
@@ -98,8 +99,7 @@ pub fn fig2(cfg: &Config) -> ExperimentReport {
                     .map(|pt| pt.normalized)
                     .collect(),
             )
-        })
-        .collect();
+        });
     for (i, &w) in counts.iter().enumerate() {
         let mut row = vec![w.to_string()];
         let mut jrow = vec![("waves", Json::Num(w as f64))];
@@ -147,9 +147,9 @@ pub fn fig3(cfg: &Config) -> ExperimentReport {
     );
     let mut series = Vec::new();
     let mut json_rows = Vec::new();
-    let sweeps: Vec<(Precision, Vec<f64>)> = Precision::SWEEP
-        .iter()
-        .map(|&p| {
+    // One aspect-ratio sweep per precision, fanned out across the pool.
+    let sweeps: Vec<(Precision, Vec<f64>)> =
+        pool::scoped_map(&Precision::SWEEP, pool::default_workers(), |_, &p| {
             (
                 p,
                 aspects
@@ -157,8 +157,7 @@ pub fn fig3(cfg: &Config) -> ExperimentReport {
                     .map(|&a| m.shape_throughput(p, a, blocks))
                     .collect(),
             )
-        })
-        .collect();
+        });
     for (i, &a) in aspects.iter().enumerate() {
         let mut row = vec![format!("{a}")];
         let mut jrow = vec![("aspect", Json::Num(a))];

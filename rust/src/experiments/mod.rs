@@ -53,6 +53,17 @@ pub const ALL_IDS: &[&str] = &[
     "fig15", "fig16",
 ];
 
+/// Run every experiment with up to `workers` driver threads, returning
+/// reports in `ALL_IDS` order. Each driver is seed-deterministic and
+/// independent, and `pool::scoped_map` merges results in item order, so
+/// the output is byte-identical to the serial path for any worker count
+/// (enforced by `tests/parallel_determinism.rs`).
+pub fn run_all(cfg: &Config, workers: usize) -> Vec<ExperimentReport> {
+    crate::util::pool::scoped_map(ALL_IDS, workers, |_, id| {
+        run(id, cfg).expect("ALL_IDS entries are known ids")
+    })
+}
+
 /// Run one experiment by id.
 pub fn run(id: &str, cfg: &Config) -> Option<ExperimentReport> {
     match id {
@@ -99,6 +110,16 @@ mod tests {
     #[test]
     fn unknown_id_is_none() {
         assert!(run("fig99", &Config::mi300a()).is_none());
+    }
+
+    #[test]
+    fn run_all_covers_every_id_in_order() {
+        let cfg = Config::mi300a();
+        let reports = run_all(&cfg, 4);
+        assert_eq!(reports.len(), ALL_IDS.len());
+        for (r, id) in reports.iter().zip(ALL_IDS) {
+            assert_eq!(&r.id, id);
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::report::{ascii_plot, Table};
 use crate::sim::{ConcurrencyProfile, CostModel, Engine, KernelDesc, SparsityMode};
 use crate::sparsity::{OverheadModel, SpeedupModel};
 use crate::util::json::Json;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 const SIZES: [usize; 4] = [256, 512, 2048, 8192];
@@ -20,7 +21,6 @@ const PATTERNS: [SparsityMode; 3] = [
 /// Fig 10: sparsity encoding overhead vs matrix size (constant).
 pub fn fig10(cfg: &Config) -> ExperimentReport {
     let model = OverheadModel::new(cfg);
-    let mut rng = Rng::new(cfg.seed ^ 0xf16_10);
     let mut t = Table::new(
         "Fig 10 — sparsity encoding overhead vs matrix size (µs)",
         &["size", "LHS-only", "RHS-only", "both-side"],
@@ -31,15 +31,31 @@ pub fn fig10(cfg: &Config) -> ExperimentReport {
         ("RHS", Vec::new()),
         ("both", Vec::new()),
     ];
-    for &n in &SIZES {
+    // Per-size replication sets are independent; each derives its own
+    // RNG stream from (seed, size index), so the fan-out stays
+    // byte-identical for any worker count.
+    let cells: Vec<Vec<f64>> =
+        pool::scoped_map(&SIZES, pool::default_workers(), |si, &n| {
+            let mut rng = Rng::new(
+                cfg.seed ^ 0xf16_10 ^ ((si as u64 + 1) * 0x9E37_79B9),
+            );
+            PATTERNS
+                .iter()
+                .map(|&mode| {
+                    // Stable average over repeated samples (paper: 50
+                    // runs).
+                    (0..50)
+                        .map(|_| model.sample_ns(mode, n, &mut rng) / 1e3)
+                        .sum::<f64>()
+                        / 50.0
+                })
+                .collect()
+        });
+    for (&n, us_row) in SIZES.iter().zip(&cells) {
         let mut row = vec![format!("{n}^3")];
         let mut jrow = vec![("size", Json::Num(n as f64))];
         for (i, &mode) in PATTERNS.iter().enumerate() {
-            // Stable average over repeated samples (paper: 50 runs).
-            let us: f64 = (0..50)
-                .map(|_| model.sample_ns(mode, n, &mut rng) / 1e3)
-                .sum::<f64>()
-                / 50.0;
+            let us = us_row[i];
             row.push(format!("{us:.2}"));
             jrow.push((mode.name(), Json::Num(us)));
             series[i].1.push(us);
@@ -185,51 +201,65 @@ pub fn fig13(cfg: &Config) -> ExperimentReport {
         &["streams", "dense", "sparse", "mixed"],
     );
     let mut json_rows = Vec::new();
-    for &s in &[1usize, 2, 4] {
-        let dense_set = vec![dense_k.clone(); s];
-        let sparse_set = vec![sparse_k.clone(); s];
-        let mixed_set: Vec<KernelDesc> = (0..s)
-            .map(|i| if i % 2 == 0 { sparse_k.clone() } else { dense_k.clone() })
-            .collect();
-
-        let runs = [
-            ("dense", &dense_set),
-            ("sparse", &sparse_set),
-            ("mixed", &mixed_set),
-        ];
+    // Per-stream-count replication cells (the paper's repeated-run
+    // protocol) are independent and seed-derived: fan out across the
+    // pool.
+    let counts = [1usize, 2, 4];
+    let cells: Vec<Vec<(&'static str, f64, f64)>> =
+        pool::scoped_map(&counts, pool::default_workers(), |_, &s| {
+            let dense_set = vec![dense_k.clone(); s];
+            let sparse_set = vec![sparse_k.clone(); s];
+            let mixed_set: Vec<KernelDesc> = (0..s)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        sparse_k.clone()
+                    } else {
+                        dense_k.clone()
+                    }
+                })
+                .collect();
+            let runs = [
+                ("dense", &dense_set),
+                ("sparse", &sparse_set),
+                ("mixed", &mixed_set),
+            ];
+            runs.iter()
+                .map(|&(name, set)| {
+                    // Fairness is a stable average over repeated runs
+                    // (the paper's 50-run protocol); throughput from
+                    // the first run.
+                    let reps = 12u64;
+                    let f = if s == 1 {
+                        1.0
+                    } else {
+                        (0..reps)
+                            .map(|r| {
+                                fairness_minmax(
+                                    &engine
+                                        .run(set, cfg.seed + 130 + r * 7)
+                                        .per_stream_totals(),
+                                )
+                            })
+                            .sum::<f64>()
+                            / reps as f64
+                    };
+                    let run = engine.run(set, cfg.seed + 130);
+                    // Dense-equivalent FLOPs per iteration per stream.
+                    let flops: Vec<f64> = vec![dense_k.flops(); s];
+                    let gflops = run.aggregate_gflops(&flops);
+                    (name, f, gflops)
+                })
+                .collect()
+        });
+    for (&s, cell) in counts.iter().zip(&cells) {
         let mut fa = vec![s.to_string()];
         let mut fb = vec![s.to_string()];
         let mut jrow = vec![("streams", Json::Num(s as f64))];
-        for (name, set) in &runs {
-            // Fairness is a stable average over repeated runs (the
-            // paper's 50-run protocol); throughput from the first run.
-            let reps = 12u64;
-            let f = if s == 1 {
-                1.0
-            } else {
-                (0..reps)
-                    .map(|r| {
-                        fairness_minmax(
-                            &engine
-                                .run(set, cfg.seed + 130 + r * 7)
-                                .per_stream_totals(),
-                        )
-                    })
-                    .sum::<f64>()
-                    / reps as f64
-            };
-            let run = engine.run(set, cfg.seed + 130);
-            // Dense-equivalent FLOPs per iteration for each stream.
-            let flops: Vec<f64> = match *name {
-                "dense" => vec![dense_k.flops(); s],
-                "sparse" => vec![dense_k.flops(); s],
-                _ => (0..s).map(|_| dense_k.flops()).collect(),
-            };
-            let gflops = run.aggregate_gflops(&flops);
+        for &(name, f, gflops) in cell {
             fa.push(format!("{f:.2}"));
             fb.push(format!("{gflops:.1}"));
             jrow.push((
-                *name,
+                name,
                 Json::obj(vec![
                     ("fairness", Json::Num(f)),
                     ("gflops", Json::Num(gflops)),

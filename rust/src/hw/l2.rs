@@ -97,8 +97,10 @@ impl CacheSim {
 /// Analytic L2 miss-ratio model anchored on Fig 6.
 #[derive(Debug, Clone)]
 pub struct L2Model {
-    /// Anchor points: (working-set bytes, isolated miss ratio).
-    anchors: [(f64, f64); 3],
+    /// Anchor points in log-log space: (ln working-set bytes, ln miss
+    /// ratio). Precomputed at construction — `isolated_miss` sits on
+    /// the DES rate path and must not allocate or re-take logs.
+    ln_anchors: [(f64, f64); 3],
     /// Relative miss growth per added concurrent stream.
     stream_slope: f64,
     /// Total L2 bytes (for the capacity asymptote).
@@ -112,12 +114,13 @@ pub fn gemm_working_set(n: usize, elem_bytes: usize) -> f64 {
 
 impl L2Model {
     pub fn new(cfg: &crate::config::Config) -> L2Model {
+        let anchors = [
+            (gemm_working_set(256, 4), cfg.calib.l2_miss_thin),
+            (gemm_working_set(512, 4), cfg.calib.l2_miss_medium),
+            (gemm_working_set(2048, 4), cfg.calib.l2_miss_thick),
+        ];
         L2Model {
-            anchors: [
-                (gemm_working_set(256, 4), cfg.calib.l2_miss_thin),
-                (gemm_working_set(512, 4), cfg.calib.l2_miss_medium),
-                (gemm_working_set(2048, 4), cfg.calib.l2_miss_thick),
-            ],
+            ln_anchors: anchors.map(|(w, m)| (w.ln(), m.ln())),
             stream_slope: cfg.calib.l2_miss_stream_slope,
             l2_bytes: cfg.l2_bytes(),
         }
@@ -125,13 +128,10 @@ impl L2Model {
 
     /// Isolated (single-stream) miss ratio for a working set, log-log
     /// interpolated through the paper's anchors and clamped to [0.01, 0.95].
+    /// Allocation-free: the DES evaluates this on its rate path.
     pub fn isolated_miss(&self, working_set_bytes: f64) -> f64 {
         let ws = working_set_bytes.max(1.0).ln();
-        let pts: Vec<(f64, f64)> = self
-            .anchors
-            .iter()
-            .map(|(w, m)| (w.ln(), m.ln()))
-            .collect();
+        let pts = &self.ln_anchors;
         let y = if ws <= pts[0].0 {
             interp(pts[0], pts[1], ws)
         } else if ws >= pts[2].0 {

@@ -14,13 +14,14 @@ use mi300a_char::isa::Precision;
 use mi300a_char::runtime::{Executor, Manifest};
 use mi300a_char::sim::KernelDesc;
 use mi300a_char::util::cli::Args;
+use mi300a_char::util::pool;
 
 const USAGE: &str = "\
 mi300a-char — execution-centric MI300A characterization (simulated substrate)
 
 USAGE:
   mi300a-char repro <id|all> [--seed N] [--set section.field=value]
-                             [--json] [--out-dir DIR]
+                             [--json] [--out-dir DIR] [--threads N]
   mi300a-char run <entry> [--artifacts DIR]
   mi300a-char plan [--objective latency|throughput|isolation]
                    [--streams N] [--size N] [--precision P]
@@ -53,41 +54,46 @@ fn build_config(args: &Args) -> Config {
 fn cmd_repro(args: &Args) -> i32 {
     let cfg = build_config(args);
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
-    let ids: Vec<&str> = if which == "all" {
-        experiments::ALL_IDS.to_vec()
-    } else {
-        vec![which]
-    };
     let out_dir = args.get("out-dir").map(std::path::PathBuf::from);
     if let Some(d) = &out_dir {
         let _ = std::fs::create_dir_all(d);
     }
-    for id in ids {
-        match experiments::run(id, &cfg) {
-            Some(report) => {
-                if args.flag("json") {
-                    println!("{}", report.json.to_string_pretty());
-                } else {
-                    println!("{}", report.render());
-                }
-                if let Some(d) = &out_dir {
-                    let _ = std::fs::write(
-                        d.join(format!("{id}.json")),
-                        report.json.to_string_pretty(),
-                    );
-                    let _ = std::fs::write(
-                        d.join(format!("{id}.txt")),
-                        report.render(),
-                    );
-                }
-            }
-            None => {
-                eprintln!("unknown experiment id {id:?}");
-                return 2;
-            }
+    let emit = |id: &str, report: &experiments::ExperimentReport| {
+        if args.flag("json") {
+            println!("{}", report.json.to_string_pretty());
+        } else {
+            println!("{}", report.render());
+        }
+        if let Some(d) = &out_dir {
+            let _ = std::fs::write(
+                d.join(format!("{id}.json")),
+                report.json.to_string_pretty(),
+            );
+            let _ = std::fs::write(
+                d.join(format!("{id}.txt")),
+                report.render(),
+            );
+        }
+    };
+    if which == "all" {
+        // Drivers fan out across the pool; reports print in paper order
+        // and are byte-identical to a serial run (--threads 1).
+        let workers = args.get_usize("threads", pool::default_workers());
+        for report in experiments::run_all(&cfg, workers) {
+            emit(report.id, &report);
+        }
+        return 0;
+    }
+    match experiments::run(which, &cfg) {
+        Some(report) => {
+            emit(which, &report);
+            0
+        }
+        None => {
+            eprintln!("unknown experiment id {which:?}");
+            2
         }
     }
-    0
 }
 
 fn cmd_run(args: &Args) -> i32 {

@@ -1,0 +1,118 @@
+//! Offline stub for the PJRT executor (default build, `pjrt` feature
+//! disabled).
+//!
+//! The real executor (`executor.rs`) links against the external `xla`
+//! PJRT bindings, which are only available on machines with the vendored
+//! toolchain. This stub keeps the exact API surface — `Executor`,
+//! `LoadedEntry`, `Input` — so every caller (serve loop, CLI, examples,
+//! integration tests) compiles unchanged; any attempt to actually
+//! execute an artifact returns a structured error instead.
+//!
+//! The manifest still loads for real, so `mi300a-char list` and entry
+//! introspection work without the feature.
+
+use super::manifest::{EntrySpec, Manifest};
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real executor's `anyhow::Error` surface:
+/// `Display`, `Debug`, and `std::error::Error`.
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn unavailable(what: &str) -> RuntimeError {
+    RuntimeError(format!(
+        "PJRT runtime unavailable for {what:?}: this binary was built \
+         without the `pjrt` feature (rebuild with --features pjrt on a \
+         machine with the xla toolchain)"
+    ))
+}
+
+/// Typed input for execution (mirrors the real executor).
+pub enum Input {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// One "compiled" entry. Never actually constructed by the stub, but
+/// the type must exist for callers that name it.
+pub struct LoadedEntry {
+    pub spec: EntrySpec,
+}
+
+impl LoadedEntry {
+    pub fn run(&self, _inputs: &[Input]) -> Result<Vec<f32>> {
+        Err(unavailable(&self.spec.name))
+    }
+}
+
+/// The stub executor: loads the manifest for real, refuses to execute.
+pub struct Executor {
+    pub manifest: Manifest,
+}
+
+impl Executor {
+    /// Create from an artifacts directory (parses the manifest; no
+    /// compilation happens in the stub).
+    pub fn new(artifacts_dir: &Path) -> Result<Executor> {
+        let manifest = Manifest::load(artifacts_dir)
+            .map_err(|e| RuntimeError(format!("manifest: {e}")))?;
+        Ok(Executor { manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (pjrt feature disabled)".to_string()
+    }
+
+    /// Always errors: compilation needs the PJRT client.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedEntry> {
+        Err(unavailable(name))
+    }
+
+    /// Always errors: execution needs the PJRT client.
+    pub fn run_f32(
+        &mut self,
+        name: &str,
+        _inputs: &[Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        Err(unavailable(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_refuses_execution_with_clear_error() {
+        let dir = std::env::temp_dir().join("mi300a_stub_exec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","entries":[]}"#,
+        )
+        .unwrap();
+        let mut exec = Executor::new(&dir).unwrap();
+        assert!(exec.platform().contains("stub"));
+        let err = exec.run_f32("gemm_fp8_128", &[]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn stub_surfaces_manifest_errors() {
+        let dir = std::env::temp_dir().join("mi300a_stub_missing_manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Executor::new(&dir).is_err());
+    }
+}

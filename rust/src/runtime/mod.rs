@@ -7,6 +7,15 @@
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 pub mod manifest;
+
+/// Real PJRT executor: requires the external `xla` bindings.
+#[cfg(feature = "pjrt")]
+pub mod executor;
+
+/// Std-only stub keeping the same API surface (default build; see
+/// `executor_stub.rs` and the `pjrt` feature in Cargo.toml).
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 
 pub use executor::{Executor, Input, LoadedEntry};

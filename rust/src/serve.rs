@@ -1,4 +1,4 @@
-//! `mi300a-char serve` — a thin request loop (L3 leader process).
+//! `mi300a-char serve` — the request loop (L3 leader process).
 //!
 //! Line protocol over TCP, one request per line, JSON response per
 //! line. The loop composes the coordinator's policies with either the
@@ -12,10 +12,18 @@
 //! QUIT
 //! ```
 //!
-//! The server is single-threaded by design: requests serialize through
-//! the leader exactly like launches serialize through an ACE lane, and
-//! the PJRT executor is not Sync. Throughput-oriented deployments run
-//! one process per tenant (the paper's §9.2 isolation guidance).
+//! ## Concurrency
+//!
+//! The server runs one thread per connection over a shared
+//! `Arc<Config>`: `SIM`/`PLAN`/`SPARSITY` requests are pure functions of
+//! the (immutable) config and scale across cores, the way the paper's
+//! ACE scales independent streams. The one non-`Sync` resource — the
+//! PJRT executor — is isolated on a single worker thread behind an mpsc
+//! channel, so `RUN` requests serialize through it (exactly like
+//! launches serialize through a command lane) without blocking the
+//! simulator paths. Responses are deterministic per request for a fixed
+//! config/seed, so concurrent clients observe byte-identical answers to
+//! a single client (enforced by tests/serve_integration.rs).
 
 use crate::config::Config;
 use crate::coordinator::{decide_sparsity, Coordinator, Objective};
@@ -27,20 +35,62 @@ use crate::sparsity::SpeedupModel;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+/// A request for the executor worker: run `entry`, reply on `reply`.
+struct ExecRequest {
+    entry: String,
+    reply: mpsc::Sender<Result<Json, String>>,
+}
+
+/// Handle connection threads use to reach the executor worker. Cloned
+/// per connection (mpsc senders are Send + Clone; the executor itself
+/// never leaves its worker thread).
+type ExecHandle = mpsc::Sender<ExecRequest>;
+
+/// The executor worker: owns the (lazily created) PJRT executor for the
+/// whole server lifetime and services RUN requests one at a time. Exits
+/// when every handle is dropped.
+fn exec_worker(rx: mpsc::Receiver<ExecRequest>) {
+    let mut exec: Option<Executor> = None;
+    while let Ok(req) = rx.recv() {
+        let result = cmd_run(&mut exec, &req.entry);
+        // A dropped reply sender just means the client went away.
+        let _ = req.reply.send(result);
+    }
+}
 
 /// Serve on `addr` (e.g. "127.0.0.1:0"); returns after `max_conns`
-/// connections (None = forever). Prints the bound address on stdout so
-/// callers/tests can discover the ephemeral port.
-pub fn serve(cfg: Config, addr: &str, max_conns: Option<usize>) -> std::io::Result<()> {
+/// connections have been accepted and fully served (None = forever).
+/// Prints the bound address on stdout so callers/tests can discover the
+/// ephemeral port.
+pub fn serve(
+    cfg: Config,
+    addr: &str,
+    max_conns: Option<usize>,
+) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     println!("serving on {}", listener.local_addr()?);
-    let mut exec: Option<Executor> = None;
+    let cfg = Arc::new(cfg);
+    let (exec_tx, exec_rx) = mpsc::channel::<ExecRequest>();
+    let worker = thread::spawn(move || exec_worker(exec_rx));
+
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
     let mut served = 0usize;
     for conn in listener.incoming() {
         let stream = conn?;
-        if let Err(e) = handle(&cfg, stream, &mut exec) {
-            eprintln!("connection error: {e}");
-        }
+        let cfg = Arc::clone(&cfg);
+        let exec = exec_tx.clone();
+        conns.push(thread::spawn(move || {
+            if let Err(e) = handle(&cfg, stream, &exec) {
+                eprintln!("connection error: {e}");
+            }
+        }));
+        // Reap finished connection threads so a long-lived server does
+        // not accumulate handles.
+        conns.retain(|h| !h.is_finished());
         served += 1;
         if let Some(max) = max_conns {
             if served >= max {
@@ -48,6 +98,13 @@ pub fn serve(cfg: Config, addr: &str, max_conns: Option<usize>) -> std::io::Resu
             }
         }
     }
+    for h in conns {
+        let _ = h.join();
+    }
+    // All connection-held handles are gone; dropping ours shuts the
+    // executor worker down.
+    drop(exec_tx);
+    let _ = worker.join();
     Ok(())
 }
 
@@ -62,7 +119,7 @@ fn err_json(msg: &str) -> Json {
 fn handle(
     cfg: &Config,
     stream: TcpStream,
-    exec: &mut Option<Executor>,
+    exec: &ExecHandle,
 ) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -87,7 +144,8 @@ fn handle(
                 respond(&mut writer, reply)?;
             }
             ["RUN", entry] => {
-                let reply = cmd_run(exec, entry).unwrap_or_else(|e| err_json(&e));
+                let reply =
+                    cmd_run_remote(exec, entry).unwrap_or_else(|e| err_json(&e));
                 respond(&mut writer, reply)?;
             }
             [] => {}
@@ -107,8 +165,11 @@ fn cmd_sim(cfg: &Config, n: &str, prec: &str, streams: &str) -> Result<Json, Str
     let p = Precision::parse(prec).ok_or_else(|| format!("bad precision {prec:?}"))?;
     let engine = Engine::new(cfg, ConcurrencyProfile::ace());
     let ks = vec![KernelDesc::gemm(n, p).with_iters(50); streams];
+    // One concurrent simulation per request: the speedup derives from
+    // this run plus the (much cheaper) serial solo makespans instead of
+    // re-simulating the concurrent set.
     let run = engine.run(&ks, cfg.seed);
-    let speedup = engine.speedup(&ks, cfg.seed);
+    let speedup = engine.serial_makespan_ns(&ks, cfg.seed) / run.makespan_ns;
     Ok(Json::obj(vec![
         ("makespan_ms", Json::Num(run.makespan_ns / 1e6)),
         ("speedup_vs_serial", Json::Num(speedup)),
@@ -180,6 +241,17 @@ fn cmd_sparsity(cfg: &Config, n: &str, streams: &str) -> Result<Json, String> {
     ]))
 }
 
+/// Connection-side RUN: forwards to the executor worker and waits for
+/// its reply (requests queue in arrival order on the channel).
+fn cmd_run_remote(exec: &ExecHandle, entry: &str) -> Result<Json, String> {
+    let (tx, rx) = mpsc::channel();
+    exec.send(ExecRequest { entry: entry.to_string(), reply: tx })
+        .map_err(|_| "executor worker unavailable".to_string())?;
+    rx.recv().map_err(|_| "executor worker dropped".to_string())?
+}
+
+/// Worker-side RUN: lazily creates the executor, then executes with the
+/// deterministic input pattern the golden tests use.
 fn cmd_run(exec: &mut Option<Executor>, entry: &str) -> Result<Json, String> {
     if exec.is_none() {
         *exec = Some(

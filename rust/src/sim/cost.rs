@@ -27,6 +27,18 @@ impl<'a> CostModel<'a> {
         }
     }
 
+    /// The L2 model this cost model was built with. The DES borrows it
+    /// so one run constructs the (anchor-interpolating) model exactly
+    /// once instead of once per event (§Perf).
+    pub fn l2(&self) -> &L2Model {
+        &self.l2
+    }
+
+    /// The HBM model this cost model was built with.
+    pub fn hbm(&self) -> &HbmModel {
+        &self.hbm
+    }
+
     /// Effective compute throughput (GFLOPS) of this kernel running
     /// alone: the occupancy model at the kernel's wavefront count, with
     /// the sparse pipeline efficiency applied to sparse kernels.

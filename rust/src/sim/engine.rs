@@ -17,6 +17,17 @@
 //! contention-scaled sigma) models which CUs/L2 partitions a stream
 //! lands on; it drives the cross-stream CV and the fairness collapse at
 //! eight streams (Fig 5a) without biasing aggregate throughput.
+//!
+//! ## Hot path (§Perf)
+//!
+//! The event loop is allocation-free in steady state: the slowdown
+//! model is a pure function of the *set* of running streams, so rates
+//! are memoized per running-set bitmask in a flat direct-indexed table
+//! (small stream counts) and handed out as borrows — no per-event
+//! clones, no per-event hashing for the common <= 16-stream case. All
+//! per-run invariants the slowdown model consumes (the L2 model, each
+//! stream's working set and isolated miss ratio, memory weights) are
+//! precomputed once per run in [`RunStatics`].
 
 use super::cost::CostModel;
 use super::kernel::KernelDesc;
@@ -190,6 +201,9 @@ pub struct ConcurrentRun {
     pub l2_miss: Vec<f64>,
     /// Mean LDS utilization across occupied CUs.
     pub lds_util: f64,
+    /// Discrete events the engine processed (perf accounting: the
+    /// JSON-emitting bencher reports events/sec from this).
+    pub events: u64,
 }
 
 impl ConcurrentRun {
@@ -228,6 +242,59 @@ struct StreamState {
     outcome: StreamOutcome,
 }
 
+/// Per-stream constants the slowdown model consumes, precomputed once
+/// per run (previously recomputed on every event).
+struct StreamStatic {
+    /// max(M, N): the LDS occupancy-class proxy.
+    size_max: usize,
+    /// Memory-pressure weight (sparse kernels exert less, §7.2).
+    mem_w: f64,
+    /// LDS-pressure weight (quadratic discount for sparse streams).
+    sparse_w: f64,
+    /// L2 working set, bytes.
+    working_set: f64,
+    /// Isolated (single-stream) L2 miss ratio for that working set.
+    isolated_miss: f64,
+}
+
+/// Per-run invariants shared by every rate evaluation.
+struct RunStatics {
+    l2: L2Model,
+    total_cus: usize,
+    lds_bytes: usize,
+    lds_double_buffer: f64,
+    streams: Vec<StreamStatic>,
+}
+
+/// Rate memo keyed by running-set bitmask. For small stream counts a
+/// flat direct-indexed table avoids hashing entirely; the map fallback
+/// covers 17..=64 streams. Either way callers borrow the memoized
+/// slice — the event loop never clones a rates vector.
+enum RateMemo {
+    Flat(Vec<Option<Box<[f64]>>>),
+    Map(std::collections::HashMap<u64, Box<[f64]>>),
+}
+
+/// Direct-indexed memo bound: 2^16 slots (1 MiB of `Option<Box>` tags)
+/// is the largest table worth paying for up front.
+const MEMO_FLAT_STREAMS: usize = 16;
+
+/// Grab the earliest-free launch lane at time `t` for a `dur`-ns
+/// launch; returns the completion time. Lane frees are always finite,
+/// and index selection uses a plain `<` scan — no
+/// `partial_cmp().unwrap()` NaN hazard on the hot path.
+fn grab_lane(lanes: &mut [f64], t: f64, dur: f64) -> f64 {
+    let mut idx = 0usize;
+    for j in 1..lanes.len() {
+        if lanes[j] < lanes[idx] {
+            idx = j;
+        }
+    }
+    let start = lanes[idx].max(t);
+    lanes[idx] = start + dur;
+    start + dur
+}
+
 /// The engine.
 pub struct Engine<'a> {
     cfg: &'a Config,
@@ -247,53 +314,53 @@ impl<'a> Engine<'a> {
         ((((n_streams as f64) - 1.0) / 7.0).clamp(0.0, 1.0)).powf(0.6)
     }
 
-    /// Slowdown of stream `i` given the set of co-running kernels.
-    /// `mem_weight(j)` discounts sparse kernels' pressure contribution.
-    fn slowdown(&self, kernels: &[&KernelDesc], i: usize) -> f64 {
-        let s = kernels.len();
+    /// Rates (`gain / slowdown`) for every stream in `running`, in
+    /// `running` order. The slowdown term aggregates LDS saturation
+    /// (clustering-aware per-CU occupancy, saturating the way Fig 7
+    /// measures), L2 miss growth relative to isolated, and external
+    /// contention; sparse streams both exert and feel less pressure
+    /// (weights precomputed in [`RunStatics`], calibrated to Fig 13's
+    /// crossover).
+    fn fill_rates(
+        &self,
+        running: &[usize],
+        st: &RunStatics,
+        gains: &[f64],
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        let s = running.len();
         if s == 0 {
-            return 1.0;
+            return;
         }
-        // LDS pressure: the clustering-aware per-CU occupancy model
-        // (hw::lds), which saturates the way Fig 7 measures. Sparse
-        // streams stage compressed operands and defragment the panel
-        // layout, discounting their contribution quadratically in the
-        // memory fraction (calibrated to Fig 13's crossover).
-        let max_n = kernels.iter().map(|k| k.m.max(k.n)).max().unwrap_or(512);
+        let max_n = running
+            .iter()
+            .map(|&i| st.streams[i].size_max)
+            .max()
+            .unwrap_or(512);
         let lds_sat = lds_utilization(
             max_n,
             s,
-            self.cfg.total_cus(),
-            self.cfg.lds_bytes_per_cu() as usize,
-            self.cfg.calib.lds_double_buffer,
+            st.total_cus,
+            st.lds_bytes,
+            st.lds_double_buffer,
         );
-        let sparse_w = if kernels[i].sparsity.is_sparse() {
-            self.cfg.sparsity.mem_fraction.powi(2)
-        } else {
-            1.0
-        };
-
-        // L2 miss growth relative to isolated, for this stream's working
-        // set; sparse kernels both exert and feel less pressure.
-        let l2 = L2Model::new(self.cfg);
-        let mem_w = |k: &KernelDesc| {
-            if k.sparsity.is_sparse() {
-                self.cfg.sparsity.mem_fraction
-            } else {
-                1.0
-            }
-        };
-        let eff_streams: f64 = kernels.iter().map(|k| mem_w(k)).sum();
-        let ws = kernels[i].working_set();
-        let iso = l2.isolated_miss(ws);
-        let grown = l2.miss_ratio(ws, eff_streams.round().max(1.0) as usize);
-        let l2_growth = ((grown / iso) - 1.0).max(0.0) * mem_w(kernels[i])
-            / self.cfg.calib.l2_miss_stream_slope;
-
+        let eff_streams: f64 =
+            running.iter().map(|&i| st.streams[i].mem_w).sum();
+        let eff = eff_streams.round().max(1.0) as usize;
         let conc = if s >= 2 { 1.0 } else { 0.0 };
-        1.0 + self.profile.k_lds * lds_sat * sparse_w * conc
-            + self.profile.k_l2 * l2_growth
-            + self.profile.k_level * self.contention_level
+        for &i in running {
+            let ss = &st.streams[i];
+            let grown = st.l2.miss_ratio(ss.working_set, eff);
+            let l2_growth = ((grown / ss.isolated_miss) - 1.0).max(0.0)
+                * ss.mem_w
+                / self.cfg.calib.l2_miss_stream_slope;
+            let slowdown = 1.0
+                + self.profile.k_lds * lds_sat * ss.sparse_w * conc
+                + self.profile.k_l2 * l2_growth
+                + self.profile.k_level * self.contention_level;
+            out.push(gains[i] / slowdown);
+        }
     }
 
     /// Occupancy-fragmentation gain (Fig 9): proportional allocation
@@ -331,80 +398,95 @@ impl<'a> Engine<'a> {
         let n = kernels.len();
         let pressure = Self::pressure(n);
 
-        // Reference work: 512^3 FP32 solo (launch_ratio is relative to it).
-        let ref_work = cost.solo_work_ns(
-            &KernelDesc::gemm(512, crate::isa::Precision::F32),
-        ) * self.profile.work_scale;
+        // Per-run invariants for the rate model (§Perf: previously
+        // rebuilt per event — L2Model construction, working sets,
+        // isolated miss ratios, memory weights).
+        let statics = RunStatics {
+            l2: cost.l2().clone(),
+            total_cus: self.cfg.total_cus(),
+            lds_bytes: self.cfg.lds_bytes_per_cu() as usize,
+            lds_double_buffer: self.cfg.calib.lds_double_buffer,
+            streams: kernels
+                .iter()
+                .map(|k| {
+                    let ws = k.working_set();
+                    StreamStatic {
+                        size_max: k.m.max(k.n),
+                        mem_w: if k.sparsity.is_sparse() {
+                            self.cfg.sparsity.mem_fraction
+                        } else {
+                            1.0
+                        },
+                        sparse_w: if k.sparsity.is_sparse() {
+                            self.cfg.sparsity.mem_fraction.powi(2)
+                        } else {
+                            1.0
+                        },
+                        working_set: ws,
+                        isolated_miss: cost.l2().isolated_miss(ws),
+                    }
+                })
+                .collect(),
+        };
 
-        let mut streams: Vec<StreamState> = kernels
-            .iter()
-            .enumerate()
-            .map(|(i, k)| {
-                let mut srng = rng.fork(i as u64 + 1);
-                let mem_w = if k.sparsity.is_sparse() {
-                    self.cfg.sparsity.mem_fraction
-                } else {
-                    1.0
-                };
-                // Placement bias covers the whole iteration path
-                // (launch + work): which ACE/driver lane and which
-                // CU/L2 partition the stream landed on.
-                let sigma = self.profile.bias_sigma
-                    * pressure
-                    * self.cfg.jitter_scale(k.precision)
-                    * mem_w
-                    * (1.0 + 0.02 * self.contention_level);
-                let bias = srng.lognormal_unit(sigma);
-                let solo = cost.solo_work_ns(k) * self.profile.work_scale;
-                let launch = if self.profile.pipelined_launch && n >= 2 {
-                    // Continuous enqueue: launches hide behind prior work.
-                    0.0
-                } else {
-                    let base = if self.profile.launch_ref {
-                        ref_work
-                    } else {
-                        solo
-                    };
-                    base * self.profile.launch_ratio * bias
-                };
-                StreamState {
-                    kernel: k.clone(),
-                    phase: Phase::Launching { until: f64::NAN }, // set below
-
-                    iters_done: 0,
-                    iter_start: 0.0,
-                    bias,
-                    solo_work_ns: solo,
-                    launch_ns: launch,
-                    outcome: StreamOutcome {
-                        label: k.label(),
-                        iter_ns: Vec::with_capacity(k.iters),
-                        start_ns: 0.0,
-                        end_ns: 0.0,
-                    },
-                }
-            })
-            .collect();
+        // Reference work: 512^3 FP32 solo (launch_ratio is relative to
+        // it); only needed by launch_ref profiles.
+        let ref_work = if self.profile.launch_ref {
+            cost.solo_work_ns(&KernelDesc::gemm(
+                512,
+                crate::isa::Precision::F32,
+            )) * self.profile.work_scale
+        } else {
+            0.0
+        };
 
         // Launches serialize through shared command/driver lanes: a
         // stream's launch occupies one lane for its launch_ns (the
         // mechanism behind the paper's moderate overlap efficiencies).
-        // Initial launches queue in stream order.
+        // Initial launches queue in stream order, and each stream's
+        // phase is final from construction (no NaN placeholder).
         let mut lanes = vec![0.0f64; self.profile.launch_lanes.max(1)];
-        let grab_lane = |lanes: &mut Vec<f64>, t: f64, dur: f64| -> f64 {
-            let (idx, free) = lanes
-                .iter()
-                .cloned()
-                .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .unwrap();
-            let start = free.max(t);
-            lanes[idx] = start + dur;
-            start + dur
-        };
-        for st in streams.iter_mut() {
-            let until = grab_lane(&mut lanes, 0.0, st.launch_ns);
-            st.phase = Phase::Launching { until };
+        let mut streams: Vec<StreamState> = Vec::with_capacity(n);
+        for (i, k) in kernels.iter().enumerate() {
+            let mut srng = rng.fork(i as u64 + 1);
+            let mem_w = statics.streams[i].mem_w;
+            // Placement bias covers the whole iteration path
+            // (launch + work): which ACE/driver lane and which
+            // CU/L2 partition the stream landed on.
+            let sigma = self.profile.bias_sigma
+                * pressure
+                * self.cfg.jitter_scale(k.precision)
+                * mem_w
+                * (1.0 + 0.02 * self.contention_level);
+            let bias = srng.lognormal_unit(sigma);
+            let solo = cost.solo_work_ns(k) * self.profile.work_scale;
+            let launch = if self.profile.pipelined_launch && n >= 2 {
+                // Continuous enqueue: launches hide behind prior work.
+                0.0
+            } else {
+                let base = if self.profile.launch_ref {
+                    ref_work
+                } else {
+                    solo
+                };
+                base * self.profile.launch_ratio * bias
+            };
+            let until = grab_lane(&mut lanes, 0.0, launch);
+            streams.push(StreamState {
+                kernel: k.clone(),
+                phase: Phase::Launching { until },
+                iters_done: 0,
+                iter_start: 0.0,
+                bias,
+                solo_work_ns: solo,
+                launch_ns: launch,
+                outcome: StreamOutcome {
+                    label: k.label(),
+                    iter_ns: Vec::with_capacity(k.iters),
+                    start_ns: 0.0,
+                    end_ns: 0.0,
+                },
+            });
         }
 
         // Occupancy-fragmentation gains are static per run: the ACE
@@ -418,14 +500,14 @@ impl<'a> Engine<'a> {
         let mut t = 0.0f64;
         let mut overlap_ns = 0.0f64;
         let mut iter_rng = rng.fork(0x17e7);
-        // Rate memo: the slowdown model (L2 growth, LDS occupancy) is a
-        // pure function of the *set* of running streams; memoize per
-        // running-set bitmask instead of re-evaluating it per event
-        // (§Perf log, step 1: ~2x on the 8-stream benchmark).
-        let mut rate_memo: std::collections::HashMap<u64, Vec<f64>> =
-            std::collections::HashMap::new();
-        // Reusable buffer: allocation-free event loop (§Perf step 2).
+        let mut rate_memo = if n <= MEMO_FLAT_STREAMS {
+            RateMemo::Flat(vec![None; 1usize << n])
+        } else {
+            RateMemo::Map(std::collections::HashMap::new())
+        };
+        // Reusable buffers: allocation-free event loop.
         let mut running: Vec<usize> = Vec::with_capacity(n);
+        let mut scratch: Vec<f64> = Vec::with_capacity(n);
         let mut events = 0u64;
         let event_budget =
             10_000 + 64 * kernels.iter().map(|k| k.iters as u64).sum::<u64>();
@@ -437,33 +519,41 @@ impl<'a> Engine<'a> {
                 "DES event budget exceeded (livelock?): t={t}, states={:?}",
                 streams.iter().map(|s| s.phase).collect::<Vec<_>>()
             );
-            // Active running set and rates (memoized per running set;
-            // the slowdown model is evaluated only on set changes).
+            // Active running set and rates, memoized per running-set
+            // bitmask (the slowdown model is evaluated only the first
+            // time a set appears; afterwards the memo hands out a
+            // borrow).
             running.clear();
             running.extend((0..n).filter(|&i| {
                 matches!(streams[i].phase, Phase::Running { .. })
             }));
-            let mask: u64 = if n <= 64 {
-                running.iter().fold(0u64, |m, &i| m | (1 << i))
-            } else {
-                u64::MAX // >64 streams: no memo (recompute every event)
-            };
-            let rates: Vec<f64> = match rate_memo.get(&mask) {
-                Some(r) if mask != u64::MAX => r.clone(),
-                _ => {
-                    let active_kernels: Vec<&KernelDesc> =
-                        running.iter().map(|&i| &streams[i].kernel).collect();
-                    let r: Vec<f64> = running
-                        .iter()
-                        .enumerate()
-                        .map(|(pos, &i)| {
-                            static_gains[i]
-                                / self.slowdown(&active_kernels, pos)
-                        })
-                        .collect();
-                    rate_memo.insert(mask, r.clone());
-                    r
+            let rates: &[f64] = if n <= 64 {
+                let mask: u64 =
+                    running.iter().fold(0u64, |m, &i| m | (1 << i));
+                let missing = match &rate_memo {
+                    RateMemo::Flat(v) => v[mask as usize].is_none(),
+                    RateMemo::Map(m) => !m.contains_key(&mask),
+                };
+                if missing {
+                    let mut r = Vec::with_capacity(running.len());
+                    self.fill_rates(&running, &statics, &static_gains, &mut r);
+                    let r = r.into_boxed_slice();
+                    match &mut rate_memo {
+                        RateMemo::Flat(v) => v[mask as usize] = Some(r),
+                        RateMemo::Map(m) => {
+                            m.insert(mask, r);
+                        }
+                    }
                 }
+                match &rate_memo {
+                    RateMemo::Flat(v) => v[mask as usize].as_deref().unwrap(),
+                    RateMemo::Map(m) => &m[&mask],
+                }
+            } else {
+                // >64 streams: masks overflow u64; recompute into a
+                // reusable scratch buffer (still allocation-free).
+                self.fill_rates(&running, &statics, &static_gains, &mut scratch);
+                &scratch
             };
 
             // Next event time.
@@ -528,10 +618,9 @@ impl<'a> Engine<'a> {
             }
         }
 
-        let l2 = L2Model::new(self.cfg);
         let l2_miss: Vec<f64> = kernels
             .iter()
-            .map(|k| l2.miss_ratio(k.working_set(), n))
+            .map(|k| statics.l2.miss_ratio(k.working_set(), n))
             .collect();
         let max_n = kernels.iter().map(|k| k.m.max(k.n)).max().unwrap();
         let lds_util = lds_utilization(
@@ -548,6 +637,7 @@ impl<'a> Engine<'a> {
             overlap_efficiency: if t > 0.0 { overlap_ns / t } else { 0.0 },
             l2_miss,
             lds_util,
+            events,
         }
     }
 
@@ -556,16 +646,25 @@ impl<'a> Engine<'a> {
         self.run(std::slice::from_ref(kernel), seed)
     }
 
+    /// Makespan of running these kernels one-after-another (each solo,
+    /// per-kernel derived seeds). This is the denominator context of the
+    /// paper's Fig-4 metric; callers that already hold the concurrent
+    /// run derive `speedup` from it without re-simulating.
+    pub fn serial_makespan_ns(&self, kernels: &[KernelDesc], seed: u64) -> f64 {
+        kernels
+            .iter()
+            .enumerate()
+            .map(|(i, k)| {
+                self.run_solo(k, seed.wrapping_add(i as u64)).makespan_ns
+            })
+            .sum()
+    }
+
     /// Speedup of running these kernels concurrently vs one-after-another
     /// (the paper's Fig 4 metric).
     pub fn speedup(&self, kernels: &[KernelDesc], seed: u64) -> f64 {
-        let conc = self.run(kernels, seed);
-        let serial: f64 = kernels
-            .iter()
-            .enumerate()
-            .map(|(i, k)| self.run_solo(k, seed.wrapping_add(i as u64)).makespan_ns)
-            .sum();
-        serial / conc.makespan_ns
+        self.serial_makespan_ns(kernels, seed)
+            / self.run(kernels, seed).makespan_ns
     }
 }
 
@@ -598,6 +697,7 @@ mod tests {
         let b = e.run(&ks, 7);
         assert_eq!(a.makespan_ns, b.makespan_ns);
         assert_eq!(a.per_stream_totals(), b.per_stream_totals());
+        assert_eq!(a.events, b.events);
     }
 
     #[test]
@@ -608,6 +708,43 @@ mod tests {
         let sp = e.speedup(&ks, 3);
         assert!(sp > 1.2, "4 streams should beat serial: {sp}");
         assert!(sp < 4.0, "speedup must be sublinear: {sp}");
+    }
+
+    #[test]
+    fn speedup_decomposes_into_serial_over_concurrent() {
+        // serve derives speedup from one concurrent run + the serial
+        // makespan; it must agree exactly with `speedup()`.
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let ks = vec![fp32_512(10); 4];
+        let sp = e.speedup(&ks, 9);
+        let derived =
+            e.serial_makespan_ns(&ks, 9) / e.run(&ks, 9).makespan_ns;
+        assert_eq!(sp, derived);
+    }
+
+    #[test]
+    fn event_count_reported_and_bounded() {
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let run = e.run(&vec![fp32_512(10); 4], 2);
+        // 4 streams x 10 iters produce 80 transitions; coincident
+        // transitions may share a loop iteration, so bound loosely.
+        assert!(run.events >= 4 * 10, "events = {}", run.events);
+        assert!(run.events < 10_000, "events = {}", run.events);
+    }
+
+    #[test]
+    fn map_memo_fallback_handles_many_streams() {
+        // 17 streams exceeds the flat-memo bound and exercises the
+        // HashMap path.
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let run = e.run(&vec![fp32_512(2); 17], 5);
+        assert_eq!(run.streams.len(), 17);
+        for s in &run.streams {
+            assert_eq!(s.iter_ns.len(), 2);
+        }
     }
 
     #[test]

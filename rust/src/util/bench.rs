@@ -4,7 +4,16 @@
 //! It mirrors the paper's measurement discipline (§4.2): warm-up
 //! iterations are discarded, reported values are stable averages, and
 //! variability is quantified with the coefficient of variation.
+//!
+//! ## Machine-readable baselines
+//!
+//! Each bench target writes a `BENCH_<name>.json` file (schema
+//! `mi300a-char/bench-v1`, see [`Bencher::to_json`]) so perf
+//! trajectories are diffable across PRs; PERF.md documents the schema
+//! and records the current baseline. Smoke runs (CI) shrink the
+//! iteration counts via `MI300A_BENCH_WARMUP` / `MI300A_BENCH_ITERS`.
 
+use crate::util::json::Json;
 use std::time::Instant;
 
 /// One benchmark's summary statistics (nanoseconds).
@@ -34,6 +43,20 @@ impl BenchResult {
             0.0
         }
     }
+
+    /// One `results[]` entry of the bench-v1 schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("std_ns", Json::Num(self.std_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+            ("max_ns", Json::Num(self.max_ns)),
+            ("cv", Json::Num(self.cv())),
+            ("ops_per_sec", Json::Num(self.throughput_per_sec())),
+        ])
+    }
 }
 
 /// Benchmark runner: fixed warm-up then timed iterations.
@@ -52,6 +75,24 @@ impl Default for Bencher {
 impl Bencher {
     pub fn new(warmup: usize, iters: usize) -> Self {
         Bencher { warmup, iters, results: Vec::new() }
+    }
+
+    /// Like [`Bencher::new`], with `MI300A_BENCH_WARMUP` /
+    /// `MI300A_BENCH_ITERS` overriding the defaults — CI smoke runs set
+    /// both to 1 so the bench targets stay exercised without costing a
+    /// full measurement pass.
+    pub fn from_env(warmup: usize, iters: usize) -> Self {
+        let get = |key: &str, default: usize| {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or(default)
+        };
+        Bencher::new(
+            get("MI300A_BENCH_WARMUP", warmup),
+            get("MI300A_BENCH_ITERS", iters),
+        )
     }
 
     /// Time `f` (one logical operation per call) and record the result.
@@ -95,6 +136,46 @@ impl Bencher {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// All recorded results as a bench-v1 JSON document:
+    ///
+    /// ```text
+    /// { "schema": "mi300a-char/bench-v1",
+    ///   "bench": "<target name>",
+    ///   "warmup": N, "iters": N,
+    ///   "results": [ { "name", "iters", "mean_ns", "std_ns",
+    ///                  "min_ns", "max_ns", "cv", "ops_per_sec" }, ... ],
+    ///   "extra": { <target-specific derived metrics> } }
+    /// ```
+    pub fn to_json(&self, bench_name: &str, extra: Vec<(&str, Json)>) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("mi300a-char/bench-v1".into())),
+            ("bench", Json::Str(bench_name.into())),
+            ("warmup", Json::Num(self.warmup as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+            ("extra", Json::obj(extra)),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `MI300A_BENCH_OUT` (default: the
+    /// working directory — `rust/` under `cargo bench`). Returns the
+    /// path written.
+    pub fn write_json(
+        &self,
+        bench_name: &str,
+        extra: Vec<(&str, Json)>,
+    ) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("MI300A_BENCH_OUT")
+            .unwrap_or_else(|_| ".".to_string());
+        let path = std::path::Path::new(&dir)
+            .join(format!("BENCH_{bench_name}.json"));
+        std::fs::write(&path, self.to_json(bench_name, extra).to_string_pretty())?;
+        Ok(path)
     }
 
     /// Render all recorded results as a markdown table.
@@ -153,6 +234,46 @@ mod tests {
         assert_eq!(fmt_ns(2_500.0), "2.50 µs");
         assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
         assert_eq!(fmt_ns(1.5e9), "1.50 s");
+    }
+
+    #[test]
+    fn json_document_has_schema_results_and_extra() {
+        let mut b = Bencher::new(0, 2);
+        b.bench("x", || {});
+        let j = b.to_json("hotpath", vec![("events_per_sec", Json::Num(42.0))]);
+        assert_eq!(
+            j.get("schema").unwrap().as_str(),
+            Some("mi300a-char/bench-v1")
+        );
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("hotpath"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("x"));
+        assert!(results[0].get("mean_ns").unwrap().as_f64().is_some());
+        assert_eq!(
+            j.get("extra").unwrap().get("events_per_sec").unwrap().as_f64(),
+            Some(42.0)
+        );
+        // Round-trips through the in-repo parser.
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("hotpath"));
+    }
+
+    #[test]
+    fn write_json_emits_bench_file() {
+        // Default output dir is the cwd (no env mutation — tests run
+        // multithreaded); clean up the artifact afterwards.
+        let mut b = Bencher::new(0, 1);
+        b.bench("y", || {});
+        let path = b.write_json("selftest_smoke", vec![]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(path.ends_with("BENCH_selftest_smoke.json"));
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(
+            j.get("schema").unwrap().as_str(),
+            Some("mi300a-char/bench-v1")
+        );
     }
 
     #[test]

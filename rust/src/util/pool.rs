@@ -1,0 +1,252 @@
+//! Minimal std-only scoped thread pool for deterministic parallel
+//! sweeps (offline build: no rayon).
+//!
+//! The experiment drivers fan out *independent, seed-deterministic*
+//! units of work — per-figure drivers, per-stream-count replications,
+//! per-seed fairness repetitions. [`scoped_map`] runs such units across
+//! worker threads and returns results **in item order**, so output is
+//! byte-identical to the serial path no matter how the OS schedules the
+//! workers (the determinism regression test in
+//! `tests/parallel_determinism.rs` enforces this across 1/2/8 workers).
+//!
+//! Work distribution is a shared atomic cursor (work stealing degenerates
+//! to self-balancing round-robin), which keeps long items — an 8-stream
+//! DES run vs a 1-stream one — from serializing behind a static split.
+//!
+//! ## Worker budget (nested fan-out)
+//!
+//! Drivers size their inner fan-outs with [`default_workers`], and the
+//! outer sweep (`experiments::run_all`) fans drivers out too. To keep
+//! nesting from oversubscribing (outer N x inner N threads) — and to
+//! make a `workers = 1` outer sweep *truly* serial end to end — the
+//! pool carries a thread-local worker budget: `scoped_map` hands each
+//! worker thread `budget / workers` (min 1), and the serial path runs
+//! its items under the caller's requested budget. `default_workers`
+//! returns the active budget when one is set, so inner `scoped_map` /
+//! [`join`] calls inherit the division automatically.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+thread_local! {
+    /// Worker budget imposed by an enclosing scoped_map/join, if any.
+    static WORKER_BUDGET: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// RAII guard: installs a worker budget on this thread, restoring the
+/// previous value on drop (nested maps on one thread stay correct).
+struct BudgetGuard(Option<usize>);
+
+impl BudgetGuard {
+    fn set(n: usize) -> BudgetGuard {
+        BudgetGuard(WORKER_BUDGET.with(|b| b.replace(Some(n.max(1)))))
+    }
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        let prev = self.0;
+        WORKER_BUDGET.with(|b| b.set(prev));
+    }
+}
+
+/// Worker count for parallel sweeps: the enclosing pool's budget if one
+/// is active on this thread, else `MI300A_CHAR_THREADS` (>= 1), else
+/// the machine's available parallelism.
+pub fn default_workers() -> usize {
+    if let Some(n) = WORKER_BUDGET.with(|b| b.get()) {
+        return n.max(1);
+    }
+    if let Ok(v) = std::env::var("MI300A_CHAR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` with up to `workers` threads; results come back
+/// in item order regardless of completion order. `workers <= 1` (or a
+/// single item) short-circuits to a plain serial loop with zero thread
+/// overhead — and pins the worker budget so nested maps inside `f`
+/// honor the serial request.
+pub fn scoped_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let budget = default_workers();
+    let requested = workers.max(1);
+    let workers = requested.min(items.len().max(1));
+    if workers <= 1 || items.len() <= 1 {
+        // Serial path: a single-item map keeps the caller's concurrency
+        // for nested work; an explicit workers<=1 request pins nested
+        // fan-outs to serial too.
+        let _guard = BudgetGuard::set(if requested <= 1 { 1 } else { budget });
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    // Split the budget across workers so nested fan-outs never exceed
+    // roughly `budget` threads in total.
+    let inner_budget = (budget / workers).max(1);
+    let cursor = AtomicUsize::new(0);
+    let collected: Mutex<Vec<(usize, R)>> =
+        Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let _guard = BudgetGuard::set(inner_budget);
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                }
+                collected.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut pairs = collected.into_inner().unwrap();
+    pairs.sort_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Run two closures concurrently and return both results (`fa` on the
+/// calling thread, `fb` on a scoped worker), splitting the active
+/// worker budget between the sides. Degrades to strictly sequential
+/// execution when the budget is 1 (e.g. inside a `workers = 1` sweep).
+/// Panics propagate.
+pub fn join<A, B, FA, FB>(fa: FA, fb: FB) -> (A, B)
+where
+    A: Send,
+    B: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B + Send,
+{
+    let budget = default_workers();
+    if budget <= 1 {
+        let a = fa();
+        let b = fb();
+        return (a, b);
+    }
+    let fb_budget = (budget / 2).max(1);
+    let fa_budget = (budget - fb_budget).max(1);
+    std::thread::scope(|s| {
+        let hb = s.spawn(move || {
+            let _guard = BudgetGuard::set(fb_budget);
+            fb()
+        });
+        let a = {
+            let _guard = BudgetGuard::set(fa_budget);
+            fa()
+        };
+        let b = match hb.join() {
+            Ok(b) => b,
+            Err(e) => std::panic::resume_unwind(e),
+        };
+        (a, b)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_item_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = scoped_map(&items, 8, |i, &x| {
+            assert_eq!(i, x);
+            x * 3
+        });
+        assert_eq!(out, (0..100).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let items: Vec<u64> = (0..64).collect();
+        let f = |_: usize, &x: &u64| x.wrapping_mul(0x9E3779B97F4A7C15) >> 7;
+        let serial = scoped_map(&items, 1, f);
+        for workers in [2usize, 4, 16] {
+            assert_eq!(scoped_map(&items, workers, f), serial);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_inputs() {
+        let none: Vec<i32> = vec![];
+        assert!(scoped_map(&none, 4, |_, &x| x).is_empty());
+        assert_eq!(scoped_map(&[7], 4, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn join_runs_both_sides() {
+        let (a, b) = join(|| 2 + 2, || "ok".to_string());
+        assert_eq!(a, 4);
+        assert_eq!(b, "ok");
+    }
+
+    #[test]
+    fn default_workers_at_least_one() {
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn serial_map_pins_nested_budget_to_one() {
+        // Inside a workers=1 map, nested code must see a budget of 1 —
+        // that is what makes `run_all(cfg, 1)` truly serial end to end.
+        let budgets = scoped_map(&[0, 1, 2], 1, |_, _| default_workers());
+        assert_eq!(budgets, vec![1, 1, 1]);
+        // And the budget must be restored afterwards.
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn parallel_map_divides_budget_across_workers() {
+        // An outer 4-worker map over 4 items on whatever machine: each
+        // worker's nested budget is budget/4 (min 1), never the full
+        // machine width times 4.
+        let outer = default_workers();
+        let inner = scoped_map(&[(); 4], 4, |_, _| default_workers());
+        for b in inner {
+            assert!(b >= 1);
+            assert!(
+                b <= (outer / 4).max(1),
+                "inner budget {b} exceeds fair share of outer {outer}"
+            );
+        }
+    }
+
+    #[test]
+    fn join_inside_serial_map_is_sequential() {
+        let flags = scoped_map(&[()], 1, |_, _| {
+            // budget is pinned to 1 here, so join must not spawn.
+            let (a, b) = join(|| default_workers(), || default_workers());
+            (a, b)
+        });
+        assert_eq!(flags, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn uneven_work_still_complete() {
+        // Items with wildly different costs must all be mapped once.
+        let items: Vec<usize> = (0..20).collect();
+        let out = scoped_map(&items, 4, |_, &x| {
+            let spin = if x % 7 == 0 { 20_000 } else { 10 };
+            let mut acc = 0u64;
+            for i in 0..spin {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+            x
+        });
+        assert_eq!(out, items);
+    }
+}

@@ -1,6 +1,7 @@
-//! Integration: the TCP request loop (SIM / PLAN / SPARSITY commands).
-//! RUN is covered by runtime_integration.rs; here we keep the server on
-//! the simulator paths so the test is artifact-independent.
+//! Integration: the TCP request loop (SIM / PLAN / SPARSITY commands),
+//! single-client and concurrent-client. RUN is covered by
+//! runtime_integration.rs; here we keep the server on the simulator
+//! paths so the tests are artifact-independent.
 
 use mi300a_char::config::Config;
 use mi300a_char::serve::serve;
@@ -8,28 +9,34 @@ use mi300a_char::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-#[test]
-fn sim_plan_sparsity_roundtrip() {
+/// Connect to the server (retrying while the listener comes up).
+fn connect(port: u16) -> TcpStream {
+    for _ in 0..200 {
+        if let Ok(c) = TcpStream::connect(("127.0.0.1", port)) {
+            return c;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("server did not come up on port {port}");
+}
+
+/// Reserve an ephemeral port for the server to bind.
+fn free_port() -> u16 {
     let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let port = probe.local_addr().unwrap().port();
     drop(probe);
+    port
+}
+
+#[test]
+fn sim_plan_sparsity_roundtrip() {
+    let port = free_port();
     let handle = std::thread::spawn(move || {
         serve(Config::mi300a(), &format!("127.0.0.1:{port}"), Some(1))
             .unwrap();
     });
 
-    // Connect (retry while the listener comes up).
-    let mut conn = None;
-    for _ in 0..200 {
-        match TcpStream::connect(("127.0.0.1", port)) {
-            Ok(c) => {
-                conn = Some(c);
-                break;
-            }
-            Err(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
-        }
-    }
-    let mut conn = conn.expect("server came up");
+    let mut conn = connect(port);
     let mut reader = BufReader::new(conn.try_clone().unwrap());
     let mut ask = |cmd: &str| -> Json {
         writeln!(conn, "{cmd}").unwrap();
@@ -65,4 +72,64 @@ fn sim_plan_sparsity_roundtrip() {
     writeln!(conn, "QUIT").unwrap();
     drop(conn);
     handle.join().unwrap();
+}
+
+/// The three simulator-path commands every client in the concurrency
+/// test issues.
+const CLIENT_CMDS: [&str; 3] =
+    ["SIM 512 fp8 4", "PLAN throughput 8 512", "SPARSITY 512 4"];
+
+/// One full client session: issue the three commands, parse the three
+/// responses, QUIT.
+fn client_session(port: u16) -> Vec<Json> {
+    let mut conn = connect(port);
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut responses = Vec::new();
+    for cmd in CLIENT_CMDS {
+        writeln!(conn, "{cmd}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).unwrap_or_else(|e| {
+            panic!("unparseable response to {cmd:?}: {e} ({line:?})")
+        });
+        assert!(
+            v.get("error").is_none(),
+            "{cmd:?} errored: {line}"
+        );
+        responses.push(v);
+    }
+    writeln!(conn, "QUIT").unwrap();
+    responses
+}
+
+#[test]
+fn four_concurrent_clients_match_single_client() {
+    let port = free_port();
+    let server = std::thread::spawn(move || {
+        // 1 baseline connection + 4 concurrent ones.
+        serve(Config::mi300a(), &format!("127.0.0.1:{port}"), Some(5))
+            .unwrap();
+    });
+
+    // Baseline: one client alone.
+    let baseline = client_session(port);
+    assert_eq!(baseline.len(), CLIENT_CMDS.len());
+    assert!(baseline[0].get("speedup_vs_serial").is_some());
+    assert!(baseline[1].get("groups").is_some());
+    assert!(baseline[2].get("enable").is_some());
+
+    // Four clients at once: every response must parse and be identical
+    // to the single-client answers (requests are pure functions of the
+    // shared immutable config).
+    let clients: Vec<std::thread::JoinHandle<Vec<Json>>> = (0..4)
+        .map(|_| std::thread::spawn(move || client_session(port)))
+        .collect();
+    for (i, c) in clients.into_iter().enumerate() {
+        let responses = c.join().expect("client thread panicked");
+        assert_eq!(
+            responses, baseline,
+            "concurrent client {i} diverged from the single-client run"
+        );
+    }
+    server.join().unwrap();
 }

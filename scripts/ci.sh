@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus a bench smoke pass so the `cargo bench`
+# targets (and their BENCH_*.json emitters) cannot bit-rot.
+#
+# Usage: scripts/ci.sh
+#
+# Environment:
+#   MI300A_BENCH_OUT   where BENCH_*.json baselines land (default: rust/)
+#   MI300A_CHAR_THREADS worker count for parallel sweeps (default: nproc)
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== bench smoke (1 warmup / 1 iter, full targets) =="
+MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench
+
+echo "== bench baselines =="
+out_dir="${MI300A_BENCH_OUT:-.}"
+for name in hotpath ablations paper_experiments; do
+    f="$out_dir/BENCH_$name.json"
+    if [ ! -s "$f" ]; then
+        echo "missing bench baseline: $f" >&2
+        exit 1
+    fi
+    echo "ok: $f"
+done
+
+echo "ci.sh: all green"
