@@ -1,139 +1,135 @@
 //! End-to-end serving driver (the repo's full-stack validation run).
 //!
-//! Loads the AOT'd FP8 transformer block (JAX + Pallas kernels, lowered
-//! to HLO text at build time), then serves a synthetic request stream
-//! through the full coordinator: occupancy-aware continuous batching ->
-//! router/ACE dispatch -> PJRT execution. Python is never on this path.
+//! Spins up the TCP serving instance in-process, then drives it with
+//! concurrent `api::Client` sessions speaking the versioned JSON-line
+//! protocol (DESIGN.md §6) — the exact surface production traffic would
+//! use, not hand-rolled TCP strings. Each client mixes the three
+//! simulator-path request types; one session additionally attempts a
+//! real `run` request, which degrades to a typed `runtime` error when
+//! the AOT artifacts are absent.
 //!
-//! Reports batch statistics, per-request latency percentiles, and token
-//! throughput; the run is recorded in EXPERIMENTS.md §End-to-end.
+//! Reports per-request latency percentiles, aggregate throughput, and
+//! cross-client determinism (every client must see byte-identical
+//! answers; the paper's fairness story at the request level).
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! Run: `cargo run --release --example e2e_serving`
 
+use mi300a_char::api::{Client, ErrorCode, Request, Response};
 use mi300a_char::config::Config;
-use mi300a_char::coordinator::{Batcher, BatcherConfig, Objective, Router,
-                               decide_concurrency};
+use mi300a_char::coordinator::Objective;
 use mi300a_char::isa::Precision;
 use mi300a_char::metrics::Summary;
-use mi300a_char::runtime::{Executor, Manifest};
-use mi300a_char::util::rng::Rng;
+use std::net::TcpListener;
 use std::time::Instant;
 
-const ENTRY: &str = "transformer_block_128x256";
-const SEQ: usize = 128;
-const D_MODEL: usize = 256;
-const D_FF: usize = 1024;
-const N_REQUESTS: usize = 96;
+const CLIENTS: usize = 4;
+const ROUNDS_PER_CLIENT: usize = 24;
 
-fn weights(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
-    (0..rows * cols).map(|_| rng.normal() as f32 * scale).collect()
+/// The request mix one client session cycles through.
+fn request_mix() -> Vec<Request> {
+    vec![
+        Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
+        Request::Plan {
+            objective: Objective::ThroughputOriented,
+            streams: 8,
+            n: 512,
+            precision: Precision::Fp8,
+        },
+        Request::Sparsity { n: 512, streams: 4 },
+    ]
 }
 
-fn main() -> anyhow::Result<()> {
-    let cfg = Config::mi300a();
-    let mut exec = Executor::new(&Manifest::default_dir())?;
-    println!("PJRT platform: {}", exec.platform());
-
-    // Model weights (fixed across requests — the served model).
-    let mut rng = Rng::new(2026);
-    let wqkv = weights(&mut rng, D_MODEL, 3 * D_MODEL, 0.05);
-    let wproj = weights(&mut rng, D_MODEL, D_MODEL, 0.05);
-    let w1 = weights(&mut rng, D_MODEL, D_FF, 0.05);
-    let w2 = weights(&mut rng, D_FF, D_MODEL, 0.05);
-    let ln_g = vec![1.0f32; D_MODEL];
-    let ln_b = vec![0.0f32; D_MODEL];
-
-    // Compile once (cold start), measured separately from serving.
-    let t0 = Instant::now();
-    exec.load(ENTRY)?;
-    println!("compiled {ENTRY} in {:?}", t0.elapsed());
-
-    // Coordinator: occupancy-aware batching + concurrency governance.
-    // One request = one sequence; its GEMMs put seq/128 * width blocks
-    // in flight — the batcher accumulates to the FP8 target.
-    let waves_per_request = 8; // 128x768 QKV tile blocks at tile 128
-    let mut batcher = Batcher::new(BatcherConfig {
-        precision: Precision::Fp8,
-        deadline_ns: 1_500_000.0, // 1.5 ms batching window
-        max_requests: 16,
-    });
-    let governor = decide_concurrency(
-        Objective::ThroughputOriented,
-        Precision::Fp8,
-        4,
-    );
-    let mut router = Router::new(governor.streams, cfg.hw.n_aces as usize, 2);
-    println!(
-        "governor: {} streams (expected fairness {:.2})",
-        governor.streams, governor.expected_fairness
-    );
-
-    // Synthetic arrival process: bursty Poisson-ish arrivals.
-    let mut arrival_rng = Rng::new(7);
-    let mut virtual_now = 0.0f64;
-    let serve_start = Instant::now();
-    let mut latencies_ns: Vec<f64> = Vec::new();
-    let mut batches = 0usize;
-    let mut batch_sizes = Vec::new();
-    let mut served = 0usize;
-
-    while served < N_REQUESTS {
-        // Arrivals until the batcher cuts a batch.
-        virtual_now += arrival_rng.range(20_000.0, 220_000.0); // 20-220 µs
-        batcher.submit(waves_per_request, virtual_now);
-        let Some(batch) = batcher.poll(virtual_now) else {
-            continue;
-        };
-        batches += 1;
-        batch_sizes.push(batch.requests.len() as f64);
-
-        // Route the batch to a stream/ACE.
-        let dispatch = router
-            .submit(batches as u64)
-            .expect("stream capacity available");
-
-        // Execute the transformer block once per request in the batch
-        // (each request is one sequence through the served model).
-        for req in &batch.requests {
-            let x: Vec<f32> = (0..SEQ * D_MODEL)
-                .map(|i| (((i + req.id as usize) % 17) as f32 - 8.0) / 8.0)
-                .collect();
-            let t = Instant::now();
-            let out = exec.run_f32(
-                ENTRY,
-                &[
-                    x,
-                    wqkv.clone(),
-                    wproj.clone(),
-                    w1.clone(),
-                    w2.clone(),
-                    ln_g.clone(),
-                    ln_b.clone(),
-                    ln_g.clone(),
-                    ln_b.clone(),
-                ],
-            )?;
-            assert_eq!(out.len(), SEQ * D_MODEL);
-            assert!(out.iter().all(|v| v.is_finite()));
-            // Latency = queueing (virtual) + execution (real).
-            let queue_ns = virtual_now - req.arrival_ns;
-            latencies_ns.push(queue_ns + t.elapsed().as_nanos() as f64);
-            served += 1;
+/// One client session: `rounds` passes over the mix, returning each
+/// response (as its compact wire line, for cross-client comparison) and
+/// per-request latency in nanoseconds.
+fn session(addr: &str, rounds: usize) -> std::io::Result<(Vec<String>, Vec<f64>)> {
+    let mut client = Client::connect_retry(addr, 200)?;
+    let mix = request_mix();
+    let mut responses = Vec::new();
+    let mut latencies_ns = Vec::new();
+    for _ in 0..rounds {
+        for req in &mix {
+            let t0 = Instant::now();
+            let (json, _id) = client.request_json(req)?;
+            latencies_ns.push(t0.elapsed().as_nanos() as f64);
+            responses.push(json.to_string());
         }
-        router.complete(dispatch.stream);
     }
+    Ok((responses, latencies_ns))
+}
 
+fn main() -> std::io::Result<()> {
+    let port = {
+        let probe = TcpListener::bind("127.0.0.1:0")?;
+        probe.local_addr()?.port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let server = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            // CLIENTS concurrent sessions + 1 run-path probe.
+            mi300a_char::serve::serve(
+                Config::mi300a(),
+                &addr,
+                Some(CLIENTS + 1),
+            )
+        })
+    };
+
+    // --- Concurrent load: CLIENTS sessions over one shared service ---
+    let serve_start = Instant::now();
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || session(&addr, ROUNDS_PER_CLIENT))
+        })
+        .collect();
+    let mut all_latencies = Vec::new();
+    let mut baseline: Option<Vec<String>> = None;
+    for (i, w) in workers.into_iter().enumerate() {
+        let (responses, latencies) =
+            w.join().expect("client thread panicked")?;
+        all_latencies.extend(latencies);
+        match &baseline {
+            None => baseline = Some(responses),
+            Some(b) => assert_eq!(
+                &responses, b,
+                "client {i} diverged: responses must be deterministic"
+            ),
+        }
+    }
     let wall = serve_start.elapsed();
-    let lat = Summary::of(&latencies_ns);
-    let bs = Summary::of(&batch_sizes);
-    let tokens = served * SEQ;
+
+    // --- Run path: typed end-to-end even without artifacts ---
+    let mut probe = Client::connect_retry(addr.as_str(), 200)?;
+    match probe.request(&Request::Run { entry: "gemm_fp8_128".into() })? {
+        Response::Run { entry, outputs, checksum, exec_ms } => println!(
+            "run {entry}: {outputs} outputs, checksum {checksum:.4}, \
+             {exec_ms:.1} ms"
+        ),
+        Response::Error { code, message }
+            if code == ErrorCode::Runtime =>
+        {
+            println!("run path degraded gracefully: {message}")
+        }
+        other => println!("unexpected run response: {other:?}"),
+    }
+    drop(probe);
+    server.join().expect("server thread panicked")?;
+
+    // --- Report ---
+    let served = all_latencies.len();
+    let lat = Summary::of(&all_latencies);
     println!("\n=== e2e serving results ===");
-    println!("requests served : {served} ({batches} batches, mean batch {:.1})", bs.mean);
+    println!(
+        "requests served : {served} ({CLIENTS} concurrent clients, \
+         {ROUNDS_PER_CLIENT} rounds x {} request types)",
+        request_mix().len()
+    );
     println!("wall time       : {:.2} s", wall.as_secs_f64());
     println!(
-        "throughput      : {:.1} req/s, {:.0} tokens/s",
-        served as f64 / wall.as_secs_f64(),
-        tokens as f64 / wall.as_secs_f64()
+        "throughput      : {:.1} req/s",
+        served as f64 / wall.as_secs_f64()
     );
     println!(
         "latency         : p50 {:.2} ms, p95 {:.2} ms, max {:.2} ms",
@@ -141,11 +137,6 @@ fn main() -> anyhow::Result<()> {
         lat.p95 / 1e6,
         lat.max / 1e6
     );
-    println!(
-        "router          : {} dispatched, {} completed, backlog {}",
-        router.dispatched,
-        router.completed,
-        router.backlog_len()
-    );
+    println!("determinism     : all clients byte-identical");
     Ok(())
 }

@@ -1,50 +1,93 @@
-//! Quickstart: the three layers in one page.
+//! Quickstart: the typed service API in one page.
 //!
-//! 1. Execute a real FP8 GEMM artifact (JAX/Pallas -> HLO text -> PJRT).
-//! 2. Ask the simulator for the paper's headline occupancy numbers.
-//! 3. Ask the coordinator for a scheduling decision.
+//! 1. Start a serving instance in-process on an ephemeral port.
+//! 2. Connect `api::Client` and ask the three characterization
+//!    questions — a simulated concurrent run, a coordinator plan, a
+//!    sparsity decision — over the versioned wire protocol
+//!    (DESIGN.md §6). No hand-rolled TCP strings.
+//! 3. Print the coordinator's §9 occupancy guidance.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
+use mi300a_char::api::{Client, Request, Response};
 use mi300a_char::config::Config;
-use mi300a_char::coordinator::{occupancy_target, preferred_precision};
+use mi300a_char::coordinator::{occupancy_target, preferred_precision,
+                               Objective};
 use mi300a_char::isa::Precision;
-use mi300a_char::runtime::{Executor, Manifest};
-use mi300a_char::sim::MicrobenchModel;
+use std::net::TcpListener;
 
-fn main() -> anyhow::Result<()> {
-    let cfg = Config::mi300a();
+fn main() -> std::io::Result<()> {
+    // Reserve an ephemeral port, then serve exactly as many connections
+    // as the demo uses.
+    let port = {
+        let probe = TcpListener::bind("127.0.0.1:0")?;
+        probe.local_addr()?.port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let server = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            mi300a_char::serve::serve(Config::mi300a(), &addr, Some(1))
+        })
+    };
 
-    // --- Layer 1+2: real numerics through the AOT'd Pallas FP8 GEMM ---
-    let dir = Manifest::default_dir();
-    match Executor::new(&dir) {
-        Ok(mut exec) => {
-            println!("PJRT platform: {}", exec.platform());
-            let n = 128;
-            let a: Vec<f32> = (0..n * n).map(|i| ((i % 13) as f32 - 6.0) / 3.0).collect();
-            let b: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) / 2.0).collect();
-            let t0 = std::time::Instant::now();
-            let out = exec.run_f32("gemm_fp8_128", &[a, b])?;
+    let mut client = Client::connect_retry(addr.as_str(), 200)?;
+
+    // --- Simulated MI300A: 4 concurrent FP8 512^3 GEMM streams ---
+    match client.request(&Request::Sim {
+        n: 512,
+        precision: Precision::Fp8,
+        streams: 4,
+    })? {
+        Response::Sim { makespan_ms, speedup_vs_serial, fairness, .. } => {
             println!(
-                "gemm_fp8_128 via PJRT: {} outputs in {:?} (first {:.4})",
-                out.len(),
-                t0.elapsed(),
-                out[0]
+                "sim 512^3 fp8 x4: {makespan_ms:.2} ms makespan, \
+                 {speedup_vs_serial:.2}x vs serial, fairness {fairness:.2}"
             );
         }
-        Err(e) => println!("(artifacts not built: {e}; run `make artifacts`)"),
+        other => println!("unexpected response: {other:?}"),
     }
 
-    // --- Layer 3: the simulated MI300A's execution characteristics ---
-    let micro = MicrobenchModel::new(&cfg);
-    println!("\nFig-2 check (normalized throughput at 256 wavefronts):");
-    for p in Precision::SWEEP {
-        let pt = &micro.occupancy_sweep(p, &[256])[0];
-        println!("  {:>4}: {:5.1}% of peak", p.name(), pt.normalized * 100.0);
+    // --- Coordinator plan for a throughput-oriented pool ---
+    match client.request(&Request::Plan {
+        objective: Objective::ThroughputOriented,
+        streams: 8,
+        n: 512,
+        precision: Precision::Fp8,
+    })? {
+        Response::Plan { objective, sparse, groups } => {
+            println!(
+                "plan ({objective}): {} groups, sparse kernels: {sparse}",
+                groups.len()
+            );
+            for g in &groups {
+                println!(
+                    "  {} streams, expected fairness {:.2}, isolation {}",
+                    g.streams, g.expected_fairness, g.process_isolation
+                );
+            }
+        }
+        other => println!("unexpected response: {other:?}"),
     }
 
-    // --- The coordinator's §9 guidance ---
-    println!("\nOccupancy targets (paper §9.1):");
+    // --- Context-dependent sparsity decision ---
+    for streams in [1usize, 4] {
+        match client.request(&Request::Sparsity { n: 512, streams })? {
+            Response::Sparsity { enable, reason, concurrent_speedup, .. } => {
+                println!(
+                    "sparsity at {streams} stream(s): enable={enable} \
+                     ({reason}), concurrent speedup {concurrent_speedup:.2}x"
+                );
+            }
+            other => println!("unexpected response: {other:?}"),
+        }
+    }
+
+    drop(client);
+    server.join().expect("server thread panicked")?;
+
+    // --- The coordinator's §9 guidance (plain library calls) ---
+    println!("\noccupancy targets (paper §9.1):");
     for p in [Precision::Fp8, Precision::F16, Precision::F32] {
         println!("  {:>4}: {} wavefronts", p.name(), occupancy_target(p));
     }

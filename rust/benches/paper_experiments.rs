@@ -6,16 +6,16 @@
 //! so a bench run doubles as a full reproduction pass.
 
 use mi300a_char::config::Config;
-use mi300a_char::experiments::{run, ALL_IDS};
+use mi300a_char::experiments::REGISTRY;
 use mi300a_char::util::bench::Bencher;
 
 fn main() {
     let cfg = Config::mi300a();
     let mut b = Bencher::from_env(1, 5);
     println!("== paper experiment regeneration (one bench per table/figure) ==");
-    for id in ALL_IDS {
-        b.bench(&format!("repro/{id}"), || {
-            let r = run(id, &cfg).expect("known id");
+    for spec in REGISTRY {
+        b.bench(&format!("repro/{}", spec.id), || {
+            let r = (spec.runner)(&cfg);
             Bencher::black_box(r.render().len());
         });
     }

@@ -1,0 +1,95 @@
+//! Blocking native client for the versioned JSON-line protocol
+//! (DESIGN.md §6). Used by the `mi300a-char client` subcommand, the
+//! examples, and the integration tests — everything that talks to a
+//! served instance goes through here instead of hand-rolled TCP strings.
+
+use super::protocol::{Request, Response};
+use crate::util::json::Json;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One connection to a serving instance. Requests are tagged with an
+/// auto-incrementing `id`; [`Client::request`] verifies the echo so
+/// pipelined connections cannot misattribute replies.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer, next_id: 1 })
+    }
+
+    /// Connect to a server that may still be binding its listener
+    /// (retries every 5 ms up to `attempts` times).
+    pub fn connect_retry<A: ToSocketAddrs + Clone>(
+        addr: A,
+        attempts: usize,
+    ) -> io::Result<Client> {
+        let mut last = None;
+        for _ in 0..attempts.max(1) {
+            match Client::connect(addr.clone()) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        Err(last.unwrap_or_else(|| {
+            io::Error::new(io::ErrorKind::TimedOut, "no connect attempts")
+        }))
+    }
+
+    /// Issue one typed request, returning the typed response (which may
+    /// be [`Response::Error`] — protocol-level failures the server
+    /// reported; transport failures surface as `io::Error`).
+    pub fn request(&mut self, req: &Request) -> io::Result<Response> {
+        let (v, id) = self.request_json(req)?;
+        let (resp, got) = Response::from_json(&v)
+            .map_err(|e| invalid(format!("bad server response: {e}")))?;
+        if got != Some(id) {
+            return Err(invalid(format!(
+                "response id mismatch: sent {id}, got {got:?}"
+            )));
+        }
+        Ok(resp)
+    }
+
+    /// Issue one typed request and return the raw response JSON plus the
+    /// id it was sent under (the `client` subcommand prints this
+    /// verbatim).
+    pub fn request_json(&mut self, req: &Request) -> io::Result<(Json, u64)> {
+        let id = self.next_id;
+        self.next_id += 1;
+        writeln!(self.writer, "{}", req.to_json(Some(id)))?;
+        Ok((self.read_json_line()?, id))
+    }
+
+    /// Send one raw line (legacy text command or pre-encoded JSON) and
+    /// read one JSON response line. Exists for protocol tests comparing
+    /// framings; prefer [`Client::request`].
+    pub fn raw_line(&mut self, line: &str) -> io::Result<Json> {
+        writeln!(self.writer, "{line}")?;
+        self.read_json_line()
+    }
+
+    fn read_json_line(&mut self) -> io::Result<Json> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        Json::parse(line.trim())
+            .map_err(|e| invalid(format!("unparseable response: {e}")))
+    }
+}
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}

@@ -1,0 +1,31 @@
+//! The typed service API — the single front door to the whole system.
+//!
+//! Three pieces (DESIGN.md §6 is the wire-level spec):
+//!
+//! * [`protocol`] — versioned [`Request`]/[`Response`] enums with
+//!   explicit [`ErrorCode`]s, their JSON wire encoding, and the legacy
+//!   text-command shim.
+//! * [`service`] — the [`Service`] core owning the shared config, the
+//!   coordinator/engine construction, and the mpsc-isolated PJRT
+//!   executor worker. `serve.rs` and `main.rs` are thin transports over
+//!   it; neither holds business logic of its own.
+//! * [`client`] — a blocking [`Client`] speaking the JSON-line framing
+//!   with per-request ids, for tests, examples, and the `client`
+//!   subcommand.
+//!
+//! Adding a request type means: one `Request`/`Response` variant pair,
+//! one `Service::try_handle` arm, and (optionally) one legacy-shim arm —
+//! every transport picks it up for free. Adding a transport means
+//! speaking [`protocol`] at a `Service`; nothing else changes.
+
+pub mod client;
+pub mod protocol;
+pub mod service;
+
+pub use client::Client;
+pub use protocol::{
+    objective_name, parse_legacy, parse_objective, precision_wire_name,
+    ApiError, ErrorCode, ExperimentInfo, LegacyCommand, PlanGroup, Request,
+    Response, PROTOCOL_VERSION,
+};
+pub use service::{Service, POOL_STREAMS, SIM_STREAMS, SIZE_RANGE};

@@ -1,0 +1,1027 @@
+//! The versioned request/response wire protocol (DESIGN.md §6).
+//!
+//! One typed surface for every transport: the TCP serve loop, the CLI
+//! subcommands, and [`super::Client`] all speak [`Request`] and
+//! [`Response`]. On the wire a message is a single JSON object per line:
+//!
+//! ```text
+//! {"v":1,"id":7,"type":"sim","n":512,"precision":"fp8","streams":4}
+//! {"v":1,"id":7,"type":"sim","fairness":0.61,"l2_miss":0.18,...}
+//! ```
+//!
+//! Envelope rules (DESIGN.md §6.1):
+//! * `"v"` is mandatory and must equal [`PROTOCOL_VERSION`]; anything
+//!   else is rejected with [`ErrorCode::BadVersion`]. Adding a field is
+//!   a version bump; this module rejects unknown fields precisely so
+//!   that a v2 request can never be silently half-understood by a v1
+//!   server.
+//! * `"id"` is an optional nonnegative integer echoed verbatim on the
+//!   response, so clients can pipeline requests on one connection.
+//! * `"type"` selects the variant; remaining keys are the payload.
+//!   Unknown keys are rejected with [`ErrorCode::UnknownField`].
+//!
+//! Errors are themselves typed responses (`"type":"error"`) carrying a
+//! machine-readable [`ErrorCode`] plus a human message under `"error"`.
+//!
+//! The legacy whitespace text commands (`SIM`/`PLAN`/`SPARSITY`/`RUN`/
+//! `QUIT`) survive as [`parse_legacy`], a shim that desugars a text line
+//! into the same typed [`Request`]s — both framings produce
+//! byte-identical response lines (enforced by
+//! `tests/serve_integration.rs`).
+
+use crate::coordinator::Objective;
+use crate::isa::Precision;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Wire-format version. Bump on any schema change; servers reject every
+/// other version with [`ErrorCode::BadVersion`] (DESIGN.md §6.4).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Machine-readable error categories (DESIGN.md §6.3). `as_str` gives
+/// the wire spelling; the set is closed per protocol version.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// `"v"` missing or not [`PROTOCOL_VERSION`].
+    BadVersion,
+    /// Malformed envelope or payload (missing/mistyped field, bad JSON).
+    BadRequest,
+    /// `"type"` (or legacy command word) is not part of this protocol.
+    UnknownType,
+    /// A payload key this protocol version does not define.
+    UnknownField,
+    /// A well-typed value outside its accepted range.
+    BadRange,
+    /// `repro` asked for an experiment id the registry does not have.
+    UnknownExperiment,
+    /// `run` asked for an artifact entry the manifest does not have.
+    UnknownEntry,
+    /// The executor/runtime failed (missing artifacts, stub build, ...).
+    Runtime,
+}
+
+impl ErrorCode {
+    /// Every code, for exhaustive protocol tests.
+    pub const ALL: [ErrorCode; 8] = [
+        ErrorCode::BadVersion,
+        ErrorCode::BadRequest,
+        ErrorCode::UnknownType,
+        ErrorCode::UnknownField,
+        ErrorCode::BadRange,
+        ErrorCode::UnknownExperiment,
+        ErrorCode::UnknownEntry,
+        ErrorCode::Runtime,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadVersion => "bad_version",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownType => "unknown_type",
+            ErrorCode::UnknownField => "unknown_field",
+            ErrorCode::BadRange => "bad_range",
+            ErrorCode::UnknownExperiment => "unknown_experiment",
+            ErrorCode::UnknownEntry => "unknown_entry",
+            ErrorCode::Runtime => "runtime",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.as_str() == s)
+    }
+}
+
+/// A typed protocol error: code + human-readable message. Transports
+/// serialize it as a `Response::Error`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, message)
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Canonical lowercase wire spelling for a precision; `Precision::parse`
+/// accepts it back, so precision fields round-trip byte-identically.
+pub fn precision_wire_name(p: Precision) -> &'static str {
+    match p {
+        Precision::F64 => "fp64",
+        Precision::F32 => "fp32",
+        Precision::F16 => "fp16",
+        Precision::Bf16 => "bf16",
+        Precision::Fp8 => "fp8",
+        Precision::Bf8 => "bf8",
+    }
+}
+
+/// Wire spelling of a coordinator objective.
+pub fn objective_name(o: Objective) -> &'static str {
+    match o {
+        Objective::LatencySensitive => "latency",
+        Objective::ThroughputOriented => "throughput",
+        Objective::StrictIsolation => "isolation",
+    }
+}
+
+pub fn parse_objective(s: &str) -> Option<Objective> {
+    match s {
+        "latency" => Some(Objective::LatencySensitive),
+        "throughput" => Some(Objective::ThroughputOriented),
+        "isolation" => Some(Objective::StrictIsolation),
+        _ => None,
+    }
+}
+
+/// A typed request — the single front door to the system (DESIGN.md
+/// §6.2 lists the payload schema per variant).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Simulate `streams` concurrent FP-`precision` GEMMs of size `n`.
+    Sim { n: usize, precision: Precision, streams: usize },
+    /// Coordinator execution plan for a pool of `streams` GEMMs at
+    /// `precision` (the legacy text shim defaults it to FP8).
+    Plan {
+        objective: Objective,
+        streams: usize,
+        n: usize,
+        precision: Precision,
+    },
+    /// Context-dependent 2:4 sparsity decision + modeled speedups.
+    Sparsity { n: usize, streams: usize },
+    /// Execute one AOT'd artifact through the PJRT executor worker.
+    Run { entry: String },
+    /// Regenerate one paper table/figure (DESIGN.md §5 ids).
+    Repro { experiment: String },
+    /// Enumerate the experiment registry.
+    ListExperiments,
+    /// Dump the service's active configuration.
+    Config,
+}
+
+/// A typed response. Every variant maps 1:1 to a request type except
+/// [`Response::Error`], which any request can produce.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Sim {
+        makespan_ms: f64,
+        speedup_vs_serial: f64,
+        overlap_efficiency: f64,
+        fairness: f64,
+        l2_miss: f64,
+        lds_util: f64,
+    },
+    Plan {
+        objective: String,
+        sparse: bool,
+        groups: Vec<PlanGroup>,
+    },
+    Sparsity {
+        enable: bool,
+        reason: String,
+        isolated_speedup: f64,
+        concurrent_speedup: f64,
+    },
+    Run {
+        entry: String,
+        outputs: usize,
+        checksum: f64,
+        exec_ms: f64,
+    },
+    Repro {
+        experiment: String,
+        title: String,
+        report: Json,
+        rendered: String,
+    },
+    Experiments { experiments: Vec<ExperimentInfo> },
+    Config { config: Json },
+    Error { code: ErrorCode, message: String },
+}
+
+/// One scheduled group inside a `plan` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanGroup {
+    pub kernels: Vec<String>,
+    pub streams: usize,
+    pub expected_fairness: f64,
+    pub process_isolation: bool,
+}
+
+/// One registry entry inside an `experiments` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentInfo {
+    pub id: String,
+    pub title: String,
+    pub section: String,
+}
+
+/// Legacy text command, desugared (see [`parse_legacy`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LegacyCommand {
+    Quit,
+    Request(Request),
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn envelope_fields(id: Option<u64>) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![("v", Json::Num(PROTOCOL_VERSION as f64))];
+    if let Some(id) = id {
+        fields.push(("id", Json::Num(id as f64)));
+    }
+    fields
+}
+
+impl Request {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Request::Sim { .. } => "sim",
+            Request::Plan { .. } => "plan",
+            Request::Sparsity { .. } => "sparsity",
+            Request::Run { .. } => "run",
+            Request::Repro { .. } => "repro",
+            Request::ListExperiments => "list_experiments",
+            Request::Config => "config",
+        }
+    }
+
+    /// Encode as one wire object (the caller newline-frames it).
+    pub fn to_json(&self, id: Option<u64>) -> Json {
+        let mut fields = envelope_fields(id);
+        fields.push(("type", Json::Str(self.type_name().into())));
+        match self {
+            Request::Sim { n, precision, streams } => {
+                fields.push(("n", Json::Num(*n as f64)));
+                fields.push((
+                    "precision",
+                    Json::Str(precision_wire_name(*precision).into()),
+                ));
+                fields.push(("streams", Json::Num(*streams as f64)));
+            }
+            Request::Plan { objective, streams, n, precision } => {
+                fields.push((
+                    "objective",
+                    Json::Str(objective_name(*objective).into()),
+                ));
+                fields.push(("streams", Json::Num(*streams as f64)));
+                fields.push(("n", Json::Num(*n as f64)));
+                fields.push((
+                    "precision",
+                    Json::Str(precision_wire_name(*precision).into()),
+                ));
+            }
+            Request::Sparsity { n, streams } => {
+                fields.push(("n", Json::Num(*n as f64)));
+                fields.push(("streams", Json::Num(*streams as f64)));
+            }
+            Request::Run { entry } => {
+                fields.push(("entry", Json::Str(entry.clone())));
+            }
+            Request::Repro { experiment } => {
+                fields.push(("experiment", Json::Str(experiment.clone())));
+            }
+            Request::ListExperiments | Request::Config => {}
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode a wire object. On failure the envelope `id` is still
+    /// salvaged when possible, so transports can address the error reply.
+    pub fn from_json(
+        v: &Json,
+    ) -> Result<(Request, Option<u64>), (ApiError, Option<u64>)> {
+        let salvaged = salvage_id(v);
+        let (m, id, ty) =
+            envelope(v, "request").map_err(|e| (e, salvaged))?;
+        decode_request_payload(m, ty).map(|r| (r, id)).map_err(|e| (e, id))
+    }
+}
+
+fn decode_request_payload(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+) -> Result<Request, ApiError> {
+    match ty {
+        "sim" => {
+            check_env_fields(m, ty, &["n", "precision", "streams"])?;
+            Ok(Request::Sim {
+                n: usize_field(m, ty, "n")?,
+                precision: precision_field(m, ty)?,
+                streams: usize_field(m, ty, "streams")?,
+            })
+        }
+        "plan" => {
+            check_env_fields(
+                m,
+                ty,
+                &["objective", "streams", "n", "precision"],
+            )?;
+            let o = str_field(m, ty, "objective")?;
+            Ok(Request::Plan {
+                objective: parse_objective(o).ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "{ty}: bad objective {o:?} (want \
+                         latency|throughput|isolation)"
+                    ))
+                })?,
+                streams: usize_field(m, ty, "streams")?,
+                n: usize_field(m, ty, "n")?,
+                precision: precision_field(m, ty)?,
+            })
+        }
+        "sparsity" => {
+            check_env_fields(m, ty, &["n", "streams"])?;
+            Ok(Request::Sparsity {
+                n: usize_field(m, ty, "n")?,
+                streams: usize_field(m, ty, "streams")?,
+            })
+        }
+        "run" => {
+            check_env_fields(m, ty, &["entry"])?;
+            Ok(Request::Run { entry: str_field(m, ty, "entry")?.to_string() })
+        }
+        "repro" => {
+            check_env_fields(m, ty, &["experiment"])?;
+            Ok(Request::Repro {
+                experiment: str_field(m, ty, "experiment")?.to_string(),
+            })
+        }
+        "list_experiments" => {
+            check_env_fields(m, ty, &[])?;
+            Ok(Request::ListExperiments)
+        }
+        "config" => {
+            check_env_fields(m, ty, &[])?;
+            Ok(Request::Config)
+        }
+        other => Err(ApiError::new(
+            ErrorCode::UnknownType,
+            format!("unknown request type {other:?}"),
+        )),
+    }
+}
+
+impl Response {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Response::Sim { .. } => "sim",
+            Response::Plan { .. } => "plan",
+            Response::Sparsity { .. } => "sparsity",
+            Response::Run { .. } => "run",
+            Response::Repro { .. } => "repro",
+            Response::Experiments { .. } => "experiments",
+            Response::Config { .. } => "config",
+            Response::Error { .. } => "error",
+        }
+    }
+
+    /// Encode as one wire object, echoing the request's `id`.
+    pub fn to_json(&self, id: Option<u64>) -> Json {
+        let mut fields = envelope_fields(id);
+        fields.push(("type", Json::Str(self.type_name().into())));
+        match self {
+            Response::Sim {
+                makespan_ms,
+                speedup_vs_serial,
+                overlap_efficiency,
+                fairness,
+                l2_miss,
+                lds_util,
+            } => {
+                fields.push(("makespan_ms", Json::Num(*makespan_ms)));
+                fields.push((
+                    "speedup_vs_serial",
+                    Json::Num(*speedup_vs_serial),
+                ));
+                fields.push((
+                    "overlap_efficiency",
+                    Json::Num(*overlap_efficiency),
+                ));
+                fields.push(("fairness", Json::Num(*fairness)));
+                fields.push(("l2_miss", Json::Num(*l2_miss)));
+                fields.push(("lds_util", Json::Num(*lds_util)));
+            }
+            Response::Plan { objective, sparse, groups } => {
+                fields.push(("objective", Json::Str(objective.clone())));
+                fields.push(("sparse", Json::Bool(*sparse)));
+                fields.push((
+                    "groups",
+                    Json::Arr(
+                        groups
+                            .iter()
+                            .map(|g| {
+                                Json::obj(vec![
+                                    (
+                                        "kernels",
+                                        Json::Arr(
+                                            g.kernels
+                                                .iter()
+                                                .map(|k| {
+                                                    Json::Str(k.clone())
+                                                })
+                                                .collect(),
+                                        ),
+                                    ),
+                                    (
+                                        "streams",
+                                        Json::Num(g.streams as f64),
+                                    ),
+                                    (
+                                        "expected_fairness",
+                                        Json::Num(g.expected_fairness),
+                                    ),
+                                    (
+                                        "process_isolation",
+                                        Json::Bool(g.process_isolation),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            Response::Sparsity {
+                enable,
+                reason,
+                isolated_speedup,
+                concurrent_speedup,
+            } => {
+                fields.push(("enable", Json::Bool(*enable)));
+                fields.push(("reason", Json::Str(reason.clone())));
+                fields.push((
+                    "isolated_speedup",
+                    Json::Num(*isolated_speedup),
+                ));
+                fields.push((
+                    "concurrent_speedup",
+                    Json::Num(*concurrent_speedup),
+                ));
+            }
+            Response::Run { entry, outputs, checksum, exec_ms } => {
+                fields.push(("entry", Json::Str(entry.clone())));
+                fields.push(("outputs", Json::Num(*outputs as f64)));
+                fields.push(("checksum", Json::Num(*checksum)));
+                fields.push(("exec_ms", Json::Num(*exec_ms)));
+            }
+            Response::Repro { experiment, title, report, rendered } => {
+                fields.push(("experiment", Json::Str(experiment.clone())));
+                fields.push(("title", Json::Str(title.clone())));
+                fields.push(("report", report.clone()));
+                fields.push(("rendered", Json::Str(rendered.clone())));
+            }
+            Response::Experiments { experiments } => {
+                fields.push((
+                    "experiments",
+                    Json::Arr(
+                        experiments
+                            .iter()
+                            .map(|e| {
+                                Json::obj(vec![
+                                    ("id", Json::Str(e.id.clone())),
+                                    ("title", Json::Str(e.title.clone())),
+                                    (
+                                        "section",
+                                        Json::Str(e.section.clone()),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            Response::Config { config } => {
+                fields.push(("config", config.clone()));
+            }
+            Response::Error { code, message } => {
+                fields.push(("code", Json::Str(code.as_str().into())));
+                fields.push(("error", Json::Str(message.clone())));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode a wire object (client side). Strict: unknown fields and
+    /// foreign versions are rejected, mirroring request decoding.
+    pub fn from_json(v: &Json) -> Result<(Response, Option<u64>), ApiError> {
+        let (m, id, ty) = envelope(v, "response")?;
+        let resp = decode_response_payload(m, ty)?;
+        Ok((resp, id))
+    }
+}
+
+impl From<ApiError> for Response {
+    fn from(e: ApiError) -> Response {
+        Response::Error { code: e.code, message: e.message }
+    }
+}
+
+fn decode_response_payload(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+) -> Result<Response, ApiError> {
+    match ty {
+        "sim" => {
+            check_env_fields(
+                m,
+                ty,
+                &[
+                    "makespan_ms",
+                    "speedup_vs_serial",
+                    "overlap_efficiency",
+                    "fairness",
+                    "l2_miss",
+                    "lds_util",
+                ],
+            )?;
+            Ok(Response::Sim {
+                makespan_ms: f64_field(m, ty, "makespan_ms")?,
+                speedup_vs_serial: f64_field(m, ty, "speedup_vs_serial")?,
+                overlap_efficiency: f64_field(m, ty, "overlap_efficiency")?,
+                fairness: f64_field(m, ty, "fairness")?,
+                l2_miss: f64_field(m, ty, "l2_miss")?,
+                lds_util: f64_field(m, ty, "lds_util")?,
+            })
+        }
+        "plan" => {
+            check_env_fields(m, ty, &["objective", "sparse", "groups"])?;
+            let groups = arr_field(m, ty, "groups")?
+                .iter()
+                .map(|g| decode_plan_group(g))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Response::Plan {
+                objective: str_field(m, ty, "objective")?.to_string(),
+                sparse: bool_field(m, ty, "sparse")?,
+                groups,
+            })
+        }
+        "sparsity" => {
+            check_env_fields(
+                m,
+                ty,
+                &["enable", "reason", "isolated_speedup",
+                  "concurrent_speedup"],
+            )?;
+            Ok(Response::Sparsity {
+                enable: bool_field(m, ty, "enable")?,
+                reason: str_field(m, ty, "reason")?.to_string(),
+                isolated_speedup: f64_field(m, ty, "isolated_speedup")?,
+                concurrent_speedup: f64_field(m, ty, "concurrent_speedup")?,
+            })
+        }
+        "run" => {
+            check_env_fields(
+                m,
+                ty,
+                &["entry", "outputs", "checksum", "exec_ms"],
+            )?;
+            Ok(Response::Run {
+                entry: str_field(m, ty, "entry")?.to_string(),
+                outputs: usize_field(m, ty, "outputs")?,
+                checksum: f64_field(m, ty, "checksum")?,
+                exec_ms: f64_field(m, ty, "exec_ms")?,
+            })
+        }
+        "repro" => {
+            check_env_fields(
+                m,
+                ty,
+                &["experiment", "title", "report", "rendered"],
+            )?;
+            Ok(Response::Repro {
+                experiment: str_field(m, ty, "experiment")?.to_string(),
+                title: str_field(m, ty, "title")?.to_string(),
+                report: any_field(m, ty, "report")?.clone(),
+                rendered: str_field(m, ty, "rendered")?.to_string(),
+            })
+        }
+        "experiments" => {
+            check_env_fields(m, ty, &["experiments"])?;
+            let experiments = arr_field(m, ty, "experiments")?
+                .iter()
+                .map(|e| decode_experiment_info(e))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Response::Experiments { experiments })
+        }
+        "config" => {
+            check_env_fields(m, ty, &["config"])?;
+            Ok(Response::Config { config: any_field(m, ty, "config")?.clone() })
+        }
+        "error" => {
+            check_env_fields(m, ty, &["code", "error"])?;
+            let code = str_field(m, ty, "code")?;
+            Ok(Response::Error {
+                code: ErrorCode::parse(code).ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "error: unknown error code {code:?}"
+                    ))
+                })?,
+                message: str_field(m, ty, "error")?.to_string(),
+            })
+        }
+        other => Err(ApiError::new(
+            ErrorCode::UnknownType,
+            format!("unknown response type {other:?}"),
+        )),
+    }
+}
+
+fn decode_plan_group(v: &Json) -> Result<PlanGroup, ApiError> {
+    let m = obj(v, "plan group")?;
+    check_obj_fields(
+        m,
+        "plan group",
+        &["kernels", "streams", "expected_fairness", "process_isolation"],
+    )?;
+    let kernels = arr_field(m, "plan group", "kernels")?
+        .iter()
+        .map(|k| {
+            k.as_str().map(str::to_string).ok_or_else(|| {
+                ApiError::bad_request("plan group: kernels must be strings")
+            })
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(PlanGroup {
+        kernels,
+        streams: usize_field(m, "plan group", "streams")?,
+        expected_fairness: f64_field(m, "plan group", "expected_fairness")?,
+        process_isolation: bool_field(m, "plan group", "process_isolation")?,
+    })
+}
+
+fn decode_experiment_info(v: &Json) -> Result<ExperimentInfo, ApiError> {
+    let m = obj(v, "experiment entry")?;
+    check_obj_fields(m, "experiment entry", &["id", "title", "section"])?;
+    Ok(ExperimentInfo {
+        id: str_field(m, "experiment entry", "id")?.to_string(),
+        title: str_field(m, "experiment entry", "title")?.to_string(),
+        section: str_field(m, "experiment entry", "section")?.to_string(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Envelope / field helpers
+// ---------------------------------------------------------------------
+
+fn obj<'a>(
+    v: &'a Json,
+    what: &str,
+) -> Result<&'a BTreeMap<String, Json>, ApiError> {
+    match v {
+        Json::Obj(m) => Ok(m),
+        _ => Err(ApiError::bad_request(format!(
+            "{what} must be a JSON object"
+        ))),
+    }
+}
+
+fn envelope<'a>(
+    v: &'a Json,
+    what: &str,
+) -> Result<(&'a BTreeMap<String, Json>, Option<u64>, &'a str), ApiError> {
+    let m = obj(v, what)?;
+    match m.get("v") {
+        Some(Json::Num(x)) if *x == PROTOCOL_VERSION as f64 => {}
+        Some(Json::Num(x)) => {
+            return Err(ApiError::new(
+                ErrorCode::BadVersion,
+                format!(
+                    "unsupported protocol version {x} (this build speaks \
+                     v{PROTOCOL_VERSION})"
+                ),
+            ))
+        }
+        Some(_) => {
+            return Err(ApiError::new(
+                ErrorCode::BadVersion,
+                "field \"v\" must be a number",
+            ))
+        }
+        None => {
+            return Err(ApiError::new(
+                ErrorCode::BadVersion,
+                format!(
+                    "missing protocol version field \"v\" (expected \
+                     {PROTOCOL_VERSION})"
+                ),
+            ))
+        }
+    }
+    let id = match m.get("id") {
+        None => None,
+        Some(Json::Num(x))
+            if x.fract() == 0.0 && *x >= 0.0 && *x <= 9.0e15 =>
+        {
+            Some(*x as u64)
+        }
+        Some(_) => {
+            return Err(ApiError::bad_request(
+                "field \"id\" must be a nonnegative integer",
+            ))
+        }
+    };
+    let ty = match m.get("type") {
+        Some(Json::Str(s)) => s.as_str(),
+        Some(_) => {
+            return Err(ApiError::bad_request(
+                "field \"type\" must be a string",
+            ))
+        }
+        None => {
+            return Err(ApiError::bad_request(format!(
+                "{what}: missing field \"type\""
+            )))
+        }
+    };
+    Ok((m, id, ty))
+}
+
+fn salvage_id(v: &Json) -> Option<u64> {
+    match v.get("id") {
+        Some(Json::Num(x))
+            if x.fract() == 0.0 && *x >= 0.0 && *x <= 9.0e15 =>
+        {
+            Some(*x as u64)
+        }
+        _ => None,
+    }
+}
+
+/// Reject payload keys outside `allowed` (envelope keys exempt).
+fn check_env_fields(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+    allowed: &[&str],
+) -> Result<(), ApiError> {
+    for k in m.keys() {
+        let k = k.as_str();
+        if k != "v" && k != "id" && k != "type" && !allowed.contains(&k) {
+            return Err(ApiError::new(
+                ErrorCode::UnknownField,
+                format!("{ty}: unknown field {k:?}"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Reject keys outside `allowed` in a nested (non-envelope) object.
+fn check_obj_fields(
+    m: &BTreeMap<String, Json>,
+    what: &str,
+    allowed: &[&str],
+) -> Result<(), ApiError> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(ApiError::new(
+                ErrorCode::UnknownField,
+                format!("{what}: unknown field {k:?}"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn any_field<'a>(
+    m: &'a BTreeMap<String, Json>,
+    ty: &str,
+    key: &str,
+) -> Result<&'a Json, ApiError> {
+    m.get(key).ok_or_else(|| {
+        ApiError::bad_request(format!("{ty}: missing field {key:?}"))
+    })
+}
+
+fn f64_field(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+    key: &str,
+) -> Result<f64, ApiError> {
+    match any_field(m, ty, key)? {
+        Json::Num(x) => Ok(*x),
+        _ => Err(ApiError::bad_request(format!(
+            "{ty}: field {key:?} must be a number"
+        ))),
+    }
+}
+
+fn usize_field(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+    key: &str,
+) -> Result<usize, ApiError> {
+    match any_field(m, ty, key)? {
+        Json::Num(x)
+            if x.fract() == 0.0 && *x >= 0.0 && *x <= 9.0e15 =>
+        {
+            Ok(*x as usize)
+        }
+        _ => Err(ApiError::bad_request(format!(
+            "{ty}: field {key:?} must be a nonnegative integer"
+        ))),
+    }
+}
+
+fn bool_field(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+    key: &str,
+) -> Result<bool, ApiError> {
+    match any_field(m, ty, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(ApiError::bad_request(format!(
+            "{ty}: field {key:?} must be a boolean"
+        ))),
+    }
+}
+
+fn str_field<'a>(
+    m: &'a BTreeMap<String, Json>,
+    ty: &str,
+    key: &str,
+) -> Result<&'a str, ApiError> {
+    match any_field(m, ty, key)? {
+        Json::Str(s) => Ok(s.as_str()),
+        _ => Err(ApiError::bad_request(format!(
+            "{ty}: field {key:?} must be a string"
+        ))),
+    }
+}
+
+fn arr_field<'a>(
+    m: &'a BTreeMap<String, Json>,
+    ty: &str,
+    key: &str,
+) -> Result<&'a [Json], ApiError> {
+    match any_field(m, ty, key)? {
+        Json::Arr(a) => Ok(a.as_slice()),
+        _ => Err(ApiError::bad_request(format!(
+            "{ty}: field {key:?} must be an array"
+        ))),
+    }
+}
+
+fn precision_field(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+) -> Result<Precision, ApiError> {
+    let s = str_field(m, ty, "precision")?;
+    Precision::parse(s).ok_or_else(|| {
+        ApiError::bad_request(format!("{ty}: bad precision {s:?}"))
+    })
+}
+
+// ---------------------------------------------------------------------
+// Legacy text shim
+// ---------------------------------------------------------------------
+
+/// Desugar one legacy text line (`SIM 512 fp8 4`, ...) into a typed
+/// request. The shim preserves the PR-1 *command* framing only; the
+/// response is the v1 envelope (so e.g. a `PLAN` reply now carries
+/// structured `groups` objects plus `v`/`type` keys, not the pre-API
+/// flat arrays). The serve loop answers a desugared request
+/// byte-identically to its JSON form (without an `id`).
+pub fn parse_legacy(line: &str) -> Result<LegacyCommand, ApiError> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    let req = match parts.as_slice() {
+        ["QUIT"] | ["quit"] => return Ok(LegacyCommand::Quit),
+        ["SIM", n, prec, streams] => Request::Sim {
+            n: parse_count(n, "size")?,
+            precision: Precision::parse(prec).ok_or_else(|| {
+                ApiError::bad_request(format!("bad precision {prec:?}"))
+            })?,
+            streams: parse_count(streams, "streams")?,
+        },
+        ["PLAN", objective, streams, n] => Request::Plan {
+            objective: parse_objective(objective).ok_or_else(|| {
+                ApiError::bad_request(format!("bad objective {objective:?}"))
+            })?,
+            streams: parse_count(streams, "streams")?,
+            n: parse_count(n, "size")?,
+            // The legacy command has no precision slot; FP8 is the
+            // paper's serving default.
+            precision: Precision::Fp8,
+        },
+        ["SPARSITY", n, streams] => Request::Sparsity {
+            n: parse_count(n, "size")?,
+            streams: parse_count(streams, "streams")?,
+        },
+        ["RUN", entry] => Request::Run { entry: entry.to_string() },
+        ["LIST"] => Request::ListExperiments,
+        ["CONFIG"] => Request::Config,
+        _ => {
+            return Err(ApiError::new(
+                ErrorCode::UnknownType,
+                "unknown command (try SIM/PLAN/SPARSITY/RUN/LIST/CONFIG/\
+                 QUIT or a JSON request line)",
+            ))
+        }
+    };
+    Ok(LegacyCommand::Request(req))
+}
+
+fn parse_count(s: &str, what: &str) -> Result<usize, ApiError> {
+    s.parse().map_err(|_| {
+        ApiError::bad_request(format!("bad {what}: {s:?}"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for c in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+    }
+
+    #[test]
+    fn precision_wire_names_roundtrip() {
+        for p in [
+            Precision::F64,
+            Precision::F32,
+            Precision::F16,
+            Precision::Bf16,
+            Precision::Fp8,
+            Precision::Bf8,
+        ] {
+            assert_eq!(Precision::parse(precision_wire_name(p)), Some(p));
+        }
+    }
+
+    #[test]
+    fn request_envelope_carries_version_and_id() {
+        let req = Request::Sim {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 4,
+        };
+        let v = req.to_json(Some(7));
+        assert_eq!(v.get("v"), Some(&Json::Num(1.0)));
+        assert_eq!(v.get("id"), Some(&Json::Num(7.0)));
+        assert_eq!(v.get("type").unwrap().as_str(), Some("sim"));
+        let (back, id) = Request::from_json(&v).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(id, Some(7));
+    }
+
+    #[test]
+    fn legacy_lines_desugar_to_typed_requests() {
+        assert_eq!(
+            parse_legacy("SIM 512 fp8 4").unwrap(),
+            LegacyCommand::Request(Request::Sim {
+                n: 512,
+                precision: Precision::Fp8,
+                streams: 4,
+            })
+        );
+        assert_eq!(parse_legacy("quit").unwrap(), LegacyCommand::Quit);
+        let err = parse_legacy("SIM abc fp8 4").unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("bad size"));
+        let err = parse_legacy("FROB 1").unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownType);
+    }
+
+    #[test]
+    fn unknown_fields_and_versions_are_typed_errors() {
+        let v = Json::parse(
+            r#"{"v":1,"type":"sim","n":512,"precision":"fp8",
+                "streams":4,"bogus":1}"#,
+        )
+        .unwrap();
+        let (err, _) = Request::from_json(&v).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownField);
+        assert!(err.message.contains("bogus"));
+
+        let v = Json::parse(r#"{"v":2,"id":9,"type":"config"}"#).unwrap();
+        let (err, id) = Request::from_json(&v).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadVersion);
+        assert_eq!(id, Some(9), "id must be salvaged for the error reply");
+
+        let v = Json::parse(r#"{"type":"config"}"#).unwrap();
+        let (err, _) = Request::from_json(&v).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadVersion);
+    }
+}

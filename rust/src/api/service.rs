@@ -1,0 +1,428 @@
+//! The service core: every transport (CLI, TCP serve, client examples)
+//! routes typed [`Request`]s through one [`Service`].
+//!
+//! The service owns the shared immutable [`Config`] (`Arc`, so
+//! connection threads scale across cores the way the paper's ACEs scale
+//! independent streams) and the one non-`Sync` resource — the PJRT
+//! executor — isolated on a single worker thread behind an mpsc channel.
+//! `run` requests serialize through that worker (like launches through a
+//! command lane) without ever blocking the simulator paths.
+//!
+//! Input validation is typed: out-of-range values produce
+//! [`ErrorCode::BadRange`] errors naming the accepted range (DESIGN.md
+//! §6.3) instead of the pre-API behavior of silently clamping stream
+//! counts and answering a different question.
+
+use super::protocol::{
+    objective_name, ApiError, ErrorCode, ExperimentInfo, PlanGroup, Request,
+    Response,
+};
+use crate::config::Config;
+use crate::coordinator::{decide_sparsity, Coordinator};
+use crate::experiments;
+use crate::isa::Precision;
+use crate::metrics::fairness;
+use crate::runtime::manifest::EntrySpec;
+use crate::runtime::{Executor, Manifest};
+use crate::sim::{ConcurrencyProfile, Engine, KernelDesc, SparsityMode};
+use crate::sparsity::SpeedupModel;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Accepted `streams` range for `sim` requests (the DES models the
+/// MI300A's hardware queues; beyond 16 the model is uncalibrated).
+pub const SIM_STREAMS: (usize, usize) = (1, 16);
+/// Accepted `streams` range for `plan` and `sparsity` requests.
+pub const POOL_STREAMS: (usize, usize) = (1, 64);
+/// Accepted GEMM size range for `sim`/`plan`/`sparsity` requests.
+pub const SIZE_RANGE: (usize, usize) = (1, 16384);
+
+/// A queued artifact execution: run `entry`, reply on `reply`.
+struct ExecJob {
+    entry: String,
+    reply: mpsc::Sender<Result<RunOutcome, ApiError>>,
+}
+
+struct RunOutcome {
+    entry: String,
+    outputs: usize,
+    checksum: f64,
+    exec_ms: f64,
+}
+
+/// The single front door to the system. `Send + Sync`: share it behind
+/// an `Arc` across connection threads.
+pub struct Service {
+    cfg: Arc<Config>,
+    artifacts_dir: PathBuf,
+    // The worker-channel sender lives behind a Mutex only to guarantee
+    // `Sync` on every toolchain; senders are cloned out per request.
+    exec_tx: Mutex<mpsc::Sender<ExecJob>>,
+}
+
+impl Service {
+    /// Service over the default artifacts directory.
+    pub fn new(cfg: Config) -> Service {
+        Service::with_artifacts_dir(cfg, Manifest::default_dir())
+    }
+
+    /// Service executing artifacts from `artifacts_dir`. Spawns the
+    /// executor worker thread; it exits when the service is dropped.
+    pub fn with_artifacts_dir(cfg: Config, artifacts_dir: PathBuf) -> Service {
+        let (tx, rx) = mpsc::channel::<ExecJob>();
+        let worker_dir = artifacts_dir.clone();
+        thread::Builder::new()
+            .name("api-exec-worker".into())
+            .spawn(move || exec_worker(&worker_dir, rx))
+            .expect("spawn executor worker");
+        Service {
+            cfg: Arc::new(cfg),
+            artifacts_dir,
+            exec_tx: Mutex::new(tx),
+        }
+    }
+
+    /// The active (immutable) configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load the artifact manifest (introspection; no execution).
+    pub fn load_manifest(&self) -> Result<Manifest, String> {
+        Manifest::load(&self.artifacts_dir)
+    }
+
+    /// Handle one typed request. Never panics on bad input: every
+    /// failure is a typed [`Response::Error`].
+    pub fn handle(&self, req: &Request) -> Response {
+        match self.try_handle(req) {
+            Ok(resp) => resp,
+            Err(e) => Response::from(e),
+        }
+    }
+
+    /// Run the whole experiment registry with up to `workers` driver
+    /// threads (the CLI's `repro all`; reports come back in registry
+    /// order, byte-identical to a serial run).
+    pub fn repro_all(
+        &self,
+        workers: usize,
+    ) -> Vec<experiments::ExperimentReport> {
+        experiments::run_all(&self.cfg, workers)
+    }
+
+    fn try_handle(&self, req: &Request) -> Result<Response, ApiError> {
+        match req {
+            Request::Sim { n, precision, streams } => {
+                let n = check_range("n", *n, SIZE_RANGE)?;
+                let streams = check_range("streams", *streams, SIM_STREAMS)?;
+                let engine = Engine::new(&self.cfg, ConcurrencyProfile::ace());
+                let ks =
+                    vec![KernelDesc::gemm(n, *precision).with_iters(50); streams];
+                // One concurrent simulation per request: the speedup
+                // derives from this run plus the (much cheaper) serial
+                // solo makespans instead of re-simulating the set.
+                let run = engine.run(&ks, self.cfg.seed);
+                let speedup = engine.serial_makespan_ns(&ks, self.cfg.seed)
+                    / run.makespan_ns;
+                Ok(Response::Sim {
+                    makespan_ms: run.makespan_ns / 1e6,
+                    speedup_vs_serial: speedup,
+                    overlap_efficiency: run.overlap_efficiency,
+                    fairness: fairness(&run.per_stream_totals()),
+                    l2_miss: run.l2_miss[0],
+                    lds_util: run.lds_util,
+                })
+            }
+            Request::Plan { objective, streams, n, precision } => {
+                let streams = check_range("streams", *streams, POOL_STREAMS)?;
+                let n = check_range("n", *n, SIZE_RANGE)?;
+                let pool = vec![
+                    KernelDesc::gemm(n, *precision).with_iters(100);
+                    streams
+                ];
+                let coord =
+                    Coordinator::new(self.cfg.as_ref().clone(), *objective);
+                let plan = coord.plan(&pool, true);
+                Ok(Response::Plan {
+                    objective: objective_name(*objective).to_string(),
+                    sparse: plan.groups.iter().any(|g| {
+                        g.kernels.iter().any(|k| k.sparsity.is_sparse())
+                    }),
+                    groups: plan
+                        .groups
+                        .iter()
+                        .map(|g| PlanGroup {
+                            kernels: g
+                                .kernels
+                                .iter()
+                                .map(|k| k.label())
+                                .collect(),
+                            streams: g.streams,
+                            expected_fairness: g.expected_fairness,
+                            process_isolation: g.process_isolation,
+                        })
+                        .collect(),
+                })
+            }
+            Request::Sparsity { n, streams } => {
+                let n = check_range("n", *n, SIZE_RANGE)?;
+                let streams = check_range("streams", *streams, POOL_STREAMS)?;
+                let k = KernelDesc::gemm(n, Precision::Fp8);
+                let d = decide_sparsity(&k, streams, true);
+                let model = SpeedupModel::new(&self.cfg);
+                Ok(Response::Sparsity {
+                    enable: d.enable,
+                    reason: format!("{:?}", d.reason),
+                    isolated_speedup: model
+                        .isolated(&k, SparsityMode::SparseLhs)
+                        .speedup(),
+                    concurrent_speedup: model
+                        .concurrent_per_stream(&k, streams.max(2)),
+                })
+            }
+            Request::Run { entry } => {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                let sender = self
+                    .exec_tx
+                    .lock()
+                    .map_err(|_| {
+                        ApiError::new(
+                            ErrorCode::Runtime,
+                            "executor worker lock poisoned",
+                        )
+                    })?
+                    .clone();
+                sender
+                    .send(ExecJob { entry: entry.clone(), reply: reply_tx })
+                    .map_err(|_| {
+                        ApiError::new(
+                            ErrorCode::Runtime,
+                            "executor worker unavailable",
+                        )
+                    })?;
+                let outcome = reply_rx.recv().map_err(|_| {
+                    ApiError::new(
+                        ErrorCode::Runtime,
+                        "executor worker dropped",
+                    )
+                })??;
+                Ok(Response::Run {
+                    entry: outcome.entry,
+                    outputs: outcome.outputs,
+                    checksum: outcome.checksum,
+                    exec_ms: outcome.exec_ms,
+                })
+            }
+            Request::Repro { experiment } => {
+                let spec =
+                    experiments::spec(experiment).ok_or_else(|| {
+                        ApiError::new(
+                            ErrorCode::UnknownExperiment,
+                            format!(
+                                "unknown experiment {experiment:?} (ask \
+                                 list_experiments for the registry)"
+                            ),
+                        )
+                    })?;
+                let report = (spec.runner)(&self.cfg);
+                Ok(Response::Repro {
+                    experiment: spec.id.to_string(),
+                    title: report.title.clone(),
+                    report: report.json.clone(),
+                    rendered: report.render(),
+                })
+            }
+            Request::ListExperiments => Ok(Response::Experiments {
+                experiments: experiments::REGISTRY
+                    .iter()
+                    .map(|s| ExperimentInfo {
+                        id: s.id.to_string(),
+                        title: s.title.to_string(),
+                        section: s.section.to_string(),
+                    })
+                    .collect(),
+            }),
+            Request::Config => {
+                Ok(Response::Config { config: self.cfg.to_json() })
+            }
+        }
+    }
+}
+
+fn check_range(
+    what: &str,
+    v: usize,
+    (lo, hi): (usize, usize),
+) -> Result<usize, ApiError> {
+    if v < lo || v > hi {
+        return Err(ApiError::new(
+            ErrorCode::BadRange,
+            format!("{what} must be in {lo}..={hi} (got {v})"),
+        ));
+    }
+    Ok(v)
+}
+
+/// The executor worker: owns the (lazily created) PJRT executor for the
+/// service lifetime and services `run` requests one at a time. Exits
+/// when the service (the last sender) is dropped.
+fn exec_worker(dir: &Path, rx: mpsc::Receiver<ExecJob>) {
+    let mut exec: Option<Executor> = None;
+    while let Ok(job) = rx.recv() {
+        let result = run_artifact(dir, &mut exec, &job.entry);
+        // A dropped reply sender just means the requester went away.
+        let _ = job.reply.send(result);
+    }
+}
+
+/// Execute one artifact with the deterministic input pattern. This is
+/// the one place artifact-run logic lives; the CLI `run` subcommand and
+/// the socket `run` request both land here.
+fn run_artifact(
+    dir: &Path,
+    exec: &mut Option<Executor>,
+    entry: &str,
+) -> Result<RunOutcome, ApiError> {
+    if exec.is_none() {
+        *exec = Some(Executor::new(dir).map_err(|e| {
+            ApiError::new(
+                ErrorCode::Runtime,
+                format!("{e} (run `make artifacts` first)"),
+            )
+        })?);
+    }
+    let exec = exec.as_mut().unwrap();
+    let spec = exec
+        .manifest
+        .get(entry)
+        .ok_or_else(|| {
+            ApiError::new(
+                ErrorCode::UnknownEntry,
+                format!("unknown entry {entry:?} (see `mi300a-char list`)"),
+            )
+        })?
+        .clone();
+    let inputs = deterministic_inputs(&spec);
+    let t0 = std::time::Instant::now();
+    let out = exec
+        .run_f32(entry, &inputs)
+        .map_err(|e| ApiError::new(ErrorCode::Runtime, e.to_string()))?;
+    Ok(RunOutcome {
+        entry: entry.to_string(),
+        outputs: out.len(),
+        checksum: out.iter().map(|&v| v as f64).sum(),
+        exec_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Deterministic inputs for an artifact entry — the same pattern the
+/// golden tests use: input `i`, element `j` = `((j mod (13+i)) - 6) / 3`.
+pub fn deterministic_inputs(spec: &EntrySpec) -> Vec<Vec<f32>> {
+    spec.inputs
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            (0..t.elements())
+                .map(|j| ((j % (13 + i)) as f32 - 6.0) / 3.0)
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> Service {
+        Service::new(Config::mi300a())
+    }
+
+    #[test]
+    fn sim_answers_with_physical_invariants() {
+        let s = svc();
+        match s.handle(&Request::Sim {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 4,
+        }) {
+            Response::Sim { speedup_vs_serial, fairness, .. } => {
+                assert!(
+                    speedup_vs_serial > 1.0 && speedup_vs_serial < 4.0,
+                    "speedup {speedup_vs_serial}"
+                );
+                assert!((0.0..=1.0).contains(&fairness));
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_range_streams_is_a_typed_range_error_not_a_clamp() {
+        let s = svc();
+        match s.handle(&Request::Sim {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 32,
+        }) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRange);
+                assert!(message.contains("1..=16"), "{message}");
+                assert!(message.contains("32"), "{message}");
+            }
+            other => panic!("expected a range error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_is_typed() {
+        match svc().handle(&Request::Repro { experiment: "fig99".into() }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::UnknownExperiment)
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn list_experiments_mirrors_the_registry() {
+        match svc().handle(&Request::ListExperiments) {
+            Response::Experiments { experiments } => {
+                assert_eq!(experiments.len(), experiments::REGISTRY.len());
+                assert_eq!(experiments[0].id, "table1");
+                assert!(!experiments[0].title.is_empty());
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn config_response_matches_the_active_config() {
+        let s = svc();
+        match s.handle(&Request::Config) {
+            Response::Config { config } => {
+                assert_eq!(config, s.config().to_json())
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_without_artifacts_is_a_typed_runtime_error() {
+        let dir = std::env::temp_dir().join("mi300a_api_service_no_artifacts");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = Service::with_artifacts_dir(Config::mi300a(), dir);
+        match s.handle(&Request::Run { entry: "gemm_fp8_128".into() }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::Runtime)
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+}

@@ -3,7 +3,7 @@
 //!
 //! Configs load from TOML (subset, see [`toml`]) or JSON files and can be
 //! overridden field-by-field from the CLI. `Config::default()` is the
-//! calibrated MI300A model (paper Table 1 topology + DESIGN.md §6
+//! calibrated MI300A model (paper Table 1 topology + DESIGN.md §7
 //! calibration policy); every constant is documented with the paper
 //! artifact it anchors.
 
@@ -83,7 +83,7 @@ config_struct! {
 }
 
 config_struct! {
-    /// Calibration constants for the execution-cost model (DESIGN.md §6).
+    /// Calibration constants for the execution-cost model (DESIGN.md §7).
     ///
     /// `issue_eff_*`: effective independent MFMA chains per wavefront in
     /// the paper's Fig-2 microbenchmark (per-instruction interval =

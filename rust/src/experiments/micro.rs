@@ -230,7 +230,7 @@ pub fn table3(cfg: &Config) -> ExperimentReport {
         notes: vec![
             format!("worst deviation from Table 3: {:.2}%", worst_dev * 100.0),
             "Table 3 values are the simulator's calibration inputs \
-             (DESIGN.md §6); this driver validates the measurement path \
+             (DESIGN.md §7); this driver validates the measurement path \
              recovers them through the dependency-chain harness".into(),
         ],
         json: Json::Arr(json_rows),

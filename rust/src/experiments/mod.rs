@@ -46,47 +46,151 @@ impl ExperimentReport {
     }
 }
 
-/// All experiment ids in paper order.
-pub const ALL_IDS: &[&str] = &[
-    "table1", "table2", "fig2", "fig3", "table3", "fig4", "fig5", "fig6",
-    "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "fig15", "fig16",
+/// One registry entry: everything the system needs to know about an
+/// experiment besides its driver output. `ListExperiments`, `repro`,
+/// `run_all`, and the benches all consume this table — adding an
+/// experiment is one new row (plus its driver).
+pub struct ExperimentSpec {
+    /// Stable id (`repro <id>`, report filenames, bench labels).
+    pub id: &'static str,
+    /// Human title; must match the driver's `ExperimentReport::title`.
+    pub title: &'static str,
+    /// Paper section the artifact reproduces.
+    pub section: &'static str,
+    /// The driver regenerating the artifact from the simulator.
+    pub runner: fn(&Config) -> ExperimentReport,
+}
+
+/// Every experiment, in paper order (the DESIGN.md §5 index is the
+/// prose version of this table).
+pub const REGISTRY: &[ExperimentSpec] = &[
+    ExperimentSpec {
+        id: "table1",
+        title: "System configuration",
+        section: "§4",
+        runner: micro::table1,
+    },
+    ExperimentSpec {
+        id: "table2",
+        title: "Microbenchmark classes",
+        section: "§4",
+        runner: micro::table2,
+    },
+    ExperimentSpec {
+        id: "fig2",
+        title: "FP8 matrix-core occupancy scaling",
+        section: "§5",
+        runner: micro::fig2,
+    },
+    ExperimentSpec {
+        id: "fig3",
+        title: "Matrix shape effects",
+        section: "§5",
+        runner: micro::fig3,
+    },
+    ExperimentSpec {
+        id: "table3",
+        title: "MFMA opcode coverage and baseline latency",
+        section: "§5",
+        runner: micro::table3,
+    },
+    ExperimentSpec {
+        id: "fig4",
+        title: "ACE concurrency scaling",
+        section: "§6",
+        runner: ace::fig4,
+    },
+    ExperimentSpec {
+        id: "fig5",
+        title: "Fairness and overlap characterization",
+        section: "§6",
+        runner: ace::fig5,
+    },
+    ExperimentSpec {
+        id: "fig6",
+        title: "L2 contention",
+        section: "§6",
+        runner: ace::fig6,
+    },
+    ExperimentSpec {
+        id: "fig7",
+        title: "LDS saturation",
+        section: "§6",
+        runner: ace::fig7,
+    },
+    ExperimentSpec {
+        id: "fig8",
+        title: "Execution-time variance under contention",
+        section: "§6",
+        runner: ace::fig8,
+    },
+    ExperimentSpec {
+        id: "fig9",
+        title: "Occupancy fragmentation",
+        section: "§6",
+        runner: ace::fig9,
+    },
+    ExperimentSpec {
+        id: "fig10",
+        title: "Sparsity overhead characterization",
+        section: "§7",
+        runner: sparsity::fig10,
+    },
+    ExperimentSpec {
+        id: "fig11",
+        title: "Sparsity speedup across problem sizes",
+        section: "§7",
+        runner: sparsity::fig11,
+    },
+    ExperimentSpec {
+        id: "fig12",
+        title: "Comprehensive parameter sweep (60 configs)",
+        section: "§7",
+        runner: sparsity::fig12,
+    },
+    ExperimentSpec {
+        id: "fig13",
+        title: "Sparsity under resource contention",
+        section: "§7",
+        runner: sparsity::fig13,
+    },
+    ExperimentSpec {
+        id: "fig14",
+        title: "Transformer-style inference kernel",
+        section: "§8",
+        runner: apps::fig14,
+    },
+    ExperimentSpec {
+        id: "fig15",
+        title: "Concurrent FP8 workloads with asynchronous execution",
+        section: "§8",
+        runner: apps::fig15,
+    },
+    ExperimentSpec {
+        id: "fig16",
+        title: "Mixed-precision workload analysis",
+        section: "§8",
+        runner: apps::fig16,
+    },
 ];
 
+/// Look up a registry entry by id.
+pub fn spec(id: &str) -> Option<&'static ExperimentSpec> {
+    REGISTRY.iter().find(|s| s.id == id)
+}
+
 /// Run every experiment with up to `workers` driver threads, returning
-/// reports in `ALL_IDS` order. Each driver is seed-deterministic and
+/// reports in [`REGISTRY`] order. Each driver is seed-deterministic and
 /// independent, and `pool::scoped_map` merges results in item order, so
 /// the output is byte-identical to the serial path for any worker count
 /// (enforced by `tests/parallel_determinism.rs`).
 pub fn run_all(cfg: &Config, workers: usize) -> Vec<ExperimentReport> {
-    crate::util::pool::scoped_map(ALL_IDS, workers, |_, id| {
-        run(id, cfg).expect("ALL_IDS entries are known ids")
-    })
+    crate::util::pool::scoped_map(REGISTRY, workers, |_, s| (s.runner)(cfg))
 }
 
 /// Run one experiment by id.
 pub fn run(id: &str, cfg: &Config) -> Option<ExperimentReport> {
-    match id {
-        "table1" => Some(micro::table1(cfg)),
-        "table2" => Some(micro::table2(cfg)),
-        "fig2" => Some(micro::fig2(cfg)),
-        "fig3" => Some(micro::fig3(cfg)),
-        "table3" => Some(micro::table3(cfg)),
-        "fig4" => Some(ace::fig4(cfg)),
-        "fig5" => Some(ace::fig5(cfg)),
-        "fig6" => Some(ace::fig6(cfg)),
-        "fig7" => Some(ace::fig7(cfg)),
-        "fig8" => Some(ace::fig8(cfg)),
-        "fig9" => Some(ace::fig9(cfg)),
-        "fig10" => Some(sparsity::fig10(cfg)),
-        "fig11" => Some(sparsity::fig11(cfg)),
-        "fig12" => Some(sparsity::fig12(cfg)),
-        "fig13" => Some(sparsity::fig13(cfg)),
-        "fig14" => Some(apps::fig14(cfg)),
-        "fig15" => Some(apps::fig15(cfg)),
-        "fig16" => Some(apps::fig16(cfg)),
-        _ => None,
-    }
+    spec(id).map(|s| (s.runner)(cfg))
 }
 
 #[cfg(test)]
@@ -96,7 +200,8 @@ mod tests {
     #[test]
     fn every_id_runs_and_renders() {
         let cfg = Config::mi300a();
-        for id in ALL_IDS {
+        for s in REGISTRY {
+            let id = s.id;
             let r = run(id, &cfg).unwrap_or_else(|| panic!("{id} missing"));
             let text = r.render();
             assert!(text.contains(id), "{id} render");
@@ -110,15 +215,41 @@ mod tests {
     #[test]
     fn unknown_id_is_none() {
         assert!(run("fig99", &Config::mi300a()).is_none());
+        assert!(spec("fig99").is_none());
+    }
+
+    #[test]
+    fn registry_entries_are_unique_and_well_formed() {
+        assert_eq!(REGISTRY.len(), 18, "one entry per paper artifact");
+        for (i, s) in REGISTRY.iter().enumerate() {
+            assert!(!s.title.is_empty(), "{}: empty title", s.id);
+            assert!(s.section.starts_with('§'), "{}: bad section", s.id);
+            assert!(
+                REGISTRY[..i].iter().all(|t| t.id != s.id),
+                "duplicate id {:?}",
+                s.id
+            );
+        }
+    }
+
+    #[test]
+    fn registry_titles_match_driver_reports() {
+        let cfg = Config::mi300a();
+        // Spot-check one driver per module (running all 18 here would
+        // duplicate the integration suite's full pass).
+        for id in ["table1", "fig4", "fig10", "fig14"] {
+            let s = spec(id).unwrap();
+            assert_eq!((s.runner)(&cfg).title, s.title, "{id}");
+        }
     }
 
     #[test]
     fn run_all_covers_every_id_in_order() {
         let cfg = Config::mi300a();
         let reports = run_all(&cfg, 4);
-        assert_eq!(reports.len(), ALL_IDS.len());
-        for (r, id) in reports.iter().zip(ALL_IDS) {
-            assert_eq!(&r.id, id);
+        assert_eq!(reports.len(), REGISTRY.len());
+        for (r, s) in reports.iter().zip(REGISTRY) {
+            assert_eq!(r.id, s.id);
         }
     }
 

@@ -1,6 +1,6 @@
 //! L2 cache models (paper §6.2, Fig 6).
 //!
-//! Two layers, per DESIGN.md §6:
+//! Two layers, per DESIGN.md §7:
 //!
 //! * [`CacheSim`] — a real set-associative cache with LRU replacement and
 //!   per-stream accounting. Used by unit/property tests and small

@@ -76,7 +76,7 @@ pub fn lds_utilization(n: usize, streams: usize, total_cus: usize,
     let per_wave = lds_bytes_per_wave(tile, 16, 4, double_buffer);
     let blocks = ((n + tile - 1) / tile).pow(2) as f64;
     let blocks_per_cu = blocks / total_cus as f64;
-    // Clustering calibration (DESIGN.md §6): co-scheduled streams stack
+    // Clustering calibration (DESIGN.md §7): co-scheduled streams stack
     // on overlapping CUs, and kernels with wider macro-tiles stage wider
     // K-panels per CU; 1.65 * (tile/64) matches the paper's medium
     // kernel at 87% with four streams while keeping thin at ~36%.

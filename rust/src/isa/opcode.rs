@@ -2,7 +2,7 @@
 //!
 //! Table 3 of the paper reports dependency-chain latency per MFMA VALU
 //! opcode in units of 1e-5 ms (= 10 ns). Those measurements are the
-//! *calibration inputs* of the simulator (DESIGN.md §6): `experiments::
+//! *calibration inputs* of the simulator (DESIGN.md §7): `experiments::
 //! table3` re-measures them through the simulated dependency-chain
 //! microbenchmark and must recover this table.
 

@@ -18,8 +18,13 @@
 //!   context-dependent sparsity, precision-aware co-scheduling.
 //! * [`runtime`] — PJRT executor for the AOT'd JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); the only real-compute path.
-//! * [`experiments`] — one driver per paper figure/table.
+//! * [`experiments`] — one driver per paper figure/table, indexed by a
+//!   registry (DESIGN.md §5).
+//! * [`api`] — the typed, versioned request/response surface
+//!   (DESIGN.md §6); the CLI and the TCP serve loop are thin transports
+//!   over its [`api::Service`].
 
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

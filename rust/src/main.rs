@@ -1,19 +1,27 @@
 //! `mi300a-char` — leader entrypoint and CLI.
 //!
+//! Every subcommand is a thin presentation layer over
+//! [`mi300a_char::api::Service`] — the same typed request/response core
+//! the TCP serve loop speaks (DESIGN.md §6). No business logic lives
+//! here.
+//!
 //! Subcommands:
 //!   repro <id|all>      regenerate a paper table/figure (DESIGN.md §5)
 //!   run <entry>         execute one AOT'd artifact via PJRT
 //!   plan                show a coordinator execution plan for a pool
+//!   serve               serve the JSON-line protocol over TCP
+//!   client <json>       send one JSON request to a serving instance
 //!   config              dump the active configuration
 //!   list                list experiments and artifacts
 
+use mi300a_char::api::{
+    parse_objective, Client, ErrorCode, Request, Response, Service,
+};
 use mi300a_char::config::Config;
-use mi300a_char::coordinator::{Coordinator, Objective};
-use mi300a_char::experiments;
 use mi300a_char::isa::Precision;
-use mi300a_char::runtime::{Executor, Manifest};
-use mi300a_char::sim::KernelDesc;
+use mi300a_char::runtime::Manifest;
 use mi300a_char::util::cli::Args;
+use mi300a_char::util::json::Json;
 use mi300a_char::util::pool;
 
 const USAGE: &str = "\
@@ -26,10 +34,13 @@ USAGE:
   mi300a-char plan [--objective latency|throughput|isolation]
                    [--streams N] [--size N] [--precision P]
   mi300a-char serve [--addr HOST:PORT] [--max-conns N]
+  mi300a-char client <json-request> [--addr HOST:PORT]
   mi300a-char config [--set section.field=value]
   mi300a-char list
 
 Experiment ids: table1 table2 table3 fig2..fig16 (see DESIGN.md §5).
+The wire protocol (client/serve) is specified in DESIGN.md §6, e.g.:
+  mi300a-char client '{\"v\":1,\"type\":\"sim\",\"n\":512,\"precision\":\"fp8\",\"streams\":4}'
 ";
 
 fn build_config(args: &Args) -> Config {
@@ -51,47 +62,52 @@ fn build_config(args: &Args) -> Config {
     cfg
 }
 
+fn print_error(context: &str, code: ErrorCode, message: &str) {
+    eprintln!("{context}: {message} [{}]", code.as_str());
+}
+
 fn cmd_repro(args: &Args) -> i32 {
-    let cfg = build_config(args);
+    let svc = Service::new(build_config(args));
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let out_dir = args.get("out-dir").map(std::path::PathBuf::from);
     if let Some(d) = &out_dir {
         let _ = std::fs::create_dir_all(d);
     }
-    let emit = |id: &str, report: &experiments::ExperimentReport| {
+    let emit = |id: &str, rendered: &str, json: &Json| {
         if args.flag("json") {
-            println!("{}", report.json.to_string_pretty());
+            println!("{}", json.to_string_pretty());
         } else {
-            println!("{}", report.render());
+            println!("{rendered}");
         }
         if let Some(d) = &out_dir {
             let _ = std::fs::write(
                 d.join(format!("{id}.json")),
-                report.json.to_string_pretty(),
+                json.to_string_pretty(),
             );
-            let _ = std::fs::write(
-                d.join(format!("{id}.txt")),
-                report.render(),
-            );
+            let _ = std::fs::write(d.join(format!("{id}.txt")), rendered);
         }
     };
     if which == "all" {
         // Drivers fan out across the pool; reports print in paper order
         // and are byte-identical to a serial run (--threads 1).
         let workers = args.get_usize("threads", pool::default_workers());
-        for report in experiments::run_all(&cfg, workers) {
-            emit(report.id, &report);
+        for report in svc.repro_all(workers) {
+            emit(report.id, &report.render(), &report.json);
         }
         return 0;
     }
-    match experiments::run(which, &cfg) {
-        Some(report) => {
-            emit(which, &report);
+    match svc.handle(&Request::Repro { experiment: which.to_string() }) {
+        Response::Repro { experiment, report, rendered, .. } => {
+            emit(&experiment, &rendered, &report);
             0
         }
-        None => {
-            eprintln!("unknown experiment id {which:?}");
+        Response::Error { code, message } => {
+            print_error("repro", code, &message);
             2
+        }
+        other => {
+            eprintln!("repro: unexpected response {other:?}");
+            1
         }
     }
 }
@@ -108,95 +124,113 @@ fn cmd_run(args: &Args) -> i32 {
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Manifest::default_dir);
-    let mut exec = match Executor::new(&dir) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("runtime: {e} (run `make artifacts` first)");
-            return 1;
-        }
-    };
-    let spec = match exec.manifest.get(&entry) {
-        Some(s) => s.clone(),
-        None => {
-            eprintln!("unknown entry {entry:?}");
-            return 2;
-        }
-    };
-    // Deterministic inputs: same pattern the golden tests use.
-    let inputs: Vec<Vec<f32>> = spec
-        .inputs
-        .iter()
-        .enumerate()
-        .map(|(i, t)| {
-            (0..t.elements())
-                .map(|j| ((j % (13 + i)) as f32 - 6.0) / 3.0)
-                .collect()
-        })
-        .collect();
-    let t0 = std::time::Instant::now();
-    match exec.run_f32(&entry, &inputs) {
-        Ok(out) => {
-            let dt = t0.elapsed();
-            let checksum: f32 = out.iter().sum();
+    let svc = Service::with_artifacts_dir(build_config(args), dir);
+    match svc.handle(&Request::Run { entry }) {
+        Response::Run { entry, outputs, checksum, exec_ms } => {
             println!(
-                "{entry}: {} outputs, checksum {checksum:.4}, {} ms \
-                 (incl. compile)",
-                out.len(),
-                dt.as_millis()
+                "{entry}: {outputs} outputs, checksum {checksum:.4}, \
+                 {exec_ms:.1} ms (incl. compile)"
             );
             0
         }
-        Err(e) => {
-            eprintln!("execute {entry}: {e}");
+        Response::Error { code, message } => {
+            print_error("run", code, &message);
+            if code == ErrorCode::UnknownEntry { 2 } else { 1 }
+        }
+        other => {
+            eprintln!("run: unexpected response {other:?}");
             1
         }
     }
 }
 
 fn cmd_plan(args: &Args) -> i32 {
-    let cfg = build_config(args);
-    let objective = match args.get_or("objective", "latency") {
-        "latency" => Objective::LatencySensitive,
-        "throughput" => Objective::ThroughputOriented,
-        "isolation" => Objective::StrictIsolation,
-        other => {
-            eprintln!("unknown objective {other:?}");
+    let objective = match parse_objective(args.get_or("objective", "latency"))
+    {
+        Some(o) => o,
+        None => {
+            eprintln!(
+                "plan: unknown objective {:?} (want \
+                 latency|throughput|isolation)",
+                args.get_or("objective", "latency")
+            );
             return 2;
         }
     };
     let n = args.get_usize("size", 512);
     let streams = args.get_usize("streams", 4);
-    let p = Precision::parse(args.get_or("precision", "fp8"))
-        .unwrap_or(Precision::Fp8);
-    let pool = vec![KernelDesc::gemm(n, p).with_iters(100); streams];
-    let coord = Coordinator::new(cfg, objective);
-    let plan = coord.plan(&pool, true);
-    println!("objective: {:?}", plan.objective);
-    for (i, g) in plan.groups.iter().enumerate() {
-        println!(
-            "group {i}: {} kernels, {} streams, expected fairness {:.3}, \
-             process isolation {}",
-            g.kernels.len(),
-            g.streams,
-            g.expected_fairness,
-            g.process_isolation
-        );
-        for k in &g.kernels {
-            println!("  - {}", k.label());
+    let precision = match Precision::parse(args.get_or("precision", "fp8")) {
+        Some(p) => p,
+        None => {
+            eprintln!(
+                "plan: bad precision {:?}",
+                args.get_or("precision", "fp8")
+            );
+            return 2;
+        }
+    };
+    let svc = Service::new(build_config(args));
+    match svc.handle(&Request::Plan { objective, streams, n, precision }) {
+        Response::Plan { objective, sparse, groups } => {
+            println!("objective: {objective}");
+            for (i, g) in groups.iter().enumerate() {
+                println!(
+                    "group {i}: {} kernels, {} streams, expected fairness \
+                     {:.3}, process isolation {}",
+                    g.kernels.len(),
+                    g.streams,
+                    g.expected_fairness,
+                    g.process_isolation
+                );
+                for k in &g.kernels {
+                    println!("  - {k}");
+                }
+            }
+            println!("sparse kernels planned: {sparse}");
+            0
+        }
+        Response::Error { code, message } => {
+            print_error("plan", code, &message);
+            2
+        }
+        other => {
+            eprintln!("plan: unexpected response {other:?}");
+            1
         }
     }
-    0
 }
 
-fn cmd_list(_args: &Args) -> i32 {
-    println!("experiments:");
-    for id in experiments::ALL_IDS {
-        println!("  {id}");
+fn cmd_config(args: &Args) -> i32 {
+    let svc = Service::new(build_config(args));
+    match svc.handle(&Request::Config) {
+        Response::Config { config } => {
+            println!("{}", config.to_string_pretty());
+            0
+        }
+        other => {
+            eprintln!("config: unexpected response {other:?}");
+            1
+        }
     }
-    let dir = Manifest::default_dir();
-    match Manifest::load(&dir) {
+}
+
+fn cmd_list(args: &Args) -> i32 {
+    let svc = Service::new(build_config(args));
+    match svc.handle(&Request::ListExperiments) {
+        Response::Experiments { experiments } => {
+            println!("experiments:");
+            for e in &experiments {
+                println!("  {:<8} {:<4} {}", e.id, e.section, e.title);
+            }
+        }
+        other => {
+            eprintln!("list: unexpected response {other:?}");
+            return 1;
+        }
+    }
+    match svc.load_manifest() {
         Ok(m) => {
-            println!("artifacts ({}):", dir.display());
+            println!("artifacts ({}):", svc.artifacts_dir().display());
             for e in &m.entries {
                 println!(
                     "  {} ({} inputs -> {} outputs)",
@@ -208,10 +242,89 @@ fn cmd_list(_args: &Args) -> i32 {
         }
         Err(_) => println!(
             "artifacts: not built (run `make artifacts`); dir {}",
-            dir.display()
+            svc.artifacts_dir().display()
         ),
     }
     0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = build_config(args);
+    let addr = args.get_or("addr", "127.0.0.1:7300").to_string();
+    let max = match args.get("max-conns") {
+        None => None,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            // Report a usage error instead of silently serving one
+            // connection (the pre-API behavior of `unwrap_or(1)`).
+            _ => {
+                eprintln!(
+                    "serve: --max-conns wants a positive integer, got {v:?}"
+                );
+                return 2;
+            }
+        },
+    };
+    match mi300a_char::serve::serve(cfg, &addr, max) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_client(args: &Args) -> i32 {
+    let addr = args.get_or("addr", "127.0.0.1:7300").to_string();
+    let line = match args.positional.first() {
+        Some(l) => l.clone(),
+        None => {
+            eprintln!(
+                "client: missing <json-request>, e.g. \
+                 '{{\"v\":1,\"type\":\"sim\",\"n\":512,\"precision\":\
+                 \"fp8\",\"streams\":4}}'"
+            );
+            return 2;
+        }
+    };
+    let v = match Json::parse(&line) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("client: request is not valid JSON: {e}");
+            return 2;
+        }
+    };
+    // Decode locally first: usage errors are caught (typed) before any
+    // connection is made.
+    let req = match Request::from_json(&v) {
+        Ok((req, _)) => req,
+        Err((e, _)) => {
+            eprintln!("client: {e}");
+            return 2;
+        }
+    };
+    let mut client = match Client::connect(addr.as_str()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("client: cannot connect to {addr}: {e}");
+            return 1;
+        }
+    };
+    match client.request_json(&req) {
+        Ok((resp, _id)) => {
+            println!("{resp}");
+            // Typed error responses must be visible to shell pipelines.
+            if resp.get("type").and_then(|t| t.as_str()) == Some("error") {
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("client: {e}");
+            1
+        }
+    }
 }
 
 fn main() {
@@ -220,23 +333,10 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("run") => cmd_run(&args),
         Some("plan") => cmd_plan(&args),
-        Some("config") => {
-            println!("{}", build_config(&args).to_json().to_string_pretty());
-            0
-        }
+        Some("config") => cmd_config(&args),
         Some("list") => cmd_list(&args),
-        Some("serve") => {
-            let cfg = build_config(&args);
-            let addr = args.get_or("addr", "127.0.0.1:7300").to_string();
-            let max = args.get("max-conns").map(|v| v.parse().unwrap_or(1));
-            match mi300a_char::serve::serve(cfg, &addr, max) {
-                Ok(()) => 0,
-                Err(e) => {
-                    eprintln!("serve: {e}");
-                    1
-                }
-            }
-        }
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         _ => {
             print!("{USAGE}");
             2

@@ -1,66 +1,37 @@
-//! `mi300a-char serve` — the request loop (L3 leader process).
+//! `mi300a-char serve` — a thin TCP transport over [`crate::api`].
 //!
-//! Line protocol over TCP, one request per line, JSON response per
-//! line. The loop composes the coordinator's policies with either the
-//! simulator (timing questions) or the PJRT runtime (real compute):
+//! Framing: one message per line. A line starting with `{` is a
+//! versioned JSON request (DESIGN.md §6); its optional `id` is echoed on
+//! the response so clients can pipeline many requests on one
+//! connection. Any other non-empty line goes through the legacy text
+//! shim (`SIM`/`PLAN`/`SPARSITY`/`RUN`/`LIST`/`CONFIG`/`QUIT`), which
+//! desugars into the same typed requests — the response line is
+//! byte-identical to the JSON form without an `id` (enforced by
+//! tests/serve_integration.rs).
 //!
-//! ```text
-//! SIM <n> <precision> <streams>     -> simulated concurrent-run report
-//! PLAN <objective> <streams> <n>    -> coordinator execution plan
-//! RUN <entry>                       -> execute an AOT artifact (PJRT)
-//! SPARSITY <n> <streams>            -> sparsity decision + speedups
-//! QUIT
-//! ```
+//! All business logic lives in [`crate::api::Service`]: this module
+//! only accepts connections, frames lines, and serializes responses.
 //!
 //! ## Concurrency
 //!
-//! The server runs one thread per connection over a shared
-//! `Arc<Config>`: `SIM`/`PLAN`/`SPARSITY` requests are pure functions of
-//! the (immutable) config and scale across cores, the way the paper's
-//! ACE scales independent streams. The one non-`Sync` resource — the
-//! PJRT executor — is isolated on a single worker thread behind an mpsc
-//! channel, so `RUN` requests serialize through it (exactly like
+//! One thread per connection over a shared `Arc<Service>`:
+//! `sim`/`plan`/`sparsity` requests are pure functions of the immutable
+//! config and scale across cores, the way the paper's ACEs scale
+//! independent streams. The one non-`Sync` resource — the PJRT
+//! executor — is isolated inside the service on a single mpsc worker
+//! thread, so `run` requests serialize through it (exactly like
 //! launches serialize through a command lane) without blocking the
 //! simulator paths. Responses are deterministic per request for a fixed
 //! config/seed, so concurrent clients observe byte-identical answers to
-//! a single client (enforced by tests/serve_integration.rs).
+//! a single client.
 
+use crate::api::{LegacyCommand, Request, Response, Service};
 use crate::config::Config;
-use crate::coordinator::{decide_sparsity, Coordinator, Objective};
-use crate::isa::Precision;
-use crate::metrics::fairness;
-use crate::runtime::{Executor, Manifest};
-use crate::sim::{ConcurrencyProfile, Engine, KernelDesc, SparsityMode};
-use crate::sparsity::SpeedupModel;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
-
-/// A request for the executor worker: run `entry`, reply on `reply`.
-struct ExecRequest {
-    entry: String,
-    reply: mpsc::Sender<Result<Json, String>>,
-}
-
-/// Handle connection threads use to reach the executor worker. Cloned
-/// per connection (mpsc senders are Send + Clone; the executor itself
-/// never leaves its worker thread).
-type ExecHandle = mpsc::Sender<ExecRequest>;
-
-/// The executor worker: owns the (lazily created) PJRT executor for the
-/// whole server lifetime and services RUN requests one at a time. Exits
-/// when every handle is dropped.
-fn exec_worker(rx: mpsc::Receiver<ExecRequest>) {
-    let mut exec: Option<Executor> = None;
-    while let Ok(req) = rx.recv() {
-        let result = cmd_run(&mut exec, &req.entry);
-        // A dropped reply sender just means the client went away.
-        let _ = req.reply.send(result);
-    }
-}
 
 /// Serve on `addr` (e.g. "127.0.0.1:0"); returns after `max_conns`
 /// connections have been accepted and fully served (None = forever).
@@ -73,18 +44,15 @@ pub fn serve(
 ) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     println!("serving on {}", listener.local_addr()?);
-    let cfg = Arc::new(cfg);
-    let (exec_tx, exec_rx) = mpsc::channel::<ExecRequest>();
-    let worker = thread::spawn(move || exec_worker(exec_rx));
+    let svc = Arc::new(Service::new(cfg));
 
     let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
     let mut served = 0usize;
     for conn in listener.incoming() {
         let stream = conn?;
-        let cfg = Arc::clone(&cfg);
-        let exec = exec_tx.clone();
+        let svc = Arc::clone(&svc);
         conns.push(thread::spawn(move || {
-            if let Err(e) = handle(&cfg, stream, &exec) {
+            if let Err(e) = handle(&svc, stream) {
                 eprintln!("connection error: {e}");
             }
         }));
@@ -101,185 +69,58 @@ pub fn serve(
     for h in conns {
         let _ = h.join();
     }
-    // All connection-held handles are gone; dropping ours shuts the
-    // executor worker down.
-    drop(exec_tx);
-    let _ = worker.join();
+    // Dropping the service (last Arc) shuts its executor worker down.
     Ok(())
 }
 
-fn respond(out: &mut TcpStream, v: Json) -> std::io::Result<()> {
-    writeln!(out, "{v}")
-}
-
-fn err_json(msg: &str) -> Json {
-    Json::obj(vec![("error", Json::Str(msg.into()))])
-}
-
-fn handle(
-    cfg: &Config,
-    stream: TcpStream,
-    exec: &ExecHandle,
-) -> std::io::Result<()> {
+/// One connection: frame lines, route through the service, write one
+/// response line per request line.
+fn handle(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = line?;
-        let parts: Vec<&str> = line.split_whitespace().collect();
-        match parts.as_slice() {
-            ["QUIT"] | ["quit"] => break,
-            ["SIM", n, prec, streams] => {
-                let reply = cmd_sim(cfg, n, prec, streams)
-                    .unwrap_or_else(|e| err_json(&e));
-                respond(&mut writer, reply)?;
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        if text.starts_with('{') {
+            let (resp, id) = dispatch_json(svc, text);
+            writeln!(writer, "{}", resp.to_json(id))?;
+        } else {
+            match crate::api::parse_legacy(text) {
+                Ok(LegacyCommand::Quit) => break,
+                Ok(LegacyCommand::Request(req)) => {
+                    writeln!(writer, "{}", svc.handle(&req).to_json(None))?
+                }
+                Err(e) => writeln!(
+                    writer,
+                    "{}",
+                    Response::from(e).to_json(None)
+                )?,
             }
-            ["PLAN", objective, streams, n] => {
-                let reply = cmd_plan(cfg, objective, streams, n)
-                    .unwrap_or_else(|e| err_json(&e));
-                respond(&mut writer, reply)?;
-            }
-            ["SPARSITY", n, streams] => {
-                let reply = cmd_sparsity(cfg, n, streams)
-                    .unwrap_or_else(|e| err_json(&e));
-                respond(&mut writer, reply)?;
-            }
-            ["RUN", entry] => {
-                let reply =
-                    cmd_run_remote(exec, entry).unwrap_or_else(|e| err_json(&e));
-                respond(&mut writer, reply)?;
-            }
-            [] => {}
-            _ => respond(&mut writer, err_json("unknown command"))?,
         }
     }
     Ok(())
 }
 
-fn parse_usize(s: &str, what: &str) -> Result<usize, String> {
-    s.parse().map_err(|_| format!("bad {what}: {s:?}"))
-}
-
-fn cmd_sim(cfg: &Config, n: &str, prec: &str, streams: &str) -> Result<Json, String> {
-    let n = parse_usize(n, "size")?;
-    let streams = parse_usize(streams, "streams")?.clamp(1, 16);
-    let p = Precision::parse(prec).ok_or_else(|| format!("bad precision {prec:?}"))?;
-    let engine = Engine::new(cfg, ConcurrencyProfile::ace());
-    let ks = vec![KernelDesc::gemm(n, p).with_iters(50); streams];
-    // One concurrent simulation per request: the speedup derives from
-    // this run plus the (much cheaper) serial solo makespans instead of
-    // re-simulating the concurrent set.
-    let run = engine.run(&ks, cfg.seed);
-    let speedup = engine.serial_makespan_ns(&ks, cfg.seed) / run.makespan_ns;
-    Ok(Json::obj(vec![
-        ("makespan_ms", Json::Num(run.makespan_ns / 1e6)),
-        ("speedup_vs_serial", Json::Num(speedup)),
-        ("overlap_efficiency", Json::Num(run.overlap_efficiency)),
-        ("fairness", Json::Num(fairness(&run.per_stream_totals()))),
-        ("l2_miss", Json::Num(run.l2_miss[0])),
-        ("lds_util", Json::Num(run.lds_util)),
-    ]))
-}
-
-fn cmd_plan(cfg: &Config, objective: &str, streams: &str, n: &str) -> Result<Json, String> {
-    let objective = match objective {
-        "latency" => Objective::LatencySensitive,
-        "throughput" => Objective::ThroughputOriented,
-        "isolation" => Objective::StrictIsolation,
-        o => return Err(format!("bad objective {o:?}")),
+/// Decode one JSON request line and route it; decode failures become
+/// typed error responses, still tagged with the request's `id` whenever
+/// the envelope was readable enough to salvage it.
+fn dispatch_json(svc: &Service, text: &str) -> (Response, Option<u64>) {
+    let v = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            return (
+                Response::from(crate::api::ApiError::bad_request(format!(
+                    "unparseable request: {e}"
+                ))),
+                None,
+            )
+        }
     };
-    let streams = parse_usize(streams, "streams")?.clamp(1, 64);
-    let n = parse_usize(n, "size")?;
-    let pool = vec![KernelDesc::gemm(n, Precision::Fp8).with_iters(100); streams];
-    let coord = Coordinator::new(cfg.clone(), objective);
-    let plan = coord.plan(&pool, true);
-    Ok(Json::obj(vec![
-        ("groups", Json::Num(plan.groups.len() as f64)),
-        (
-            "streams",
-            Json::Arr(
-                plan.groups
-                    .iter()
-                    .map(|g| Json::Num(g.streams as f64))
-                    .collect(),
-            ),
-        ),
-        (
-            "expected_fairness",
-            Json::Arr(
-                plan.groups
-                    .iter()
-                    .map(|g| Json::Num(g.expected_fairness))
-                    .collect(),
-            ),
-        ),
-        (
-            "sparse",
-            Json::Bool(plan.groups.iter().any(|g| {
-                g.kernels.iter().any(|k| k.sparsity.is_sparse())
-            })),
-        ),
-    ]))
-}
-
-fn cmd_sparsity(cfg: &Config, n: &str, streams: &str) -> Result<Json, String> {
-    let n = parse_usize(n, "size")?;
-    let streams = parse_usize(streams, "streams")?;
-    let k = KernelDesc::gemm(n, Precision::Fp8);
-    let d = decide_sparsity(&k, streams, true);
-    let model = SpeedupModel::new(cfg);
-    Ok(Json::obj(vec![
-        ("enable", Json::Bool(d.enable)),
-        ("reason", Json::Str(format!("{:?}", d.reason))),
-        (
-            "isolated_speedup",
-            Json::Num(model.isolated(&k, SparsityMode::SparseLhs).speedup()),
-        ),
-        (
-            "concurrent_speedup",
-            Json::Num(model.concurrent_per_stream(&k, streams.max(2))),
-        ),
-    ]))
-}
-
-/// Connection-side RUN: forwards to the executor worker and waits for
-/// its reply (requests queue in arrival order on the channel).
-fn cmd_run_remote(exec: &ExecHandle, entry: &str) -> Result<Json, String> {
-    let (tx, rx) = mpsc::channel();
-    exec.send(ExecRequest { entry: entry.to_string(), reply: tx })
-        .map_err(|_| "executor worker unavailable".to_string())?;
-    rx.recv().map_err(|_| "executor worker dropped".to_string())?
-}
-
-/// Worker-side RUN: lazily creates the executor, then executes with the
-/// deterministic input pattern the golden tests use.
-fn cmd_run(exec: &mut Option<Executor>, entry: &str) -> Result<Json, String> {
-    if exec.is_none() {
-        *exec = Some(
-            Executor::new(&Manifest::default_dir()).map_err(|e| e.to_string())?,
-        );
+    match Request::from_json(&v) {
+        Ok((req, id)) => (svc.handle(&req), id),
+        Err((e, id)) => (Response::from(e), id),
     }
-    let exec = exec.as_mut().unwrap();
-    let spec = exec
-        .manifest
-        .get(entry)
-        .ok_or_else(|| format!("unknown entry {entry:?}"))?
-        .clone();
-    let inputs: Vec<Vec<f32>> = spec
-        .inputs
-        .iter()
-        .enumerate()
-        .map(|(i, t)| {
-            (0..t.elements())
-                .map(|j| ((j % (13 + i)) as f32 - 6.0) / 3.0)
-                .collect()
-        })
-        .collect();
-    let t0 = std::time::Instant::now();
-    let out = exec.run_f32(entry, &inputs).map_err(|e| e.to_string())?;
-    Ok(Json::obj(vec![
-        ("entry", Json::Str(entry.into())),
-        ("outputs", Json::Num(out.len() as f64)),
-        ("checksum", Json::Num(out.iter().map(|&v| v as f64).sum())),
-        ("exec_ms", Json::Num(t0.elapsed().as_secs_f64() * 1e3)),
-    ]))
 }

@@ -11,7 +11,7 @@
 //!  * **work** — wavefronts execute under processor sharing; each
 //!    running stream progresses at `gain / slowdown` of its solo rate,
 //!    where the slowdown term aggregates LDS saturation, L2 miss growth,
-//!    and external contention (Fig 5b's sweep knob), per DESIGN.md §6.
+//!    and external contention (Fig 5b's sweep knob), per DESIGN.md §7.
 //!
 //! Per-stream placement bias (drawn once per stream, lognormal with
 //! contention-scaled sigma) models which CUs/L2 partitions a stream

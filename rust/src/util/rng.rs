@@ -2,7 +2,7 @@
 //!
 //! Every stochastic element of the DES (dispatch jitter, eviction
 //! conflicts, contention noise) draws from a seeded [`Rng`] so experiment
-//! runs are reproducible bit-for-bit given `--seed` (DESIGN.md §6).
+//! runs are reproducible bit-for-bit given `--seed` (DESIGN.md §7).
 //!
 //! Implementation: xoshiro256** (Blackman & Vigna) seeded through
 //! SplitMix64 — the reference parameterization, implemented in-repo

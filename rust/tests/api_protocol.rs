@@ -1,0 +1,296 @@
+//! Protocol conformance: every `Request`/`Response` variant
+//! encodes→decodes byte-identically, unknown fields/versions are typed
+//! errors, and the legacy text shim desugars to the same typed requests
+//! (DESIGN.md §6 is the prose spec these tests enforce).
+
+use mi300a_char::api::{
+    parse_legacy, ApiError, ErrorCode, ExperimentInfo, LegacyCommand,
+    PlanGroup, Request, Response, PROTOCOL_VERSION,
+};
+use mi300a_char::coordinator::Objective;
+use mi300a_char::isa::Precision;
+use mi300a_char::util::json::Json;
+
+/// Encode with an id, serialize, reparse, decode: the value and the
+/// serialized bytes must both survive unchanged.
+fn roundtrip_request(req: Request) {
+    for id in [None, Some(42u64)] {
+        let encoded = req.to_json(id);
+        let wire = encoded.to_string();
+        let reparsed = Json::parse(&wire).unwrap();
+        let (decoded, got_id) = Request::from_json(&reparsed)
+            .unwrap_or_else(|(e, _)| panic!("decode {wire}: {e}"));
+        assert_eq!(decoded, req, "value drift over the wire: {wire}");
+        assert_eq!(got_id, id, "id drift over the wire: {wire}");
+        assert_eq!(
+            decoded.to_json(got_id).to_string(),
+            wire,
+            "bytes drift over the wire"
+        );
+    }
+}
+
+fn roundtrip_response(resp: Response) {
+    for id in [None, Some(7u64)] {
+        let encoded = resp.to_json(id);
+        let wire = encoded.to_string();
+        let reparsed = Json::parse(&wire).unwrap();
+        let (decoded, got_id) = Response::from_json(&reparsed)
+            .unwrap_or_else(|e| panic!("decode {wire}: {e}"));
+        assert_eq!(decoded, resp, "value drift over the wire: {wire}");
+        assert_eq!(got_id, id, "id drift over the wire: {wire}");
+        assert_eq!(
+            decoded.to_json(got_id).to_string(),
+            wire,
+            "bytes drift over the wire"
+        );
+    }
+}
+
+#[test]
+fn every_request_variant_roundtrips() {
+    roundtrip_request(Request::Sim {
+        n: 512,
+        precision: Precision::Fp8,
+        streams: 4,
+    });
+    roundtrip_request(Request::Plan {
+        objective: Objective::ThroughputOriented,
+        streams: 8,
+        n: 512,
+        precision: Precision::Bf16,
+    });
+    roundtrip_request(Request::Sparsity { n: 1024, streams: 2 });
+    roundtrip_request(Request::Run { entry: "gemm_fp8_128".into() });
+    roundtrip_request(Request::Repro { experiment: "fig4".into() });
+    roundtrip_request(Request::ListExperiments);
+    roundtrip_request(Request::Config);
+}
+
+#[test]
+fn every_precision_and_objective_roundtrips_in_requests() {
+    for p in [
+        Precision::F64,
+        Precision::F32,
+        Precision::F16,
+        Precision::Bf16,
+        Precision::Fp8,
+        Precision::Bf8,
+    ] {
+        roundtrip_request(Request::Sim { n: 128, precision: p, streams: 1 });
+    }
+    for o in [
+        Objective::LatencySensitive,
+        Objective::ThroughputOriented,
+        Objective::StrictIsolation,
+    ] {
+        roundtrip_request(Request::Plan {
+            objective: o,
+            streams: 4,
+            n: 256,
+            precision: Precision::Fp8,
+        });
+    }
+}
+
+#[test]
+fn every_response_variant_roundtrips() {
+    roundtrip_response(Response::Sim {
+        makespan_ms: 12.375,
+        speedup_vs_serial: 2.5,
+        overlap_efficiency: 0.875,
+        fairness: 0.51,
+        l2_miss: 0.1875,
+        lds_util: 0.625,
+    });
+    roundtrip_response(Response::Plan {
+        objective: "throughput".into(),
+        sparse: true,
+        groups: vec![
+            PlanGroup {
+                kernels: vec!["gemm512".into(), "gemm512s".into()],
+                streams: 2,
+                expected_fairness: 0.51,
+                process_isolation: false,
+            },
+            PlanGroup {
+                kernels: vec![],
+                streams: 1,
+                expected_fairness: 1.0,
+                process_isolation: true,
+            },
+        ],
+    });
+    roundtrip_response(Response::Sparsity {
+        enable: true,
+        reason: "ConcurrentContext".into(),
+        isolated_speedup: 1.0,
+        concurrent_speedup: 1.3125,
+    });
+    roundtrip_response(Response::Run {
+        entry: "gemm_fp8_128".into(),
+        outputs: 16384,
+        checksum: -12.5,
+        exec_ms: 3.25,
+    });
+    roundtrip_response(Response::Repro {
+        experiment: "fig4".into(),
+        title: "ACE concurrency scaling".into(),
+        report: Json::parse(r#"{"rows":[{"streams":4,"speedup":2.5}]}"#)
+            .unwrap(),
+        rendered: "### fig4\nline two\n".into(),
+    });
+    roundtrip_response(Response::Experiments {
+        experiments: vec![ExperimentInfo {
+            id: "table1".into(),
+            title: "System configuration".into(),
+            section: "§4".into(),
+        }],
+    });
+    roundtrip_response(Response::Config {
+        config: Json::parse(r#"{"hw":{"n_aces":4},"seed":2026}"#).unwrap(),
+    });
+    for code in ErrorCode::ALL {
+        roundtrip_response(Response::Error {
+            code,
+            message: format!("demo message for {}", code.as_str()),
+        });
+    }
+}
+
+#[test]
+fn unknown_fields_are_rejected_per_variant() {
+    // Inject an extra key into each encoded request; decode must fail
+    // with unknown_field naming it.
+    let requests = [
+        Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
+        Request::Plan {
+            objective: Objective::LatencySensitive,
+            streams: 4,
+            n: 512,
+            precision: Precision::Fp8,
+        },
+        Request::Sparsity { n: 512, streams: 4 },
+        Request::Run { entry: "x".into() },
+        Request::Repro { experiment: "fig4".into() },
+        Request::ListExperiments,
+        Request::Config,
+    ];
+    for req in requests {
+        let mut v = req.to_json(None);
+        if let Json::Obj(m) = &mut v {
+            m.insert("zz_extra".into(), Json::Num(1.0));
+        }
+        let (err, _) = Request::from_json(&v).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownField, "{req:?}");
+        assert!(err.message.contains("zz_extra"), "{}", err.message);
+    }
+}
+
+#[test]
+fn foreign_versions_are_rejected_with_salvaged_id() {
+    let line = r#"{"v":99,"id":13,"type":"config"}"#;
+    let (err, id) = Request::from_json(&Json::parse(line).unwrap())
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadVersion);
+    assert!(err.message.contains("99"), "{}", err.message);
+    assert!(
+        err.message.contains(&PROTOCOL_VERSION.to_string()),
+        "{}",
+        err.message
+    );
+    assert_eq!(id, Some(13));
+
+    let (err, _) =
+        Request::from_json(&Json::parse(r#"{"type":"config"}"#).unwrap())
+            .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadVersion);
+}
+
+#[test]
+fn malformed_envelopes_are_typed_errors() {
+    for (line, want) in [
+        (r#"[1,2,3]"#, ErrorCode::BadRequest),
+        (r#"{"v":1}"#, ErrorCode::BadRequest), // missing type
+        (r#"{"v":1,"type":"frobnicate"}"#, ErrorCode::UnknownType),
+        (r#"{"v":1,"id":-3,"type":"config"}"#, ErrorCode::BadRequest),
+        (r#"{"v":1,"id":1.5,"type":"config"}"#, ErrorCode::BadRequest),
+        (r#"{"v":1,"type":"sim","precision":"fp8","streams":4}"#,
+         ErrorCode::BadRequest), // missing n
+        (r#"{"v":1,"type":"sim","n":"big","precision":"fp8","streams":4}"#,
+         ErrorCode::BadRequest),
+        (r#"{"v":1,"type":"sim","n":512,"precision":"int4","streams":4}"#,
+         ErrorCode::BadRequest),
+    ] {
+        let (err, _) = Request::from_json(&Json::parse(line).unwrap())
+            .unwrap_err();
+        assert_eq!(err.code, want, "{line} -> {err}");
+    }
+}
+
+#[test]
+fn legacy_shim_matches_typed_requests() {
+    let cases: [(&str, Request); 4] = [
+        (
+            "SIM 512 fp8 4",
+            Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
+        ),
+        (
+            "PLAN throughput 8 512",
+            Request::Plan {
+                objective: Objective::ThroughputOriented,
+                streams: 8,
+                n: 512,
+                precision: Precision::Fp8,
+            },
+        ),
+        ("SPARSITY 512 4", Request::Sparsity { n: 512, streams: 4 }),
+        ("RUN gemm_fp8_128", Request::Run { entry: "gemm_fp8_128".into() }),
+    ];
+    for (line, want) in cases {
+        assert_eq!(
+            parse_legacy(line).unwrap(),
+            LegacyCommand::Request(want),
+            "{line}"
+        );
+    }
+    assert_eq!(parse_legacy("QUIT").unwrap(), LegacyCommand::Quit);
+    assert_eq!(
+        parse_legacy("LIST").unwrap(),
+        LegacyCommand::Request(Request::ListExperiments)
+    );
+    assert_eq!(
+        parse_legacy("CONFIG").unwrap(),
+        LegacyCommand::Request(Request::Config)
+    );
+
+    // Legacy parse failures carry the same typed codes the JSON path
+    // uses.
+    let err: ApiError = parse_legacy("SIM abc fp8 4").unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    let err = parse_legacy("PLAN sideways 8 512").unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    let err = parse_legacy("FROBNICATE").unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownType);
+}
+
+#[test]
+fn error_code_wire_spellings_are_stable() {
+    // The wire spellings are part of the v1 contract (DESIGN.md §6.3):
+    // renaming one is a protocol version bump, so pin them.
+    let want = [
+        "bad_version",
+        "bad_request",
+        "unknown_type",
+        "unknown_field",
+        "bad_range",
+        "unknown_experiment",
+        "unknown_entry",
+        "runtime",
+    ];
+    assert_eq!(ErrorCode::ALL.len(), want.len());
+    for (c, w) in ErrorCode::ALL.iter().zip(want) {
+        assert_eq!(c.as_str(), w);
+        assert_eq!(ErrorCode::parse(w), Some(*c));
+    }
+}

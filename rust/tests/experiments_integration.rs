@@ -3,7 +3,7 @@
 //! the targets; EXPERIMENTS.md records the full comparison).
 
 use mi300a_char::config::Config;
-use mi300a_char::experiments::{run, ALL_IDS};
+use mi300a_char::experiments::{run, REGISTRY};
 
 fn get(j: &mi300a_char::util::json::Json, path: &[&str]) -> f64 {
     let mut cur = j;
@@ -16,11 +16,12 @@ fn get(j: &mi300a_char::util::json::Json, path: &[&str]) -> f64 {
 #[test]
 fn all_experiments_produce_reports_and_json() {
     let cfg = Config::mi300a();
-    for id in ALL_IDS {
-        let r = run(id, &cfg).unwrap();
-        assert_eq!(&r.id, id);
+    for spec in REGISTRY {
+        let r = run(spec.id, &cfg).unwrap();
+        assert_eq!(r.id, spec.id);
+        assert_eq!(r.title, spec.title, "{}: registry title drifted", spec.id);
         let text = r.render();
-        assert!(text.len() > 40, "{id}: report too small");
+        assert!(text.len() > 40, "{}: report too small", spec.id);
     }
 }
 

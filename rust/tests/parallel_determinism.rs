@@ -6,7 +6,7 @@
 //! count changes.
 
 use mi300a_char::config::Config;
-use mi300a_char::experiments::{run_all, ALL_IDS};
+use mi300a_char::experiments::{run_all, REGISTRY};
 
 fn sweep_fingerprints(cfg: &Config, workers: usize) -> Vec<String> {
     run_all(cfg, workers)
@@ -21,16 +21,16 @@ fn sweep_fingerprints(cfg: &Config, workers: usize) -> Vec<String> {
 fn parallel_sweep_bit_identical_across_worker_counts() {
     let cfg = Config::mi300a();
     let serial = sweep_fingerprints(&cfg, 1);
-    assert_eq!(serial.len(), ALL_IDS.len());
+    assert_eq!(serial.len(), REGISTRY.len());
     let mut eight = None;
     for workers in [2usize, 8] {
         let parallel = sweep_fingerprints(&cfg, workers);
         assert_eq!(parallel.len(), serial.len(), "workers={workers}");
-        for ((a, b), id) in parallel.iter().zip(&serial).zip(ALL_IDS) {
+        for ((a, b), s) in parallel.iter().zip(&serial).zip(REGISTRY) {
             assert_eq!(
                 a, b,
-                "experiment {id} diverged between workers=1 and \
-                 workers={workers}"
+                "experiment {} diverged between workers=1 and workers={workers}",
+                s.id
             );
         }
         if workers == 8 {

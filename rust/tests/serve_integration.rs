@@ -1,9 +1,13 @@
-//! Integration: the TCP request loop (SIM / PLAN / SPARSITY commands),
-//! single-client and concurrent-client. RUN is covered by
-//! runtime_integration.rs; here we keep the server on the simulator
-//! paths so the tests are artifact-independent.
+//! Integration: the TCP transport over the typed api::Service — legacy
+//! text framing, versioned JSON framing, their byte-identical
+//! equivalence on one socket, id pipelining, typed protocol errors, and
+//! concurrent-client determinism. RUN is covered by
+//! runtime_integration.rs; here the server stays on the simulator paths
+//! so the tests are artifact-independent.
 
+use mi300a_char::api::{Client, ErrorCode, Request, Response};
 use mi300a_char::config::Config;
+use mi300a_char::isa::Precision;
 use mi300a_char::serve::serve;
 use mi300a_char::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -28,13 +32,19 @@ fn free_port() -> u16 {
     port
 }
 
-#[test]
-fn sim_plan_sparsity_roundtrip() {
+/// Spawn a server for `conns` connections on a fresh port.
+fn spawn_server(conns: usize) -> (u16, std::thread::JoinHandle<()>) {
     let port = free_port();
     let handle = std::thread::spawn(move || {
-        serve(Config::mi300a(), &format!("127.0.0.1:{port}"), Some(1))
+        serve(Config::mi300a(), &format!("127.0.0.1:{port}"), Some(conns))
             .unwrap();
     });
+    (port, handle)
+}
+
+#[test]
+fn legacy_sim_plan_sparsity_roundtrip() {
+    let (port, handle) = spawn_server(1);
 
     let mut conn = connect(port);
     let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -45,17 +55,23 @@ fn sim_plan_sparsity_roundtrip() {
         Json::parse(line.trim()).unwrap()
     };
 
-    // SIM: 4-way concurrent FP8 512^3.
+    // SIM: 4-way concurrent FP8 512^3. Responses carry the envelope.
     let sim = ask("SIM 512 fp8 4");
+    assert_eq!(sim.get("v"), Some(&Json::Num(1.0)));
+    assert_eq!(sim.get("type").unwrap().as_str(), Some("sim"));
     let speedup = sim.get("speedup_vs_serial").unwrap().as_f64().unwrap();
     assert!(speedup > 1.0 && speedup < 4.0, "speedup {speedup}");
     let fair = sim.get("fairness").unwrap().as_f64().unwrap();
     assert!((0.0..=1.0).contains(&fair));
 
-    // PLAN: throughput objective.
+    // PLAN: throughput objective; groups are structured objects now.
     let plan = ask("PLAN throughput 8 512");
-    assert!(plan.get("groups").unwrap().as_f64().unwrap() >= 1.0);
+    let groups = plan.get("groups").unwrap().as_arr().unwrap();
+    assert!(!groups.is_empty());
+    assert!(groups[0].get("streams").unwrap().as_usize().unwrap() >= 1);
+    assert!(groups[0].get("kernels").unwrap().as_arr().is_some());
     assert_eq!(plan.get("sparse"), Some(&Json::Bool(true)));
+    assert_eq!(plan.get("objective").unwrap().as_str(), Some("throughput"));
 
     // SPARSITY: isolated -> dense; concurrent decision context encoded.
     let sp = ask("SPARSITY 512 1");
@@ -65,17 +81,182 @@ fn sim_plan_sparsity_roundtrip() {
     let conc = sp4.get("concurrent_speedup").unwrap().as_f64().unwrap();
     assert!((1.2..1.4).contains(&conc), "~1.3x expected: {conc}");
 
-    // Errors are structured, not fatal.
+    // Errors are structured with typed codes, not fatal.
     let bad = ask("SIM abc fp8 4");
     assert!(bad.get("error").is_some());
+    assert_eq!(bad.get("code").unwrap().as_str(), Some("bad_request"));
+
+    // Out-of-range streams: a typed range error naming the accepted
+    // range — not the pre-API silent clamp to 16.
+    let oor = ask("SIM 512 fp8 32");
+    assert_eq!(oor.get("code").unwrap().as_str(), Some("bad_range"));
+    let msg = oor.get("error").unwrap().as_str().unwrap();
+    assert!(msg.contains("1..=16") && msg.contains("32"), "{msg}");
 
     writeln!(conn, "QUIT").unwrap();
     drop(conn);
     handle.join().unwrap();
 }
 
+#[test]
+fn json_and_legacy_framings_answer_byte_identically() {
+    let (port, handle) = spawn_server(1);
+    let conn = connect(port);
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut ask_raw = |line: &str| -> String {
+        writeln!(writer, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    };
+
+    // Same socket, alternating framings: the JSON form (without an id)
+    // and the legacy text form must answer with identical bytes.
+    let pairs = [
+        (
+            "SIM 512 fp8 4",
+            r#"{"v":1,"type":"sim","n":512,"precision":"fp8","streams":4}"#,
+        ),
+        (
+            "PLAN throughput 8 512",
+            r#"{"v":1,"type":"plan","objective":"throughput","streams":8,"n":512,"precision":"fp8"}"#,
+        ),
+        (
+            "SPARSITY 512 4",
+            r#"{"v":1,"type":"sparsity","n":512,"streams":4}"#,
+        ),
+        ("LIST", r#"{"v":1,"type":"list_experiments"}"#),
+        ("CONFIG", r#"{"v":1,"type":"config"}"#),
+    ];
+    for (legacy, json) in pairs {
+        let a = ask_raw(legacy);
+        let b = ask_raw(json);
+        assert_eq!(a, b, "framings diverged for {legacy:?}");
+        assert!(a.ends_with('\n'));
+    }
+
+    let err = ask_raw("SIM abc fp8 4"); // typed error, connection stays up
+    assert!(err.contains("bad_request"), "{err}");
+    writeln!(writer, "QUIT").unwrap();
+    drop(writer);
+    drop(reader);
+    handle.join().unwrap();
+}
+
+#[test]
+fn json_pipelining_echoes_request_ids() {
+    let (port, handle) = spawn_server(1);
+    let conn = connect(port);
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+
+    // Two requests written back-to-back before reading: responses come
+    // back in order, each echoing its request id.
+    write!(
+        writer,
+        "{}\n{}\n",
+        r#"{"v":1,"id":7,"type":"sparsity","n":512,"streams":4}"#,
+        r#"{"v":1,"id":8,"type":"config"}"#,
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let first = Json::parse(line.trim()).unwrap();
+    assert_eq!(first.get("id"), Some(&Json::Num(7.0)));
+    assert_eq!(first.get("type").unwrap().as_str(), Some("sparsity"));
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let second = Json::parse(line.trim()).unwrap();
+    assert_eq!(second.get("id"), Some(&Json::Num(8.0)));
+    assert_eq!(second.get("type").unwrap().as_str(), Some("config"));
+
+    // A bad request still gets its id echoed (salvaged envelope).
+    line.clear();
+    writeln!(writer, r#"{{"v":99,"id":13,"type":"config"}}"#).unwrap();
+    reader.read_line(&mut line).unwrap();
+    let err = Json::parse(line.trim()).unwrap();
+    assert_eq!(err.get("id"), Some(&Json::Num(13.0)));
+    assert_eq!(err.get("code").unwrap().as_str(), Some("bad_version"));
+
+    // Unknown fields are rejected, not ignored.
+    line.clear();
+    writeln!(
+        writer,
+        r#"{{"v":1,"id":14,"type":"config","bogus":true}}"#
+    )
+    .unwrap();
+    reader.read_line(&mut line).unwrap();
+    let err = Json::parse(line.trim()).unwrap();
+    assert_eq!(err.get("id"), Some(&Json::Num(14.0)));
+    assert_eq!(err.get("code").unwrap().as_str(), Some("unknown_field"));
+
+    writeln!(writer, "QUIT").unwrap();
+    drop(writer);
+    drop(reader);
+    handle.join().unwrap();
+}
+
+#[test]
+fn typed_client_speaks_the_versioned_protocol() {
+    let (port, handle) = spawn_server(1);
+    let mut client =
+        Client::connect_retry(format!("127.0.0.1:{port}").as_str(), 200)
+            .unwrap();
+
+    match client
+        .request(&Request::Sim {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 4,
+        })
+        .unwrap()
+    {
+        Response::Sim { speedup_vs_serial, fairness, .. } => {
+            assert!(speedup_vs_serial > 1.0 && speedup_vs_serial < 4.0);
+            assert!((0.0..=1.0).contains(&fairness));
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+
+    match client.request(&Request::ListExperiments).unwrap() {
+        Response::Experiments { experiments } => {
+            assert_eq!(
+                experiments.len(),
+                mi300a_char::experiments::REGISTRY.len()
+            );
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+
+    // Protocol-level failures surface as typed Response::Error.
+    match client
+        .request(&Request::Sim {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 0,
+        })
+        .unwrap()
+    {
+        Response::Error { code, message } => {
+            assert_eq!(code, ErrorCode::BadRange);
+            assert!(message.contains("1..=16"), "{message}");
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+
+    // The same connection can still drop to the legacy framing.
+    let legacy = client.raw_line("SPARSITY 512 4").unwrap();
+    assert_eq!(legacy.get("enable"), Some(&Json::Bool(true)));
+
+    client.raw_line("QUIT").ok();
+    drop(client);
+    handle.join().unwrap();
+}
+
 /// The three simulator-path commands every client in the concurrency
-/// test issues.
+/// test issues (legacy framing keeps exercising the shim under
+/// concurrency).
 const CLIENT_CMDS: [&str; 3] =
     ["SIM 512 fp8 4", "PLAN throughput 8 512", "SPARSITY 512 4"];
 

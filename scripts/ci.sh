@@ -1,21 +1,67 @@
 #!/usr/bin/env bash
-# Tier-1 verification plus a bench smoke pass so the `cargo bench`
-# targets (and their BENCH_*.json emitters) cannot bit-rot.
+# Tier-1 verification, a formatting gate, a bench smoke pass so the
+# `cargo bench` targets (and their BENCH_*.json emitters) cannot
+# bit-rot, and a client-vs-serve smoke over the versioned wire protocol
+# (DESIGN.md §6).
 #
 # Usage: scripts/ci.sh
 #
 # Environment:
-#   MI300A_BENCH_OUT   where BENCH_*.json baselines land (default: rust/)
+#   MI300A_BENCH_OUT    where BENCH_*.json baselines land (default: rust/)
 #   MI300A_CHAR_THREADS worker count for parallel sweeps (default: nproc)
+#   MI300A_FMT_STRICT   1 = fail on rustfmt drift (default: warn only,
+#                       until the pre-gate tree is formatted)
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
+
+echo "== rustfmt: cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    if ! cargo fmt --all -- --check; then
+        if [ "${MI300A_FMT_STRICT:-0}" = "1" ]; then
+            echo "rustfmt drift (MI300A_FMT_STRICT=1)" >&2
+            exit 1
+        fi
+        echo "warning: rustfmt drift (set MI300A_FMT_STRICT=1 to enforce)"
+    fi
+else
+    echo "rustfmt not installed; skipping format check"
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== client-vs-serve smoke (ephemeral port, one JSON request) =="
+bin=target/release/mi300a-char
+serve_log=$(mktemp)
+"$bin" serve --addr 127.0.0.1:0 --max-conns 1 >"$serve_log" &
+serve_pid=$!
+trap 'kill "$serve_pid" 2>/dev/null || true' EXIT
+addr=""
+for _ in $(seq 1 100); do
+    addr=$(sed -n 's/^serving on //p' "$serve_log" | head -n 1)
+    [ -n "$addr" ] && break
+    sleep 0.05
+done
+if [ -z "$addr" ]; then
+    echo "serve did not print its bound address" >&2
+    exit 1
+fi
+resp=$("$bin" client --addr "$addr" \
+    '{"v":1,"type":"sim","n":256,"precision":"fp8","streams":2}')
+wait "$serve_pid"
+trap - EXIT
+echo "client response: $resp"
+for needle in '"v":1' '"type":"sim"' '"speedup_vs_serial"'; do
+    if ! printf '%s' "$resp" | grep -qF "$needle"; then
+        echo "smoke response missing $needle" >&2
+        exit 1
+    fi
+done
+rm -f "$serve_log"
 
 echo "== bench smoke (1 warmup / 1 iter, full targets) =="
 MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench
