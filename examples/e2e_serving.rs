@@ -10,7 +10,10 @@
 //!
 //! Reports per-request latency percentiles, aggregate throughput, and
 //! cross-client determinism (every client must see byte-identical
-//! answers; the paper's fairness story at the request level).
+//! answers; the paper's fairness story at the request level). Because
+//! every round repeats the same three requests, the serve-side result
+//! cache answers all but the first pass — the final `stats` line shows
+//! how few cold engine runs the whole load needed (docs/serving.md).
 //!
 //! Run: `cargo run --release --example e2e_serving`
 
@@ -100,8 +103,21 @@ fn main() -> std::io::Result<()> {
     }
     let wall = serve_start.elapsed();
 
-    // --- Run path: typed end-to-end even without artifacts ---
+    // --- Run path + service counters (one probe connection) ---
     let mut probe = Client::connect_retry(addr.as_str(), 200)?;
+    // A batch answers the whole mix in one envelope; all three repeat
+    // earlier requests, so every item is a cache hit.
+    let batched = probe.batch(&request_mix())?;
+    assert_eq!(batched.len(), request_mix().len());
+    let mut cache_line = String::from("stats request failed");
+    if let Response::Stats { cache, engine_runs } =
+        probe.request(&Request::Stats)?
+    {
+        cache_line = format!(
+            "{} hits / {} misses, {} cold engine runs, {} entries",
+            cache.hits, cache.misses, engine_runs, cache.entries
+        );
+    }
     match probe.request(&Request::Run { entry: "gemm_fp8_128".into() })? {
         Response::Run { entry, outputs, checksum, exec_ms } => println!(
             "run {entry}: {outputs} outputs, checksum {checksum:.4}, \
@@ -138,5 +154,6 @@ fn main() -> std::io::Result<()> {
         lat.max / 1e6
     );
     println!("determinism     : all clients byte-identical");
+    println!("result cache    : {cache_line}");
     Ok(())
 }

@@ -15,7 +15,7 @@ use mi300a_char::sim::{CostModel, KernelDesc};
 use mi300a_char::util::rng::Rng;
 use mi300a_char::workload::MixedChain;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let cfg = Config::mi300a();
 
     // --- Real numerics through the AOT'd mixed chain. ---

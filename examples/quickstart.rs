@@ -5,7 +5,10 @@
 //!    questions — a simulated concurrent run, a coordinator plan, a
 //!    sparsity decision — over the versioned wire protocol
 //!    (DESIGN.md §6). No hand-rolled TCP strings.
-//! 3. Print the coordinator's §9 occupancy guidance.
+//! 3. Re-ask one question in a batch and read the `stats` counters:
+//!    the repeat is served from the result cache with zero DES engine
+//!    re-execution (docs/serving.md).
+//! 4. Print the coordinator's §9 occupancy guidance.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -81,6 +84,22 @@ fn main() -> std::io::Result<()> {
             }
             other => println!("unexpected response: {other:?}"),
         }
+    }
+
+    // --- Batching + the result cache ---
+    // The sim below repeats the very first request: the service answers
+    // it from its canonical-key cache, so `stats` shows a hit and an
+    // unchanged engine-invocation count for it.
+    let batch = client.batch(&[
+        Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
+        Request::Stats,
+    ])?;
+    if let Response::Stats { cache, engine_runs } = &batch[1] {
+        println!(
+            "cache after the batch: {} hits / {} misses, {} cold engine \
+             runs",
+            cache.hits, cache.misses, engine_runs
+        );
     }
 
     drop(client);

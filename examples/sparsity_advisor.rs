@@ -16,7 +16,7 @@ use mi300a_char::sparsity::{compress_2_4, decompress_2_4, prune_2_4,
                             OverheadModel, SpeedupModel};
 use mi300a_char::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let cfg = Config::mi300a();
     let n = 256;
 

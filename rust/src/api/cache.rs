@@ -1,0 +1,299 @@
+//! Canonical-key result cache behind [`super::Service`] (DESIGN.md
+//! §6.5, `docs/serving.md` is the operator guide).
+//!
+//! The paper's product is *practical guidance* — occupancy thresholds,
+//! fairness-vs-streams trade-offs, context-dependent sparsity decisions
+//! — that clients ask for repeatedly with the *same* configurations.
+//! Every cacheable request is a pure function of the service's
+//! immutable configuration, so the service memoizes it: the request's
+//! canonical wire form ([`super::Request::cache_key`] — sorted keys, no
+//! envelope, enum-normalized spellings) is the key, and the stored
+//! [`Response`] re-serializes byte-identically to a cold run because
+//! the wire encoding itself is deterministic.
+//!
+//! The cache is bounded by an entry cap and an approximate byte cap
+//! ([`CachePolicy`]); when either is exceeded the least-recently-used
+//! entry is evicted. Hit/miss/eviction/size counters ([`CacheStats`])
+//! surface through the `stats` request, so a load test can *prove* a
+//! hot request never re-entered the DES engine instead of inferring it
+//! from latency.
+//!
+//! What is never cached: `run` (real PJRT execution), `repro` of a
+//! registry entry not flagged deterministic (see
+//! [`crate::experiments::ExperimentSpec`]), error responses, `stats`
+//! itself, and anything sent with the `"cache":false` envelope escape
+//! hatch (or served by a `--no-cache` instance) for measurement runs.
+
+use super::protocol::Response;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Sizing and on/off switch for a [`ResultCache`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CachePolicy {
+    /// Master switch. Disabled caches store nothing and count nothing
+    /// (the `--no-cache` serving mode for measurement runs).
+    pub enabled: bool,
+    /// Maximum number of cached responses (LRU-evicted beyond this).
+    pub max_entries: usize,
+    /// Approximate byte budget: each entry is charged its key length
+    /// plus its compact wire serialization length.
+    pub max_bytes: usize,
+}
+
+impl Default for CachePolicy {
+    fn default() -> CachePolicy {
+        CachePolicy {
+            enabled: true,
+            max_entries: 1024,
+            max_bytes: 64 << 20,
+        }
+    }
+}
+
+impl CachePolicy {
+    /// The `--no-cache` policy: every request runs cold.
+    pub fn disabled() -> CachePolicy {
+        CachePolicy { enabled: false, ..CachePolicy::default() }
+    }
+}
+
+/// A point-in-time snapshot of cache counters, surfaced on the wire by
+/// the `stats` request (`cache_*` fields).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to a cold execution (uncacheable and
+    /// cache-bypassing requests count neither hits nor misses).
+    pub misses: u64,
+    /// Entries removed by the LRU bound (not by replacement).
+    pub evictions: u64,
+    /// Live entries right now.
+    pub entries: u64,
+    /// Approximate bytes held right now (keys + wire-form responses).
+    pub bytes: u64,
+    /// The policy's entry cap.
+    pub max_entries: u64,
+    /// The policy's byte cap.
+    pub max_bytes: u64,
+    /// Whether the cache is enabled at all.
+    pub enabled: bool,
+}
+
+struct Slot {
+    // Arc so a hit only bumps a refcount under the lock; the deep
+    // clone the caller receives happens after the guard drops.
+    resp: Arc<Response>,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<String, Slot>,
+    bytes: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// A bounded, thread-safe LRU of canonical request key → response.
+///
+/// Exact LRU: every hit refreshes the entry's recency; eviction always
+/// removes the least-recently-used entry. Shared by reference from
+/// every connection thread of a serving instance (interior `Mutex`; the
+/// critical sections are map operations only — cold executions never
+/// run under the lock).
+pub struct ResultCache {
+    policy: CachePolicy,
+    inner: Mutex<Inner>,
+}
+
+impl ResultCache {
+    /// An empty cache under `policy`.
+    pub fn new(policy: CachePolicy) -> ResultCache {
+        ResultCache { policy, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Whether the policy enables caching at all.
+    pub fn enabled(&self) -> bool {
+        self.policy.enabled
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // Counters and map stay usable even if a panic poisoned the
+        // lock mid-update; stale recency is acceptable, losing the
+        // serving cache is not.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Look `key` up, refreshing its recency. Counts a hit or a miss;
+    /// returns `None` without counting when the cache is disabled. The
+    /// lock is held only for the map touch — the returned deep clone is
+    /// made after the guard drops, so concurrent hits do not serialize
+    /// on response size.
+    pub fn get(&self, key: &str) -> Option<Response> {
+        if !self.policy.enabled {
+            return None;
+        }
+        let hit = {
+            let mut guard = self.lock();
+            let inner = &mut *guard;
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(slot) = inner.map.get_mut(key) {
+                slot.last_used = tick;
+                let arc = Arc::clone(&slot.resp);
+                inner.hits += 1;
+                Some(arc)
+            } else {
+                inner.misses += 1;
+                None
+            }
+        };
+        hit.map(|arc| (*arc).clone())
+    }
+
+    /// Store `resp` under `key`, then evict LRU entries until both caps
+    /// hold. Replacing an existing key (two threads racing the same
+    /// cold request) is not an eviction. An entry alone larger than the
+    /// byte cap is not stored at all. The clone and the byte-accounting
+    /// serialization happen before the lock is taken.
+    pub fn insert(&self, key: String, resp: &Response) {
+        if !self.policy.enabled {
+            return;
+        }
+        let cost = key.len() + resp.to_json(None).to_string().len();
+        if cost > self.policy.max_bytes {
+            return;
+        }
+        let stored = Arc::new(resp.clone());
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        let slot = Slot { resp: stored, bytes: cost, last_used: tick };
+        if let Some(old) = inner.map.insert(key, slot) {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += cost;
+        // The fresh entry carries the newest tick, so it is never the
+        // LRU victim unless it is the only entry — excluded by the
+        // single-entry cost pre-check and the >=1 cap normalization.
+        let max_entries = self.policy.max_entries.max(1);
+        while inner.map.len() > max_entries
+            || inner.bytes > self.policy.max_bytes
+        {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(s) = inner.map.remove(&k) {
+                        inner.bytes -= s.bytes;
+                    }
+                    inner.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> CacheStats {
+        let guard = self.lock();
+        CacheStats {
+            hits: guard.hits,
+            misses: guard.misses,
+            evictions: guard.evictions,
+            entries: guard.map.len() as u64,
+            bytes: guard.bytes as u64,
+            max_entries: self.policy.max_entries as u64,
+            max_bytes: self.policy.max_bytes as u64,
+            enabled: self.policy.enabled,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn resp(tag: &str) -> Response {
+        Response::Config { config: Json::Str(tag.to_string()) }
+    }
+
+    fn policy(max_entries: usize, max_bytes: usize) -> CachePolicy {
+        CachePolicy { enabled: true, max_entries, max_bytes }
+    }
+
+    #[test]
+    fn hit_miss_and_replace_accounting() {
+        let c = ResultCache::new(policy(8, 1 << 20));
+        assert_eq!(c.get("a"), None);
+        c.insert("a".into(), &resp("one"));
+        assert_eq!(c.get("a"), Some(resp("one")));
+        // Replacement swaps the value without an eviction and without
+        // double-charging bytes.
+        c.insert("a".into(), &resp("two"));
+        assert_eq!(c.get("a"), Some(resp("two")));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 1, 0));
+        assert_eq!(s.entries, 1);
+        let one_entry_bytes = s.bytes;
+        c.insert("b".into(), &resp("two"));
+        assert_eq!(c.stats().bytes, 2 * one_entry_bytes);
+    }
+
+    #[test]
+    fn evicts_exactly_the_least_recently_used_entry() {
+        let c = ResultCache::new(policy(2, 1 << 20));
+        c.insert("a".into(), &resp("a"));
+        c.insert("b".into(), &resp("b"));
+        // Touch "a" so "b" becomes LRU, then overflow the entry cap.
+        assert!(c.get("a").is_some());
+        c.insert("c".into(), &resp("c"));
+        assert_eq!(c.get("b"), None, "LRU entry must be the victim");
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn byte_cap_evicts_and_oversized_entries_are_skipped() {
+        let small = resp("x");
+        let cost = "k0".len() + small.to_json(None).to_string().len();
+        // Room for exactly two entries of this shape.
+        let c = ResultCache::new(policy(64, 2 * cost));
+        c.insert("k0".into(), &small);
+        c.insert("k1".into(), &small);
+        assert_eq!(c.stats().evictions, 0);
+        c.insert("k2".into(), &small);
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= 2 * cost as u64);
+        // An entry alone exceeding the cap is refused outright.
+        let big = Response::Config {
+            config: Json::Str("y".repeat(4 * cost)),
+        };
+        c.insert("k3".into(), &big);
+        assert_eq!(c.get("k3"), None);
+    }
+
+    #[test]
+    fn disabled_cache_stores_and_counts_nothing() {
+        let c = ResultCache::new(CachePolicy::disabled());
+        c.insert("a".into(), &resp("a"));
+        assert_eq!(c.get("a"), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+        assert!(!s.enabled);
+    }
+}

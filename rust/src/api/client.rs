@@ -48,7 +48,19 @@ impl Client {
     /// be [`Response::Error`] — protocol-level failures the server
     /// reported; transport failures surface as `io::Error`).
     pub fn request(&mut self, req: &Request) -> io::Result<Response> {
-        let (v, id) = self.request_json(req)?;
+        self.request_opts(req, true)
+    }
+
+    /// Issue one typed request with an explicit cache mode. `cache:
+    /// false` sends the `"cache":false` envelope escape hatch, so the
+    /// server answers cold even when its result cache is warm (for
+    /// measurement runs).
+    pub fn request_opts(
+        &mut self,
+        req: &Request,
+        cache: bool,
+    ) -> io::Result<Response> {
+        let (v, id) = self.request_json_opts(req, cache)?;
         let (resp, got) = Response::from_json(&v)
             .map_err(|e| invalid(format!("bad server response: {e}")))?;
         if got != Some(id) {
@@ -59,13 +71,53 @@ impl Client {
         Ok(resp)
     }
 
+    /// Issue one batch of typed sub-requests and return the per-item
+    /// responses, item `k` answering `items[k]`. A server-side rejection
+    /// of the batch envelope itself (e.g. over the item cap) surfaces
+    /// as an `io::Error`; use [`Client::request`] with
+    /// [`Request::Batch`] to receive it as a typed response instead.
+    pub fn batch(&mut self, items: &[Request]) -> io::Result<Vec<Response>> {
+        let req = Request::Batch { items: items.to_vec() };
+        match self.request(&req)? {
+            Response::Batch { items: got } => {
+                // Mirror the id check in `request_opts`: positional
+                // callers must never index past a short reply.
+                if got.len() != items.len() {
+                    return Err(invalid(format!(
+                        "batch answered {} items for {} requests",
+                        got.len(),
+                        items.len()
+                    )));
+                }
+                Ok(got)
+            }
+            Response::Error { code, message } => Err(invalid(format!(
+                "batch rejected: {}: {message}",
+                code.as_str()
+            ))),
+            other => Err(invalid(format!(
+                "unexpected batch response type {:?}",
+                other.type_name()
+            ))),
+        }
+    }
+
     /// Issue one typed request and return the raw response JSON plus the
     /// id it was sent under (the `client` subcommand prints this
     /// verbatim).
     pub fn request_json(&mut self, req: &Request) -> io::Result<(Json, u64)> {
+        self.request_json_opts(req, true)
+    }
+
+    /// [`Client::request_json`] with an explicit cache mode.
+    pub fn request_json_opts(
+        &mut self,
+        req: &Request,
+        cache: bool,
+    ) -> io::Result<(Json, u64)> {
         let id = self.next_id;
         self.next_id += 1;
-        writeln!(self.writer, "{}", req.to_json(Some(id)))?;
+        writeln!(self.writer, "{}", req.to_json_opts(Some(id), cache))?;
         Ok((self.read_json_line()?, id))
     }
 

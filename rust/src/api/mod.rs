@@ -1,14 +1,20 @@
 //! The typed service API — the single front door to the whole system.
 //!
-//! Three pieces (DESIGN.md §6 is the wire-level spec):
+//! Four pieces (DESIGN.md §6 is the wire-level spec; `docs/serving.md`
+//! is the operator guide):
 //!
 //! * [`protocol`] — versioned [`Request`]/[`Response`] enums with
-//!   explicit [`ErrorCode`]s, their JSON wire encoding, and the legacy
-//!   text-command shim.
+//!   explicit [`ErrorCode`]s, their JSON wire encoding (including the
+//!   `batch` fan-out envelope and the `"cache":false` escape hatch),
+//!   and the legacy text-command shim.
 //! * [`service`] — the [`Service`] core owning the shared config, the
-//!   coordinator/engine construction, and the mpsc-isolated PJRT
-//!   executor worker. `serve.rs` and `main.rs` are thin transports over
-//!   it; neither holds business logic of its own.
+//!   coordinator/engine construction, the result cache, and the
+//!   mpsc-isolated PJRT executor worker. `serve.rs` and `main.rs` are
+//!   thin transports over it; neither holds business logic of its own.
+//! * [`cache`] — the canonical-key bounded-LRU result cache the
+//!   service answers repeat `sim`/`plan`/`sparsity`/`repro` questions
+//!   from, with hit/miss/eviction counters surfaced by the `stats`
+//!   request.
 //! * [`client`] — a blocking [`Client`] speaking the JSON-line framing
 //!   with per-request ids, for tests, examples, and the `client`
 //!   subcommand.
@@ -17,15 +23,62 @@
 //! one `Service::try_handle` arm, and (optionally) one legacy-shim arm —
 //! every transport picks it up for free. Adding a transport means
 //! speaking [`protocol`] at a `Service`; nothing else changes.
+//!
+//! # Quickstart (in-process)
+//!
+//! The service works without any socket — the CLI subcommands use it
+//! exactly like this:
+//!
+//! ```
+//! use mi300a_char::api::{Request, Response, Service};
+//! use mi300a_char::config::Config;
+//!
+//! let svc = Service::new(Config::mi300a());
+//! match svc.handle(&Request::ListExperiments) {
+//!     Response::Experiments { experiments } => {
+//!         assert!(experiments.iter().any(|e| e.id == "fig4"));
+//!     }
+//!     other => panic!("unexpected response: {other:?}"),
+//! }
+//! ```
+//!
+//! # Quickstart (served)
+//!
+//! The same requests over TCP, through the typed [`Client`] (see
+//! `examples/quickstart.rs` for the full version):
+//!
+//! ```no_run
+//! use mi300a_char::api::{Client, Request, Response};
+//! use mi300a_char::config::Config;
+//! use mi300a_char::isa::Precision;
+//!
+//! std::thread::spawn(|| {
+//!     mi300a_char::serve::serve(Config::mi300a(), "127.0.0.1:7300", Some(1))
+//! });
+//! let mut client = Client::connect_retry("127.0.0.1:7300", 200)?;
+//! // A batch answers N sub-requests in one envelope; repeats are
+//! // served from the result cache without re-running the DES engine.
+//! let responses = client.batch(&[
+//!     Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
+//!     Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
+//!     Request::Stats,
+//! ])?;
+//! if let Response::Stats { cache, .. } = &responses[2] {
+//!     assert_eq!(cache.hits, 1, "second item hit the cache");
+//! }
+//! # Ok::<(), std::io::Error>(())
+//! ```
 
+pub mod cache;
 pub mod client;
 pub mod protocol;
 pub mod service;
 
+pub use cache::{CachePolicy, CacheStats, ResultCache};
 pub use client::Client;
 pub use protocol::{
     objective_name, parse_legacy, parse_objective, precision_wire_name,
     ApiError, ErrorCode, ExperimentInfo, LegacyCommand, PlanGroup, Request,
-    Response, PROTOCOL_VERSION,
+    RequestEnvelope, Response, MAX_BATCH_ITEMS, PROTOCOL_VERSION,
 };
 pub use service::{Service, POOL_STREAMS, SIM_STREAMS, SIZE_RANGE};

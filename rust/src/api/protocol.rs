@@ -23,12 +23,25 @@
 //! Errors are themselves typed responses (`"type":"error"`) carrying a
 //! machine-readable [`ErrorCode`] plus a human message under `"error"`.
 //!
+//! Two further envelope-level features (DESIGN.md §6.5):
+//!
+//! * `"cache":false` (optional, default `true`) bypasses the service's
+//!   result cache for this request — the measurement-run escape hatch.
+//!   It is a request-envelope key like `"id"`, decoded into
+//!   [`RequestEnvelope`]; responses never carry it.
+//! * `"type":"batch"` carries an ordered `"items"` array of
+//!   envelope-less sub-requests and answers them in one
+//!   `"type":"batch"` response envelope, item `k` answering request
+//!   `k`. Items may not nest another batch and share the result cache
+//!   within the one call.
+//!
 //! The legacy whitespace text commands (`SIM`/`PLAN`/`SPARSITY`/`RUN`/
 //! `QUIT`) survive as [`parse_legacy`], a shim that desugars a text line
 //! into the same typed [`Request`]s — both framings produce
 //! byte-identical response lines (enforced by
 //! `tests/serve_integration.rs`).
 
+use super::cache::CacheStats;
 use crate::coordinator::Objective;
 use crate::isa::Precision;
 use crate::util::json::Json;
@@ -38,6 +51,12 @@ use std::fmt;
 /// Wire-format version. Bump on any schema change; servers reject every
 /// other version with [`ErrorCode::BadVersion`] (DESIGN.md §6.4).
 pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Maximum items in one batch request (a bigger batch is a
+/// [`ErrorCode::BadRange`] error, not a partially-served one). Enforced
+/// at decode time — before any per-item work — and again by the service
+/// for programmatically built batches.
+pub const MAX_BATCH_ITEMS: usize = 256;
 
 /// Machine-readable error categories (DESIGN.md §6.3). `as_str` gives
 /// the wire spelling; the set is closed per protocol version.
@@ -74,6 +93,7 @@ impl ErrorCode {
         ErrorCode::Runtime,
     ];
 
+    /// The stable wire spelling (e.g. `bad_range`).
     pub fn as_str(self) -> &'static str {
         match self {
             ErrorCode::BadVersion => "bad_version",
@@ -87,6 +107,7 @@ impl ErrorCode {
         }
     }
 
+    /// Inverse of [`ErrorCode::as_str`].
     pub fn parse(s: &str) -> Option<ErrorCode> {
         ErrorCode::ALL.iter().copied().find(|c| c.as_str() == s)
     }
@@ -101,10 +122,12 @@ pub struct ApiError {
 }
 
 impl ApiError {
+    /// An error with an explicit [`ErrorCode`].
     pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
         ApiError { code, message: message.into() }
     }
 
+    /// Shorthand for the most common code, [`ErrorCode::BadRequest`].
     pub fn bad_request(message: impl Into<String>) -> ApiError {
         ApiError::new(ErrorCode::BadRequest, message)
     }
@@ -149,6 +172,24 @@ pub fn parse_objective(s: &str) -> Option<Objective> {
     }
 }
 
+/// Envelope options decoded alongside a [`Request`]: the pipelining
+/// `id` (echoed on the response) and the `cache` escape hatch
+/// (`"cache":false` bypasses the service's result cache for this one
+/// request). Absent keys take the defaults (`id: None`, `cache: true`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestEnvelope {
+    /// Client-chosen request id, echoed verbatim on the response.
+    pub id: Option<u64>,
+    /// Whether the service may answer from (and fill) its result cache.
+    pub cache: bool,
+}
+
+impl Default for RequestEnvelope {
+    fn default() -> RequestEnvelope {
+        RequestEnvelope { id: None, cache: true }
+    }
+}
+
 /// A typed request — the single front door to the system (DESIGN.md
 /// §6.2 lists the payload schema per variant).
 #[derive(Debug, Clone, PartialEq)]
@@ -173,6 +214,18 @@ pub enum Request {
     ListExperiments,
     /// Dump the service's active configuration.
     Config,
+    /// An ordered list of sub-requests answered in one envelope. Items
+    /// carry no envelope of their own, may not nest another batch, and
+    /// share the service's result cache within the one call. Must not
+    /// be empty; the item count is capped at [`MAX_BATCH_ITEMS`].
+    Batch {
+        /// The sub-requests, answered in order.
+        items: Vec<Request>,
+    },
+    /// Service counters: the result-cache hit/miss/eviction/size totals
+    /// plus the engine-invocation count (cold executions of a
+    /// simulator/coordinator/driver path). Never cached.
+    Stats,
 }
 
 /// A typed response. Every variant maps 1:1 to a request type except
@@ -212,23 +265,37 @@ pub enum Response {
     },
     Experiments { experiments: Vec<ExperimentInfo> },
     Config { config: Json },
+    /// Per-item responses of a batch request, in item order. An item's
+    /// failure is that item's `error` entry; the batch envelope itself
+    /// still succeeds.
+    Batch { items: Vec<Response> },
+    /// Service counters (flattened on the wire as `cache_*` fields plus
+    /// `engine_runs`).
+    Stats { cache: CacheStats, engine_runs: u64 },
     Error { code: ErrorCode, message: String },
 }
 
 /// One scheduled group inside a `plan` response.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanGroup {
+    /// Kernel labels scheduled into this group.
     pub kernels: Vec<String>,
+    /// ACE streams the group runs across.
     pub streams: usize,
+    /// The coordinator's fairness estimate for the group.
     pub expected_fairness: f64,
+    /// Whether the group demands process-level isolation.
     pub process_isolation: bool,
 }
 
 /// One registry entry inside an `experiments` response.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentInfo {
+    /// Stable experiment id (`repro <id>`).
     pub id: String,
+    /// Human title.
     pub title: String,
+    /// Paper section the artifact reproduces.
     pub section: String,
 }
 
@@ -252,6 +319,7 @@ fn envelope_fields(id: Option<u64>) -> Vec<(&'static str, Json)> {
 }
 
 impl Request {
+    /// The wire `"type"` string of this variant.
     pub fn type_name(&self) -> &'static str {
         match self {
             Request::Sim { .. } => "sim",
@@ -261,13 +329,48 @@ impl Request {
             Request::Repro { .. } => "repro",
             Request::ListExperiments => "list_experiments",
             Request::Config => "config",
+            Request::Batch { .. } => "batch",
+            Request::Stats => "stats",
         }
     }
 
     /// Encode as one wire object (the caller newline-frames it).
     pub fn to_json(&self, id: Option<u64>) -> Json {
+        self.to_json_opts(id, true)
+    }
+
+    /// Encode with explicit envelope options. `cache: true` (the
+    /// default) is omitted on the wire, so it round-trips to the same
+    /// bytes as [`Request::to_json`]; `cache: false` emits the
+    /// `"cache":false` escape hatch.
+    pub fn to_json_opts(&self, id: Option<u64>, cache: bool) -> Json {
         let mut fields = envelope_fields(id);
+        if !cache {
+            fields.push(("cache", Json::Bool(false)));
+        }
         fields.push(("type", Json::Str(self.type_name().into())));
+        self.push_payload(&mut fields);
+        Json::obj(fields)
+    }
+
+    /// Encode `type` + payload only (no envelope keys) — the form batch
+    /// items take on the wire.
+    pub fn to_item_json(&self) -> Json {
+        let mut fields = vec![("type", Json::Str(self.type_name().into()))];
+        self.push_payload(&mut fields);
+        Json::obj(fields)
+    }
+
+    /// The canonical cache key: the envelope-less wire form. Object
+    /// keys serialize sorted and precision/objective spellings are
+    /// normalized into enums at decode time, so semantically identical
+    /// requests collide on one key no matter how they were spelled or
+    /// which transport carried them.
+    pub fn cache_key(&self) -> String {
+        self.to_item_json().to_string()
+    }
+
+    fn push_payload(&self, fields: &mut Vec<(&'static str, Json)>) {
         match self {
             Request::Sim { n, precision, streams } => {
                 fields.push(("n", Json::Num(*n as f64)));
@@ -299,9 +402,18 @@ impl Request {
             Request::Repro { experiment } => {
                 fields.push(("experiment", Json::Str(experiment.clone())));
             }
-            Request::ListExperiments | Request::Config => {}
+            Request::Batch { items } => {
+                fields.push((
+                    "items",
+                    Json::Arr(
+                        items.iter().map(|r| r.to_item_json()).collect(),
+                    ),
+                ));
+            }
+            Request::ListExperiments
+            | Request::Config
+            | Request::Stats => {}
         }
-        Json::obj(fields)
     }
 
     /// Decode a wire object. On failure the envelope `id` is still
@@ -309,10 +421,23 @@ impl Request {
     pub fn from_json(
         v: &Json,
     ) -> Result<(Request, Option<u64>), (ApiError, Option<u64>)> {
+        Request::decode(v).map(|(req, env)| (req, env.id))
+    }
+
+    /// Full decode: the request plus its [`RequestEnvelope`] options
+    /// (`id`, `cache`). Transports that honor the cache escape hatch
+    /// use this; [`Request::from_json`] is the id-only convenience.
+    pub fn decode(
+        v: &Json,
+    ) -> Result<(Request, RequestEnvelope), (ApiError, Option<u64>)> {
         let salvaged = salvage_id(v);
-        let (m, id, ty) =
+        let (m, id, ty, cache) =
             envelope(v, "request").map_err(|e| (e, salvaged))?;
-        decode_request_payload(m, ty).map(|r| (r, id)).map_err(|e| (e, id))
+        decode_request_payload(m, ty)
+            .map(|r| {
+                (r, RequestEnvelope { id, cache: cache.unwrap_or(true) })
+            })
+            .map_err(|e| (e, id))
     }
 }
 
@@ -373,6 +498,37 @@ fn decode_request_payload(
             check_env_fields(m, ty, &[])?;
             Ok(Request::Config)
         }
+        "batch" => {
+            check_env_fields(m, ty, &["items"])?;
+            let raw = arr_field(m, ty, "items")?;
+            if raw.is_empty() {
+                return Err(ApiError::bad_request(
+                    "batch: \"items\" must not be empty",
+                ));
+            }
+            // Cap before the per-item decode loop, so an absurd batch
+            // is rejected without building a Request per item.
+            if raw.len() > MAX_BATCH_ITEMS {
+                return Err(ApiError::new(
+                    ErrorCode::BadRange,
+                    format!(
+                        "batch items must be in 1..={MAX_BATCH_ITEMS} \
+                         (got {})",
+                        raw.len()
+                    ),
+                ));
+            }
+            let items = raw
+                .iter()
+                .enumerate()
+                .map(|(i, item)| decode_batch_item(item, i))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Request::Batch { items })
+        }
+        "stats" => {
+            check_env_fields(m, ty, &[])?;
+            Ok(Request::Stats)
+        }
         other => Err(ApiError::new(
             ErrorCode::UnknownType,
             format!("unknown request type {other:?}"),
@@ -380,7 +536,55 @@ fn decode_request_payload(
     }
 }
 
+/// Shared envelope rules for one batch item, request or response side:
+/// it must be an object, envelope keys (`v`/`id`/`cache`) belong to the
+/// batch line rather than to items, and batches do not nest. Returns
+/// the item's map and `type` so the caller runs the payload decoder.
+fn item_envelope<'a>(
+    v: &'a Json,
+    what: &str,
+) -> Result<(&'a BTreeMap<String, Json>, &'a str), ApiError> {
+    let m = obj(v, what)?;
+    for k in ["v", "id", "cache"] {
+        if m.contains_key(k) {
+            return Err(ApiError::bad_request(format!(
+                "{what}: {k:?} belongs on the batch envelope, not on items"
+            )));
+        }
+    }
+    let ty = match m.get("type") {
+        Some(Json::Str(s)) => s.as_str(),
+        Some(_) => {
+            return Err(ApiError::bad_request(format!(
+                "{what}: field \"type\" must be a string"
+            )))
+        }
+        None => {
+            return Err(ApiError::bad_request(format!(
+                "{what}: missing field \"type\""
+            )))
+        }
+    };
+    if ty == "batch" {
+        return Err(ApiError::bad_request(format!(
+            "{what}: batches do not nest"
+        )));
+    }
+    Ok((m, ty))
+}
+
+/// Decode one batch item: an envelope-less request object
+/// ([`item_envelope`] rules), so every item decodes exactly like a
+/// standalone request payload.
+fn decode_batch_item(v: &Json, idx: usize) -> Result<Request, ApiError> {
+    let what = format!("batch item {idx}");
+    let (m, ty) = item_envelope(v, &what)?;
+    decode_request_payload(m, ty)
+        .map_err(|e| ApiError::new(e.code, format!("{what}: {}", e.message)))
+}
+
 impl Response {
+    /// The wire `"type"` string of this variant.
     pub fn type_name(&self) -> &'static str {
         match self {
             Response::Sim { .. } => "sim",
@@ -390,6 +594,8 @@ impl Response {
             Response::Repro { .. } => "repro",
             Response::Experiments { .. } => "experiments",
             Response::Config { .. } => "config",
+            Response::Batch { .. } => "batch",
+            Response::Stats { .. } => "stats",
             Response::Error { .. } => "error",
         }
     }
@@ -398,6 +604,19 @@ impl Response {
     pub fn to_json(&self, id: Option<u64>) -> Json {
         let mut fields = envelope_fields(id);
         fields.push(("type", Json::Str(self.type_name().into())));
+        self.push_payload(&mut fields);
+        Json::obj(fields)
+    }
+
+    /// Encode `type` + payload only — the form batch response items
+    /// take on the wire.
+    pub fn to_item_json(&self) -> Json {
+        let mut fields = vec![("type", Json::Str(self.type_name().into()))];
+        self.push_payload(&mut fields);
+        Json::obj(fields)
+    }
+
+    fn push_payload(&self, fields: &mut Vec<(&'static str, Json)>) {
         match self {
             Response::Sim {
                 makespan_ms,
@@ -511,18 +730,53 @@ impl Response {
             Response::Config { config } => {
                 fields.push(("config", config.clone()));
             }
+            Response::Batch { items } => {
+                fields.push((
+                    "items",
+                    Json::Arr(
+                        items.iter().map(|r| r.to_item_json()).collect(),
+                    ),
+                ));
+            }
+            Response::Stats { cache, engine_runs } => {
+                fields.push(("cache_hits", Json::Num(cache.hits as f64)));
+                fields
+                    .push(("cache_misses", Json::Num(cache.misses as f64)));
+                fields.push((
+                    "cache_evictions",
+                    Json::Num(cache.evictions as f64),
+                ));
+                fields
+                    .push(("cache_entries", Json::Num(cache.entries as f64)));
+                fields.push(("cache_bytes", Json::Num(cache.bytes as f64)));
+                fields.push((
+                    "cache_max_entries",
+                    Json::Num(cache.max_entries as f64),
+                ));
+                fields.push((
+                    "cache_max_bytes",
+                    Json::Num(cache.max_bytes as f64),
+                ));
+                fields.push(("cache_enabled", Json::Bool(cache.enabled)));
+                fields.push(("engine_runs", Json::Num(*engine_runs as f64)));
+            }
             Response::Error { code, message } => {
                 fields.push(("code", Json::Str(code.as_str().into())));
                 fields.push(("error", Json::Str(message.clone())));
             }
         }
-        Json::obj(fields)
     }
 
     /// Decode a wire object (client side). Strict: unknown fields and
     /// foreign versions are rejected, mirroring request decoding.
     pub fn from_json(v: &Json) -> Result<(Response, Option<u64>), ApiError> {
-        let (m, id, ty) = envelope(v, "response")?;
+        let (m, id, ty, cache) = envelope(v, "response")?;
+        if cache.is_some() {
+            return Err(ApiError::bad_request(
+                "\"cache\" is a request-envelope key; responses never \
+                 carry it",
+            ));
+        }
         let resp = decode_response_payload(m, ty)?;
         Ok((resp, id))
     }
@@ -625,6 +879,45 @@ fn decode_response_payload(
             check_env_fields(m, ty, &["config"])?;
             Ok(Response::Config { config: any_field(m, ty, "config")?.clone() })
         }
+        "batch" => {
+            check_env_fields(m, ty, &["items"])?;
+            let items = arr_field(m, ty, "items")?
+                .iter()
+                .enumerate()
+                .map(|(i, item)| decode_response_item(item, i))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Response::Batch { items })
+        }
+        "stats" => {
+            check_env_fields(
+                m,
+                ty,
+                &[
+                    "cache_hits",
+                    "cache_misses",
+                    "cache_evictions",
+                    "cache_entries",
+                    "cache_bytes",
+                    "cache_max_entries",
+                    "cache_max_bytes",
+                    "cache_enabled",
+                    "engine_runs",
+                ],
+            )?;
+            Ok(Response::Stats {
+                cache: CacheStats {
+                    hits: u64_field(m, ty, "cache_hits")?,
+                    misses: u64_field(m, ty, "cache_misses")?,
+                    evictions: u64_field(m, ty, "cache_evictions")?,
+                    entries: u64_field(m, ty, "cache_entries")?,
+                    bytes: u64_field(m, ty, "cache_bytes")?,
+                    max_entries: u64_field(m, ty, "cache_max_entries")?,
+                    max_bytes: u64_field(m, ty, "cache_max_bytes")?,
+                    enabled: bool_field(m, ty, "cache_enabled")?,
+                },
+                engine_runs: u64_field(m, ty, "engine_runs")?,
+            })
+        }
         "error" => {
             check_env_fields(m, ty, &["code", "error"])?;
             let code = str_field(m, ty, "code")?;
@@ -642,6 +935,15 @@ fn decode_response_payload(
             format!("unknown response type {other:?}"),
         )),
     }
+}
+
+/// Decode one batch response item ([`item_envelope`] rules, response
+/// payload decoder).
+fn decode_response_item(v: &Json, idx: usize) -> Result<Response, ApiError> {
+    let what = format!("batch response item {idx}");
+    let (m, ty) = item_envelope(v, &what)?;
+    decode_response_payload(m, ty)
+        .map_err(|e| ApiError::new(e.code, format!("{what}: {}", e.message)))
 }
 
 fn decode_plan_group(v: &Json) -> Result<PlanGroup, ApiError> {
@@ -693,10 +995,13 @@ fn obj<'a>(
     }
 }
 
+type EnvelopeParts<'a> =
+    (&'a BTreeMap<String, Json>, Option<u64>, &'a str, Option<bool>);
+
 fn envelope<'a>(
     v: &'a Json,
     what: &str,
-) -> Result<(&'a BTreeMap<String, Json>, Option<u64>, &'a str), ApiError> {
+) -> Result<EnvelopeParts<'a>, ApiError> {
     let m = obj(v, what)?;
     match m.get("v") {
         Some(Json::Num(x)) if *x == PROTOCOL_VERSION as f64 => {}
@@ -751,7 +1056,16 @@ fn envelope<'a>(
             )))
         }
     };
-    Ok((m, id, ty))
+    let cache = match m.get("cache") {
+        None => None,
+        Some(Json::Bool(b)) => Some(*b),
+        Some(_) => {
+            return Err(ApiError::bad_request(
+                "field \"cache\" must be a boolean",
+            ))
+        }
+    };
+    Ok((m, id, ty, cache))
 }
 
 fn salvage_id(v: &Json) -> Option<u64> {
@@ -773,7 +1087,12 @@ fn check_env_fields(
 ) -> Result<(), ApiError> {
     for k in m.keys() {
         let k = k.as_str();
-        if k != "v" && k != "id" && k != "type" && !allowed.contains(&k) {
+        if k != "v"
+            && k != "id"
+            && k != "type"
+            && k != "cache"
+            && !allowed.contains(&k)
+        {
             return Err(ApiError::new(
                 ErrorCode::UnknownField,
                 format!("{ty}: unknown field {k:?}"),
@@ -819,6 +1138,23 @@ fn f64_field(
         Json::Num(x) => Ok(*x),
         _ => Err(ApiError::bad_request(format!(
             "{ty}: field {key:?} must be a number"
+        ))),
+    }
+}
+
+fn u64_field(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+    key: &str,
+) -> Result<u64, ApiError> {
+    match any_field(m, ty, key)? {
+        Json::Num(x)
+            if x.fract() == 0.0 && *x >= 0.0 && *x <= 9.0e15 =>
+        {
+            Ok(*x as u64)
+        }
+        _ => Err(ApiError::bad_request(format!(
+            "{ty}: field {key:?} must be a nonnegative integer"
         ))),
     }
 }
@@ -927,11 +1263,12 @@ pub fn parse_legacy(line: &str) -> Result<LegacyCommand, ApiError> {
         ["RUN", entry] => Request::Run { entry: entry.to_string() },
         ["LIST"] => Request::ListExperiments,
         ["CONFIG"] => Request::Config,
+        ["STATS"] => Request::Stats,
         _ => {
             return Err(ApiError::new(
                 ErrorCode::UnknownType,
                 "unknown command (try SIM/PLAN/SPARSITY/RUN/LIST/CONFIG/\
-                 QUIT or a JSON request line)",
+                 STATS/QUIT or a JSON request line)",
             ))
         }
     };
@@ -1023,5 +1360,79 @@ mod tests {
         let v = Json::parse(r#"{"type":"config"}"#).unwrap();
         let (err, _) = Request::from_json(&v).unwrap_err();
         assert_eq!(err.code, ErrorCode::BadVersion);
+    }
+
+    #[test]
+    fn cache_envelope_flag_defaults_true_and_roundtrips_false() {
+        let req = Request::Sparsity { n: 512, streams: 4 };
+        let (_, env) = Request::decode(&req.to_json(Some(3))).unwrap();
+        assert_eq!(env, RequestEnvelope { id: Some(3), cache: true });
+
+        let wire = req.to_json_opts(Some(3), false).to_string();
+        assert!(wire.contains(r#""cache":false"#), "{wire}");
+        let (back, env) =
+            Request::decode(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, req);
+        assert!(!env.cache);
+        assert_eq!(back.to_json_opts(env.id, env.cache).to_string(), wire);
+
+        // cache key ignores the envelope entirely.
+        assert_eq!(req.cache_key(), back.cache_key());
+        assert!(!req.cache_key().contains("cache"));
+
+        let bad = Json::parse(r#"{"v":1,"cache":1,"type":"config"}"#)
+            .unwrap();
+        let (err, _) = Request::decode(&bad).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn batch_items_are_envelope_less_and_do_not_nest() {
+        let batch = Request::Batch {
+            items: vec![
+                Request::Sparsity { n: 512, streams: 4 },
+                Request::Stats,
+            ],
+        };
+        let wire = batch.to_json(Some(1)).to_string();
+        let (back, id) =
+            Request::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, batch);
+        assert_eq!(id, Some(1));
+
+        for (line, needle) in [
+            (r#"{"v":1,"type":"batch","items":[]}"#, "must not be empty"),
+            (
+                r#"{"v":1,"type":"batch","items":[{"type":"batch","items":[{"type":"stats"}]}]}"#,
+                "do not nest",
+            ),
+            (
+                r#"{"v":1,"type":"batch","items":[{"v":1,"type":"stats"}]}"#,
+                "batch envelope",
+            ),
+            (
+                r#"{"v":1,"type":"batch","items":[{"id":4,"type":"stats"}]}"#,
+                "batch envelope",
+            ),
+            (
+                r#"{"v":1,"type":"batch","items":[{"type":"stats","x":1}]}"#,
+                "unknown field",
+            ),
+        ] {
+            let (err, _) =
+                Request::from_json(&Json::parse(line).unwrap()).unwrap_err();
+            assert!(
+                err.message.contains(needle),
+                "{line} -> {err} (wanted {needle:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn legacy_stats_desugars() {
+        assert_eq!(
+            parse_legacy("STATS").unwrap(),
+            LegacyCommand::Request(Request::Stats)
+        );
     }
 }

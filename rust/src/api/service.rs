@@ -12,10 +12,23 @@
 //! [`ErrorCode::BadRange`] errors naming the accepted range (DESIGN.md
 //! §6.3) instead of the pre-API behavior of silently clamping stream
 //! counts and answering a different question.
+//!
+//! ## Caching
+//!
+//! The service embeds a [`ResultCache`] (see [`super::cache`]):
+//! `sim`/`plan`/`sparsity` requests and `repro` of deterministic
+//! registry entries are memoized under their canonical key, so a
+//! repeated request returns a byte-identical response with zero DES
+//! engine re-execution — provable through the `stats` request, whose
+//! `engine_runs` counter only moves on cold executions. Batch items
+//! route through the same path and therefore share the cache within
+//! one call. [`Service::handle_opts`] with `use_cache: false` (the
+//! wire `"cache":false` escape hatch) always runs cold.
 
+use super::cache::{CachePolicy, CacheStats, ResultCache};
 use super::protocol::{
     objective_name, ApiError, ErrorCode, ExperimentInfo, PlanGroup, Request,
-    Response,
+    Response, MAX_BATCH_ITEMS,
 };
 use crate::config::Config;
 use crate::coordinator::{decide_sparsity, Coordinator};
@@ -27,6 +40,7 @@ use crate::runtime::{Executor, Manifest};
 use crate::sim::{ConcurrencyProfile, Engine, KernelDesc, SparsityMode};
 use crate::sparsity::SpeedupModel;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
@@ -59,17 +73,43 @@ pub struct Service {
     // The worker-channel sender lives behind a Mutex only to guarantee
     // `Sync` on every toolchain; senders are cloned out per request.
     exec_tx: Mutex<mpsc::Sender<ExecJob>>,
+    cache: ResultCache,
+    // Cold executions of a simulator/coordinator/driver path — the
+    // engine-invocation counter `stats` reports. Cache hits never
+    // touch it, which is what lets tests prove a repeat request did
+    // zero re-execution.
+    engine_runs: AtomicU64,
 }
 
 impl Service {
-    /// Service over the default artifacts directory.
+    /// Service over the default artifacts directory and cache policy.
     pub fn new(cfg: Config) -> Service {
-        Service::with_artifacts_dir(cfg, Manifest::default_dir())
+        Service::with_options(
+            cfg,
+            Manifest::default_dir(),
+            CachePolicy::default(),
+        )
     }
 
-    /// Service executing artifacts from `artifacts_dir`. Spawns the
-    /// executor worker thread; it exits when the service is dropped.
+    /// Service executing artifacts from `artifacts_dir` (default cache
+    /// policy).
     pub fn with_artifacts_dir(cfg: Config, artifacts_dir: PathBuf) -> Service {
+        Service::with_options(cfg, artifacts_dir, CachePolicy::default())
+    }
+
+    /// Service with an explicit result-cache policy (the CLI's
+    /// `--no-cache` builds one from [`CachePolicy::disabled`]).
+    pub fn with_cache_policy(cfg: Config, policy: CachePolicy) -> Service {
+        Service::with_options(cfg, Manifest::default_dir(), policy)
+    }
+
+    /// Fully-explicit constructor. Spawns the executor worker thread;
+    /// it exits when the service is dropped.
+    pub fn with_options(
+        cfg: Config,
+        artifacts_dir: PathBuf,
+        policy: CachePolicy,
+    ) -> Service {
         let (tx, rx) = mpsc::channel::<ExecJob>();
         let worker_dir = artifacts_dir.clone();
         thread::Builder::new()
@@ -80,6 +120,8 @@ impl Service {
             cfg: Arc::new(cfg),
             artifacts_dir,
             exec_tx: Mutex::new(tx),
+            cache: ResultCache::new(policy),
+            engine_runs: AtomicU64::new(0),
         }
     }
 
@@ -97,12 +139,95 @@ impl Service {
         Manifest::load(&self.artifacts_dir)
     }
 
-    /// Handle one typed request. Never panics on bad input: every
-    /// failure is a typed [`Response::Error`].
+    /// Handle one typed request through the result cache. Never panics
+    /// on bad input: every failure is a typed [`Response::Error`].
     pub fn handle(&self, req: &Request) -> Response {
-        match self.try_handle(req) {
+        self.handle_opts(req, true)
+    }
+
+    /// Handle one typed request with an explicit cache mode.
+    /// `use_cache: false` is the `"cache":false` / `--no-cache` escape
+    /// hatch: the request always runs cold and counts neither a hit
+    /// nor a miss. A batch fans its items through the same path, so
+    /// identical items within one batch share the cache.
+    pub fn handle_opts(&self, req: &Request, use_cache: bool) -> Response {
+        if let Request::Batch { items } = req {
+            // Mirror the wire decoder's 1..=MAX_BATCH_ITEMS contract for
+            // programmatically built batches too.
+            if items.is_empty() {
+                return Response::from(ApiError::bad_request(
+                    "batch: \"items\" must not be empty",
+                ));
+            }
+            if items.len() > MAX_BATCH_ITEMS {
+                return Response::from(ApiError::new(
+                    ErrorCode::BadRange,
+                    format!(
+                        "batch items must be in 1..={MAX_BATCH_ITEMS} \
+                         (got {})",
+                        items.len()
+                    ),
+                ));
+            }
+            return Response::Batch {
+                items: items
+                    .iter()
+                    .map(|item| self.handle_one(item, use_cache))
+                    .collect(),
+            };
+        }
+        self.handle_one(req, use_cache)
+    }
+
+    /// Result-cache counters (the `stats` request's `cache_*` fields).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Cold engine/driver executions so far (the `stats` request's
+    /// `engine_runs` field).
+    pub fn engine_runs(&self) -> u64 {
+        self.engine_runs.load(Ordering::Relaxed)
+    }
+
+    /// One non-batch request: consult the cache when allowed, fall
+    /// through to a cold execution, and memoize successful cacheable
+    /// responses. Error responses are never cached.
+    fn handle_one(&self, req: &Request, use_cache: bool) -> Response {
+        let cold = |r: &Request| match self.try_handle(r) {
             Ok(resp) => resp,
             Err(e) => Response::from(e),
+        };
+        if use_cache && self.cacheable(req) {
+            let key = req.cache_key();
+            if let Some(resp) = self.cache.get(&key) {
+                return resp;
+            }
+            let resp = cold(req);
+            if !matches!(resp, Response::Error { .. }) {
+                self.cache.insert(key, &resp);
+            }
+            return resp;
+        }
+        cold(req)
+    }
+
+    /// Whether `req` is a pure function of the immutable config:
+    /// simulator/coordinator questions always are; `repro` is iff the
+    /// registry entry is flagged deterministic; `run` (real PJRT
+    /// execution), introspection, and `stats` never are.
+    fn cacheable(&self, req: &Request) -> bool {
+        match req {
+            Request::Sim { .. }
+            | Request::Plan { .. }
+            | Request::Sparsity { .. } => true,
+            Request::Repro { experiment } => experiments::spec(experiment)
+                .map_or(false, |s| s.deterministic),
+            Request::Run { .. }
+            | Request::ListExperiments
+            | Request::Config
+            | Request::Batch { .. }
+            | Request::Stats => false,
         }
     }
 
@@ -121,6 +246,7 @@ impl Service {
             Request::Sim { n, precision, streams } => {
                 let n = check_range("n", *n, SIZE_RANGE)?;
                 let streams = check_range("streams", *streams, SIM_STREAMS)?;
+                self.engine_runs.fetch_add(1, Ordering::Relaxed);
                 let engine = Engine::new(&self.cfg, ConcurrencyProfile::ace());
                 let ks =
                     vec![KernelDesc::gemm(n, *precision).with_iters(50); streams];
@@ -142,6 +268,7 @@ impl Service {
             Request::Plan { objective, streams, n, precision } => {
                 let streams = check_range("streams", *streams, POOL_STREAMS)?;
                 let n = check_range("n", *n, SIZE_RANGE)?;
+                self.engine_runs.fetch_add(1, Ordering::Relaxed);
                 let pool = vec![
                     KernelDesc::gemm(n, *precision).with_iters(100);
                     streams
@@ -173,6 +300,7 @@ impl Service {
             Request::Sparsity { n, streams } => {
                 let n = check_range("n", *n, SIZE_RANGE)?;
                 let streams = check_range("streams", *streams, POOL_STREAMS)?;
+                self.engine_runs.fetch_add(1, Ordering::Relaxed);
                 let k = KernelDesc::gemm(n, Precision::Fp8);
                 let d = decide_sparsity(&k, streams, true);
                 let model = SpeedupModel::new(&self.cfg);
@@ -230,6 +358,7 @@ impl Service {
                             ),
                         )
                     })?;
+                self.engine_runs.fetch_add(1, Ordering::Relaxed);
                 let report = (spec.runner)(&self.cfg);
                 Ok(Response::Repro {
                     experiment: spec.id.to_string(),
@@ -250,6 +379,16 @@ impl Service {
             }),
             Request::Config => {
                 Ok(Response::Config { config: self.cfg.to_json() })
+            }
+            Request::Stats => Ok(Response::Stats {
+                cache: self.cache.stats(),
+                engine_runs: self.engine_runs(),
+            }),
+            // Top-level batches are fanned out by `handle_opts`; a
+            // batch reaching this point was nested inside another (the
+            // wire decoder rejects that too).
+            Request::Batch { .. } => {
+                Err(ApiError::bad_request("batches do not nest"))
             }
         }
     }
@@ -407,6 +546,91 @@ mod tests {
         match s.handle(&Request::Config) {
             Response::Config { config } => {
                 assert_eq!(config, s.config().to_json())
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn repeat_requests_hit_the_cache_with_zero_reexecution() {
+        let s = svc();
+        let req = Request::Sparsity { n: 512, streams: 4 };
+        let cold = s.handle(&req);
+        assert_eq!(s.engine_runs(), 1);
+        let warm = s.handle(&req);
+        assert_eq!(s.engine_runs(), 1, "second call must not re-execute");
+        assert_eq!(cold, warm);
+        assert_eq!(
+            cold.to_json(None).to_string(),
+            warm.to_json(None).to_string(),
+            "cached response must re-serialize byte-identically"
+        );
+        let stats = s.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+    }
+
+    #[test]
+    fn disabled_cache_always_runs_cold() {
+        let s = Service::with_cache_policy(
+            Config::mi300a(),
+            super::CachePolicy::disabled(),
+        );
+        let req = Request::Sparsity { n: 512, streams: 4 };
+        let a = s.handle(&req);
+        let b = s.handle(&req);
+        assert_eq!(a, b, "cold runs are still deterministic");
+        assert_eq!(s.engine_runs(), 2);
+        let stats = s.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (0, 0, 0));
+    }
+
+    #[test]
+    fn cache_false_escape_hatch_bypasses_a_warm_cache() {
+        let s = svc();
+        let req = Request::Sparsity { n: 512, streams: 4 };
+        let warm = s.handle(&req);
+        assert_eq!(s.engine_runs(), 1);
+        let bypass = s.handle_opts(&req, false);
+        assert_eq!(s.engine_runs(), 2, "bypass must run cold");
+        assert_eq!(warm, bypass);
+        let stats = s.cache_stats();
+        // The bypass counted neither a hit nor a miss.
+        assert_eq!((stats.hits, stats.misses), (0, 1));
+    }
+
+    #[test]
+    fn error_responses_are_not_cached() {
+        let s = svc();
+        let req = Request::Sim {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 99,
+        };
+        for _ in 0..2 {
+            match s.handle(&req) {
+                Response::Error { code, .. } => {
+                    assert_eq!(code, ErrorCode::BadRange)
+                }
+                other => panic!("unexpected response: {other:?}"),
+            }
+        }
+        let stats = s.cache_stats();
+        assert_eq!(stats.entries, 0);
+        assert_eq!(stats.misses, 2, "both attempts fell through");
+    }
+
+    #[test]
+    fn oversized_batches_are_a_typed_range_error() {
+        let s = svc();
+        let items =
+            vec![Request::Stats; super::MAX_BATCH_ITEMS + 1];
+        match s.handle(&Request::Batch { items }) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRange);
+                assert!(
+                    message.contains(&super::MAX_BATCH_ITEMS.to_string()),
+                    "{message}"
+                );
             }
             other => panic!("unexpected response: {other:?}"),
         }

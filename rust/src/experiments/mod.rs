@@ -18,17 +18,23 @@ use crate::util::json::Json;
 /// The output of one experiment driver.
 #[derive(Debug, Clone)]
 pub struct ExperimentReport {
+    /// The registry id that produced this report.
     pub id: &'static str,
+    /// Human title (matches the registry entry's).
     pub title: String,
+    /// Rendered result tables.
     pub tables: Vec<Table>,
+    /// ASCII plots accompanying the tables.
     pub plots: Vec<String>,
     /// Paper-context notes printed under the tables.
     pub notes: Vec<String>,
-    /// Machine-readable result (written to reports/<id>.json).
+    /// Machine-readable result (written to `reports/<id>.json`).
     pub json: Json,
 }
 
 impl ExperimentReport {
+    /// The human-readable form `repro` prints: title, tables, plots,
+    /// notes.
     pub fn render(&self) -> String {
         let mut out = format!("### {} — {}\n\n", self.id, self.title);
         for t in &self.tables {
@@ -59,6 +65,14 @@ pub struct ExperimentSpec {
     pub section: &'static str,
     /// The driver regenerating the artifact from the simulator.
     pub runner: fn(&Config) -> ExperimentReport,
+    /// Purity annotation: `true` when the runner is a pure function of
+    /// its `Config` — every stochastic draw is seeded from `cfg.seed`
+    /// (DESIGN.md §7), with no wall-clock, filesystem, or ambient
+    /// state. This is what makes the driver's `repro` response safe to
+    /// memoize: the service's result cache (`api::cache`) only caches
+    /// experiments flagged deterministic. A future driver measuring
+    /// real hardware or wall-clock time must set `false`.
+    pub deterministic: bool,
 }
 
 /// Every experiment, in paper order (the DESIGN.md §5 index is the
@@ -69,108 +83,126 @@ pub const REGISTRY: &[ExperimentSpec] = &[
         title: "System configuration",
         section: "§4",
         runner: micro::table1,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "table2",
         title: "Microbenchmark classes",
         section: "§4",
         runner: micro::table2,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig2",
         title: "FP8 matrix-core occupancy scaling",
         section: "§5",
         runner: micro::fig2,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig3",
         title: "Matrix shape effects",
         section: "§5",
         runner: micro::fig3,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "table3",
         title: "MFMA opcode coverage and baseline latency",
         section: "§5",
         runner: micro::table3,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig4",
         title: "ACE concurrency scaling",
         section: "§6",
         runner: ace::fig4,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig5",
         title: "Fairness and overlap characterization",
         section: "§6",
         runner: ace::fig5,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig6",
         title: "L2 contention",
         section: "§6",
         runner: ace::fig6,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig7",
         title: "LDS saturation",
         section: "§6",
         runner: ace::fig7,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig8",
         title: "Execution-time variance under contention",
         section: "§6",
         runner: ace::fig8,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig9",
         title: "Occupancy fragmentation",
         section: "§6",
         runner: ace::fig9,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig10",
         title: "Sparsity overhead characterization",
         section: "§7",
         runner: sparsity::fig10,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig11",
         title: "Sparsity speedup across problem sizes",
         section: "§7",
         runner: sparsity::fig11,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig12",
         title: "Comprehensive parameter sweep (60 configs)",
         section: "§7",
         runner: sparsity::fig12,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig13",
         title: "Sparsity under resource contention",
         section: "§7",
         runner: sparsity::fig13,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig14",
         title: "Transformer-style inference kernel",
         section: "§8",
         runner: apps::fig14,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig15",
         title: "Concurrent FP8 workloads with asynchronous execution",
         section: "§8",
         runner: apps::fig15,
+        deterministic: true,
     },
     ExperimentSpec {
         id: "fig16",
         title: "Mixed-precision workload analysis",
         section: "§8",
         runner: apps::fig16,
+        deterministic: true,
     },
 ];
 
@@ -257,9 +289,24 @@ mod tests {
     fn reports_are_deterministic() {
         let cfg = Config::mi300a();
         for id in ["fig4", "fig13"] {
+            assert!(
+                spec(id).unwrap().deterministic,
+                "{id} must be flagged deterministic"
+            );
             let a = run(id, &cfg).unwrap().render();
             let b = run(id, &cfg).unwrap().render();
             assert_eq!(a, b, "{id} must be seed-deterministic");
+        }
+    }
+
+    #[test]
+    fn every_driver_on_the_simulated_substrate_is_deterministic() {
+        // The whole registry runs on the seeded simulator (DESIGN.md
+        // §7), so every entry is cacheable today. A driver measuring
+        // real hardware must flip its flag — and this test — when it
+        // lands.
+        for s in REGISTRY {
+            assert!(s.deterministic, "{}: unexpected nondeterminism", s.id);
         }
     }
 }

@@ -6,16 +6,21 @@
 //! here.
 //!
 //! Subcommands:
+//!
+//! ```text
 //!   repro <id|all>      regenerate a paper table/figure (DESIGN.md §5)
 //!   run <entry>         execute one AOT'd artifact via PJRT
 //!   plan                show a coordinator execution plan for a pool
 //!   serve               serve the JSON-line protocol over TCP
+//!                       (batching + result cache; --no-cache disables)
 //!   client <json>       send one JSON request to a serving instance
 //!   config              dump the active configuration
 //!   list                list experiments and artifacts
+//! ```
 
 use mi300a_char::api::{
-    parse_objective, Client, ErrorCode, Request, Response, Service,
+    parse_objective, CachePolicy, Client, ErrorCode, Request, Response,
+    Service,
 };
 use mi300a_char::config::Config;
 use mi300a_char::isa::Precision;
@@ -33,14 +38,18 @@ USAGE:
   mi300a-char run <entry> [--artifacts DIR]
   mi300a-char plan [--objective latency|throughput|isolation]
                    [--streams N] [--size N] [--precision P]
-  mi300a-char serve [--addr HOST:PORT] [--max-conns N]
+  mi300a-char serve [--addr HOST:PORT] [--max-conns N] [--no-cache]
   mi300a-char client <json-request> [--addr HOST:PORT]
   mi300a-char config [--set section.field=value]
   mi300a-char list
 
-Experiment ids: table1 table2 table3 fig2..fig16 (see DESIGN.md §5).
-The wire protocol (client/serve) is specified in DESIGN.md §6, e.g.:
+Experiment ids: table1 table2 table3 fig2..fig16 (see DESIGN.md §5 and
+docs/experiments.md). The wire protocol (client/serve) is specified in
+DESIGN.md §6 and docs/serving.md, e.g.:
   mi300a-char client '{\"v\":1,\"type\":\"sim\",\"n\":512,\"precision\":\"fp8\",\"streams\":4}'
+Batches answer many requests in one envelope; `stats` reports the
+serve-side result cache (add \"cache\":false to bypass it per request):
+  mi300a-char client '{\"v\":1,\"type\":\"batch\",\"items\":[{\"type\":\"sparsity\",\"n\":512,\"streams\":4},{\"type\":\"stats\"}]}'
 ";
 
 fn build_config(args: &Args) -> Config {
@@ -66,8 +75,15 @@ fn print_error(context: &str, code: ErrorCode, message: &str) {
     eprintln!("{context}: {message} [{}]", code.as_str());
 }
 
+/// Service for one-shot subcommands: a single process answering a
+/// single request can never hit the result cache, so skip the
+/// memoization bookkeeping entirely. Only `serve` caches.
+fn one_shot_service(args: &Args) -> Service {
+    Service::with_cache_policy(build_config(args), CachePolicy::disabled())
+}
+
 fn cmd_repro(args: &Args) -> i32 {
-    let svc = Service::new(build_config(args));
+    let svc = one_shot_service(args);
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let out_dir = args.get("out-dir").map(std::path::PathBuf::from);
     if let Some(d) = &out_dir {
@@ -124,7 +140,8 @@ fn cmd_run(args: &Args) -> i32 {
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Manifest::default_dir);
-    let svc = Service::with_artifacts_dir(build_config(args), dir);
+    let svc =
+        Service::with_options(build_config(args), dir, CachePolicy::disabled());
     match svc.handle(&Request::Run { entry }) {
         Response::Run { entry, outputs, checksum, exec_ms } => {
             println!(
@@ -169,7 +186,7 @@ fn cmd_plan(args: &Args) -> i32 {
             return 2;
         }
     };
-    let svc = Service::new(build_config(args));
+    let svc = one_shot_service(args);
     match svc.handle(&Request::Plan { objective, streams, n, precision }) {
         Response::Plan { objective, sparse, groups } => {
             println!("objective: {objective}");
@@ -201,7 +218,7 @@ fn cmd_plan(args: &Args) -> i32 {
 }
 
 fn cmd_config(args: &Args) -> i32 {
-    let svc = Service::new(build_config(args));
+    let svc = one_shot_service(args);
     match svc.handle(&Request::Config) {
         Response::Config { config } => {
             println!("{}", config.to_string_pretty());
@@ -215,7 +232,7 @@ fn cmd_config(args: &Args) -> i32 {
 }
 
 fn cmd_list(args: &Args) -> i32 {
-    let svc = Service::new(build_config(args));
+    let svc = one_shot_service(args);
     match svc.handle(&Request::ListExperiments) {
         Response::Experiments { experiments } => {
             println!("experiments:");
@@ -265,7 +282,12 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         },
     };
-    match mi300a_char::serve::serve(cfg, &addr, max) {
+    let policy = if args.flag("no-cache") {
+        CachePolicy::disabled()
+    } else {
+        CachePolicy::default()
+    };
+    match mi300a_char::serve::serve_with(cfg, &addr, max, policy) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("serve: {e}");
@@ -295,9 +317,10 @@ fn cmd_client(args: &Args) -> i32 {
         }
     };
     // Decode locally first: usage errors are caught (typed) before any
-    // connection is made.
-    let req = match Request::from_json(&v) {
-        Ok((req, _)) => req,
+    // connection is made. The envelope's `cache` flag is forwarded so
+    // `"cache":false` measurement requests stay cache-bypassing.
+    let (req, env) = match Request::decode(&v) {
+        Ok(decoded) => decoded,
         Err((e, _)) => {
             eprintln!("client: {e}");
             return 2;
@@ -310,7 +333,7 @@ fn cmd_client(args: &Args) -> i32 {
             return 1;
         }
     };
-    match client.request_json(&req) {
+    match client.request_json_opts(&req, env.cache) {
         Ok((resp, _id)) => {
             println!("{resp}");
             // Typed error responses must be visible to shell pipelines.
@@ -328,7 +351,7 @@ fn cmd_client(args: &Args) -> i32 {
 }
 
 fn main() {
-    let args = Args::from_env(&["json", "verbose"]);
+    let args = Args::from_env(&["json", "verbose", "no-cache"]);
     let code = match args.subcommand.as_deref() {
         Some("repro") => cmd_repro(&args),
         Some("run") => cmd_run(&args),

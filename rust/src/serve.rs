@@ -3,14 +3,20 @@
 //! Framing: one message per line. A line starting with `{` is a
 //! versioned JSON request (DESIGN.md §6); its optional `id` is echoed on
 //! the response so clients can pipeline many requests on one
-//! connection. Any other non-empty line goes through the legacy text
-//! shim (`SIM`/`PLAN`/`SPARSITY`/`RUN`/`LIST`/`CONFIG`/`QUIT`), which
-//! desugars into the same typed requests — the response line is
+//! connection, its optional `"cache":false` envelope flag bypasses the
+//! service's result cache, and a `batch` request answers its items in
+//! one envelope. Any other non-empty line goes through the legacy text
+//! shim (`SIM`/`PLAN`/`SPARSITY`/`RUN`/`LIST`/`CONFIG`/`STATS`/`QUIT`),
+//! which desugars into the same typed requests — the response line is
 //! byte-identical to the JSON form without an `id` (enforced by
 //! tests/serve_integration.rs).
 //!
 //! All business logic lives in [`crate::api::Service`]: this module
 //! only accepts connections, frames lines, and serializes responses.
+//! Repeat requests across *all* connections share the service's result
+//! cache ([`crate::api::cache`]); start with [`serve_with`] and
+//! [`crate::api::CachePolicy::disabled`] (the CLI's `--no-cache`) for
+//! measurement runs.
 //!
 //! ## Concurrency
 //!
@@ -25,7 +31,7 @@
 //! config/seed, so concurrent clients observe byte-identical answers to
 //! a single client.
 
-use crate::api::{LegacyCommand, Request, Response, Service};
+use crate::api::{CachePolicy, LegacyCommand, Request, Response, Service};
 use crate::config::Config;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -33,18 +39,29 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::thread;
 
-/// Serve on `addr` (e.g. "127.0.0.1:0"); returns after `max_conns`
-/// connections have been accepted and fully served (None = forever).
-/// Prints the bound address on stdout so callers/tests can discover the
-/// ephemeral port.
+/// Serve on `addr` (e.g. "127.0.0.1:0") with the default cache policy;
+/// returns after `max_conns` connections have been accepted and fully
+/// served (None = forever). Prints the bound address on stdout so
+/// callers/tests can discover the ephemeral port.
 pub fn serve(
     cfg: Config,
     addr: &str,
     max_conns: Option<usize>,
 ) -> std::io::Result<()> {
+    serve_with(cfg, addr, max_conns, CachePolicy::default())
+}
+
+/// [`serve`] with an explicit result-cache policy (`--no-cache` passes
+/// [`CachePolicy::disabled`]).
+pub fn serve_with(
+    cfg: Config,
+    addr: &str,
+    max_conns: Option<usize>,
+    policy: CachePolicy,
+) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     println!("serving on {}", listener.local_addr()?);
-    let svc = Arc::new(Service::new(cfg));
+    let svc = Arc::new(Service::with_cache_policy(cfg, policy));
 
     let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
     let mut served = 0usize;
@@ -104,9 +121,10 @@ fn handle(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Decode one JSON request line and route it; decode failures become
-/// typed error responses, still tagged with the request's `id` whenever
-/// the envelope was readable enough to salvage it.
+/// Decode one JSON request line and route it, honoring the envelope's
+/// `cache` flag; decode failures become typed error responses, still
+/// tagged with the request's `id` whenever the envelope was readable
+/// enough to salvage it.
 fn dispatch_json(svc: &Service, text: &str) -> (Response, Option<u64>) {
     let v = match Json::parse(text) {
         Ok(v) => v,
@@ -119,8 +137,8 @@ fn dispatch_json(svc: &Service, text: &str) -> (Response, Option<u64>) {
             )
         }
     };
-    match Request::from_json(&v) {
-        Ok((req, id)) => (svc.handle(&req), id),
+    match Request::decode(&v) {
+        Ok((req, env)) => (svc.handle_opts(&req, env.cache), env.id),
         Err((e, id)) => (Response::from(e), id),
     }
 }

@@ -27,7 +27,7 @@
 //! clones, no per-event hashing for the common <= 16-stream case. All
 //! per-run invariants the slowdown model consumes (the L2 model, each
 //! stream's working set and isolated miss ratio, memory weights) are
-//! precomputed once per run in [`RunStatics`].
+//! precomputed once per run in `RunStatics` (private to this module).
 
 use super::cost::CostModel;
 use super::kernel::KernelDesc;

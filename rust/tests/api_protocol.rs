@@ -4,9 +4,11 @@
 //! (DESIGN.md §6 is the prose spec these tests enforce).
 
 use mi300a_char::api::{
-    parse_legacy, ApiError, ErrorCode, ExperimentInfo, LegacyCommand,
-    PlanGroup, Request, Response, PROTOCOL_VERSION,
+    parse_legacy, ApiError, CachePolicy, CacheStats, ErrorCode,
+    ExperimentInfo, LegacyCommand, PlanGroup, Request, RequestEnvelope,
+    Response, Service, PROTOCOL_VERSION,
 };
+use mi300a_char::config::Config;
 use mi300a_char::coordinator::Objective;
 use mi300a_char::isa::Precision;
 use mi300a_char::util::json::Json;
@@ -65,6 +67,41 @@ fn every_request_variant_roundtrips() {
     roundtrip_request(Request::Repro { experiment: "fig4".into() });
     roundtrip_request(Request::ListExperiments);
     roundtrip_request(Request::Config);
+    roundtrip_request(Request::Stats);
+    roundtrip_request(Request::Batch {
+        items: vec![
+            Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
+            Request::Sparsity { n: 1024, streams: 2 },
+            Request::Repro { experiment: "fig4".into() },
+            Request::Stats,
+        ],
+    });
+}
+
+#[test]
+fn cache_envelope_flag_roundtrips_on_every_variant() {
+    for req in [
+        Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
+        Request::Repro { experiment: "fig4".into() },
+        Request::Config,
+    ] {
+        let wire = req.to_json_opts(Some(5), false).to_string();
+        assert!(wire.contains(r#""cache":false"#), "{wire}");
+        let (back, env) =
+            Request::decode(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(env, RequestEnvelope { id: Some(5), cache: false });
+        assert_eq!(
+            back.to_json_opts(env.id, env.cache).to_string(),
+            wire,
+            "bytes drift over the wire"
+        );
+        // The default (cache: true) is omitted, keeping the canonical
+        // form identical to the pre-cache wire encoding.
+        let (_, env) =
+            Request::decode(&req.to_json(Some(5))).unwrap();
+        assert!(env.cache);
+    }
 }
 
 #[test]
@@ -150,6 +187,33 @@ fn every_response_variant_roundtrips() {
     roundtrip_response(Response::Config {
         config: Json::parse(r#"{"hw":{"n_aces":4},"seed":2026}"#).unwrap(),
     });
+    roundtrip_response(Response::Stats {
+        cache: CacheStats {
+            hits: 12,
+            misses: 3,
+            evictions: 1,
+            entries: 2,
+            bytes: 4096,
+            max_entries: 1024,
+            max_bytes: 64 << 20,
+            enabled: true,
+        },
+        engine_runs: 3,
+    });
+    roundtrip_response(Response::Batch {
+        items: vec![
+            Response::Sparsity {
+                enable: true,
+                reason: "ConcurrentContext".into(),
+                isolated_speedup: 1.0,
+                concurrent_speedup: 1.3125,
+            },
+            Response::Error {
+                code: ErrorCode::BadRange,
+                message: "streams must be in 1..=16 (got 32)".into(),
+            },
+        ],
+    });
     for code in ErrorCode::ALL {
         roundtrip_response(Response::Error {
             code,
@@ -175,6 +239,8 @@ fn unknown_fields_are_rejected_per_variant() {
         Request::Repro { experiment: "fig4".into() },
         Request::ListExperiments,
         Request::Config,
+        Request::Stats,
+        Request::Batch { items: vec![Request::Stats] },
     ];
     for req in requests {
         let mut v = req.to_json(None);
@@ -272,6 +338,119 @@ fn legacy_shim_matches_typed_requests() {
     assert_eq!(err.code, ErrorCode::BadRequest);
     let err = parse_legacy("FROBNICATE").unwrap_err();
     assert_eq!(err.code, ErrorCode::UnknownType);
+}
+
+// ---------------------------------------------------------------------
+// Service-level cache semantics (the wire-level counterparts live in
+// tests/serve_integration.rs).
+// ---------------------------------------------------------------------
+
+/// A repeated `repro` through the service returns a byte-identical
+/// response with zero DES/driver re-execution, proven by the
+/// engine-invocation counter staying put on the second call.
+#[test]
+fn repeated_repro_is_byte_identical_without_reexecution() {
+    let svc = Service::new(Config::mi300a());
+    let req = Request::Repro { experiment: "table1".into() };
+    let cold = svc.handle(&req);
+    assert!(
+        !matches!(cold, Response::Error { .. }),
+        "cold repro failed: {cold:?}"
+    );
+    let runs_after_cold = svc.engine_runs();
+    assert_eq!(runs_after_cold, 1);
+    let warm = svc.handle(&req);
+    assert_eq!(
+        svc.engine_runs(),
+        runs_after_cold,
+        "second call must not re-run the driver"
+    );
+    assert_eq!(
+        cold.to_json(Some(9)).to_string(),
+        warm.to_json(Some(9)).to_string(),
+        "cached repro must re-serialize byte-identically"
+    );
+}
+
+/// Identical items inside one batch share the cache: N copies cost one
+/// cold execution, and the trailing stats item observes the hits.
+#[test]
+fn batch_items_share_the_cache_within_one_call() {
+    let svc = Service::new(Config::mi300a());
+    let sim = Request::Sparsity { n: 512, streams: 4 };
+    let resp = svc.handle(&Request::Batch {
+        items: vec![sim.clone(), sim.clone(), sim.clone(), Request::Stats],
+    });
+    let items = match resp {
+        Response::Batch { items } => items,
+        other => panic!("unexpected response: {other:?}"),
+    };
+    assert_eq!(items.len(), 4);
+    assert_eq!(items[0], items[1]);
+    assert_eq!(items[1], items[2]);
+    assert_eq!(svc.engine_runs(), 1, "three copies, one cold run");
+    match &items[3] {
+        Response::Stats { cache, engine_runs } => {
+            assert_eq!(*engine_runs, 1);
+            assert_eq!(cache.hits, 2);
+            assert_eq!(cache.misses, 1);
+            assert_eq!(cache.entries, 1);
+        }
+        other => panic!("unexpected stats item: {other:?}"),
+    }
+}
+
+/// The entry cap holds under the service: the least-recently-used
+/// response is evicted and a repeat of it runs cold again.
+#[test]
+fn service_cache_evicts_lru_at_the_entry_cap() {
+    let svc = Service::with_cache_policy(
+        Config::mi300a(),
+        CachePolicy { enabled: true, max_entries: 2, max_bytes: 1 << 20 },
+    );
+    let reqs: Vec<Request> = (1..=3)
+        .map(|streams| Request::Sparsity { n: 512, streams })
+        .collect();
+    svc.handle(&reqs[0]);
+    svc.handle(&reqs[1]);
+    svc.handle(&reqs[0]); // refresh: reqs[1] is now LRU
+    svc.handle(&reqs[2]); // evicts reqs[1]
+    assert_eq!(svc.engine_runs(), 3);
+    let stats = svc.cache_stats();
+    assert_eq!(stats.evictions, 1);
+    assert_eq!(stats.entries, 2);
+    svc.handle(&reqs[0]); // still cached
+    assert_eq!(svc.engine_runs(), 3);
+    svc.handle(&reqs[1]); // evicted -> cold again
+    assert_eq!(svc.engine_runs(), 4);
+}
+
+/// The `stats` request reports exactly what the counters say, and is
+/// itself never cached.
+#[test]
+fn stats_request_mirrors_the_service_counters() {
+    let svc = Service::new(Config::mi300a());
+    let sp = Request::Sparsity { n: 512, streams: 4 };
+    svc.handle(&sp);
+    svc.handle(&sp);
+    svc.handle(&sp);
+    match svc.handle(&Request::Stats) {
+        Response::Stats { cache, engine_runs } => {
+            assert_eq!(engine_runs, 1);
+            assert_eq!(cache, svc.cache_stats());
+            assert_eq!((cache.hits, cache.misses), (2, 1));
+            assert!(cache.enabled);
+            assert!(cache.bytes > 0);
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    // A second stats read sees its own unchanged counters (stats is
+    // not cached, so it reflects live state).
+    svc.handle(&sp);
+    match svc.handle(&Request::Stats) {
+        Response::Stats { cache, .. } => assert_eq!(cache.hits, 3),
+        other => panic!("unexpected response: {other:?}"),
+    }
 }
 
 #[test]

@@ -1,0 +1,104 @@
+//! The docs/ guidebook must track the code: `docs/experiments.md` rows
+//! are diffed against `experiments::REGISTRY` (the acceptance gate for
+//! the per-experiment document trail), and the serving guide must name
+//! every request type the protocol speaks.
+
+use mi300a_char::experiments::REGISTRY;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+fn docs_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs")
+}
+
+fn read(name: &str) -> String {
+    let path = docs_dir().join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+/// Every table row in docs/experiments.md whose first cell is a
+/// backticked id: `| \`fig4\` | ...`.
+fn doc_ids(doc: &str) -> BTreeSet<String> {
+    doc.lines()
+        .filter_map(|l| {
+            let rest = l.trim().strip_prefix("| `")?;
+            let end = rest.find('`')?;
+            Some(rest[..end].to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn experiments_doc_covers_the_registry_exactly() {
+    let doc = read("experiments.md");
+    let in_doc = doc_ids(&doc);
+    let in_registry: BTreeSet<String> =
+        REGISTRY.iter().map(|s| s.id.to_string()).collect();
+    assert_eq!(
+        in_doc, in_registry,
+        "docs/experiments.md id rows must match experiments::REGISTRY \
+         exactly (missing rows: {:?}; stale rows: {:?})",
+        in_registry.difference(&in_doc).collect::<Vec<_>>(),
+        in_doc.difference(&in_registry).collect::<Vec<_>>(),
+    );
+    // Each row must also carry a runnable repro invocation and the wire
+    // form, so the doc stays a per-experiment command reference rather
+    // than a bare list.
+    for s in REGISTRY {
+        assert!(
+            doc.contains(&format!("repro {}", s.id)),
+            "{}: no CLI invocation in docs/experiments.md",
+            s.id
+        );
+        assert!(
+            doc.contains(&format!(
+                r#""type":"repro","experiment":"{}""#,
+                s.id
+            )),
+            "{}: no wire request in docs/experiments.md",
+            s.id
+        );
+        assert!(
+            doc.contains(s.section),
+            "{}: paper section {} missing from docs/experiments.md",
+            s.id,
+            s.section
+        );
+    }
+}
+
+#[test]
+fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
+    for page in
+        ["README.md", "experiments.md", "serving.md", "architecture.md"]
+    {
+        assert!(
+            docs_dir().join(page).is_file(),
+            "docs/{page} missing from the guidebook"
+        );
+    }
+    let serving = read("serving.md");
+    for ty in [
+        "sim",
+        "plan",
+        "sparsity",
+        "run",
+        "repro",
+        "list_experiments",
+        "config",
+        "batch",
+        "stats",
+    ] {
+        assert!(
+            serving.contains(&format!("`{ty}`")),
+            "docs/serving.md never mentions the `{ty}` request type"
+        );
+    }
+    for needle in ["cache", "--no-cache", "\"cache\":false"] {
+        assert!(
+            serving.contains(needle),
+            "docs/serving.md never documents {needle:?}"
+        );
+    }
+}

@@ -1,7 +1,9 @@
 //! Integration: the TCP transport over the typed api::Service — legacy
 //! text framing, versioned JSON framing, their byte-identical
-//! equivalence on one socket, id pipelining, typed protocol errors, and
-//! concurrent-client determinism. RUN is covered by
+//! equivalence on one socket, id pipelining, typed protocol errors,
+//! batching, the result cache (repeat requests answered byte-identically
+//! with zero engine re-execution, proven over the wire through `stats`),
+//! and concurrent-client determinism. RUN is covered by
 //! runtime_integration.rs; here the server stays on the simulator paths
 //! so the tests are artifact-independent.
 
@@ -251,6 +253,122 @@ fn typed_client_speaks_the_versioned_protocol() {
 
     client.raw_line("QUIT").ok();
     drop(client);
+    handle.join().unwrap();
+}
+
+/// A batch of N mixed requests over one TCP connection answers exactly
+/// like the N requests sent sequentially on that connection: item `k`
+/// equals sequential response `k` minus the `"v"` envelope key.
+#[test]
+fn batch_over_one_connection_matches_sequential_requests() {
+    let (port, handle) = spawn_server(1);
+    let conn = connect(port);
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut ask_raw = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+
+    // Envelope-less item payloads; a standalone request line is the
+    // same payload with `"v":1` prefixed.
+    let items = [
+        r#"{"type":"sim","n":512,"precision":"fp8","streams":4}"#,
+        r#"{"type":"plan","objective":"throughput","streams":8,"n":512,"precision":"fp8"}"#,
+        r#"{"type":"sparsity","n":512,"streams":4}"#,
+        r#"{"type":"sparsity","n":512,"streams":4}"#, // repeat: cache hit
+        r#"{"type":"config"}"#,
+    ];
+    let sequential: Vec<Json> = items
+        .iter()
+        .map(|payload| ask_raw(&format!(r#"{{"v":1,{}"#, &payload[1..])))
+        .collect();
+
+    let batch_line =
+        format!(r#"{{"v":1,"type":"batch","items":[{}]}}"#, items.join(","));
+    let batch = ask_raw(&batch_line);
+    assert_eq!(batch.get("type").unwrap().as_str(), Some("batch"));
+    let got = batch.get("items").unwrap().as_arr().unwrap();
+    assert_eq!(got.len(), sequential.len());
+    for (i, (item, seq)) in got.iter().zip(&sequential).enumerate() {
+        let mut expect = seq.clone();
+        if let Json::Obj(m) = &mut expect {
+            m.remove("v");
+        }
+        assert_eq!(
+            item.to_string(),
+            expect.to_string(),
+            "batch item {i} diverged from its sequential answer"
+        );
+    }
+
+    writeln!(writer, "QUIT").unwrap();
+    drop(writer);
+    drop(reader);
+    handle.join().unwrap();
+}
+
+/// Repeat requests over the wire are answered byte-identically from the
+/// cache with zero engine re-execution — proven by the `stats`
+/// engine-runs counter staying put — while `"cache":false` forces a
+/// cold run without touching the hit/miss counters.
+#[test]
+fn wire_repeats_hit_the_cache_and_cache_false_bypasses_it() {
+    let (port, handle) = spawn_server(1);
+    let conn = connect(port);
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut ask_raw = |line: &str| -> String {
+        writeln!(writer, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    };
+    let stats = |raw: &str| -> (f64, f64, f64) {
+        let v = Json::parse(raw.trim()).unwrap();
+        (
+            v.get("engine_runs").unwrap().as_f64().unwrap(),
+            v.get("cache_hits").unwrap().as_f64().unwrap(),
+            v.get("cache_misses").unwrap().as_f64().unwrap(),
+        )
+    };
+
+    let stats_req = r#"{"v":1,"type":"stats"}"#;
+    assert_eq!(
+        stats(&ask_raw(stats_req)),
+        (0.0, 0.0, 0.0),
+        "fresh server"
+    );
+
+    let sim = r#"{"v":1,"type":"sim","n":256,"precision":"fp8","streams":2}"#;
+    let cold = ask_raw(sim);
+    assert_eq!(stats(&ask_raw(stats_req)), (1.0, 0.0, 1.0));
+
+    // Byte-identical repeat, engine-invocation counter unchanged.
+    let warm = ask_raw(sim);
+    assert_eq!(warm, cold, "cached response must be byte-identical");
+    assert_eq!(
+        stats(&ask_raw(stats_req)),
+        (1.0, 1.0, 1.0),
+        "repeat must not re-enter the engine"
+    );
+
+    // The escape hatch: cold run, no hit/miss accounting.
+    let bypass = ask_raw(
+        r#"{"v":1,"cache":false,"type":"sim","n":256,"precision":"fp8","streams":2}"#,
+    );
+    assert_eq!(bypass, cold, "cold runs stay deterministic");
+    assert_eq!(stats(&ask_raw(stats_req)), (2.0, 1.0, 1.0));
+
+    // Legacy framing shares the same cache (STATS desugars to stats).
+    let legacy = ask_raw("STATS");
+    assert_eq!(stats(&legacy), (2.0, 1.0, 1.0));
+
+    writeln!(writer, "QUIT").unwrap();
+    drop(writer);
+    drop(reader);
     handle.join().unwrap();
 }
 

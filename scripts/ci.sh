@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 verification, a formatting gate, a bench smoke pass so the
-# `cargo bench` targets (and their BENCH_*.json emitters) cannot
-# bit-rot, and a client-vs-serve smoke over the versioned wire protocol
-# (DESIGN.md §6).
+# Tier-1 verification, a formatting gate, a rustdoc gate (warnings are
+# errors), a relative-link check over the docs/ guidebook, a bench
+# smoke pass so the `cargo bench` targets (and their BENCH_*.json
+# emitters) cannot bit-rot, and a client-vs-serve smoke over the
+# versioned wire protocol (DESIGN.md §6) including a batch +
+# cache-stats request.
 #
 # Usage: scripts/ci.sh
 #
@@ -34,10 +36,33 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
-echo "== client-vs-serve smoke (ephemeral port, one JSON request) =="
+echo "== rustdoc: cargo doc --no-deps (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== docs: relative-link check (README.md + docs/*.md) =="
+link_fail=0
+for f in ../README.md ../docs/*.md; do
+    # Extract relative markdown link targets: ](path) minus URLs and
+    # in-page anchors; strip any #fragment before testing existence.
+    links=$(grep -oE '\]\([^)]+\)' "$f" 2>/dev/null \
+        | sed -E 's/^\]\(//; s/\)$//; s/#.*$//' \
+        | grep -v -E '^(https?|mailto):' | grep -v '^$' || true)
+    for link in $links; do
+        if [ ! -e "$(dirname "$f")/$link" ]; then
+            echo "broken relative link in $f: $link" >&2
+            link_fail=1
+        fi
+    done
+done
+if [ "$link_fail" != 0 ]; then
+    exit 1
+fi
+echo "docs links ok"
+
+echo "== client-vs-serve smoke (ephemeral port, JSON + batch/stats) =="
 bin=target/release/mi300a-char
 serve_log=$(mktemp)
-"$bin" serve --addr 127.0.0.1:0 --max-conns 1 >"$serve_log" &
+"$bin" serve --addr 127.0.0.1:0 --max-conns 2 >"$serve_log" &
 serve_pid=$!
 trap 'kill "$serve_pid" 2>/dev/null || true' EXIT
 addr=""
@@ -52,12 +77,23 @@ if [ -z "$addr" ]; then
 fi
 resp=$("$bin" client --addr "$addr" \
     '{"v":1,"type":"sim","n":256,"precision":"fp8","streams":2}')
-wait "$serve_pid"
-trap - EXIT
 echo "client response: $resp"
 for needle in '"v":1' '"type":"sim"' '"speedup_vs_serial"'; do
     if ! printf '%s' "$resp" | grep -qF "$needle"; then
         echo "smoke response missing $needle" >&2
+        exit 1
+    fi
+done
+# Second connection: a batch repeating the sim (a cache hit) plus a
+# stats item proving the cache answered it (hits >= 1).
+batch=$("$bin" client --addr "$addr" \
+    '{"v":1,"type":"batch","items":[{"type":"sim","n":256,"precision":"fp8","streams":2},{"type":"stats"}]}')
+wait "$serve_pid"
+trap - EXIT
+echo "batch response: $batch"
+for needle in '"type":"batch"' '"cache_hits":1' '"engine_runs":1'; do
+    if ! printf '%s' "$batch" | grep -qF "$needle"; then
+        echo "batch smoke response missing $needle" >&2
         exit 1
     fi
 done
