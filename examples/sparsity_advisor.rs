@@ -1,103 +1,90 @@
-//! Sparsity advisor demo (paper §7 + §9.2 "Sparsity decisions").
+//! Sparsity advisor (paper §7 + §9.2) on the scenario/job API.
 //!
-//! Encodes a real matrix to 2:4 with the Rust encoder, validates the
-//! compressed form against the AOT'd Pallas sparse-GEMM artifact via
-//! PJRT, then walks the coordinator's context-dependent enablement
-//! policy across scenarios.
+//! The old advisor hand-rolled loops over sizes and stream counts;
+//! this one asks the same questions as **one declarative sweep**
+//! (docs/scenarios.md, cookbook sweep 3): a `sparsity`-ask
+//! ScenarioSpec swept across problem sizes × concurrency contexts,
+//! submitted to a served instance as an **async job** with streamed
+//! progress callbacks, then rendered as the advisor table. Every point
+//! answers byte-identically to the equivalent v1 `sparsity` request —
+//! the sweep is purely a better way to ask.
 //!
-//! Run: `make artifacts && cargo run --release --example sparsity_advisor`
+//! Run: `cargo run --release --example sparsity_advisor`
 
+use mi300a_char::api::{Ask, Client, Response, ScenarioSpec};
 use mi300a_char::config::Config;
-use mi300a_char::coordinator::decide_sparsity;
-use mi300a_char::isa::Precision;
-use mi300a_char::runtime::{Executor, Input, Manifest};
-use mi300a_char::sim::{KernelDesc, SparsityMode};
-use mi300a_char::sparsity::{compress_2_4, decompress_2_4, prune_2_4,
-                            OverheadModel, SpeedupModel};
-use mi300a_char::util::rng::Rng;
+use mi300a_char::serve::serve;
+use std::net::TcpListener;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let cfg = Config::mi300a();
-    let n = 256;
+    // Reserve an ephemeral port, then serve one connection in-process.
+    let probe = TcpListener::bind("127.0.0.1:0")?;
+    let addr = probe.local_addr()?.to_string();
+    drop(probe);
+    let bind_addr = addr.clone();
+    let server = std::thread::spawn(move || {
+        serve(Config::mi300a(), &bind_addr, Some(1))
+    });
+    let mut client = Client::connect_retry(addr.as_str(), 200)?;
 
-    // --- Real numerics: encode 2:4 in Rust, execute the Pallas sparse
-    //     GEMM artifact, cross-check against the dense f32 artifact on
-    //     the decompressed matrix. ---
-    match Executor::new(&Manifest::default_dir()) {
-        Ok(mut exec) => {
-            let mut rng = Rng::new(42);
-            let a: Vec<f32> =
-                (0..n * n).map(|_| rng.normal() as f32).collect();
-            let b: Vec<f32> =
-                (0..n * n).map(|_| rng.normal() as f32 * 0.1).collect();
-            let pruned = prune_2_4(&a, n, n);
-            let c = compress_2_4(&pruned, n, n);
-            let idx: Vec<i32> = c.indices.iter().map(|&i| i as i32).collect();
+    // The paper's break-even question (Figs 11/13) as data: should 2:4
+    // be enabled, across sizes and isolation-vs-concurrency contexts?
+    let mut spec = ScenarioSpec::new(Ask::Sparsity);
+    spec.n = 512;
+    spec.sweep.n = vec![256, 512, 2048, 8192];
+    spec.sweep.streams = vec![1, 4];
 
-            let entry = exec.load("gemm_sparse24_256")?;
-            let sparse_out = entry.run(&[
-                Input::F32(c.values.clone()),
-                Input::I32(idx),
-                Input::F32(b.clone()),
-            ])?;
-            let dense_out =
-                exec.run_f32("gemm_f32_256", &[decompress_2_4(&c), b])?;
-            let max_err = sparse_out
-                .iter()
-                .zip(&dense_out)
-                .map(|(s, d)| (s - d).abs())
-                .fold(0.0f32, f32::max);
-            println!(
-                "sparse-GEMM artifact vs dense-on-decompressed: max |err| \
-                 = {max_err:.2e} over {} elements",
-                sparse_out.len()
-            );
-            assert!(max_err < 1e-2, "sparse artifact numerics diverged");
-        }
-        Err(e) => println!("(artifacts not built: {e})"),
-    }
-
-    // --- The paper's overhead + break-even story. ---
-    let overhead = OverheadModel::new(&cfg);
-    let speedup = SpeedupModel::new(&cfg);
-    println!("\nrocSPARSE-path overhead (constant across sizes):");
-    for mode in [SparsityMode::SparseLhs, SparsityMode::SparseBoth] {
+    println!("submitting sparsity sweep ({} points) as an async job...",
+             spec.expand().len());
+    let result = client.submit_and_wait(&spec, |p| {
+        // One callback per pushed frame: registration snapshot,
+        // queued->running, per-point progress, terminal.
         println!(
-            "  {:>4}: {:.1} µs",
-            mode.name(),
-            overhead.mean(mode).total_us()
+            "progress {}/{} (job {}, {})",
+            p.completed,
+            p.total,
+            p.job,
+            p.state.as_str()
         );
-    }
-    println!("\nisolated sparse speedup (break-even, Fig 11):");
-    for size in [256usize, 512, 2048, 8192] {
-        let s = speedup
-            .isolated(
-                &KernelDesc::gemm(size, Precision::Fp8),
-                SparsityMode::SparseLhs,
-            )
-            .speedup();
-        println!("  {size:>5}^3: {s:.2}x");
+    })?;
+
+    let points = match result {
+        Response::Scenario { points } => points,
+        other => return Err(format!("unexpected response: {other:?}").into()),
+    };
+
+    println!("\n2:4 sparsity advisor (context-dependent, paper §9.2):");
+    println!(
+        "  {:>6} {:>8}  {:<7} {:>9} {:>11}  reason",
+        "n", "streams", "verdict", "isolated", "concurrent"
+    );
+    for pr in &points {
+        if let Response::Sparsity {
+            enable,
+            reason,
+            isolated_speedup,
+            concurrent_speedup,
+        } = pr.result.as_ref()
+        {
+            println!(
+                "  {:>6} {:>8}  {:<7} {:>8.2}x {:>10.2}x  {}",
+                pr.point.n,
+                pr.point.streams,
+                if *enable { "SPARSE" } else { "dense" },
+                isolated_speedup,
+                concurrent_speedup,
+                reason
+            );
+        }
     }
     println!(
-        "concurrent per-stream speedup (Fig 13c): {:.2}x",
-        speedup.concurrent_per_stream(&KernelDesc::gemm(512, Precision::Fp8), 4)
+        "\nthe paper's headline: break-even in isolation, ~1.3x per \
+         stream under concurrency — the decision is context, not a \
+         constant."
     );
 
-    // --- The coordinator's decisions. ---
-    println!("\ncoordinator sparsity decisions (§9.2):");
-    let square = KernelDesc::gemm(512, Precision::Fp8);
-    let rect = square.clone().with_shape(512, 2048, 1024);
-    for (label, kernel, streams) in [
-        ("isolated square 512^3", &square, 1),
-        ("isolated rectangular 512x2048x1024", &rect, 1),
-        ("4-way concurrent 512^3", &square, 4),
-    ] {
-        let d = decide_sparsity(kernel, streams, true);
-        println!(
-            "  {label:<36} -> {} ({:?})",
-            if d.enable { "SPARSE" } else { "dense " },
-            d.reason
-        );
-    }
+    client.raw_line("QUIT").ok();
+    drop(client);
+    server.join().expect("server thread panicked")?;
     Ok(())
 }

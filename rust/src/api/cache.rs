@@ -9,7 +9,11 @@
 //! canonical wire form ([`super::Request::cache_key`] — sorted keys, no
 //! envelope, enum-normalized spellings) is the key, and the stored
 //! [`Response`] re-serializes byte-identically to a cold run because
-//! the wire encoding itself is deterministic.
+//! the wire encoding itself is deterministic. Scenario-backed requests
+//! (the v1 simulator trio, `scenario` sweeps, and job points) memoize
+//! at **sweep-point granularity** under the canonical single-point
+//! spec ([`super::scenario::ScenarioSpec::at`]), so a sweep, its v1
+//! equivalents, and an async job all share entries.
 //!
 //! The cache is bounded by an entry cap and an approximate byte cap
 //! ([`CachePolicy`]); when either is exceeded the least-recently-used

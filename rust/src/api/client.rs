@@ -1,13 +1,39 @@
 //! Blocking native client for the versioned JSON-line protocol
-//! (DESIGN.md §6). Used by the `mi300a-char client` subcommand, the
-//! examples, and the integration tests — everything that talks to a
-//! served instance goes through here instead of hand-rolled TCP strings.
+//! (DESIGN.md §6). Used by the `mi300a-char client`/`scenario`
+//! subcommands, the examples, and the integration tests — everything
+//! that talks to a served instance goes through here instead of
+//! hand-rolled TCP strings.
+//!
+//! ## Timeouts
+//!
+//! Connect and read both default to [`DEFAULT_TIMEOUT`] (30 s), so a
+//! dead or wedged server surfaces as an `io::ErrorKind::TimedOut`
+//! error instead of a hang; [`Client::set_timeout`] adjusts or disables
+//! it. After a read timeout the connection's framing state is
+//! undefined — reconnect rather than reuse it. Job waits are the
+//! exception: [`Client::wait_job`] polls (each poll bounded by the
+//! timeout, the overall wait unbounded) and
+//! [`Client::submit_and_wait`] disables the read timeout while blocked
+//! on pushed progress frames, restoring it afterwards — long sweeps
+//! are the whole point of the job API.
+//!
+//! ## Progress frames
+//!
+//! A server may interleave `{"type":"progress",…}` frames (keyed by the
+//! submitting request's `id`) between response lines. The typed request
+//! paths skip any stray frames automatically;
+//! [`Client::submit_and_wait`] consumes them as a callback stream.
 
+use super::job::JobView;
 use super::protocol::{Request, Response};
+use super::scenario::ScenarioSpec;
 use crate::util::json::Json;
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
+
+/// Default connect/read timeout; see [`Client::set_timeout`].
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// One connection to a serving instance. Requests are tagged with an
 /// auto-incrementing `id`; [`Client::request`] verifies the echo so
@@ -16,13 +42,36 @@ pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     next_id: u64,
+    timeout: Option<Duration>,
 }
 
 impl Client {
+    /// Connect with the default timeout on every resolved address.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
-        let stream = TcpStream::connect(addr)?;
+        let mut last = None;
+        for sock in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sock, DEFAULT_TIMEOUT) {
+                Ok(stream) => return Client::from_stream(stream),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "address resolved to no socket addresses",
+            )
+        }))
+    }
+
+    fn from_stream(stream: TcpStream) -> io::Result<Client> {
+        stream.set_read_timeout(Some(DEFAULT_TIMEOUT))?;
         let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer, next_id: 1 })
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+            next_id: 1,
+            timeout: Some(DEFAULT_TIMEOUT),
+        })
     }
 
     /// Connect to a server that may still be binding its listener
@@ -42,6 +91,18 @@ impl Client {
         Err(last.unwrap_or_else(|| {
             io::Error::new(io::ErrorKind::TimedOut, "no connect attempts")
         }))
+    }
+
+    /// Adjust (or with `None` disable) the per-read timeout.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        self.timeout = timeout;
+        Ok(())
+    }
+
+    /// The active read timeout.
+    pub fn timeout(&self) -> Option<Duration> {
+        self.timeout
     }
 
     /// Issue one typed request, returning the typed response (which may
@@ -102,6 +163,110 @@ impl Client {
         }
     }
 
+    /// Submit a scenario as an async job. On acceptance the response is
+    /// [`Response::Job`] (server-assigned id, state, 0/total points);
+    /// rejections come back as the *typed* [`Response::Error`] — so a
+    /// caller can tell the retryable `overloaded` case from a fatal
+    /// `bad_range` without string-parsing. `progress: true` asks the
+    /// server to push frames on this connection — pair it with
+    /// [`Client::submit_and_wait`], or the frames are silently skipped
+    /// by later reads.
+    pub fn submit(
+        &mut self,
+        spec: &ScenarioSpec,
+        progress: bool,
+    ) -> io::Result<Response> {
+        self.request(&Request::Submit { spec: spec.clone(), progress })
+    }
+
+    /// Poll a job to its terminal state, then fetch its result. Each
+    /// poll is bounded by the read timeout; the overall wait is not
+    /// (jobs are long-running by design). Polls back off exponentially
+    /// (5 ms doubling to a 250 ms cap) so waiting on a long sweep does
+    /// not hammer the server. Returns the `scenario` response, or the
+    /// typed error response (`not_ready` after a cancel, `unknown_job`
+    /// after eviction, …).
+    pub fn wait_job(&mut self, job: u64) -> io::Result<Response> {
+        let mut backoff = Duration::from_millis(5);
+        loop {
+            match self.request(&Request::JobStatus { job })? {
+                Response::Job(view) if view.state.terminal() => break,
+                Response::Job(_) => {
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(250));
+                }
+                resp @ Response::Error { .. } => return Ok(resp),
+                other => {
+                    return Err(invalid(format!(
+                        "unexpected job_status response type {:?}",
+                        other.type_name()
+                    )))
+                }
+            }
+        }
+        self.request(&Request::JobResult { job })
+    }
+
+    /// Submit with progress push, stream every frame into
+    /// `on_progress` (registration snapshot, queued→running, one per
+    /// completed point, terminal), then fetch the result. A rejected
+    /// submit returns its typed [`Response::Error`]. The read timeout
+    /// is disabled while blocked on frames and restored afterwards.
+    pub fn submit_and_wait(
+        &mut self,
+        spec: &ScenarioSpec,
+        mut on_progress: impl FnMut(&JobView),
+    ) -> io::Result<Response> {
+        let submitted = match self.submit(spec, true)? {
+            Response::Job(view) => view,
+            resp @ Response::Error { .. } => return Ok(resp),
+            other => {
+                return Err(invalid(format!(
+                    "unexpected submit response type {:?}",
+                    other.type_name()
+                )))
+            }
+        };
+        let job = submitted.job;
+        let prev = self.timeout;
+        self.set_timeout(None)?;
+        let mut failure: Option<io::Error> = None;
+        loop {
+            let v = match self.read_json_line() {
+                Ok(v) => v,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            };
+            if v.get("type").and_then(|t| t.as_str()) != Some("progress") {
+                failure = Some(invalid(format!(
+                    "unexpected frame while waiting for job {job}: {v}"
+                )));
+                break;
+            }
+            match Response::from_json(&v) {
+                Ok((Response::Progress(view), _)) if view.job == job => {
+                    on_progress(&view);
+                    if view.state.terminal() {
+                        break;
+                    }
+                }
+                Ok(_) => {} // a frame for some other job: skip
+                Err(e) => {
+                    failure =
+                        Some(invalid(format!("bad progress frame: {e}")));
+                    break;
+                }
+            }
+        }
+        self.set_timeout(prev)?;
+        if let Some(e) = failure {
+            return Err(e);
+        }
+        self.request(&Request::JobResult { job })
+    }
+
     /// Issue one typed request and return the raw response JSON plus the
     /// id it was sent under (the `client` subcommand prints this
     /// verbatim).
@@ -118,7 +283,7 @@ impl Client {
         let id = self.next_id;
         self.next_id += 1;
         writeln!(self.writer, "{}", req.to_json_opts(Some(id), cache))?;
-        Ok((self.read_json_line()?, id))
+        Ok((self.read_response_json()?, id))
     }
 
     /// Send one raw line (legacy text command or pre-encoded JSON) and
@@ -129,13 +294,48 @@ impl Client {
         self.read_json_line()
     }
 
+    /// The next non-progress line: stray pushed frames (from a `submit`
+    /// whose progress stream was not consumed) are skipped so they can
+    /// never be misread as a response.
+    fn read_response_json(&mut self) -> io::Result<Json> {
+        loop {
+            let v = self.read_json_line()?;
+            if v.get("type").and_then(|t| t.as_str()) == Some("progress") {
+                continue;
+            }
+            return Ok(v);
+        }
+    }
+
     fn read_json_line(&mut self) -> io::Result<Json> {
         let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
-            return Err(io::Error::new(
-                io::ErrorKind::UnexpectedEof,
-                "server closed the connection",
-            ));
+        match self.reader.read_line(&mut line) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                ))
+            }
+            Ok(_) => {}
+            // A read timeout (TimedOut on some platforms, WouldBlock on
+            // others) becomes one typed, explanatory error instead of a
+            // hang.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock
+                ) =>
+            {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    format!(
+                        "server did not answer within {:?} \
+                         (Client::set_timeout adjusts or disables this)",
+                        self.timeout
+                    ),
+                ))
+            }
+            Err(e) => return Err(e),
         }
         Json::parse(line.trim())
             .map_err(|e| invalid(format!("unparseable response: {e}")))

@@ -1,0 +1,536 @@
+//! The async job subsystem behind the service (DESIGN.md §6.7).
+//!
+//! Scenario sweeps are long-running; a `submit` request must not block
+//! its connection. The [`JobTable`] is a bounded in-process queue:
+//! submissions beyond `max_queued` are refused with a typed
+//! `overloaded` error (never silently dropped), at most `max_running`
+//! jobs execute concurrently (the service spawns that many worker
+//! threads), and finished jobs are retained up to `max_finished` before
+//! the oldest results are evicted (querying an evicted id is
+//! `unknown_job`).
+//!
+//! Lifecycle (observable through `job_status`):
+//!
+//! ```text
+//!   queued ──► running ──► done
+//!     │           │   └──► failed
+//!     └───────────┴──────► cancelled     (job_cancel; mid-sweep the
+//!                                         flag is honored between
+//!                                         points)
+//! ```
+//!
+//! Progress: every job carries `completed`/`total` sweep-point
+//! counters. Watchers (the serve transport's progress push) receive a
+//! [`JobView`] snapshot at registration — so at least one frame is
+//! always pushed, however fast the job — then one on the
+//! queued→running transition, one per completed point, and a final one
+//! at the terminal state, after which the channel closes (an N-point
+//! job pushes N+3 frames).
+
+use super::protocol::{ApiError, ErrorCode, Response};
+use super::scenario::ScenarioSpec;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{mpsc, Condvar, Mutex, MutexGuard};
+
+/// Job lifecycle states (wire spellings via [`JobState::as_str`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Cancelled,
+    Failed,
+}
+
+impl JobState {
+    pub const ALL: [JobState; 5] = [
+        JobState::Queued,
+        JobState::Running,
+        JobState::Done,
+        JobState::Cancelled,
+        JobState::Failed,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobState> {
+        JobState::ALL.iter().copied().find(|x| x.as_str() == s)
+    }
+
+    /// Whether the state is final (no further transitions or frames).
+    pub fn terminal(self) -> bool {
+        matches!(
+            self,
+            JobState::Done | JobState::Cancelled | JobState::Failed
+        )
+    }
+}
+
+/// A point-in-time job snapshot: what `submit`/`job_status`/
+/// `job_cancel` responses and `progress` frames carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobView {
+    /// Server-assigned job id.
+    pub job: u64,
+    pub state: JobState,
+    /// Sweep points finished so far.
+    pub completed: u64,
+    /// Total sweep points.
+    pub total: u64,
+}
+
+/// Sizing of the job table. `max_running` worker threads are spawned by
+/// the service (0 means jobs queue but never run — test-only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobLimits {
+    /// Jobs executing concurrently (worker thread count).
+    pub max_running: usize,
+    /// Queued (not yet running) jobs beyond which `submit` answers
+    /// `overloaded`.
+    pub max_queued: usize,
+    /// Terminal jobs retained for `job_result`; the oldest beyond this
+    /// are evicted.
+    pub max_finished: usize,
+}
+
+impl Default for JobLimits {
+    fn default() -> JobLimits {
+        JobLimits { max_running: 2, max_queued: 16, max_finished: 64 }
+    }
+}
+
+struct JobEntry {
+    spec: ScenarioSpec,
+    /// The submit envelope's `cache` flag: `false` makes every point
+    /// run cold (the measurement escape hatch, same as sync requests).
+    use_cache: bool,
+    state: JobState,
+    completed: u64,
+    total: u64,
+    cancel_requested: bool,
+    result: Option<Result<Response, ApiError>>,
+    watchers: Vec<mpsc::Sender<JobView>>,
+}
+
+impl JobEntry {
+    fn view(&self, id: u64) -> JobView {
+        JobView {
+            job: id,
+            state: self.state,
+            completed: self.completed,
+            total: self.total,
+        }
+    }
+
+    /// Best-effort frame to every watcher (a gone watcher is dropped at
+    /// the terminal broadcast, not here — Vec retain would reorder
+    /// nothing but costs a scan per point).
+    fn notify(&self, id: u64) {
+        for w in &self.watchers {
+            let _ = w.send(self.view(id));
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs: BTreeMap<u64, JobEntry>,
+    queue: VecDeque<u64>,
+    finished: VecDeque<u64>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+/// Bounded, thread-safe job table. The service owns one behind an
+/// `Arc`; worker threads block on [`JobTable::next_job`].
+pub struct JobTable {
+    limits: JobLimits,
+    inner: Mutex<Inner>,
+    cond: Condvar,
+}
+
+impl JobTable {
+    pub fn new(limits: JobLimits) -> JobTable {
+        JobTable {
+            limits,
+            inner: Mutex::new(Inner { next_id: 1, ..Inner::default() }),
+            cond: Condvar::new(),
+        }
+    }
+
+    pub fn limits(&self) -> JobLimits {
+        self.limits
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue a validated spec expanding to `total` points. `watch`
+    /// registers a progress receiver atomically with the enqueue (its
+    /// first frame is the queued snapshot, so a watcher never misses
+    /// every frame even if the job finishes instantly); `use_cache:
+    /// false` carries the submit envelope's cache bypass to the
+    /// workers.
+    pub fn submit(
+        &self,
+        spec: ScenarioSpec,
+        total: u64,
+        watch: bool,
+        use_cache: bool,
+    ) -> Result<(JobView, Option<mpsc::Receiver<JobView>>), ApiError> {
+        let mut g = self.lock();
+        let inner = &mut *g;
+        if inner.shutdown {
+            return Err(ApiError::new(
+                ErrorCode::Runtime,
+                "job table is shutting down",
+            ));
+        }
+        if inner.queue.len() >= self.limits.max_queued {
+            return Err(ApiError::new(
+                ErrorCode::Overloaded,
+                format!(
+                    "job queue is full ({} queued, cap {}); retry after a \
+                     job finishes",
+                    inner.queue.len(),
+                    self.limits.max_queued
+                ),
+            ));
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let mut entry = JobEntry {
+            spec,
+            use_cache,
+            state: JobState::Queued,
+            completed: 0,
+            total,
+            cancel_requested: false,
+            result: None,
+            watchers: Vec::new(),
+        };
+        let view = entry.view(id);
+        let rx = if watch {
+            let (tx, rx) = mpsc::channel();
+            let _ = tx.send(view);
+            entry.watchers.push(tx);
+            Some(rx)
+        } else {
+            None
+        };
+        inner.jobs.insert(id, entry);
+        inner.queue.push_back(id);
+        self.cond.notify_one();
+        Ok((view, rx))
+    }
+
+    /// Worker side: block until a job is queued, mark it running, and
+    /// hand its spec (plus its cache flag) over. `None` means the table
+    /// shut down.
+    pub fn next_job(&self) -> Option<(u64, ScenarioSpec, bool)> {
+        let mut g = self.lock();
+        loop {
+            {
+                let inner = &mut *g;
+                if inner.shutdown {
+                    return None;
+                }
+                if let Some(id) = inner.queue.pop_front() {
+                    if let Some(e) = inner.jobs.get_mut(&id) {
+                        e.state = JobState::Running;
+                        e.notify(id);
+                        return Some((id, e.spec.clone(), e.use_cache));
+                    }
+                    continue;
+                }
+            }
+            g = self.cond.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Worker side: may the running job proceed to its next point?
+    pub fn should_continue(&self, id: u64) -> bool {
+        let g = self.lock();
+        if g.shutdown {
+            return false;
+        }
+        g.jobs.get(&id).map_or(false, |e| !e.cancel_requested)
+    }
+
+    /// Worker side: one more point finished; frames watchers. Returns
+    /// whether the job may continue.
+    pub fn point_done(&self, id: u64) -> bool {
+        let mut g = self.lock();
+        let inner = &mut *g;
+        let shutdown = inner.shutdown;
+        match inner.jobs.get_mut(&id) {
+            Some(e) => {
+                e.completed += 1;
+                e.notify(id);
+                !e.cancel_requested && !shutdown
+            }
+            None => false,
+        }
+    }
+
+    /// Worker side: terminal transition with the job's outcome.
+    pub fn finish(&self, id: u64, result: Result<Response, ApiError>) {
+        let state = if result.is_err() {
+            JobState::Failed
+        } else {
+            JobState::Done
+        };
+        let mut g = self.lock();
+        let inner = &mut *g;
+        if let Some(e) = inner.jobs.get_mut(&id) {
+            e.state = state;
+            e.result = Some(result);
+        }
+        Self::seal(inner, id, self.limits);
+    }
+
+    /// Worker side: the cancel flag (or shutdown) was honored mid-sweep.
+    pub fn mark_cancelled(&self, id: u64) {
+        let mut g = self.lock();
+        let inner = &mut *g;
+        if let Some(e) = inner.jobs.get_mut(&id) {
+            e.state = JobState::Cancelled;
+        }
+        Self::seal(inner, id, self.limits);
+    }
+
+    /// Terminal bookkeeping: final frame, watcher channel closure,
+    /// retention eviction.
+    fn seal(g: &mut Inner, id: u64, limits: JobLimits) {
+        if let Some(e) = g.jobs.get_mut(&id) {
+            e.notify(id);
+            e.watchers.clear();
+        }
+        g.finished.push_back(id);
+        while g.finished.len() > limits.max_finished.max(1) {
+            if let Some(old) = g.finished.pop_front() {
+                g.jobs.remove(&old);
+            }
+        }
+    }
+
+    /// Request a cancel. Queued jobs cancel immediately; running jobs
+    /// have the flag honored between sweep points; terminal jobs are
+    /// untouched. Returns the post-action snapshot.
+    pub fn cancel(&self, id: u64) -> Result<JobView, ApiError> {
+        let mut g = self.lock();
+        let inner = &mut *g;
+        let entry =
+            inner.jobs.get_mut(&id).ok_or_else(|| unknown_job(id))?;
+        match entry.state {
+            JobState::Queued => {
+                entry.state = JobState::Cancelled;
+                entry.cancel_requested = true;
+                let view = entry.view(id);
+                inner.queue.retain(|&q| q != id);
+                Self::seal(inner, id, self.limits);
+                Ok(view)
+            }
+            JobState::Running => {
+                entry.cancel_requested = true;
+                Ok(entry.view(id))
+            }
+            _ => Ok(entry.view(id)),
+        }
+    }
+
+    /// Point-in-time snapshot for `job_status`.
+    pub fn status(&self, id: u64) -> Result<JobView, ApiError> {
+        let g = self.lock();
+        g.jobs
+            .get(&id)
+            .map(|e| e.view(id))
+            .ok_or_else(|| unknown_job(id))
+    }
+
+    /// The finished result for `job_result`. Non-terminal (and
+    /// cancelled) jobs answer `not_ready`; failed jobs answer their
+    /// stored error.
+    pub fn result(&self, id: u64) -> Result<Response, ApiError> {
+        let g = self.lock();
+        let e = g.jobs.get(&id).ok_or_else(|| unknown_job(id))?;
+        match e.state {
+            JobState::Done => match &e.result {
+                Some(Ok(resp)) => Ok(resp.clone()),
+                _ => Err(ApiError::new(
+                    ErrorCode::Runtime,
+                    format!("job {id} finished without a result"),
+                )),
+            },
+            JobState::Failed => match &e.result {
+                Some(Err(err)) => Err(err.clone()),
+                _ => Err(ApiError::new(
+                    ErrorCode::Runtime,
+                    format!("job {id} failed without a recorded error"),
+                )),
+            },
+            JobState::Cancelled => Err(ApiError::new(
+                ErrorCode::NotReady,
+                format!(
+                    "job {id} was cancelled after {}/{} points",
+                    e.completed, e.total
+                ),
+            )),
+            JobState::Queued | JobState::Running => Err(ApiError::new(
+                ErrorCode::NotReady,
+                format!(
+                    "job {id} is {} ({}/{} points done)",
+                    e.state.as_str(),
+                    e.completed,
+                    e.total
+                ),
+            )),
+        }
+    }
+
+    /// Stop handing out work and wake every blocked worker; running
+    /// jobs observe the flag between points and cancel.
+    pub fn shutdown(&self) {
+        let mut g = self.lock();
+        g.shutdown = true;
+        drop(g);
+        self.cond.notify_all();
+    }
+}
+
+fn unknown_job(id: u64) -> ApiError {
+    ApiError::new(
+        ErrorCode::UnknownJob,
+        format!("unknown job {id} (finished jobs are retained, then \
+                 evicted oldest-first)"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scenario::ScenarioSpec;
+    use super::super::scenario::Ask;
+    use super::*;
+
+    fn table(max_queued: usize) -> JobTable {
+        JobTable::new(JobLimits {
+            max_running: 0,
+            max_queued,
+            max_finished: 4,
+        })
+    }
+
+    fn spec() -> ScenarioSpec {
+        ScenarioSpec::new(Ask::Sim)
+    }
+
+    #[test]
+    fn queue_cap_is_a_typed_overloaded_error() {
+        let t = table(2);
+        let (a, _) = t.submit(spec(), 1, false, true).unwrap();
+        let (b, _) = t.submit(spec(), 1, false, true).unwrap();
+        assert_eq!((a.job, b.job), (1, 2));
+        assert_eq!(a.state, JobState::Queued);
+        let err = t.submit(spec(), 1, false, true).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Overloaded);
+        assert!(err.message.contains("cap 2"), "{err}");
+    }
+
+    #[test]
+    fn queued_jobs_cancel_immediately_and_leave_the_queue() {
+        let t = table(4);
+        let (v, _) = t.submit(spec(), 3, false, true).unwrap();
+        let after = t.cancel(v.job).unwrap();
+        assert_eq!(after.state, JobState::Cancelled);
+        assert_eq!(t.status(v.job).unwrap().state, JobState::Cancelled);
+        let err = t.result(v.job).unwrap_err();
+        assert_eq!(err.code, ErrorCode::NotReady);
+        assert!(err.message.contains("cancelled"), "{err}");
+        // The queue slot is freed for new work.
+        let (w, _) = t.submit(spec(), 1, false, true).unwrap();
+        assert_eq!(w.job, v.job + 1);
+    }
+
+    #[test]
+    fn unknown_ids_and_unfinished_results_are_typed() {
+        let t = table(4);
+        assert_eq!(t.status(99).unwrap_err().code, ErrorCode::UnknownJob);
+        assert_eq!(t.cancel(99).unwrap_err().code, ErrorCode::UnknownJob);
+        let (v, _) = t.submit(spec(), 2, false, true).unwrap();
+        let err = t.result(v.job).unwrap_err();
+        assert_eq!(err.code, ErrorCode::NotReady);
+        assert!(err.message.contains("queued"), "{err}");
+    }
+
+    #[test]
+    fn watcher_gets_the_snapshot_frame_then_lifecycle_frames() {
+        let t = table(4);
+        let (v, rx) = t.submit(spec(), 2, true, true).unwrap();
+        let rx = rx.unwrap();
+        assert_eq!(rx.recv().unwrap().state, JobState::Queued);
+        // Drive the worker side by hand (max_running 0 spawns none).
+        let (id, _spec, use_cache) = t.next_job().unwrap();
+        assert!(use_cache);
+        assert_eq!(id, v.job);
+        assert_eq!(rx.recv().unwrap().state, JobState::Running);
+        assert!(t.point_done(id));
+        let frame = rx.recv().unwrap();
+        assert_eq!((frame.completed, frame.total), (1, 2));
+        assert!(t.point_done(id));
+        t.finish(id, Ok(Response::Scenario { points: vec![] }));
+        // Remaining frames end with the terminal one, then the channel
+        // closes.
+        let mut last = frame;
+        while let Ok(f) = rx.recv() {
+            last = f;
+        }
+        assert_eq!(last.state, JobState::Done);
+        assert_eq!(last.completed, 2);
+        assert!(t.result(id).is_ok());
+    }
+
+    #[test]
+    fn finished_retention_evicts_oldest() {
+        let t = table(16); // max_finished 4
+        let mut ids = Vec::new();
+        for _ in 0..6 {
+            let (v, _) = t.submit(spec(), 1, false, true).unwrap();
+            let (id, _, _) = t.next_job().unwrap();
+            assert_eq!(id, v.job);
+            t.finish(id, Ok(Response::Scenario { points: vec![] }));
+            ids.push(id);
+        }
+        assert_eq!(
+            t.status(ids[0]).unwrap_err().code,
+            ErrorCode::UnknownJob
+        );
+        assert_eq!(
+            t.status(ids[1]).unwrap_err().code,
+            ErrorCode::UnknownJob
+        );
+        assert!(t.status(ids[5]).is_ok());
+    }
+
+    #[test]
+    fn shutdown_unblocks_workers() {
+        let t = std::sync::Arc::new(table(4));
+        let t2 = std::sync::Arc::clone(&t);
+        let h = std::thread::spawn(move || t2.next_job());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        t.shutdown();
+        assert_eq!(h.join().unwrap(), None);
+        assert_eq!(
+            t.submit(spec(), 1, false, true).unwrap_err().code,
+            ErrorCode::Runtime
+        );
+    }
+}

@@ -1,23 +1,30 @@
 //! The typed service API — the single front door to the whole system.
 //!
-//! Four pieces (DESIGN.md §6 is the wire-level spec; `docs/serving.md`
-//! is the operator guide):
+//! Six pieces (DESIGN.md §6 is the wire-level spec; `docs/serving.md`
+//! and `docs/scenarios.md` are the operator guides):
 //!
 //! * [`protocol`] — versioned [`Request`]/[`Response`] enums with
 //!   explicit [`ErrorCode`]s, their JSON wire encoding (including the
-//!   `batch` fan-out envelope and the `"cache":false` escape hatch),
-//!   and the legacy text-command shim.
+//!   `batch` fan-out envelope, the `"cache":false` escape hatch, and
+//!   the pushed `progress` frame), and the legacy text-command shim.
+//! * [`scenario`] — the declarative [`ScenarioSpec`] surface
+//!   (DESIGN.md §6.6): workload composition + sweep axes, canonical
+//!   encoding, and compilation down to kernel sets. The v1
+//!   `sim`/`plan`/`sparsity` requests are single-point special cases.
+//! * [`job`] — the bounded async [`job::JobTable`] (DESIGN.md §6.7)
+//!   behind `submit`/`job_status`/`job_result`/`job_cancel`, with
+//!   per-point progress counters and watcher channels.
 //! * [`service`] — the [`Service`] core owning the shared config, the
-//!   coordinator/engine construction, the result cache, and the
-//!   mpsc-isolated PJRT executor worker. `serve.rs` and `main.rs` are
-//!   thin transports over it; neither holds business logic of its own.
-//! * [`cache`] — the canonical-key bounded-LRU result cache the
-//!   service answers repeat `sim`/`plan`/`sparsity`/`repro` questions
-//!   from, with hit/miss/eviction counters surfaced by the `stats`
-//!   request.
+//!   coordinator/engine construction, the result cache, the job
+//!   workers, and the mpsc-isolated PJRT executor worker. `serve.rs`
+//!   and `main.rs` are thin transports over it; neither holds business
+//!   logic of its own.
+//! * [`cache`] — the canonical-key bounded-LRU result cache, keyed at
+//!   sweep-point granularity for scenario-backed requests, with
+//!   hit/miss/eviction counters surfaced by the `stats` request.
 //! * [`client`] — a blocking [`Client`] speaking the JSON-line framing
-//!   with per-request ids, for tests, examples, and the `client`
-//!   subcommand.
+//!   with per-request ids, connect/read timeouts, and job helpers
+//!   (`submit`/`wait_job`/`submit_and_wait` with progress callbacks).
 //!
 //! Adding a request type means: one `Request`/`Response` variant pair,
 //! one `Service::try_handle` arm, and (optionally) one legacy-shim arm —
@@ -71,14 +78,21 @@
 
 pub mod cache;
 pub mod client;
+pub mod job;
 pub mod protocol;
+pub mod scenario;
 pub mod service;
 
 pub use cache::{CachePolicy, CacheStats, ResultCache};
-pub use client::Client;
+pub use client::{Client, DEFAULT_TIMEOUT};
+pub use job::{JobLimits, JobState, JobView};
 pub use protocol::{
     objective_name, parse_legacy, parse_objective, precision_wire_name,
     ApiError, ErrorCode, ExperimentInfo, LegacyCommand, PlanGroup, Request,
     RequestEnvelope, Response, MAX_BATCH_ITEMS, PROTOCOL_VERSION,
+};
+pub use scenario::{
+    Ask, Point, PointResult, ScenarioSpec, Shape, Sweep, ITERS_RANGE,
+    MAX_SWEEP_POINTS,
 };
 pub use service::{Service, POOL_STREAMS, SIM_STREAMS, SIZE_RANGE};

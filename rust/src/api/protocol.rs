@@ -35,6 +35,14 @@
 //!   `k`. Items may not nest another batch and share the result cache
 //!   within the one call.
 //!
+//! The scenario/job amendment (DESIGN.md §6.6–§6.7, landed under the
+//! §6.4 pre-1.0 rule) adds the declarative `scenario` request (a
+//! [`ScenarioSpec`] sweep answered point-by-point), the async job
+//! surface (`submit`/`job_status`/`job_result`/`job_cancel`), and the
+//! pushed `progress` frame — an interleaved line keyed by the
+//! submitting request's `id`, which is what keeps the one-line-per-
+//! request pipelining contract intact for everything else.
+//!
 //! The legacy whitespace text commands (`SIM`/`PLAN`/`SPARSITY`/`RUN`/
 //! `QUIT`) survive as [`parse_legacy`], a shim that desugars a text line
 //! into the same typed [`Request`]s — both framings produce
@@ -42,6 +50,8 @@
 //! `tests/serve_integration.rs`).
 
 use super::cache::CacheStats;
+use super::job::{JobState, JobView};
+use super::scenario::{self, Point, PointResult, ScenarioSpec};
 use crate::coordinator::Objective;
 use crate::isa::Precision;
 use crate::util::json::Json;
@@ -78,11 +88,19 @@ pub enum ErrorCode {
     UnknownEntry,
     /// The executor/runtime failed (missing artifacts, stub build, ...).
     Runtime,
+    /// `submit` refused: the bounded job queue is full (DESIGN.md §6.7).
+    Overloaded,
+    /// A `job_*` request named an id the table does not hold (never
+    /// assigned, or evicted after finishing).
+    UnknownJob,
+    /// `job_result` asked for a job that has not finished (or was
+    /// cancelled mid-sweep).
+    NotReady,
 }
 
 impl ErrorCode {
     /// Every code, for exhaustive protocol tests.
-    pub const ALL: [ErrorCode; 8] = [
+    pub const ALL: [ErrorCode; 11] = [
         ErrorCode::BadVersion,
         ErrorCode::BadRequest,
         ErrorCode::UnknownType,
@@ -91,6 +109,9 @@ impl ErrorCode {
         ErrorCode::UnknownExperiment,
         ErrorCode::UnknownEntry,
         ErrorCode::Runtime,
+        ErrorCode::Overloaded,
+        ErrorCode::UnknownJob,
+        ErrorCode::NotReady,
     ];
 
     /// The stable wire spelling (e.g. `bad_range`).
@@ -104,6 +125,9 @@ impl ErrorCode {
             ErrorCode::UnknownExperiment => "unknown_experiment",
             ErrorCode::UnknownEntry => "unknown_entry",
             ErrorCode::Runtime => "runtime",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::UnknownJob => "unknown_job",
+            ErrorCode::NotReady => "not_ready",
         }
     }
 
@@ -226,6 +250,24 @@ pub enum Request {
     /// plus the engine-invocation count (cold executions of a
     /// simulator/coordinator/driver path). Never cached.
     Stats,
+    /// Declarative scenario (DESIGN.md §6.6): run the spec's sweep
+    /// synchronously and answer every point in one envelope. The v1
+    /// `sim`/`plan`/`sparsity` requests are single-point special cases
+    /// of this (the service desugars them into specs internally).
+    Scenario { spec: ScenarioSpec },
+    /// Enqueue a scenario as an async job (DESIGN.md §6.7); answers a
+    /// `job` snapshot immediately. `progress: true` asks the transport
+    /// to push `progress` frames keyed by this request's `id` (only the
+    /// TCP serve loop honors it, and only for top-level submits).
+    Submit { spec: ScenarioSpec, progress: bool },
+    /// Point-in-time job snapshot (state + completed/total points).
+    JobStatus { job: u64 },
+    /// The finished job's `scenario` response (`not_ready` before the
+    /// terminal state, or after a cancel).
+    JobResult { job: u64 },
+    /// Request a cancel: queued jobs cancel immediately, running jobs
+    /// between sweep points. Answers the post-action snapshot.
+    JobCancel { job: u64 },
 }
 
 /// A typed response. Every variant maps 1:1 to a request type except
@@ -272,6 +314,16 @@ pub enum Response {
     /// Service counters (flattened on the wire as `cache_*` fields plus
     /// `engine_runs`).
     Stats { cache: CacheStats, engine_runs: u64 },
+    /// Every sweep point of a scenario, in expansion order; each item
+    /// carries the point coordinates plus the envelope-less response
+    /// the equivalent v1 request would produce.
+    Scenario { points: Vec<PointResult> },
+    /// Job snapshot (`submit`/`job_status`/`job_cancel`).
+    Job(JobView),
+    /// A pushed progress frame — not a response to any request, but an
+    /// interleaved line keyed (via `id`) to the `submit` that asked for
+    /// it. Clients must skip frames they are not waiting for.
+    Progress(JobView),
     Error { code: ErrorCode, message: String },
 }
 
@@ -331,6 +383,11 @@ impl Request {
             Request::Config => "config",
             Request::Batch { .. } => "batch",
             Request::Stats => "stats",
+            Request::Scenario { .. } => "scenario",
+            Request::Submit { .. } => "submit",
+            Request::JobStatus { .. } => "job_status",
+            Request::JobResult { .. } => "job_result",
+            Request::JobCancel { .. } => "job_cancel",
         }
     }
 
@@ -409,6 +466,20 @@ impl Request {
                         items.iter().map(|r| r.to_item_json()).collect(),
                     ),
                 ));
+            }
+            Request::Scenario { spec } => spec.push_payload(fields),
+            Request::Submit { spec, progress } => {
+                // `progress: false` is the default and omitted, keeping
+                // the canonical form minimal.
+                if *progress {
+                    fields.push(("progress", Json::Bool(true)));
+                }
+                fields.push(("spec", spec.to_json()));
+            }
+            Request::JobStatus { job }
+            | Request::JobResult { job }
+            | Request::JobCancel { job } => {
+                fields.push(("job", Json::Num(*job as f64)));
             }
             Request::ListExperiments
             | Request::Config
@@ -529,6 +600,41 @@ fn decode_request_payload(
             check_env_fields(m, ty, &[])?;
             Ok(Request::Stats)
         }
+        "scenario" => {
+            check_env_fields(m, ty, scenario::SPEC_FIELDS)?;
+            Ok(Request::Scenario {
+                spec: ScenarioSpec::decode_fields(m, ty)?,
+            })
+        }
+        "submit" => {
+            check_env_fields(m, ty, &["progress", "spec"])?;
+            let sv = any_field(m, ty, "spec")?;
+            let sm = obj(sv, "submit spec")?;
+            check_obj_fields(sm, "submit spec", scenario::SPEC_FIELDS)?;
+            let spec = ScenarioSpec::decode_fields(sm, "submit spec")?;
+            let progress = match m.get("progress") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => {
+                    return Err(ApiError::bad_request(
+                        "submit: field \"progress\" must be a boolean",
+                    ))
+                }
+            };
+            Ok(Request::Submit { spec, progress })
+        }
+        "job_status" => {
+            check_env_fields(m, ty, &["job"])?;
+            Ok(Request::JobStatus { job: u64_field(m, ty, "job")? })
+        }
+        "job_result" => {
+            check_env_fields(m, ty, &["job"])?;
+            Ok(Request::JobResult { job: u64_field(m, ty, "job")? })
+        }
+        "job_cancel" => {
+            check_env_fields(m, ty, &["job"])?;
+            Ok(Request::JobCancel { job: u64_field(m, ty, "job")? })
+        }
         other => Err(ApiError::new(
             ErrorCode::UnknownType,
             format!("unknown request type {other:?}"),
@@ -596,6 +702,9 @@ impl Response {
             Response::Config { .. } => "config",
             Response::Batch { .. } => "batch",
             Response::Stats { .. } => "stats",
+            Response::Scenario { .. } => "scenario",
+            Response::Job(_) => "job",
+            Response::Progress(_) => "progress",
             Response::Error { .. } => "error",
         }
     }
@@ -760,6 +869,28 @@ impl Response {
                 fields.push(("cache_enabled", Json::Bool(cache.enabled)));
                 fields.push(("engine_runs", Json::Num(*engine_runs as f64)));
             }
+            Response::Scenario { points } => {
+                fields.push((
+                    "points",
+                    Json::Arr(
+                        points
+                            .iter()
+                            .map(|pr| {
+                                Json::obj(vec![
+                                    ("point", pr.point.to_json()),
+                                    ("result", pr.result.to_item_json()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            Response::Job(v) | Response::Progress(v) => {
+                fields.push(("completed", Json::Num(v.completed as f64)));
+                fields.push(("job", Json::Num(v.job as f64)));
+                fields.push(("state", Json::Str(v.state.as_str().into())));
+                fields.push(("total", Json::Num(v.total as f64)));
+            }
             Response::Error { code, message } => {
                 fields.push(("code", Json::Str(code.as_str().into())));
                 fields.push(("error", Json::Str(message.clone())));
@@ -918,6 +1049,17 @@ fn decode_response_payload(
                 engine_runs: u64_field(m, ty, "engine_runs")?,
             })
         }
+        "scenario" => {
+            check_env_fields(m, ty, &["points"])?;
+            let points = arr_field(m, ty, "points")?
+                .iter()
+                .enumerate()
+                .map(|(i, v)| decode_point_result(v, i))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Response::Scenario { points })
+        }
+        "job" => Ok(Response::Job(decode_job_view(m, ty)?)),
+        "progress" => Ok(Response::Progress(decode_job_view(m, ty)?)),
         "error" => {
             check_env_fields(m, ty, &["code", "error"])?;
             let code = str_field(m, ty, "code")?;
@@ -935,6 +1077,38 @@ fn decode_response_payload(
             format!("unknown response type {other:?}"),
         )),
     }
+}
+
+/// Decode one `{"point":…,"result":…}` scenario item. The result is an
+/// envelope-less response object under [`item_envelope`] rules, exactly
+/// like a batch item.
+fn decode_point_result(v: &Json, idx: usize) -> Result<PointResult, ApiError> {
+    let what = format!("scenario point {idx}");
+    let m = obj(v, &what)?;
+    check_obj_fields(m, &what, &["point", "result"])?;
+    let point = Point::from_json(any_field(m, &what, "point")?, &what)?;
+    let (rm, rty) = item_envelope(any_field(m, &what, "result")?, &what)?;
+    let result = decode_response_payload(rm, rty).map_err(|e| {
+        ApiError::new(e.code, format!("{what}: {}", e.message))
+    })?;
+    Ok(PointResult { point, result: Box::new(result) })
+}
+
+/// Decode the shared `job`/`progress` payload.
+fn decode_job_view(
+    m: &BTreeMap<String, Json>,
+    ty: &str,
+) -> Result<JobView, ApiError> {
+    check_env_fields(m, ty, &["completed", "job", "state", "total"])?;
+    let s = str_field(m, ty, "state")?;
+    Ok(JobView {
+        job: u64_field(m, ty, "job")?,
+        state: JobState::parse(s).ok_or_else(|| {
+            ApiError::bad_request(format!("{ty}: unknown job state {s:?}"))
+        })?,
+        completed: u64_field(m, ty, "completed")?,
+        total: u64_field(m, ty, "total")?,
+    })
 }
 
 /// Decode one batch response item ([`item_envelope`] rules, response
@@ -983,7 +1157,7 @@ fn decode_experiment_info(v: &Json) -> Result<ExperimentInfo, ApiError> {
 // Envelope / field helpers
 // ---------------------------------------------------------------------
 
-fn obj<'a>(
+pub(crate) fn obj<'a>(
     v: &'a Json,
     what: &str,
 ) -> Result<&'a BTreeMap<String, Json>, ApiError> {
@@ -1103,7 +1277,7 @@ fn check_env_fields(
 }
 
 /// Reject keys outside `allowed` in a nested (non-envelope) object.
-fn check_obj_fields(
+pub(crate) fn check_obj_fields(
     m: &BTreeMap<String, Json>,
     what: &str,
     allowed: &[&str],
@@ -1159,7 +1333,7 @@ fn u64_field(
     }
 }
 
-fn usize_field(
+pub(crate) fn usize_field(
     m: &BTreeMap<String, Json>,
     ty: &str,
     key: &str,
@@ -1189,7 +1363,7 @@ fn bool_field(
     }
 }
 
-fn str_field<'a>(
+pub(crate) fn str_field<'a>(
     m: &'a BTreeMap<String, Json>,
     ty: &str,
     key: &str,

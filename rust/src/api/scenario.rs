@@ -1,0 +1,986 @@
+//! Declarative scenario specifications — the v2 request surface
+//! (DESIGN.md §6.6).
+//!
+//! A [`ScenarioSpec`] describes a workload *composition* instead of a
+//! fixed question: what to ask ([`Ask`]: `sim`/`plan`/`sparsity`), the
+//! base kernel (`n`, `precision`, `iters`, base [`SparsityMode`]), the
+//! stream-set [`Shape`] (homogeneous / imbalanced_pair / mixed_sparse,
+//! built via [`crate::workload::generator`]), the coordinator objective
+//! (for `plan` asks), and optional [`Sweep`] axes whose cross-product —
+//! hard-capped at [`MAX_SWEEP_POINTS`] — expands into an ordered list of
+//! [`Point`]s. The service compiles every point down to the existing
+//! coordinator/sim/sparsity layers, so a single-point scenario answers
+//! byte-identically to the v1 request it generalizes (v1 `sim`/`plan`/
+//! `sparsity` requests desugar into exactly such specs inside
+//! `api::Service`).
+//!
+//! Canonical form: decoding fills every default, and encoding always
+//! emits the full field set (conditional fields — `objective`,
+//! `small_n`, `sweep` — only when applicable), so decode→encode→decode
+//! is a fixpoint and semantically identical specs collide on one cache
+//! key no matter how they were spelled (`tests/api_protocol.rs`
+//! enforces this). The per-point cache key is the canonical wire form
+//! of the single-point spec ([`ScenarioSpec::at`]).
+
+use super::protocol::{check_obj_fields, obj, objective_name,
+                      parse_objective, precision_wire_name, str_field,
+                      usize_field, ApiError, ErrorCode};
+use crate::coordinator::Objective;
+use crate::isa::Precision;
+use crate::sim::{KernelDesc, SparsityMode};
+use crate::util::json::Json;
+use crate::workload::generator::StreamSetSpec;
+use std::collections::BTreeMap;
+
+/// Hard cap on the sweep cross-product: a bigger sweep is a
+/// `bad_range` error at decode time *and* in the service, never a
+/// partially-run one.
+pub const MAX_SWEEP_POINTS: usize = 256;
+
+/// Accepted per-kernel iteration range for scenarios (v1 requests pin
+/// 50/100, well inside).
+pub const ITERS_RANGE: (usize, usize) = (1, 10_000);
+
+/// The payload keys a scenario spec may carry (sorted; shared by the
+/// request decoder and [`ScenarioSpec::from_json`]).
+pub(crate) const SPEC_FIELDS: &[&str] = &[
+    "ask", "iters", "n", "objective", "precision", "shape", "small_n",
+    "sparsity", "streams", "sweep",
+];
+
+/// Range check shared by scenario validation (and, transitively, the
+/// desugared v1 requests — the error text is part of the v1 contract).
+pub(crate) fn check_range(
+    what: &str,
+    v: usize,
+    (lo, hi): (usize, usize),
+) -> Result<usize, ApiError> {
+    if v < lo || v > hi {
+        return Err(ApiError::new(
+            ErrorCode::BadRange,
+            format!("{what} must be in {lo}..={hi} (got {v})"),
+        ));
+    }
+    Ok(v)
+}
+
+/// What question a scenario point asks of the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ask {
+    /// DES simulation of the concurrent stream set (v1 `sim`).
+    Sim,
+    /// Coordinator execution plan over the kernel pool (v1 `plan`).
+    Plan,
+    /// Context-dependent 2:4 sparsity decision (v1 `sparsity`).
+    Sparsity,
+}
+
+impl Ask {
+    pub const ALL: [Ask; 3] = [Ask::Sim, Ask::Plan, Ask::Sparsity];
+
+    /// Wire spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Ask::Sim => "sim",
+            Ask::Plan => "plan",
+            Ask::Sparsity => "sparsity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Ask> {
+        Ask::ALL.iter().copied().find(|a| a.as_str() == s)
+    }
+
+    /// Default per-kernel iterations — exactly what the v1 requests
+    /// hard-coded (sim 50, plan 100, sparsity 100 via the
+    /// `KernelDesc::gemm` default), so desugared v1 requests stay
+    /// byte-identical.
+    pub fn default_iters(self) -> usize {
+        match self {
+            Ask::Sim => 50,
+            Ask::Plan | Ask::Sparsity => 100,
+        }
+    }
+}
+
+/// Stream-set composition, built via [`crate::workload::generator`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// `streams` identical kernels (the v1 request shape).
+    Homogeneous,
+    /// One large + one small kernel on the same ACE (paper §6.3);
+    /// `streams` is pinned to 2.
+    ImbalancedPair,
+    /// Alternating sparse/dense streams (paper §7.2 "mixed").
+    MixedSparse,
+}
+
+impl Shape {
+    pub const ALL: [Shape; 3] =
+        [Shape::Homogeneous, Shape::ImbalancedPair, Shape::MixedSparse];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Shape::Homogeneous => "homogeneous",
+            Shape::ImbalancedPair => "imbalanced_pair",
+            Shape::MixedSparse => "mixed_sparse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Shape> {
+        Shape::ALL.iter().copied().find(|x| x.as_str() == s)
+    }
+
+    /// Default stream count when the spec omits `streams`.
+    pub fn default_streams(self) -> usize {
+        match self {
+            Shape::ImbalancedPair => 2,
+            Shape::Homogeneous | Shape::MixedSparse => 4,
+        }
+    }
+}
+
+/// Optional sweep axes. Empty vectors mean "not swept" (the base value
+/// is the single point on that axis); points expand as the
+/// cross-product in fixed nesting order `n` → `precision` → `streams`
+/// → `iters` (last axis varies fastest).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Sweep {
+    pub n: Vec<usize>,
+    pub precision: Vec<Precision>,
+    pub streams: Vec<usize>,
+    pub iters: Vec<usize>,
+}
+
+impl Sweep {
+    pub fn is_empty(&self) -> bool {
+        self.n.is_empty()
+            && self.precision.is_empty()
+            && self.streams.is_empty()
+            && self.iters.is_empty()
+    }
+
+    /// Cross-product size (each absent axis counts 1).
+    pub fn points(&self) -> usize {
+        [
+            self.n.len(),
+            self.precision.len(),
+            self.streams.len(),
+            self.iters.len(),
+        ]
+        .iter()
+        .fold(1usize, |acc, &len| acc.saturating_mul(len.max(1)))
+    }
+}
+
+/// One expanded sweep point: the concrete base values a single
+/// execution uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Point {
+    pub n: usize,
+    pub precision: Precision,
+    pub streams: usize,
+    pub iters: usize,
+}
+
+impl Point {
+    /// Wire form (`{"iters":..,"n":..,"precision":..,"streams":..}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::Num(self.iters as f64)),
+            ("n", Json::Num(self.n as f64)),
+            (
+                "precision",
+                Json::Str(precision_wire_name(self.precision).into()),
+            ),
+            ("streams", Json::Num(self.streams as f64)),
+        ])
+    }
+
+    /// Strict decode (client side of `scenario` responses).
+    pub(crate) fn from_json(v: &Json, what: &str) -> Result<Point, ApiError> {
+        let m = obj(v, what)?;
+        check_obj_fields(m, what, &["iters", "n", "precision", "streams"])?;
+        let p = str_field(m, what, "precision")?;
+        Ok(Point {
+            n: usize_field(m, what, "n")?,
+            precision: Precision::parse(p).ok_or_else(|| {
+                ApiError::bad_request(format!("{what}: bad precision {p:?}"))
+            })?,
+            streams: usize_field(m, what, "streams")?,
+            iters: usize_field(m, what, "iters")?,
+        })
+    }
+}
+
+/// One answered sweep point: the point coordinates plus the
+/// (envelope-less) response the equivalent v1 request would produce.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointResult {
+    pub point: Point,
+    pub result: Box<super::protocol::Response>,
+}
+
+/// A declarative scenario: base kernel, stream-set shape, question, and
+/// optional sweep axes. See the module docs for the canonical form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub ask: Ask,
+    pub n: usize,
+    pub precision: Precision,
+    pub iters: usize,
+    pub streams: usize,
+    pub shape: Shape,
+    /// Small-kernel size for `imbalanced_pair` (default `n/4`, min 64,
+    /// computed per point when absent).
+    pub small_n: Option<usize>,
+    /// Present exactly when `ask` is [`Ask::Plan`].
+    pub objective: Option<Objective>,
+    /// Base sparsity overlay (for `mixed_sparse`, the mode of the
+    /// sparse streams; `dense` there means the generator's default
+    /// `lhs`).
+    pub sparsity: SparsityMode,
+    pub sweep: Sweep,
+}
+
+impl ScenarioSpec {
+    /// A single-point spec with the ask's defaults (n 512, FP8,
+    /// 4 streams, homogeneous, dense, no sweep).
+    pub fn new(ask: Ask) -> ScenarioSpec {
+        ScenarioSpec {
+            ask,
+            n: 512,
+            precision: Precision::Fp8,
+            iters: ask.default_iters(),
+            streams: 4,
+            shape: Shape::Homogeneous,
+            small_n: None,
+            objective: if ask == Ask::Plan {
+                Some(Objective::LatencySensitive)
+            } else {
+                None
+            },
+            sparsity: SparsityMode::Dense,
+            sweep: Sweep::default(),
+        }
+    }
+
+    /// The exact desugaring of a v1 `sim` request.
+    pub fn sim(n: usize, precision: Precision, streams: usize) -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(Ask::Sim);
+        s.n = n;
+        s.precision = precision;
+        s.streams = streams;
+        s
+    }
+
+    /// The exact desugaring of a v1 `plan` request.
+    pub fn plan(
+        objective: Objective,
+        streams: usize,
+        n: usize,
+        precision: Precision,
+    ) -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(Ask::Plan);
+        s.objective = Some(objective);
+        s.streams = streams;
+        s.n = n;
+        s.precision = precision;
+        s
+    }
+
+    /// The exact desugaring of a v1 `sparsity` request (FP8 candidate,
+    /// like the v1 handler).
+    pub fn sparsity_question(n: usize, streams: usize) -> ScenarioSpec {
+        let mut s = ScenarioSpec::new(Ask::Sparsity);
+        s.n = n;
+        s.streams = streams;
+        s
+    }
+
+    /// Structural validation (field combinations + the sweep cap).
+    /// Numeric ranges are per-point ([`ScenarioSpec::check_point`]).
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.objective.is_some() != (self.ask == Ask::Plan) {
+            return Err(ApiError::bad_request(if self.ask == Ask::Plan {
+                "\"objective\" is required when ask is \"plan\"".to_string()
+            } else {
+                format!(
+                    "\"objective\" only applies to ask \"plan\" (ask is \
+                     {:?})",
+                    self.ask.as_str()
+                )
+            }));
+        }
+        if self.small_n.is_some() && self.shape != Shape::ImbalancedPair {
+            return Err(ApiError::bad_request(
+                "\"small_n\" only applies to shape \"imbalanced_pair\"",
+            ));
+        }
+        if self.ask == Ask::Sparsity {
+            if self.sparsity != SparsityMode::Dense {
+                return Err(ApiError::bad_request(
+                    "ask \"sparsity\" evaluates a dense candidate kernel; \
+                     \"sparsity\" must be \"dense\"",
+                ));
+            }
+            if self.shape != Shape::Homogeneous {
+                return Err(ApiError::bad_request(
+                    "ask \"sparsity\" evaluates a homogeneous candidate; \
+                     use shape \"homogeneous\"",
+                ));
+            }
+        }
+        if self.shape == Shape::ImbalancedPair {
+            if !self.sweep.streams.is_empty() {
+                return Err(ApiError::bad_request(
+                    "shape \"imbalanced_pair\" pins streams to 2; remove \
+                     the streams sweep axis",
+                ));
+            }
+            if self.streams != 2 {
+                return Err(ApiError::new(
+                    ErrorCode::BadRange,
+                    format!(
+                        "shape \"imbalanced_pair\" pins streams to 2 (got \
+                         {})",
+                        self.streams
+                    ),
+                ));
+            }
+        }
+        let points = self.sweep.points();
+        if points > MAX_SWEEP_POINTS {
+            return Err(ApiError::new(
+                ErrorCode::BadRange,
+                format!(
+                    "sweep expands to {points} points, cap is \
+                     {MAX_SWEEP_POINTS}"
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Range-check one point. The check *order* per ask mirrors the v1
+    /// handlers exactly, so desugared v1 requests keep their error
+    /// bytes (`n` first for sim/sparsity, `streams` first for plan).
+    pub fn check_point(&self, p: &Point) -> Result<(), ApiError> {
+        use super::service::{POOL_STREAMS, SIM_STREAMS, SIZE_RANGE};
+        match self.ask {
+            Ask::Sim => {
+                check_range("n", p.n, SIZE_RANGE)?;
+                check_range("streams", p.streams, SIM_STREAMS)?;
+            }
+            Ask::Plan => {
+                check_range("streams", p.streams, POOL_STREAMS)?;
+                check_range("n", p.n, SIZE_RANGE)?;
+            }
+            Ask::Sparsity => {
+                check_range("n", p.n, SIZE_RANGE)?;
+                check_range("streams", p.streams, POOL_STREAMS)?;
+            }
+        }
+        check_range("iters", p.iters, ITERS_RANGE)?;
+        if let Some(s) = self.small_n {
+            check_range("small_n", s, SIZE_RANGE)?;
+        }
+        Ok(())
+    }
+
+    /// The all-or-nothing gate both the synchronous scenario path and
+    /// job submission run: validate structurally, expand, and
+    /// range-check every point before anything executes.
+    pub fn validated_points(&self) -> Result<Vec<Point>, ApiError> {
+        self.validate()?;
+        let points = self.expand();
+        for p in &points {
+            self.check_point(p)?;
+        }
+        Ok(points)
+    }
+
+    /// Expand the sweep cross-product into ordered points (axis nesting
+    /// `n` → `precision` → `streams` → `iters`; absent axes contribute
+    /// the base value). A sweep-less spec expands to one point.
+    pub fn expand(&self) -> Vec<Point> {
+        let ns = if self.sweep.n.is_empty() {
+            vec![self.n]
+        } else {
+            self.sweep.n.clone()
+        };
+        let ps = if self.sweep.precision.is_empty() {
+            vec![self.precision]
+        } else {
+            self.sweep.precision.clone()
+        };
+        let ss = if self.sweep.streams.is_empty() {
+            vec![self.streams]
+        } else {
+            self.sweep.streams.clone()
+        };
+        let is = if self.sweep.iters.is_empty() {
+            vec![self.iters]
+        } else {
+            self.sweep.iters.clone()
+        };
+        let mut out = Vec::with_capacity(self.sweep.points());
+        for &n in &ns {
+            for &precision in &ps {
+                for &streams in &ss {
+                    for &iters in &is {
+                        out.push(Point { n, precision, streams, iters });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The canonical single-point spec at `p` (sweep cleared, base
+    /// fields replaced) — its wire form is the per-point cache key.
+    pub fn at(&self, p: &Point) -> ScenarioSpec {
+        let mut s = self.clone();
+        s.n = p.n;
+        s.precision = p.precision;
+        s.streams = p.streams;
+        s.iters = p.iters;
+        s.sweep = Sweep::default();
+        s
+    }
+
+    /// Build the concrete kernel set for one point via
+    /// [`crate::workload::generator`].
+    pub fn kernels(&self, p: &Point) -> Vec<KernelDesc> {
+        let overlay = |set: StreamSetSpec| {
+            if self.sparsity.is_sparse() {
+                set.with_sparsity(self.sparsity)
+            } else {
+                set
+            }
+        };
+        match self.shape {
+            Shape::Homogeneous => {
+                overlay(StreamSetSpec::homogeneous(
+                    KernelDesc::gemm(p.n, p.precision).with_iters(p.iters),
+                    p.streams,
+                ))
+                .kernels
+            }
+            Shape::ImbalancedPair => {
+                let small = self.small_n.unwrap_or((p.n / 4).max(64));
+                overlay(StreamSetSpec::imbalanced_pair(
+                    p.n,
+                    small,
+                    p.precision,
+                    p.iters,
+                ))
+                .kernels
+            }
+            Shape::MixedSparse => {
+                let mode = if self.sparsity == SparsityMode::Dense {
+                    SparsityMode::SparseLhs
+                } else {
+                    self.sparsity
+                };
+                let mut ks = StreamSetSpec::mixed_sparse(
+                    p.n,
+                    p.precision,
+                    p.streams,
+                    p.iters,
+                )
+                .kernels;
+                if mode != SparsityMode::SparseLhs {
+                    for k in &mut ks {
+                        if k.sparsity.is_sparse() {
+                            k.sparsity = mode;
+                        }
+                    }
+                }
+                ks
+            }
+        }
+    }
+
+    /// Canonical payload object (no envelope, no `type`) — what spec
+    /// files contain and what `"spec"` carries inside `submit`.
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        self.push_payload(&mut fields);
+        Json::obj(fields)
+    }
+
+    /// Push the canonical payload fields (shared with the request
+    /// encoder in `protocol.rs`).
+    pub(crate) fn push_payload(
+        &self,
+        fields: &mut Vec<(&'static str, Json)>,
+    ) {
+        fields.push(("ask", Json::Str(self.ask.as_str().into())));
+        fields.push(("iters", Json::Num(self.iters as f64)));
+        fields.push(("n", Json::Num(self.n as f64)));
+        if let Some(o) = self.objective {
+            fields.push(("objective", Json::Str(objective_name(o).into())));
+        }
+        fields.push((
+            "precision",
+            Json::Str(precision_wire_name(self.precision).into()),
+        ));
+        fields.push(("shape", Json::Str(self.shape.as_str().into())));
+        if let Some(s) = self.small_n {
+            fields.push(("small_n", Json::Num(s as f64)));
+        }
+        fields.push(("sparsity", Json::Str(self.sparsity.name().into())));
+        fields.push(("streams", Json::Num(self.streams as f64)));
+        if !self.sweep.is_empty() {
+            let mut sw = Vec::new();
+            if !self.sweep.iters.is_empty() {
+                sw.push(("iters", usize_arr(&self.sweep.iters)));
+            }
+            if !self.sweep.n.is_empty() {
+                sw.push(("n", usize_arr(&self.sweep.n)));
+            }
+            if !self.sweep.precision.is_empty() {
+                sw.push((
+                    "precision",
+                    Json::Arr(
+                        self.sweep
+                            .precision
+                            .iter()
+                            .map(|&p| {
+                                Json::Str(precision_wire_name(p).into())
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            if !self.sweep.streams.is_empty() {
+                sw.push(("streams", usize_arr(&self.sweep.streams)));
+            }
+            fields.push(("sweep", Json::obj(sw)));
+        }
+    }
+
+    /// Decode a bare spec object (a spec file or the `"spec"` value of
+    /// a `submit`). Tolerates an optional `"type":"scenario"` tag so a
+    /// captured request payload is a valid spec file; everything else
+    /// is strict.
+    pub fn from_json(v: &Json) -> Result<ScenarioSpec, ApiError> {
+        let what = "scenario spec";
+        let m = obj(v, what)?;
+        let mut allowed: Vec<&str> = SPEC_FIELDS.to_vec();
+        allowed.push("type");
+        check_obj_fields(m, what, &allowed)?;
+        if let Some(t) = m.get("type") {
+            if t.as_str() != Some("scenario") {
+                return Err(ApiError::bad_request(format!(
+                    "{what}: \"type\" must be \"scenario\" when present"
+                )));
+            }
+        }
+        ScenarioSpec::decode_fields(m, what)
+    }
+
+    /// Decode the spec fields out of `m` (unknown-field filtering is
+    /// the caller's job — the request decoder exempts envelope keys,
+    /// [`ScenarioSpec::from_json`] tolerates `type`). Ends with
+    /// [`ScenarioSpec::validate`], so a decoded spec is always
+    /// structurally sound.
+    pub(crate) fn decode_fields(
+        m: &BTreeMap<String, Json>,
+        what: &str,
+    ) -> Result<ScenarioSpec, ApiError> {
+        let ask = match opt_str(m, what, "ask")? {
+            None => Ask::Sim,
+            Some(s) => Ask::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{what}: bad ask {s:?} (want sim|plan|sparsity)"
+                ))
+            })?,
+        };
+        let shape = match opt_str(m, what, "shape")? {
+            None => Shape::Homogeneous,
+            Some(s) => Shape::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{what}: bad shape {s:?} (want \
+                     homogeneous|imbalanced_pair|mixed_sparse)"
+                ))
+            })?,
+        };
+        let n = usize_field(m, what, "n")?;
+        let precision = match opt_str(m, what, "precision")? {
+            None => Precision::Fp8,
+            Some(s) => Precision::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{what}: bad precision {s:?}"
+                ))
+            })?,
+        };
+        let iters = opt_usize(m, what, "iters")?
+            .unwrap_or_else(|| ask.default_iters());
+        let streams = opt_usize(m, what, "streams")?
+            .unwrap_or_else(|| shape.default_streams());
+        let small_n = opt_usize(m, what, "small_n")?;
+        let objective = match opt_str(m, what, "objective")? {
+            None => {
+                if ask == Ask::Plan {
+                    Some(Objective::LatencySensitive)
+                } else {
+                    None
+                }
+            }
+            Some(s) => Some(parse_objective(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{what}: bad objective {s:?} (want \
+                     latency|throughput|isolation)"
+                ))
+            })?),
+        };
+        let sparsity = match opt_str(m, what, "sparsity")? {
+            None => SparsityMode::Dense,
+            Some(s) => SparsityMode::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{what}: bad sparsity {s:?} (want dense|lhs|rhs|both)"
+                ))
+            })?,
+        };
+        let sweep = match m.get("sweep") {
+            None => Sweep::default(),
+            Some(v) => decode_sweep(v, what)?,
+        };
+        let spec = ScenarioSpec {
+            ask,
+            n,
+            precision,
+            iters,
+            streams,
+            shape,
+            small_n,
+            objective,
+            sparsity,
+            sweep,
+        };
+        spec.validate().map_err(|e| {
+            ApiError::new(e.code, format!("{what}: {}", e.message))
+        })?;
+        Ok(spec)
+    }
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn decode_sweep(v: &Json, what: &str) -> Result<Sweep, ApiError> {
+    let m = obj(v, &format!("{what}: \"sweep\""))?;
+    check_obj_fields(
+        m,
+        &format!("{what}: sweep"),
+        &["iters", "n", "precision", "streams"],
+    )?;
+    let axis_usize = |key: &str| -> Result<Vec<usize>, ApiError> {
+        match m.get(key) {
+            None => Ok(Vec::new()),
+            Some(v) => {
+                let arr = axis_arr(v, what, key)?;
+                arr.iter()
+                    .map(|x| match x {
+                        Json::Num(f)
+                            if f.fract() == 0.0
+                                && *f >= 0.0
+                                && *f <= 9.0e15 =>
+                        {
+                            Ok(*f as usize)
+                        }
+                        _ => Err(ApiError::bad_request(format!(
+                            "{what}: sweep axis {key:?} wants \
+                             nonnegative integers"
+                        ))),
+                    })
+                    .collect()
+            }
+        }
+    };
+    let precision = match m.get("precision") {
+        None => Vec::new(),
+        Some(v) => {
+            let arr = axis_arr(v, what, "precision")?;
+            arr.iter()
+                .map(|x| {
+                    x.as_str().and_then(Precision::parse).ok_or_else(|| {
+                        ApiError::bad_request(format!(
+                            "{what}: sweep axis \"precision\" wants \
+                             precision names"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?
+        }
+    };
+    Ok(Sweep {
+        n: axis_usize("n")?,
+        precision,
+        streams: axis_usize("streams")?,
+        iters: axis_usize("iters")?,
+    })
+}
+
+fn axis_arr<'a>(
+    v: &'a Json,
+    what: &str,
+    key: &str,
+) -> Result<&'a [Json], ApiError> {
+    match v {
+        Json::Arr(a) if !a.is_empty() => Ok(a.as_slice()),
+        Json::Arr(_) => Err(ApiError::bad_request(format!(
+            "{what}: sweep axis {key:?} must not be empty"
+        ))),
+        _ => Err(ApiError::bad_request(format!(
+            "{what}: sweep axis {key:?} must be an array"
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Optional-field helpers (the strict required-field family lives in
+// protocol.rs and is shared).
+// ---------------------------------------------------------------------
+
+
+
+
+fn opt_usize(
+    m: &BTreeMap<String, Json>,
+    what: &str,
+    key: &str,
+) -> Result<Option<usize>, ApiError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(x))
+            if x.fract() == 0.0 && *x >= 0.0 && *x <= 9.0e15 =>
+        {
+            Ok(Some(*x as usize))
+        }
+        Some(_) => Err(ApiError::bad_request(format!(
+            "{what}: field {key:?} must be a nonnegative integer"
+        ))),
+    }
+}
+
+
+fn opt_str<'a>(
+    m: &'a BTreeMap<String, Json>,
+    what: &str,
+    key: &str,
+) -> Result<Option<&'a str>, ApiError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.as_str())),
+        Some(_) => Err(ApiError::bad_request(format!(
+            "{what}: field {key:?} must be a string"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_spec_decodes_with_defaults_and_is_a_fixpoint() {
+        let v = Json::parse(r#"{"n":512}"#).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(spec, ScenarioSpec::sim(512, Precision::Fp8, 4));
+        let canonical = spec.to_json().to_string();
+        assert_eq!(
+            canonical,
+            r#"{"ask":"sim","iters":50,"n":512,"precision":"fp8","shape":"homogeneous","sparsity":"dense","streams":4}"#
+        );
+        let back =
+            ScenarioSpec::from_json(&Json::parse(&canonical).unwrap())
+                .unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string(), canonical, "fixpoint");
+    }
+
+    #[test]
+    fn precision_aliases_normalize_into_the_canonical_spelling() {
+        let v = Json::parse(r#"{"n":256,"precision":"f8"}"#).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(spec.precision, Precision::Fp8);
+        assert!(spec.to_json().to_string().contains(r#""precision":"fp8""#));
+    }
+
+    #[test]
+    fn plan_ask_defaults_its_objective() {
+        let v = Json::parse(r#"{"ask":"plan","n":512}"#).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(spec.objective, Some(Objective::LatencySensitive));
+        assert_eq!(spec.iters, 100);
+        let v =
+            Json::parse(r#"{"ask":"sim","n":512,"objective":"latency"}"#)
+                .unwrap();
+        let err = ScenarioSpec::from_json(&v).unwrap_err();
+        assert!(err.message.contains("only applies"), "{err}");
+    }
+
+    #[test]
+    fn unknown_fields_in_spec_and_sweep_are_rejected() {
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"bogus":1}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownField);
+        assert!(err.message.contains("bogus"));
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"sweep":{"bogus":[1]}}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownField);
+    }
+
+    #[test]
+    fn sweep_cap_is_enforced_at_decode() {
+        // 17 sizes x 16 stream counts = 272 > 256.
+        let ns: Vec<String> =
+            (1..=17).map(|i| (64 * i).to_string()).collect();
+        let ss: Vec<String> = (1..=16).map(|i| i.to_string()).collect();
+        let line = format!(
+            r#"{{"n":512,"sweep":{{"n":[{}],"streams":[{}]}}}}"#,
+            ns.join(","),
+            ss.join(",")
+        );
+        let err =
+            ScenarioSpec::from_json(&Json::parse(&line).unwrap()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRange);
+        assert!(err.message.contains("272"), "{err}");
+        assert!(err.message.contains("256"), "{err}");
+    }
+
+    #[test]
+    fn empty_sweep_axes_are_rejected() {
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"sweep":{"streams":[]}}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.message.contains("must not be empty"), "{err}");
+    }
+
+    #[test]
+    fn expand_orders_points_n_major_iters_minor() {
+        let mut spec = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        spec.sweep.n = vec![256, 512];
+        spec.sweep.streams = vec![1, 2];
+        let points = spec.expand();
+        assert_eq!(points.len(), 4);
+        assert_eq!(
+            points
+                .iter()
+                .map(|p| (p.n, p.streams))
+                .collect::<Vec<_>>(),
+            vec![(256, 1), (256, 2), (512, 1), (512, 2)]
+        );
+        // A sweep-less spec expands to its single base point.
+        assert_eq!(
+            ScenarioSpec::sim(512, Precision::Fp8, 4).expand(),
+            vec![Point {
+                n: 512,
+                precision: Precision::Fp8,
+                streams: 4,
+                iters: 50
+            }]
+        );
+    }
+
+    #[test]
+    fn imbalanced_pair_pins_streams_and_owns_small_n() {
+        let mut spec = ScenarioSpec::new(Ask::Sim);
+        spec.shape = Shape::ImbalancedPair;
+        spec.streams = 4;
+        let err = spec.validate().unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRange);
+        spec.streams = 2;
+        spec.validate().unwrap();
+        spec.sweep.streams = vec![1, 2];
+        assert!(spec.validate().is_err());
+        spec.sweep.streams.clear();
+
+        let mut homog = ScenarioSpec::new(Ask::Sim);
+        homog.small_n = Some(128);
+        assert!(homog.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_sets_match_their_shapes() {
+        let p = Point {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 4,
+            iters: 50,
+        };
+        let homog = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        let ks = homog.kernels(&p);
+        assert_eq!(ks.len(), 4);
+        assert!(ks.iter().all(|k| k.m == 512 && k.iters == 50));
+
+        let mut pair = ScenarioSpec::new(Ask::Sim);
+        pair.shape = Shape::ImbalancedPair;
+        pair.streams = 2;
+        pair.n = 2048;
+        let pp = Point { n: 2048, precision: Precision::Fp8, streams: 2,
+                         iters: 50 };
+        let ks = pair.kernels(&pp);
+        assert_eq!(ks.len(), 2);
+        assert_eq!(ks[0].m, 2048);
+        assert_eq!(ks[1].m, 512, "default small_n is n/4");
+
+        let mut mixed = ScenarioSpec::new(Ask::Sim);
+        mixed.shape = Shape::MixedSparse;
+        let ks = mixed.kernels(&p);
+        assert_eq!(
+            ks.iter().filter(|k| k.sparsity.is_sparse()).count(),
+            2,
+            "mixed_sparse alternates sparse/dense"
+        );
+        mixed.sparsity = SparsityMode::SparseBoth;
+        let ks = mixed.kernels(&p);
+        assert!(ks
+            .iter()
+            .filter(|k| k.sparsity.is_sparse())
+            .all(|k| k.sparsity == SparsityMode::SparseBoth));
+    }
+
+    #[test]
+    fn check_point_mirrors_v1_error_order() {
+        let spec = ScenarioSpec::sim(512, Precision::Fp8, 32);
+        let p = spec.expand()[0];
+        let err = spec.check_point(&p).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRange);
+        assert!(err.message.contains("streams must be in 1..=16 (got 32)"));
+        // Sim checks n before streams.
+        let spec = ScenarioSpec::sim(0, Precision::Fp8, 32);
+        let err = spec.check_point(&spec.expand()[0]).unwrap_err();
+        assert!(err.message.starts_with("n must be in"), "{err}");
+        // Plan checks streams before n.
+        let spec = ScenarioSpec::plan(
+            Objective::LatencySensitive,
+            99,
+            0,
+            Precision::Fp8,
+        );
+        let err = spec.check_point(&spec.expand()[0]).unwrap_err();
+        assert!(err.message.starts_with("streams must be in"), "{err}");
+    }
+
+    #[test]
+    fn single_point_cache_form_is_stable_under_at() {
+        let mut spec = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        spec.sweep.streams = vec![1, 4];
+        let points = spec.expand();
+        let single = spec.at(&points[1]);
+        assert!(single.sweep.is_empty());
+        assert_eq!(single.streams, 4);
+        // The swept spec at its point equals the equivalent plain spec.
+        assert_eq!(single, ScenarioSpec::sim(512, Precision::Fp8, 4));
+    }
+}

@@ -13,32 +13,53 @@
 //! §6.3) instead of the pre-API behavior of silently clamping stream
 //! counts and answering a different question.
 //!
+//! ## Scenarios (DESIGN.md §6.6)
+//!
+//! Every simulator question is a [`ScenarioSpec`]: the v1
+//! `sim`/`plan`/`sparsity` requests desugar into single-point specs, and
+//! the `scenario` request runs a validated sweep through the scoped
+//! pool, answering each [`Point`] exactly as the equivalent v1 request
+//! would — byte-identically, because both run the same compiled path.
+//!
 //! ## Caching
 //!
-//! The service embeds a [`ResultCache`] (see [`super::cache`]):
-//! `sim`/`plan`/`sparsity` requests and `repro` of deterministic
-//! registry entries are memoized under their canonical key, so a
-//! repeated request returns a byte-identical response with zero DES
-//! engine re-execution — provable through the `stats` request, whose
-//! `engine_runs` counter only moves on cold executions. Batch items
-//! route through the same path and therefore share the cache within
-//! one call. [`Service::handle_opts`] with `use_cache: false` (the
-//! wire `"cache":false` escape hatch) always runs cold.
+//! The service embeds a [`ResultCache`] (see [`super::cache`]) keyed at
+//! **sweep-point granularity**: each point memoizes under the canonical
+//! wire form of its single-point spec ([`ScenarioSpec::at`]), so a v1
+//! `sim` repeat, the same point inside a sweep, and a job's point all
+//! share one entry. `repro` of deterministic registry entries stays
+//! memoized under its request form. Repeats answer byte-identically
+//! with zero DES re-execution, provable through `stats` whose
+//! `engine_runs` counter only moves on cold executions (including the
+//! `repro_all` driver sweep). [`Service::handle_opts`] with
+//! `use_cache: false` (the wire `"cache":false` escape hatch) always
+//! runs cold.
+//!
+//! ## Jobs (DESIGN.md §6.7)
+//!
+//! Long-running sweeps go through the bounded [`JobTable`]:
+//! `submit` validates the spec synchronously, enqueues it (or answers
+//! `overloaded`), and `max_running` worker threads execute jobs
+//! point-by-point — honoring cancels between points and framing
+//! per-point progress to watchers (the serve transport's `progress`
+//! push).
 
 use super::cache::{CachePolicy, CacheStats, ResultCache};
+use super::job::{JobLimits, JobTable, JobView};
 use super::protocol::{
     objective_name, ApiError, ErrorCode, ExperimentInfo, PlanGroup, Request,
     Response, MAX_BATCH_ITEMS,
 };
+use super::scenario::{Ask, Point, PointResult, ScenarioSpec};
 use crate::config::Config;
-use crate::coordinator::{decide_sparsity, Coordinator};
+use crate::coordinator::{decide_sparsity, Coordinator, Objective};
 use crate::experiments;
-use crate::isa::Precision;
 use crate::metrics::fairness;
 use crate::runtime::manifest::EntrySpec;
 use crate::runtime::{Executor, Manifest};
 use crate::sim::{ConcurrencyProfile, Engine, KernelDesc, SparsityMode};
 use crate::sparsity::SpeedupModel;
+use crate::util::pool;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -65,9 +86,9 @@ struct RunOutcome {
     exec_ms: f64,
 }
 
-/// The single front door to the system. `Send + Sync`: share it behind
-/// an `Arc` across connection threads.
-pub struct Service {
+/// The execution state shared by connection threads and job workers:
+/// config, result cache, counters, and the executor-worker channel.
+struct Core {
     cfg: Arc<Config>,
     artifacts_dir: PathBuf,
     // The worker-channel sender lives behind a Mutex only to guarantee
@@ -79,6 +100,14 @@ pub struct Service {
     // touch it, which is what lets tests prove a repeat request did
     // zero re-execution.
     engine_runs: AtomicU64,
+}
+
+/// The single front door to the system. `Send + Sync`: share it behind
+/// an `Arc` across connection threads.
+pub struct Service {
+    core: Arc<Core>,
+    jobs: Arc<JobTable>,
+    job_workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl Service {
@@ -103,12 +132,34 @@ impl Service {
         Service::with_options(cfg, Manifest::default_dir(), policy)
     }
 
-    /// Fully-explicit constructor. Spawns the executor worker thread;
-    /// it exits when the service is dropped.
+    /// Service with explicit job-table limits (tests shrink the queue
+    /// to exercise `overloaded` deterministically).
+    pub fn with_job_limits(cfg: Config, limits: JobLimits) -> Service {
+        Service::with_limits(
+            cfg,
+            Manifest::default_dir(),
+            CachePolicy::default(),
+            limits,
+        )
+    }
+
+    /// Mostly-explicit constructor (default job limits).
     pub fn with_options(
         cfg: Config,
         artifacts_dir: PathBuf,
         policy: CachePolicy,
+    ) -> Service {
+        Service::with_limits(cfg, artifacts_dir, policy, JobLimits::default())
+    }
+
+    /// Fully-explicit constructor. Spawns the executor worker thread
+    /// and `limits.max_running` job workers; all exit when the service
+    /// is dropped.
+    pub fn with_limits(
+        cfg: Config,
+        artifacts_dir: PathBuf,
+        policy: CachePolicy,
+        limits: JobLimits,
     ) -> Service {
         let (tx, rx) = mpsc::channel::<ExecJob>();
         let worker_dir = artifacts_dir.clone();
@@ -116,27 +167,39 @@ impl Service {
             .name("api-exec-worker".into())
             .spawn(move || exec_worker(&worker_dir, rx))
             .expect("spawn executor worker");
-        Service {
+        let core = Arc::new(Core {
             cfg: Arc::new(cfg),
             artifacts_dir,
             exec_tx: Mutex::new(tx),
             cache: ResultCache::new(policy),
             engine_runs: AtomicU64::new(0),
-        }
+        });
+        let jobs = Arc::new(JobTable::new(limits));
+        let job_workers = (0..limits.max_running)
+            .map(|i| {
+                let core = Arc::clone(&core);
+                let jobs = Arc::clone(&jobs);
+                thread::Builder::new()
+                    .name(format!("api-job-worker-{i}"))
+                    .spawn(move || job_worker(&core, &jobs))
+                    .expect("spawn job worker")
+            })
+            .collect();
+        Service { core, jobs, job_workers }
     }
 
     /// The active (immutable) configuration.
     pub fn config(&self) -> &Config {
-        &self.cfg
+        &self.core.cfg
     }
 
     pub fn artifacts_dir(&self) -> &Path {
-        &self.artifacts_dir
+        &self.core.artifacts_dir
     }
 
     /// Load the artifact manifest (introspection; no execution).
     pub fn load_manifest(&self) -> Result<Manifest, String> {
-        Manifest::load(&self.artifacts_dir)
+        Manifest::load(&self.core.artifacts_dir)
     }
 
     /// Handle one typed request through the result cache. Never panics
@@ -181,53 +244,97 @@ impl Service {
 
     /// Result-cache counters (the `stats` request's `cache_*` fields).
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
+        self.core.cache.stats()
     }
 
     /// Cold engine/driver executions so far (the `stats` request's
     /// `engine_runs` field).
     pub fn engine_runs(&self) -> u64 {
-        self.engine_runs.load(Ordering::Relaxed)
+        self.core.engine_runs.load(Ordering::Relaxed)
     }
 
-    /// One non-batch request: consult the cache when allowed, fall
-    /// through to a cold execution, and memoize successful cacheable
-    /// responses. Error responses are never cached.
+    /// One non-batch request. Scenario-backed requests (the v1
+    /// simulator trio and `scenario` itself) run point-by-point through
+    /// the per-point cache; `repro` keeps request-level memoization;
+    /// everything else runs cold. Error responses are never cached.
     fn handle_one(&self, req: &Request, use_cache: bool) -> Response {
+        if let Some((spec, single)) = desugar(req) {
+            return match self.core.run_scenario(&spec, use_cache) {
+                Ok(resp) if single => unwrap_single(resp),
+                Ok(resp) => resp,
+                Err(e) => Response::from(e),
+            };
+        }
+        // Submit carries the envelope's cache flag into the job, so a
+        // `"cache":false` measurement sweep runs cold in the workers
+        // exactly like its synchronous `scenario` form would.
+        if let Request::Submit { spec, .. } = req {
+            return match self.submit_job(spec, false, use_cache) {
+                Ok((view, _rx)) => Response::Job(view),
+                Err(e) => Response::from(e),
+            };
+        }
         let cold = |r: &Request| match self.try_handle(r) {
             Ok(resp) => resp,
             Err(e) => Response::from(e),
         };
         if use_cache && self.cacheable(req) {
             let key = req.cache_key();
-            if let Some(resp) = self.cache.get(&key) {
+            if let Some(resp) = self.core.cache.get(&key) {
                 return resp;
             }
             let resp = cold(req);
             if !matches!(resp, Response::Error { .. }) {
-                self.cache.insert(key, &resp);
+                self.core.cache.insert(key, &resp);
             }
             return resp;
         }
         cold(req)
     }
 
-    /// Whether `req` is a pure function of the immutable config:
-    /// simulator/coordinator questions always are; `repro` is iff the
-    /// registry entry is flagged deterministic; `run` (real PJRT
-    /// execution), introspection, and `stats` never are.
+    /// Whether `req` is memoized at request level: only `repro` of
+    /// registry entries flagged deterministic. The simulator trio and
+    /// `scenario` memoize per sweep point inside the scenario path
+    /// instead; `run` (real PJRT execution), introspection, jobs, and
+    /// `stats` never cache.
     fn cacheable(&self, req: &Request) -> bool {
         match req {
-            Request::Sim { .. }
-            | Request::Plan { .. }
-            | Request::Sparsity { .. } => true,
             Request::Repro { experiment } => experiments::spec(experiment)
                 .map_or(false, |s| s.deterministic),
-            Request::Run { .. }
-            | Request::ListExperiments
-            | Request::Config
-            | Request::Batch { .. }
-            | Request::Stats => false,
+            _ => false,
+        }
+    }
+
+    /// Validate + enqueue a scenario as an async job. `watch: true`
+    /// registers a progress receiver atomically with the enqueue (the
+    /// serve transport's push source); `use_cache: false` makes the
+    /// workers run every point cold.
+    pub fn submit_job(
+        &self,
+        spec: &ScenarioSpec,
+        watch: bool,
+        use_cache: bool,
+    ) -> Result<(JobView, Option<mpsc::Receiver<JobView>>), ApiError> {
+        let points = spec.validated_points()?;
+        self.jobs.submit(
+            spec.clone(),
+            points.len() as u64,
+            watch,
+            use_cache,
+        )
+    }
+
+    /// [`Service::submit_job`] as a transport-ready pair: the response
+    /// line to write, plus the progress receiver when the submit was
+    /// accepted.
+    pub fn submit_watched(
+        &self,
+        spec: &ScenarioSpec,
+        use_cache: bool,
+    ) -> (Response, Option<mpsc::Receiver<JobView>>) {
+        match self.submit_job(spec, true, use_cache) {
+            Ok((view, rx)) => (Response::Job(view), rx),
+            Err(e) => (Response::from(e), None),
         }
     }
 
@@ -238,85 +345,39 @@ impl Service {
         &self,
         workers: usize,
     ) -> Vec<experiments::ExperimentReport> {
-        experiments::run_all(&self.cfg, workers)
+        // Every driver is a cold engine execution; `stats` must stay
+        // truthful for this route too (regression:
+        // tests/api_protocol.rs).
+        self.core
+            .engine_runs
+            .fetch_add(experiments::REGISTRY.len() as u64, Ordering::Relaxed);
+        experiments::run_all(&self.core.cfg, workers)
     }
 
     fn try_handle(&self, req: &Request) -> Result<Response, ApiError> {
         match req {
-            Request::Sim { n, precision, streams } => {
-                let n = check_range("n", *n, SIZE_RANGE)?;
-                let streams = check_range("streams", *streams, SIM_STREAMS)?;
-                self.engine_runs.fetch_add(1, Ordering::Relaxed);
-                let engine = Engine::new(&self.cfg, ConcurrencyProfile::ace());
-                let ks =
-                    vec![KernelDesc::gemm(n, *precision).with_iters(50); streams];
-                // One concurrent simulation per request: the speedup
-                // derives from this run plus the (much cheaper) serial
-                // solo makespans instead of re-simulating the set.
-                let run = engine.run(&ks, self.cfg.seed);
-                let speedup = engine.serial_makespan_ns(&ks, self.cfg.seed)
-                    / run.makespan_ns;
-                Ok(Response::Sim {
-                    makespan_ms: run.makespan_ns / 1e6,
-                    speedup_vs_serial: speedup,
-                    overlap_efficiency: run.overlap_efficiency,
-                    fairness: fairness(&run.per_stream_totals()),
-                    l2_miss: run.l2_miss[0],
-                    lds_util: run.lds_util,
-                })
+            // Dispatched by handle_one (which carries the envelope's
+            // cache flag) before the cold path; handle_one is this
+            // method's only caller, so there is deliberately no second
+            // execution route here.
+            Request::Sim { .. }
+            | Request::Plan { .. }
+            | Request::Sparsity { .. }
+            | Request::Scenario { .. }
+            | Request::Submit { .. } => Err(ApiError::bad_request(
+                "internal: request routed past its dispatcher",
+            )),
+            Request::JobStatus { job } => {
+                self.jobs.status(*job).map(Response::Job)
             }
-            Request::Plan { objective, streams, n, precision } => {
-                let streams = check_range("streams", *streams, POOL_STREAMS)?;
-                let n = check_range("n", *n, SIZE_RANGE)?;
-                self.engine_runs.fetch_add(1, Ordering::Relaxed);
-                let pool = vec![
-                    KernelDesc::gemm(n, *precision).with_iters(100);
-                    streams
-                ];
-                let coord =
-                    Coordinator::new(self.cfg.as_ref().clone(), *objective);
-                let plan = coord.plan(&pool, true);
-                Ok(Response::Plan {
-                    objective: objective_name(*objective).to_string(),
-                    sparse: plan.groups.iter().any(|g| {
-                        g.kernels.iter().any(|k| k.sparsity.is_sparse())
-                    }),
-                    groups: plan
-                        .groups
-                        .iter()
-                        .map(|g| PlanGroup {
-                            kernels: g
-                                .kernels
-                                .iter()
-                                .map(|k| k.label())
-                                .collect(),
-                            streams: g.streams,
-                            expected_fairness: g.expected_fairness,
-                            process_isolation: g.process_isolation,
-                        })
-                        .collect(),
-                })
-            }
-            Request::Sparsity { n, streams } => {
-                let n = check_range("n", *n, SIZE_RANGE)?;
-                let streams = check_range("streams", *streams, POOL_STREAMS)?;
-                self.engine_runs.fetch_add(1, Ordering::Relaxed);
-                let k = KernelDesc::gemm(n, Precision::Fp8);
-                let d = decide_sparsity(&k, streams, true);
-                let model = SpeedupModel::new(&self.cfg);
-                Ok(Response::Sparsity {
-                    enable: d.enable,
-                    reason: format!("{:?}", d.reason),
-                    isolated_speedup: model
-                        .isolated(&k, SparsityMode::SparseLhs)
-                        .speedup(),
-                    concurrent_speedup: model
-                        .concurrent_per_stream(&k, streams.max(2)),
-                })
+            Request::JobResult { job } => self.jobs.result(*job),
+            Request::JobCancel { job } => {
+                self.jobs.cancel(*job).map(Response::Job)
             }
             Request::Run { entry } => {
                 let (reply_tx, reply_rx) = mpsc::channel();
                 let sender = self
+                    .core
                     .exec_tx
                     .lock()
                     .map_err(|_| {
@@ -358,8 +419,8 @@ impl Service {
                             ),
                         )
                     })?;
-                self.engine_runs.fetch_add(1, Ordering::Relaxed);
-                let report = (spec.runner)(&self.cfg);
+                self.core.engine_runs.fetch_add(1, Ordering::Relaxed);
+                let report = (spec.runner)(&self.core.cfg);
                 Ok(Response::Repro {
                     experiment: spec.id.to_string(),
                     title: report.title.clone(),
@@ -378,10 +439,10 @@ impl Service {
                     .collect(),
             }),
             Request::Config => {
-                Ok(Response::Config { config: self.cfg.to_json() })
+                Ok(Response::Config { config: self.core.cfg.to_json() })
             }
             Request::Stats => Ok(Response::Stats {
-                cache: self.cache.stats(),
+                cache: self.core.cache.stats(),
                 engine_runs: self.engine_runs(),
             }),
             // Top-level batches are fanned out by `handle_opts`; a
@@ -394,18 +455,196 @@ impl Service {
     }
 }
 
-fn check_range(
-    what: &str,
-    v: usize,
-    (lo, hi): (usize, usize),
-) -> Result<usize, ApiError> {
-    if v < lo || v > hi {
-        return Err(ApiError::new(
-            ErrorCode::BadRange,
-            format!("{what} must be in {lo}..={hi} (got {v})"),
-        ));
+impl Drop for Service {
+    fn drop(&mut self) {
+        // Stop handing out jobs; running jobs cancel between points.
+        self.jobs.shutdown();
+        for h in self.job_workers.drain(..) {
+            let _ = h.join();
+        }
     }
-    Ok(v)
+}
+
+/// The scenario-backed request kinds and their single-point unwrap
+/// flag: v1 requests answer in their v1 shape, `scenario` answers all
+/// points.
+fn desugar(req: &Request) -> Option<(ScenarioSpec, bool)> {
+    match req {
+        Request::Sim { n, precision, streams } => {
+            Some((ScenarioSpec::sim(*n, *precision, *streams), true))
+        }
+        Request::Plan { objective, streams, n, precision } => Some((
+            ScenarioSpec::plan(*objective, *streams, *n, *precision),
+            true,
+        )),
+        Request::Sparsity { n, streams } => {
+            Some((ScenarioSpec::sparsity_question(*n, *streams), true))
+        }
+        Request::Scenario { spec } => Some((spec.clone(), false)),
+        _ => None,
+    }
+}
+
+/// Unwrap a single-point scenario response back into its v1 shape.
+fn unwrap_single(resp: Response) -> Response {
+    match resp {
+        Response::Scenario { mut points } if points.len() == 1 => {
+            *points.remove(0).result
+        }
+        other => other,
+    }
+}
+
+impl Core {
+    /// Validate, expand, and run a scenario. Points fan out across the
+    /// scoped pool in expansion order (results merge back in order, so
+    /// the response is byte-identical to a serial run) with per-point
+    /// cache consultation.
+    fn run_scenario(
+        &self,
+        spec: &ScenarioSpec,
+        use_cache: bool,
+    ) -> Result<Response, ApiError> {
+        // All-or-nothing: every point must be in range before any runs,
+        // so a swept request never half-answers (the same gate `submit`
+        // runs).
+        let points = spec.validated_points()?;
+        let results = pool::scoped_map(
+            &points,
+            pool::default_workers(),
+            |_, p| PointResult {
+                point: *p,
+                result: Box::new(self.run_point(spec, p, use_cache)),
+            },
+        );
+        Ok(Response::Scenario { points: results })
+    }
+
+    /// One validated point through the per-point cache.
+    fn run_point(
+        &self,
+        spec: &ScenarioSpec,
+        p: &Point,
+        use_cache: bool,
+    ) -> Response {
+        let single = spec.at(p);
+        let key =
+            Request::Scenario { spec: single.clone() }.cache_key();
+        if use_cache {
+            if let Some(resp) = self.cache.get(&key) {
+                return resp;
+            }
+        }
+        let resp = self.run_point_cold(&single, p);
+        if use_cache && !matches!(resp, Response::Error { .. }) {
+            self.cache.insert(key, &resp);
+        }
+        resp
+    }
+
+    /// Cold execution of one point — the single place the simulator
+    /// trio is compiled down to engine/coordinator/sparsity layers.
+    /// Infallible by construction: ranges were checked up front.
+    fn run_point_cold(&self, spec: &ScenarioSpec, p: &Point) -> Response {
+        self.engine_runs.fetch_add(1, Ordering::Relaxed);
+        match spec.ask {
+            Ask::Sim => {
+                let ks = spec.kernels(p);
+                let engine =
+                    Engine::new(&self.cfg, ConcurrencyProfile::ace());
+                // One concurrent simulation per point: the speedup
+                // derives from this run plus the (much cheaper) serial
+                // solo makespans instead of re-simulating the set.
+                let run = engine.run(&ks, self.cfg.seed);
+                let speedup = engine.serial_makespan_ns(&ks, self.cfg.seed)
+                    / run.makespan_ns;
+                Response::Sim {
+                    makespan_ms: run.makespan_ns / 1e6,
+                    speedup_vs_serial: speedup,
+                    overlap_efficiency: run.overlap_efficiency,
+                    fairness: fairness(&run.per_stream_totals()),
+                    l2_miss: run.l2_miss[0],
+                    lds_util: run.lds_util,
+                }
+            }
+            Ask::Plan => {
+                let ks = spec.kernels(p);
+                let objective = spec
+                    .objective
+                    .unwrap_or(Objective::LatencySensitive);
+                let coord = Coordinator::new(
+                    self.cfg.as_ref().clone(),
+                    objective,
+                );
+                let plan = coord.plan(&ks, true);
+                Response::Plan {
+                    objective: objective_name(objective).to_string(),
+                    sparse: plan.groups.iter().any(|g| {
+                        g.kernels.iter().any(|k| k.sparsity.is_sparse())
+                    }),
+                    groups: plan
+                        .groups
+                        .iter()
+                        .map(|g| PlanGroup {
+                            kernels: g
+                                .kernels
+                                .iter()
+                                .map(|k| k.label())
+                                .collect(),
+                            streams: g.streams,
+                            expected_fairness: g.expected_fairness,
+                            process_isolation: g.process_isolation,
+                        })
+                        .collect(),
+                }
+            }
+            Ask::Sparsity => {
+                // Validation pins sparsity asks to a dense homogeneous
+                // set, so the single candidate is built directly —
+                // identical to the v1 handler's
+                // `KernelDesc::gemm(n, Fp8)` for desugared requests.
+                let k =
+                    KernelDesc::gemm(p.n, p.precision).with_iters(p.iters);
+                let d = decide_sparsity(&k, p.streams, true);
+                let model = SpeedupModel::new(&self.cfg);
+                Response::Sparsity {
+                    enable: d.enable,
+                    reason: format!("{:?}", d.reason),
+                    isolated_speedup: model
+                        .isolated(&k, SparsityMode::SparseLhs)
+                        .speedup(),
+                    concurrent_speedup: model
+                        .concurrent_per_stream(&k, p.streams.max(2)),
+                }
+            }
+        }
+    }
+}
+
+/// A job worker: pull queued jobs, run their points sequentially (the
+/// progress/cancel granularity), frame watchers via the table. Exits on
+/// table shutdown.
+fn job_worker(core: &Core, jobs: &JobTable) {
+    while let Some((id, spec, use_cache)) = jobs.next_job() {
+        let points = spec.expand();
+        let mut results = Vec::with_capacity(points.len());
+        for p in &points {
+            if !jobs.should_continue(id) {
+                break;
+            }
+            let resp = core.run_point(&spec, p, use_cache);
+            results.push(PointResult { point: *p, result: Box::new(resp) });
+            if !jobs.point_done(id) {
+                break;
+            }
+        }
+        if results.len() == points.len() {
+            jobs.finish(id, Ok(Response::Scenario { points: results }));
+        } else {
+            // A cancel (or shutdown) was honored mid-sweep.
+            jobs.mark_cancelled(id);
+        }
+    }
 }
 
 /// The executor worker: owns the (lazily created) PJRT executor for the
@@ -476,7 +715,10 @@ pub fn deterministic_inputs(spec: &EntrySpec) -> Vec<Vec<f32>> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::job::JobState;
     use super::*;
+    use crate::isa::Precision;
+    use std::time::{Duration, Instant};
 
     fn svc() -> Service {
         Service::new(Config::mi300a())
@@ -616,7 +858,10 @@ mod tests {
         }
         let stats = s.cache_stats();
         assert_eq!(stats.entries, 0);
-        assert_eq!(stats.misses, 2, "both attempts fell through");
+        // Scenario validation rejects out-of-range points before the
+        // cache is even consulted, so failed requests count nothing.
+        assert_eq!((stats.hits, stats.misses), (0, 0));
+        assert_eq!(s.engine_runs(), 0);
     }
 
     #[test]
@@ -647,6 +892,236 @@ mod tests {
                 assert_eq!(code, ErrorCode::Runtime)
             }
             other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Scenario + job semantics.
+    // -----------------------------------------------------------------
+
+    /// A swept scenario answers each point byte-identically to the
+    /// equivalent v1 request, and they share cache entries both ways.
+    #[test]
+    fn sweep_points_match_v1_requests_and_share_the_cache() {
+        let s = svc();
+        let v1 = s.handle(&Request::Sim {
+            n: 256,
+            precision: Precision::Fp8,
+            streams: 2,
+        });
+        assert_eq!(s.engine_runs(), 1);
+
+        let mut spec = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        spec.sweep.streams = vec![1, 2];
+        match s.handle(&Request::Scenario { spec }) {
+            Response::Scenario { points } => {
+                assert_eq!(points.len(), 2);
+                assert_eq!(points[0].point.streams, 1);
+                assert_eq!(
+                    points[1].result.to_item_json().to_string(),
+                    v1.to_item_json().to_string(),
+                    "sweep point must answer like its v1 request"
+                );
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        // Only the streams=1 point was new; streams=2 hit the v1 entry.
+        assert_eq!(s.engine_runs(), 2);
+        assert_eq!(s.cache_stats().hits, 1);
+    }
+
+    #[test]
+    fn scenario_sweep_rejects_any_out_of_range_point_upfront() {
+        let s = svc();
+        let mut spec = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        spec.sweep.streams = vec![1, 99];
+        match s.handle(&Request::Scenario { spec }) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRange);
+                assert!(message.contains("99"), "{message}");
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        assert_eq!(s.engine_runs(), 0, "no point may run on a bad sweep");
+    }
+
+    #[test]
+    fn repro_all_counts_engine_runs() {
+        let s = svc();
+        let reports = s.repro_all(2);
+        assert_eq!(reports.len(), experiments::REGISTRY.len());
+        assert_eq!(
+            s.engine_runs(),
+            experiments::REGISTRY.len() as u64,
+            "repro_all must count every driver execution"
+        );
+    }
+
+    fn wait_terminal(s: &Service, job: u64) -> JobView {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match s.handle(&Request::JobStatus { job }) {
+                Response::Job(v) if v.state.terminal() => return v,
+                Response::Job(_) => {}
+                other => panic!("unexpected status: {other:?}"),
+            }
+            assert!(Instant::now() < deadline, "job {job} never finished");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Submit → run → result equals the synchronous scenario answer.
+    #[test]
+    fn jobs_run_async_and_results_match_the_sync_scenario() {
+        let s = svc();
+        let mut spec = ScenarioSpec::sparsity_question(256, 2);
+        spec.sweep.streams = vec![1, 2, 4];
+        let view = match s.handle(&Request::Submit {
+            spec: spec.clone(),
+            progress: false,
+        }) {
+            Response::Job(v) => v,
+            other => panic!("unexpected submit response: {other:?}"),
+        };
+        assert_eq!(view.total, 3);
+        let done = wait_terminal(&s, view.job);
+        assert_eq!(done.state, JobState::Done);
+        assert_eq!((done.completed, done.total), (3, 3));
+        let via_job = s.handle(&Request::JobResult { job: view.job });
+        let sync = s.handle(&Request::Scenario { spec });
+        assert_eq!(
+            via_job.to_json(None).to_string(),
+            sync.to_json(None).to_string(),
+            "job result must equal the synchronous sweep"
+        );
+    }
+
+    #[test]
+    fn job_queue_overload_is_typed_and_cancel_clears_queued_jobs() {
+        // max_running 0: nothing ever runs, so the queue fills
+        // deterministically.
+        let s = Service::with_job_limits(
+            Config::mi300a(),
+            JobLimits { max_running: 0, max_queued: 2, max_finished: 8 },
+        );
+        let spec = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        let submit = |s: &Service| {
+            s.handle(&Request::Submit { spec: spec.clone(), progress: false })
+        };
+        let a = match submit(&s) {
+            Response::Job(v) => v,
+            other => panic!("unexpected: {other:?}"),
+        };
+        submit(&s);
+        match submit(&s) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::Overloaded)
+            }
+            other => panic!("expected overloaded, got {other:?}"),
+        }
+        // job_result before it ran: typed not_ready.
+        match s.handle(&Request::JobResult { job: a.job }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::NotReady)
+            }
+            other => panic!("expected not_ready, got {other:?}"),
+        }
+        // Cancelling a queued job frees its slot immediately.
+        match s.handle(&Request::JobCancel { job: a.job }) {
+            Response::Job(v) => assert_eq!(v.state, JobState::Cancelled),
+            other => panic!("unexpected: {other:?}"),
+        }
+        match submit(&s) {
+            Response::Job(_) => {}
+            other => panic!("queue slot was not freed: {other:?}"),
+        }
+        match s.handle(&Request::JobStatus { job: 999 }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::UnknownJob)
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn running_jobs_cancel_between_points() {
+        let s = svc();
+        let mut spec = ScenarioSpec::sim(2048, Precision::Fp8, 8);
+        // A long sweep (128 heavy points, distinct so none cache) so
+        // the immediate cancel lands while the sweep is running.
+        spec.sweep.iters = (1..=128).collect();
+        let view = match s.handle(&Request::Submit {
+            spec,
+            progress: false,
+        }) {
+            Response::Job(v) => v,
+            other => panic!("unexpected: {other:?}"),
+        };
+        match s.handle(&Request::JobCancel { job: view.job }) {
+            Response::Job(_) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+        let done = wait_terminal(&s, view.job);
+        assert_eq!(done.state, JobState::Cancelled);
+        assert!(
+            done.completed < done.total,
+            "cancel must land mid-sweep ({}/{})",
+            done.completed,
+            done.total
+        );
+        match s.handle(&Request::JobResult { job: view.job }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::NotReady)
+            }
+            other => panic!("expected not_ready, got {other:?}"),
+        }
+    }
+
+    /// The `"cache":false` escape hatch reaches job workers: a warm
+    /// sweep submitted with cache bypass still runs every point cold.
+    #[test]
+    fn submit_honors_the_cache_bypass_flag() {
+        let s = svc();
+        let mut spec = ScenarioSpec::sparsity_question(256, 2);
+        spec.sweep.streams = vec![1, 2];
+        // Warm the two points synchronously.
+        s.handle(&Request::Scenario { spec: spec.clone() });
+        assert_eq!(s.engine_runs(), 2);
+        let req = Request::Submit { spec, progress: false };
+        let view = match s.handle_opts(&req, false) {
+            Response::Job(v) => v,
+            other => panic!("unexpected submit response: {other:?}"),
+        };
+        let done = wait_terminal(&s, view.job);
+        assert_eq!(done.state, JobState::Done);
+        assert_eq!(
+            s.engine_runs(),
+            4,
+            "a cache-bypassing job must run its points cold"
+        );
+        // A default submit of the same sweep hits the cache instead.
+        let mut spec2 = ScenarioSpec::sparsity_question(256, 2);
+        spec2.sweep.streams = vec![1, 2];
+        let req = Request::Submit { spec: spec2, progress: false };
+        let view = match s.handle(&req) {
+            Response::Job(v) => v,
+            other => panic!("unexpected submit response: {other:?}"),
+        };
+        let done = wait_terminal(&s, view.job);
+        assert_eq!(done.state, JobState::Done);
+        assert_eq!(s.engine_runs(), 4, "warm job points must not re-run");
+    }
+
+    #[test]
+    fn submit_validates_the_spec_synchronously() {
+        let s = svc();
+        let mut spec = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        spec.sweep.streams = vec![0];
+        match s.handle(&Request::Submit { spec, progress: false }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::BadRange)
+            }
+            other => panic!("expected bad_range, got {other:?}"),
         }
     }
 }

@@ -18,6 +18,15 @@ pub enum Objective {
     StrictIsolation,
 }
 
+impl Objective {
+    /// Every objective, for protocol round-trip tests and sweep docs.
+    pub const ALL: [Objective; 3] = [
+        Objective::LatencySensitive,
+        Objective::ThroughputOriented,
+        Objective::StrictIsolation,
+    ];
+}
+
 /// Governor decision.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ConcurrencyDecision {

@@ -215,7 +215,11 @@ pub fn spec(id: &str) -> Option<&'static ExperimentSpec> {
 /// reports in [`REGISTRY`] order. Each driver is seed-deterministic and
 /// independent, and `pool::scoped_map` merges results in item order, so
 /// the output is byte-identical to the serial path for any worker count
-/// (enforced by `tests/parallel_determinism.rs`).
+/// (enforced by `tests/parallel_determinism.rs`). Callers exposing the
+/// service `stats` counters must count these driver executions
+/// themselves (see `api::Service::repro_all`); ad-hoc sweeps beyond
+/// the registry are better expressed as `api::scenario` specs, which
+/// count and cache per point automatically.
 pub fn run_all(cfg: &Config, workers: usize) -> Vec<ExperimentReport> {
     crate::util::pool::scoped_map(REGISTRY, workers, |_, s| (s.runner)(cfg))
 }

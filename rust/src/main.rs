@@ -11,6 +11,8 @@
 //!   repro <id|all>      regenerate a paper table/figure (DESIGN.md §5)
 //!   run <entry>         execute one AOT'd artifact via PJRT
 //!   plan                show a coordinator execution plan for a pool
+//!   scenario            run a declarative ScenarioSpec sweep, locally
+//!                       or as an async job with progress (--addr)
 //!   serve               serve the JSON-line protocol over TCP
 //!                       (batching + result cache; --no-cache disables)
 //!   client <json>       send one JSON request to a serving instance
@@ -19,8 +21,8 @@
 //! ```
 
 use mi300a_char::api::{
-    parse_objective, CachePolicy, Client, ErrorCode, Request, Response,
-    Service,
+    parse_objective, Ask, CachePolicy, Client, ErrorCode, Request, Response,
+    ScenarioSpec, Service, Shape,
 };
 use mi300a_char::config::Config;
 use mi300a_char::isa::Precision;
@@ -38,6 +40,13 @@ USAGE:
   mi300a-char run <entry> [--artifacts DIR]
   mi300a-char plan [--objective latency|throughput|isolation]
                    [--streams N] [--size N] [--precision P]
+  mi300a-char scenario [--spec FILE] [--ask sim|plan|sparsity]
+                   [--size N] [--precision P] [--streams N] [--iters N]
+                   [--shape homogeneous|imbalanced_pair|mixed_sparse]
+                   [--small-size N] [--objective O] [--sparsity MODE]
+                   [--sweep-size A,B,..] [--sweep-streams A,B,..]
+                   [--sweep-precision A,B,..] [--sweep-iters A,B,..]
+                   [--json] [--addr HOST:PORT]
   mi300a-char serve [--addr HOST:PORT] [--max-conns N] [--no-cache]
   mi300a-char client <json-request> [--addr HOST:PORT]
   mi300a-char config [--set section.field=value]
@@ -50,6 +59,10 @@ DESIGN.md §6 and docs/serving.md, e.g.:
 Batches answer many requests in one envelope; `stats` reports the
 serve-side result cache (add \"cache\":false to bypass it per request):
   mi300a-char client '{\"v\":1,\"type\":\"batch\",\"items\":[{\"type\":\"sparsity\",\"n\":512,\"streams\":4},{\"type\":\"stats\"}]}'
+Scenario sweeps (DESIGN.md §6.6, docs/scenarios.md) run locally by
+default; with --addr they submit as an async job and stream progress:
+  mi300a-char scenario --size 512 --sweep-streams 1,2,4,8,16
+  mi300a-char scenario --addr 127.0.0.1:7300 --ask sparsity --sweep-size 256,512,2048,8192
 ";
 
 fn build_config(args: &Args) -> Config {
@@ -217,6 +230,176 @@ fn cmd_plan(args: &Args) -> i32 {
     }
 }
 
+/// Build a [`ScenarioSpec`] from `--spec FILE` or inline flags; usage
+/// errors print and exit 2 via the returned `Err`.
+fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
+    if let Some(path) = args.get("spec") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path}: {e}"))?;
+        let v = Json::parse(&text)
+            .map_err(|e| format!("{path} is not valid JSON: {e}"))?;
+        return ScenarioSpec::from_json(&v).map_err(|e| e.to_string());
+    }
+    let ask = Ask::parse(args.get_or("ask", "sim")).ok_or_else(|| {
+        format!(
+            "unknown ask {:?} (want sim|plan|sparsity)",
+            args.get_or("ask", "sim")
+        )
+    })?;
+    let shape =
+        Shape::parse(args.get_or("shape", "homogeneous")).ok_or_else(|| {
+            format!(
+                "unknown shape {:?} (want \
+                 homogeneous|imbalanced_pair|mixed_sparse)",
+                args.get_or("shape", "homogeneous")
+            )
+        })?;
+    let mut spec = ScenarioSpec::new(ask);
+    spec.shape = shape;
+    spec.streams = args.get_usize("streams", shape.default_streams());
+    spec.n = args.get_usize("size", spec.n);
+    spec.iters = args.get_usize("iters", spec.iters);
+    if let Some(p) = args.get("precision") {
+        spec.precision = Precision::parse(p)
+            .ok_or_else(|| format!("bad precision {p:?}"))?;
+    }
+    if args.get("small-size").is_some() {
+        spec.small_n = Some(args.get_usize("small-size", 0));
+    }
+    if let Some(o) = args.get("objective") {
+        spec.objective = Some(
+            parse_objective(o).ok_or_else(|| {
+                format!(
+                    "unknown objective {o:?} (want \
+                     latency|throughput|isolation)"
+                )
+            })?,
+        );
+    }
+    if let Some(s) = args.get("sparsity") {
+        spec.sparsity =
+            mi300a_char::sim::SparsityMode::parse(s).ok_or_else(|| {
+                format!("bad sparsity {s:?} (want dense|lhs|rhs|both)")
+            })?;
+    }
+    let usize_list = |key: &str| -> Result<Vec<usize>, String> {
+        match args.get(key) {
+            None => Ok(Vec::new()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim().parse::<usize>().map_err(|_| {
+                        format!("--{key} wants a comma list of integers, \
+                                 got {v:?}")
+                    })
+                })
+                .collect(),
+        }
+    };
+    spec.sweep.n = usize_list("sweep-size")?;
+    spec.sweep.streams = usize_list("sweep-streams")?;
+    spec.sweep.iters = usize_list("sweep-iters")?;
+    if let Some(v) = args.get("sweep-precision") {
+        spec.sweep.precision = v
+            .split(',')
+            .map(|x| {
+                Precision::parse(x.trim())
+                    .ok_or_else(|| format!("bad precision {x:?}"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    Ok(spec)
+}
+
+fn print_scenario_points(resp: &Response) {
+    if let Response::Scenario { points } = resp {
+        for pr in points {
+            println!(
+                "n={} precision={} streams={} iters={}: {}",
+                pr.point.n,
+                mi300a_char::api::precision_wire_name(pr.point.precision),
+                pr.point.streams,
+                pr.point.iters,
+                pr.result.to_item_json()
+            );
+        }
+        println!("points: {}", points.len());
+    }
+}
+
+fn cmd_scenario(args: &Args) -> i32 {
+    let spec = match scenario_spec_from_args(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("scenario: {e}");
+            return 2;
+        }
+    };
+    // Remote mode: submit as an async job and stream progress frames.
+    if let Some(addr) = args.get("addr") {
+        let mut client = match Client::connect(addr) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("scenario: cannot connect to {addr}: {e}");
+                return 1;
+            }
+        };
+        let result = client.submit_and_wait(&spec, |p| {
+            println!(
+                "progress {}/{} (job {}, {})",
+                p.completed,
+                p.total,
+                p.job,
+                p.state.as_str()
+            );
+        });
+        return match result {
+            Ok(resp @ Response::Scenario { .. }) => {
+                if args.flag("json") {
+                    println!("{}", resp.to_json(None).to_string_pretty());
+                } else {
+                    print_scenario_points(&resp);
+                }
+                0
+            }
+            // Typed server errors exit 2 like the local mode (same
+            // spec, same classification); transport failures exit 1.
+            Ok(Response::Error { code, message }) => {
+                print_error("scenario", code, &message);
+                2
+            }
+            Ok(other) => {
+                eprintln!("scenario: unexpected response {other:?}");
+                1
+            }
+            Err(e) => {
+                eprintln!("scenario: {e}");
+                1
+            }
+        };
+    }
+    // Local mode: run the sweep in-process through the same service.
+    let svc = one_shot_service(args);
+    match svc.handle(&Request::Scenario { spec }) {
+        resp @ Response::Scenario { .. } => {
+            if args.flag("json") {
+                println!("{}", resp.to_json(None).to_string_pretty());
+            } else {
+                print_scenario_points(&resp);
+            }
+            0
+        }
+        Response::Error { code, message } => {
+            print_error("scenario", code, &message);
+            2
+        }
+        other => {
+            eprintln!("scenario: unexpected response {other:?}");
+            1
+        }
+    }
+}
+
 fn cmd_config(args: &Args) -> i32 {
     let svc = one_shot_service(args);
     match svc.handle(&Request::Config) {
@@ -356,6 +539,7 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("run") => cmd_run(&args),
         Some("plan") => cmd_plan(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("config") => cmd_config(&args),
         Some("list") => cmd_list(&args),
         Some("serve") => cmd_serve(&args),

@@ -11,19 +11,35 @@
 //! byte-identical to the JSON form without an `id` (enforced by
 //! tests/serve_integration.rs).
 //!
+//! ## Progress push (DESIGN.md §6.7)
+//!
+//! A top-level `submit` with `"progress":true` registers a watcher on
+//! the job atomically with the enqueue. After the `job` response line,
+//! the connection pushes `{"type":"progress",…}` frames — each tagged
+//! with the *submitting request's* `id` — interleaved with other
+//! response lines as the job advances: one snapshot at registration (so
+//! at least one frame always arrives), one on the queued→running
+//! transition, one per completed sweep point, and one at the terminal
+//! state, after which the stream of frames ends. Every line is written
+//! atomically under one writer lock, so
+//! pipelined responses and frames never interleave mid-line; clients
+//! attribute frames by `id` and skip the rest (the native
+//! [`crate::api::Client`] does this automatically).
+//!
 //! All business logic lives in [`crate::api::Service`]: this module
 //! only accepts connections, frames lines, and serializes responses.
 //! Repeat requests across *all* connections share the service's result
 //! cache ([`crate::api::cache`]); start with [`serve_with`] and
 //! [`crate::api::CachePolicy::disabled`] (the CLI's `--no-cache`) for
-//! measurement runs.
+//! measurement runs. Jobs are service-wide too: a job submitted on one
+//! connection can be polled, fetched, or cancelled from any other.
 //!
 //! ## Concurrency
 //!
 //! One thread per connection over a shared `Arc<Service>`:
-//! `sim`/`plan`/`sparsity` requests are pure functions of the immutable
-//! config and scale across cores, the way the paper's ACEs scale
-//! independent streams. The one non-`Sync` resource — the PJRT
+//! `sim`/`plan`/`sparsity`/`scenario` requests are pure functions of the
+//! immutable config and scale across cores, the way the paper's ACEs
+//! scale independent streams. The one non-`Sync` resource — the PJRT
 //! executor — is isolated inside the service on a single mpsc worker
 //! thread, so `run` requests serialize through it (exactly like
 //! launches serialize through a command lane) without blocking the
@@ -31,12 +47,14 @@
 //! config/seed, so concurrent clients observe byte-identical answers to
 //! a single client.
 
-use crate::api::{CachePolicy, LegacyCommand, Request, Response, Service};
+use crate::api::{
+    CachePolicy, LegacyCommand, Request, Response, Service,
+};
 use crate::config::Config;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 
 /// Serve on `addr` (e.g. "127.0.0.1:0") with the default cache policy;
@@ -86,15 +104,28 @@ pub fn serve_with(
     for h in conns {
         let _ = h.join();
     }
-    // Dropping the service (last Arc) shuts its executor worker down.
+    // Dropping the service (last Arc) shuts its executor and job
+    // workers down.
     Ok(())
 }
 
+/// Write one line under the shared writer lock (responses and pushed
+/// progress frames share it, so lines never interleave mid-line).
+fn write_line(
+    writer: &Arc<Mutex<TcpStream>>,
+    v: &Json,
+) -> std::io::Result<()> {
+    let mut guard = writer.lock().unwrap_or_else(|e| e.into_inner());
+    writeln!(&mut *guard, "{v}")
+}
+
 /// One connection: frame lines, route through the service, write one
-/// response line per request line.
+/// response line per request line (plus pushed progress frames for
+/// watched submits).
 fn handle(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
-    let mut writer = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
+    let mut pushers: Vec<thread::JoinHandle<()>> = Vec::new();
     for line in reader.lines() {
         let line = line?;
         let text = line.trim();
@@ -102,21 +133,42 @@ fn handle(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
             continue;
         }
         if text.starts_with('{') {
-            let (resp, id) = dispatch_json(svc, text);
-            writeln!(writer, "{}", resp.to_json(id))?;
+            let (resp, id, watch) = dispatch_json(svc, text);
+            write_line(&writer, &resp.to_json(id))?;
+            if let Some(rx) = watch {
+                // Forward progress frames for this submit. The receiver
+                // closes at the job's terminal state; a write failure
+                // just means the client went away.
+                let w = Arc::clone(&writer);
+                pushers.push(thread::spawn(move || {
+                    while let Ok(view) = rx.recv() {
+                        let frame = Response::Progress(view).to_json(id);
+                        if write_line(&w, &frame).is_err() {
+                            break;
+                        }
+                    }
+                }));
+            }
+            // Reap pushers whose jobs already finished, so a long-lived
+            // connection submitting many watched jobs does not
+            // accumulate exited threads.
+            pushers.retain(|h| !h.is_finished());
         } else {
             match crate::api::parse_legacy(text) {
                 Ok(LegacyCommand::Quit) => break,
                 Ok(LegacyCommand::Request(req)) => {
-                    writeln!(writer, "{}", svc.handle(&req).to_json(None))?
+                    write_line(&writer, &svc.handle(&req).to_json(None))?
                 }
-                Err(e) => writeln!(
-                    writer,
-                    "{}",
-                    Response::from(e).to_json(None)
-                )?,
+                Err(e) => {
+                    write_line(&writer, &Response::from(e).to_json(None))?
+                }
             }
         }
+    }
+    // Drain the frame forwarders (each ends at its job's terminal
+    // state) so "fully served" includes the pushes.
+    for h in pushers {
+        let _ = h.join();
     }
     Ok(())
 }
@@ -124,8 +176,17 @@ fn handle(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
 /// Decode one JSON request line and route it, honoring the envelope's
 /// `cache` flag; decode failures become typed error responses, still
 /// tagged with the request's `id` whenever the envelope was readable
-/// enough to salvage it.
-fn dispatch_json(svc: &Service, text: &str) -> (Response, Option<u64>) {
+/// enough to salvage it. A top-level `submit` with `"progress":true`
+/// additionally returns the job's watcher receiver for the caller to
+/// forward.
+fn dispatch_json(
+    svc: &Service,
+    text: &str,
+) -> (
+    Response,
+    Option<u64>,
+    Option<std::sync::mpsc::Receiver<crate::api::JobView>>,
+) {
     let v = match Json::parse(text) {
         Ok(v) => v,
         Err(e) => {
@@ -134,11 +195,16 @@ fn dispatch_json(svc: &Service, text: &str) -> (Response, Option<u64>) {
                     "unparseable request: {e}"
                 ))),
                 None,
+                None,
             )
         }
     };
     match Request::decode(&v) {
-        Ok((req, env)) => (svc.handle_opts(&req, env.cache), env.id),
-        Err((e, id)) => (Response::from(e), id),
+        Ok((Request::Submit { spec, progress: true }, env)) => {
+            let (resp, rx) = svc.submit_watched(&spec, env.cache);
+            (resp, env.id, rx)
+        }
+        Ok((req, env)) => (svc.handle_opts(&req, env.cache), env.id, None),
+        Err((e, id)) => (Response::from(e), id, None),
     }
 }

@@ -29,6 +29,19 @@ impl SparsityMode {
             SparsityMode::SparseBoth => "both",
         }
     }
+
+    /// Inverse of [`SparsityMode::name`] — the one parse table the wire
+    /// decoder and the CLI both use.
+    pub fn parse(s: &str) -> Option<SparsityMode> {
+        [
+            SparsityMode::Dense,
+            SparsityMode::SparseLhs,
+            SparsityMode::SparseRhs,
+            SparsityMode::SparseBoth,
+        ]
+        .into_iter()
+        .find(|m| m.name() == s)
+    }
 }
 
 /// A GEMM kernel launch: C[M,N] += A[M,K] x B[K,N] at `precision`,

@@ -45,6 +45,15 @@ impl StreamSetSpec {
         }
     }
 
+    /// Overlay `mode` onto every kernel (the scenario layer's base
+    /// sparsity; see `api::scenario`).
+    pub fn with_sparsity(mut self, mode: SparsityMode) -> StreamSetSpec {
+        for k in &mut self.kernels {
+            k.sparsity = mode;
+        }
+        self
+    }
+
     pub fn occupancy_ratio(&self) -> f64 {
         let blocks: Vec<f64> =
             self.kernels.iter().map(|k| k.blocks() as f64).collect();

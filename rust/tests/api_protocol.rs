@@ -4,9 +4,10 @@
 //! (DESIGN.md §6 is the prose spec these tests enforce).
 
 use mi300a_char::api::{
-    parse_legacy, ApiError, CachePolicy, CacheStats, ErrorCode,
-    ExperimentInfo, LegacyCommand, PlanGroup, Request, RequestEnvelope,
-    Response, Service, PROTOCOL_VERSION,
+    parse_legacy, ApiError, Ask, CachePolicy, CacheStats, ErrorCode,
+    ExperimentInfo, JobState, JobView, LegacyCommand, PlanGroup, Point,
+    PointResult, Request, RequestEnvelope, Response, ScenarioSpec, Service,
+    MAX_SWEEP_POINTS, PROTOCOL_VERSION,
 };
 use mi300a_char::config::Config;
 use mi300a_char::coordinator::Objective;
@@ -76,6 +77,24 @@ fn every_request_variant_roundtrips() {
             Request::Stats,
         ],
     });
+    // Scenario / job surface (DESIGN.md §6.6-§6.7).
+    let mut swept = ScenarioSpec::sim(512, Precision::Fp8, 4);
+    swept.sweep.streams = vec![1, 2, 4, 8];
+    swept.sweep.precision = vec![Precision::Fp8, Precision::F16];
+    roundtrip_request(Request::Scenario { spec: swept.clone() });
+    roundtrip_request(Request::Scenario {
+        spec: ScenarioSpec::plan(
+            Objective::ThroughputOriented,
+            8,
+            512,
+            Precision::Bf16,
+        ),
+    });
+    roundtrip_request(Request::Submit { spec: swept.clone(), progress: false });
+    roundtrip_request(Request::Submit { spec: swept, progress: true });
+    roundtrip_request(Request::JobStatus { job: 3 });
+    roundtrip_request(Request::JobResult { job: 3 });
+    roundtrip_request(Request::JobCancel { job: 3 });
 }
 
 #[test]
@@ -116,11 +135,7 @@ fn every_precision_and_objective_roundtrips_in_requests() {
     ] {
         roundtrip_request(Request::Sim { n: 128, precision: p, streams: 1 });
     }
-    for o in [
-        Objective::LatencySensitive,
-        Objective::ThroughputOriented,
-        Objective::StrictIsolation,
-    ] {
+    for o in Objective::ALL {
         roundtrip_request(Request::Plan {
             objective: o,
             streams: 4,
@@ -214,6 +229,54 @@ fn every_response_variant_roundtrips() {
             },
         ],
     });
+    roundtrip_response(Response::Scenario {
+        points: vec![
+            PointResult {
+                point: Point {
+                    n: 512,
+                    precision: Precision::Fp8,
+                    streams: 4,
+                    iters: 50,
+                },
+                result: Box::new(Response::Sim {
+                    makespan_ms: 12.375,
+                    speedup_vs_serial: 2.5,
+                    overlap_efficiency: 0.875,
+                    fairness: 0.51,
+                    l2_miss: 0.1875,
+                    lds_util: 0.625,
+                }),
+            },
+            PointResult {
+                point: Point {
+                    n: 1024,
+                    precision: Precision::F16,
+                    streams: 2,
+                    iters: 100,
+                },
+                result: Box::new(Response::Sparsity {
+                    enable: false,
+                    reason: "IsolatedBreakEven".into(),
+                    isolated_speedup: 1.0,
+                    concurrent_speedup: 1.3125,
+                }),
+            },
+        ],
+    });
+    for state in JobState::ALL {
+        roundtrip_response(Response::Job(JobView {
+            job: 7,
+            state,
+            completed: 3,
+            total: 8,
+        }));
+        roundtrip_response(Response::Progress(JobView {
+            job: 7,
+            state,
+            completed: 3,
+            total: 8,
+        }));
+    }
     for code in ErrorCode::ALL {
         roundtrip_response(Response::Error {
             code,
@@ -241,6 +304,16 @@ fn unknown_fields_are_rejected_per_variant() {
         Request::Config,
         Request::Stats,
         Request::Batch { items: vec![Request::Stats] },
+        Request::Scenario {
+            spec: ScenarioSpec::sim(512, Precision::Fp8, 4),
+        },
+        Request::Submit {
+            spec: ScenarioSpec::sim(512, Precision::Fp8, 4),
+            progress: true,
+        },
+        Request::JobStatus { job: 1 },
+        Request::JobResult { job: 1 },
+        Request::JobCancel { job: 1 },
     ];
     for req in requests {
         let mut v = req.to_json(None);
@@ -453,6 +526,180 @@ fn stats_request_mirrors_the_service_counters() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Scenario canonicalization (DESIGN.md §6.6): decode→encode→decode is a
+// fixpoint, defaults fill in, spellings normalize, and structural
+// errors (unknown fields, sweep cap) are typed at decode time.
+// ---------------------------------------------------------------------
+
+/// A minimal wire scenario decodes with every default filled, encodes
+/// into the full canonical form, and that form is a fixpoint.
+#[test]
+fn scenario_wire_canonicalization_is_a_fixpoint() {
+    let minimal = r#"{"v":1,"type":"scenario","n":512}"#;
+    let (req, _) =
+        Request::from_json(&Json::parse(minimal).unwrap()).unwrap();
+    let canonical = req.to_json(None).to_string();
+    assert_eq!(
+        canonical,
+        r#"{"ask":"sim","iters":50,"n":512,"precision":"fp8","shape":"homogeneous","sparsity":"dense","streams":4,"type":"scenario","v":1}"#
+    );
+    let (again, _) =
+        Request::from_json(&Json::parse(&canonical).unwrap()).unwrap();
+    assert_eq!(again, req);
+    assert_eq!(again.to_json(None).to_string(), canonical, "fixpoint");
+
+    // Alias spellings normalize into the same canonical bytes (and
+    // therefore the same cache key).
+    let aliased = r#"{"v":1,"type":"scenario","n":512,"precision":"f8"}"#;
+    let (aliased_req, _) =
+        Request::from_json(&Json::parse(aliased).unwrap()).unwrap();
+    assert_eq!(aliased_req.to_json(None).to_string(), canonical);
+    assert_eq!(aliased_req.cache_key(), req.cache_key());
+}
+
+#[test]
+fn scenario_sweeps_roundtrip_and_order_is_preserved() {
+    let line = r#"{"v":1,"type":"scenario","n":512,"sweep":{"streams":[8,1,4],"precision":["fp16","fp8"]}}"#;
+    let (req, _) = Request::from_json(&Json::parse(line).unwrap()).unwrap();
+    let spec = match &req {
+        Request::Scenario { spec } => spec.clone(),
+        other => panic!("unexpected request: {other:?}"),
+    };
+    // Axis value order is meaningful (it fixes point order) and must
+    // survive the canonical encoding.
+    assert_eq!(spec.sweep.streams, vec![8, 1, 4]);
+    assert_eq!(
+        spec.sweep.precision,
+        vec![Precision::F16, Precision::Fp8]
+    );
+    let wire = req.to_json(None).to_string();
+    assert!(wire.contains(r#""streams":[8,1,4]"#), "{wire}");
+    let (back, _) = Request::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back, req);
+    let points = spec.expand();
+    assert_eq!(points.len(), 6);
+    assert_eq!(
+        (points[0].precision, points[0].streams),
+        (Precision::F16, 8)
+    );
+}
+
+#[test]
+fn scenario_decode_rejects_unknown_fields_and_oversized_sweeps() {
+    for (line, want) in [
+        (
+            r#"{"v":1,"type":"scenario","n":512,"bogus":1}"#,
+            ErrorCode::UnknownField,
+        ),
+        (
+            r#"{"v":1,"type":"scenario","n":512,"sweep":{"bogus":[1]}}"#,
+            ErrorCode::UnknownField,
+        ),
+        (
+            r#"{"v":1,"type":"scenario","n":512,"sweep":{"streams":[]}}"#,
+            ErrorCode::BadRequest,
+        ),
+        (
+            r#"{"v":1,"type":"scenario","n":512,"objective":"latency"}"#,
+            ErrorCode::BadRequest,
+        ),
+        (
+            r#"{"v":1,"type":"submit","spec":{"n":512,"bogus":1}}"#,
+            ErrorCode::UnknownField,
+        ),
+        (
+            r#"{"v":1,"type":"submit","spec":{"n":512},"progress":1}"#,
+            ErrorCode::BadRequest,
+        ),
+    ] {
+        let (err, _) =
+            Request::from_json(&Json::parse(line).unwrap()).unwrap_err();
+        assert_eq!(err.code, want, "{line} -> {err}");
+    }
+    // The sweep cap is enforced before any work: 17 x 16 = 272 > 256.
+    let ns: Vec<String> = (1..=17).map(|i| (64 * i).to_string()).collect();
+    let ss: Vec<String> = (1..=16).map(|i| i.to_string()).collect();
+    let line = format!(
+        r#"{{"v":1,"type":"scenario","n":512,"sweep":{{"n":[{}],"streams":[{}]}}}}"#,
+        ns.join(","),
+        ss.join(",")
+    );
+    let (err, _) =
+        Request::from_json(&Json::parse(&line).unwrap()).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRange);
+    assert!(
+        err.message.contains(&MAX_SWEEP_POINTS.to_string()),
+        "{err}"
+    );
+}
+
+/// The desugared v1 trio and their single-point scenario spellings
+/// collide on one cache key, through the service.
+#[test]
+fn v1_requests_and_single_point_scenarios_share_cache_entries() {
+    let svc = Service::new(Config::mi300a());
+    let v1 = Request::Sparsity { n: 512, streams: 4 };
+    let cold = svc.handle(&v1);
+    assert_eq!(svc.engine_runs(), 1);
+    let spec = ScenarioSpec::sparsity_question(512, 4);
+    match svc.handle(&Request::Scenario { spec }) {
+        Response::Scenario { points } => {
+            assert_eq!(points.len(), 1);
+            assert_eq!(
+                points[0].result.to_item_json().to_string(),
+                cold.to_item_json().to_string()
+            );
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    assert_eq!(
+        svc.engine_runs(),
+        1,
+        "the scenario point must hit the v1 request's cache entry"
+    );
+}
+
+/// Submit → status → result through the in-process service; the job's
+/// result serializes byte-identically to the synchronous sweep.
+#[test]
+fn job_lifecycle_through_the_service() {
+    let svc = Service::new(Config::mi300a());
+    let mut spec = ScenarioSpec::new(Ask::Sparsity);
+    spec.n = 256;
+    spec.sweep.streams = vec![1, 2];
+    let view = match svc.handle(&Request::Submit {
+        spec: spec.clone(),
+        progress: false,
+    }) {
+        Response::Job(v) => v,
+        other => panic!("unexpected submit response: {other:?}"),
+    };
+    assert_eq!(view.state, JobState::Queued);
+    assert_eq!(view.total, 2);
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        match svc.handle(&Request::JobStatus { job: view.job }) {
+            Response::Job(v) if v.state.terminal() => {
+                assert_eq!(v.state, JobState::Done);
+                assert_eq!((v.completed, v.total), (2, 2));
+                break;
+            }
+            Response::Job(_) => {}
+            other => panic!("unexpected status: {other:?}"),
+        }
+        assert!(std::time::Instant::now() < deadline, "job never finished");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let via_job = svc.handle(&Request::JobResult { job: view.job });
+    let sync = svc.handle(&Request::Scenario { spec });
+    assert_eq!(
+        via_job.to_json(Some(1)).to_string(),
+        sync.to_json(Some(1)).to_string()
+    );
+}
+
 #[test]
 fn error_code_wire_spellings_are_stable() {
     // The wire spellings are part of the v1 contract (DESIGN.md §6.3):
@@ -466,6 +713,9 @@ fn error_code_wire_spellings_are_stable() {
         "unknown_experiment",
         "unknown_entry",
         "runtime",
+        "overloaded",
+        "unknown_job",
+        "not_ready",
     ];
     assert_eq!(ErrorCode::ALL.len(), want.len());
     for (c, w) in ErrorCode::ALL.iter().zip(want) {

@@ -70,9 +70,13 @@ fn experiments_doc_covers_the_registry_exactly() {
 
 #[test]
 fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
-    for page in
-        ["README.md", "experiments.md", "serving.md", "architecture.md"]
-    {
+    for page in [
+        "README.md",
+        "experiments.md",
+        "serving.md",
+        "architecture.md",
+        "scenarios.md",
+    ] {
         assert!(
             docs_dir().join(page).is_file(),
             "docs/{page} missing from the guidebook"
@@ -89,16 +93,58 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         "config",
         "batch",
         "stats",
+        "scenario",
+        "submit",
+        "job_status",
+        "job_result",
+        "job_cancel",
+        "progress",
     ] {
         assert!(
             serving.contains(&format!("`{ty}`")),
             "docs/serving.md never mentions the `{ty}` request type"
         );
     }
-    for needle in ["cache", "--no-cache", "\"cache\":false"] {
+    for needle in ["cache", "--no-cache", "\"cache\":false", "overloaded"] {
         assert!(
             serving.contains(needle),
             "docs/serving.md never documents {needle:?}"
+        );
+    }
+    assert!(
+        read("README.md").contains("scenarios.md"),
+        "docs/README.md must index the scenario cookbook"
+    );
+}
+
+/// The scenario cookbook must stay a worked, runnable document: every
+/// paper-style sweep present, each with both a CLI and a wire form.
+#[test]
+fn scenario_cookbook_covers_the_paper_sweeps() {
+    let doc = read("scenarios.md");
+    for sweep in [
+        "occupancy threshold",
+        "crossover",
+        "break-even",
+        "imbalanced-pair fairness",
+    ] {
+        assert!(
+            doc.to_lowercase().contains(sweep),
+            "docs/scenarios.md missing the {sweep:?} cookbook sweep"
+        );
+    }
+    for needle in [
+        "\"type\":\"scenario\"",
+        "\"type\":\"submit\"",
+        "\"sweep\"",
+        "mi300a-char scenario",
+        "job_status",
+        "job_result",
+        "job_cancel",
+    ] {
+        assert!(
+            doc.contains(needle),
+            "docs/scenarios.md never shows {needle:?}"
         );
     }
 }

@@ -7,13 +7,16 @@
 //! runtime_integration.rs; here the server stays on the simulator paths
 //! so the tests are artifact-independent.
 
-use mi300a_char::api::{Client, ErrorCode, Request, Response};
+use mi300a_char::api::{
+    Ask, Client, ErrorCode, Request, Response, ScenarioSpec,
+};
 use mi300a_char::config::Config;
 use mi300a_char::isa::Precision;
 use mi300a_char::serve::serve;
 use mi300a_char::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 /// Connect to the server (retrying while the listener comes up).
 fn connect(port: u16) -> TcpStream {
@@ -370,6 +373,299 @@ fn wire_repeats_hit_the_cache_and_cache_false_bypasses_it() {
     drop(writer);
     drop(reader);
     handle.join().unwrap();
+}
+
+/// Acceptance (ISSUE 4): a `scenario` sweep over the wire answers each
+/// point byte-identically to the equivalent sequence of v1 `sim`
+/// requests on the same connection.
+#[test]
+fn scenario_sweep_matches_the_equivalent_v1_sim_sequence() {
+    let (port, handle) = spawn_server(1);
+    let conn = connect(port);
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut ask_raw = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+
+    // The v1 baseline, sequentially (these also warm the cache — the
+    // sweep must answer identically either way).
+    let streams = [1usize, 2, 4];
+    let sequential: Vec<Json> = streams
+        .iter()
+        .map(|s| {
+            ask_raw(&format!(
+                r#"{{"v":1,"type":"sim","n":256,"precision":"fp8","streams":{s}}}"#
+            ))
+        })
+        .collect();
+
+    let sweep = ask_raw(
+        r#"{"v":1,"type":"scenario","n":256,"precision":"fp8","sweep":{"streams":[1,2,4]}}"#,
+    );
+    assert_eq!(sweep.get("type").unwrap().as_str(), Some("scenario"));
+    let points = sweep.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), sequential.len());
+    for (i, (point, seq)) in points.iter().zip(&sequential).enumerate() {
+        let mut expect = seq.clone();
+        if let Json::Obj(m) = &mut expect {
+            m.remove("v");
+        }
+        assert_eq!(
+            point.get("result").unwrap().to_string(),
+            expect.to_string(),
+            "sweep point {i} diverged from its v1 answer"
+        );
+        assert_eq!(
+            point
+                .get("point")
+                .unwrap()
+                .get("streams")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            streams[i]
+        );
+    }
+
+    writeln!(writer, "QUIT").unwrap();
+    drop(writer);
+    drop(reader);
+    handle.join().unwrap();
+}
+
+/// Acceptance (ISSUE 4): a submitted sweep completes asynchronously —
+/// states observable via `job_status`, at least one pushed `progress`
+/// frame, and the fetched result equals the synchronous sweep.
+#[test]
+fn job_lifecycle_over_the_wire_with_progress_push() {
+    let (port, handle) = spawn_server(1);
+    let conn = connect(port);
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut progress_frames: Vec<Json> = Vec::new();
+
+    // Read lines until a non-progress one arrives; frames (all tagged
+    // with the submit id, 5) are collected on the side.
+    let read_response = |reader: &mut BufReader<TcpStream>,
+                         progress: &mut Vec<Json>|
+     -> Json {
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let v = Json::parse(line.trim()).unwrap();
+            if v.get("type").and_then(|t| t.as_str()) == Some("progress") {
+                assert_eq!(
+                    v.get("id"),
+                    Some(&Json::Num(5.0)),
+                    "frames must carry the submitting request's id"
+                );
+                progress.push(v);
+                continue;
+            }
+            return v;
+        }
+    };
+
+    writeln!(
+        writer,
+        r#"{{"v":1,"id":5,"type":"submit","progress":true,"spec":{{"n":256,"sweep":{{"streams":[1,2]}}}}}}"#
+    )
+    .unwrap();
+    let submitted = read_response(&mut reader, &mut progress_frames);
+    assert_eq!(submitted.get("type").unwrap().as_str(), Some("job"));
+    assert_eq!(submitted.get("id"), Some(&Json::Num(5.0)));
+    let job = submitted.get("job").unwrap().as_usize().unwrap();
+    assert_eq!(submitted.get("total").unwrap().as_usize(), Some(2));
+
+    // Poll status to done; queued/running/done are all legal sightings.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut reqid = 6u64;
+    let mut seen_states = Vec::new();
+    loop {
+        writeln!(
+            writer,
+            r#"{{"v":1,"id":{reqid},"type":"job_status","job":{job}}}"#
+        )
+        .unwrap();
+        reqid += 1;
+        let st = read_response(&mut reader, &mut progress_frames);
+        assert_eq!(st.get("type").unwrap().as_str(), Some("job"));
+        let state = st.get("state").unwrap().as_str().unwrap().to_string();
+        seen_states.push(state.clone());
+        if state == "done" {
+            assert_eq!(st.get("completed").unwrap().as_usize(), Some(2));
+            break;
+        }
+        assert!(
+            state == "queued" || state == "running",
+            "unexpected state {state:?}"
+        );
+        assert!(Instant::now() < deadline, "job never finished");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Fetch the result and compare to the synchronous sweep (cache
+    // makes them byte-identical minus the envelope id).
+    writeln!(
+        writer,
+        r#"{{"v":1,"id":90,"type":"job_result","job":{job}}}"#
+    )
+    .unwrap();
+    let via_job = read_response(&mut reader, &mut progress_frames);
+    assert_eq!(via_job.get("type").unwrap().as_str(), Some("scenario"));
+    writeln!(
+        writer,
+        r#"{{"v":1,"id":91,"type":"scenario","n":256,"sweep":{{"streams":[1,2]}}}}"#
+    )
+    .unwrap();
+    let sync = read_response(&mut reader, &mut progress_frames);
+    let strip = |v: &Json| {
+        let mut v = v.clone();
+        if let Json::Obj(m) = &mut v {
+            m.remove("id");
+        }
+        v.to_string()
+    };
+    assert_eq!(strip(&via_job), strip(&sync));
+
+    // The progress contract: >= 1 frame (the registration snapshot is
+    // guaranteed even for instant jobs), ending terminal. The pusher
+    // thread writes frames asynchronously, so drain the wire until the
+    // terminal frame arrives (no further requests are in flight, so
+    // only frames remain).
+    let is_done = |frames: &[Json]| {
+        frames.last().and_then(|f| f.get("state")).and_then(Json::as_str)
+            == Some("done")
+    };
+    while !is_done(&progress_frames) {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            v.get("type").and_then(|t| t.as_str()),
+            Some("progress"),
+            "only frames may remain on the wire: {line}"
+        );
+        progress_frames.push(v);
+    }
+    assert!(
+        !progress_frames.is_empty(),
+        "at least one progress frame must be pushed"
+    );
+    let last = progress_frames.last().unwrap();
+    assert_eq!(last.get("state").unwrap().as_str(), Some("done"));
+    assert_eq!(last.get("completed").unwrap().as_usize(), Some(2));
+
+    writeln!(writer, "QUIT").unwrap();
+    drop(writer);
+    drop(reader);
+    handle.join().unwrap();
+}
+
+/// Acceptance (ISSUE 4): a job is cancellable mid-sweep; `job_result`
+/// afterwards is a typed `not_ready` error.
+#[test]
+fn jobs_cancel_mid_sweep_over_the_wire() {
+    let (port, handle) = spawn_server(1);
+    let mut client =
+        Client::connect_retry(format!("127.0.0.1:{port}").as_str(), 200)
+            .unwrap();
+    let mut spec = ScenarioSpec::new(Ask::Sim);
+    spec.n = 2048;
+    spec.streams = 8;
+    // 128 heavy points so the immediate cancel lands mid-sweep.
+    spec.sweep.iters = (1..=128).collect();
+    let view = match client.submit(&spec, false).unwrap() {
+        Response::Job(v) => v,
+        other => panic!("unexpected submit response: {other:?}"),
+    };
+    match client.request(&Request::JobCancel { job: view.job }).unwrap() {
+        Response::Job(_) => {}
+        other => panic!("unexpected cancel response: {other:?}"),
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let final_view = loop {
+        match client.request(&Request::JobStatus { job: view.job }).unwrap()
+        {
+            Response::Job(v) if v.state.terminal() => break v,
+            Response::Job(_) => {}
+            other => panic!("unexpected status: {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "cancel never landed");
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(final_view.state, mi300a_char::api::JobState::Cancelled);
+    assert!(
+        final_view.completed < final_view.total,
+        "cancel must land mid-sweep ({}/{})",
+        final_view.completed,
+        final_view.total
+    );
+    match client.request(&Request::JobResult { job: view.job }).unwrap() {
+        Response::Error { code, .. } => {
+            assert_eq!(code, ErrorCode::NotReady)
+        }
+        other => panic!("expected not_ready, got {other:?}"),
+    }
+    client.raw_line("QUIT").ok();
+    drop(client);
+    handle.join().unwrap();
+}
+
+/// The native client's progress-callback wait: every frame lands in the
+/// callback (snapshot → per-point → terminal) and the result follows.
+#[test]
+fn native_client_submit_and_wait_streams_progress() {
+    let (port, handle) = spawn_server(1);
+    let mut client =
+        Client::connect_retry(format!("127.0.0.1:{port}").as_str(), 200)
+            .unwrap();
+    let mut spec = ScenarioSpec::new(Ask::Sparsity);
+    spec.n = 256;
+    spec.sweep.streams = vec![1, 2, 4];
+    let mut frames = Vec::new();
+    let resp = client
+        .submit_and_wait(&spec, |p| frames.push(*p))
+        .unwrap();
+    match resp {
+        Response::Scenario { points } => assert_eq!(points.len(), 3),
+        other => panic!("unexpected response: {other:?}"),
+    }
+    assert!(!frames.is_empty());
+    let last = frames.last().unwrap();
+    assert!(last.state.terminal());
+    assert_eq!((last.completed, last.total), (3, 3));
+    // The read timeout is restored after the wait.
+    assert!(client.timeout().is_some());
+    client.raw_line("QUIT").ok();
+    drop(client);
+    handle.join().unwrap();
+}
+
+/// Satellite (ISSUE 4): a dead-quiet server surfaces as a typed
+/// timeout error on the client instead of a forever-hang.
+#[test]
+fn client_read_timeout_is_a_typed_error_not_a_hang() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // Accept the connection but never answer anything.
+    let silent = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        std::thread::sleep(Duration::from_secs(2));
+        drop(stream);
+    });
+    let mut client = Client::connect(addr).unwrap();
+    assert_eq!(client.timeout(), Some(mi300a_char::api::DEFAULT_TIMEOUT));
+    client.set_timeout(Some(Duration::from_millis(50))).unwrap();
+    let err = client.request(&Request::Stats).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+    assert!(err.to_string().contains("set_timeout"), "{err}");
+    drop(client);
+    silent.join().unwrap();
 }
 
 /// The three simulator-path commands every client in the concurrency

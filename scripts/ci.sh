@@ -1,31 +1,24 @@
 #!/usr/bin/env bash
-# Tier-1 verification, a formatting gate, a rustdoc gate (warnings are
-# errors), a relative-link check over the docs/ guidebook, a bench
-# smoke pass so the `cargo bench` targets (and their BENCH_*.json
-# emitters) cannot bit-rot, and a client-vs-serve smoke over the
-# versioned wire protocol (DESIGN.md §6) including a batch +
-# cache-stats request.
+# Tier-1 verification, a strict formatting gate, a rustdoc gate
+# (warnings are errors), a relative-link check over the docs/
+# guidebook, a bench smoke pass so the `cargo bench` targets (and
+# their BENCH_*.json emitters) cannot bit-rot, a client-vs-serve smoke
+# over the versioned wire protocol (DESIGN.md §6) including a batch +
+# cache-stats request, and a job-API smoke (submit a sweep, poll it to
+# done, fetch the result, observe >=1 pushed progress frame).
 #
 # Usage: scripts/ci.sh
 #
 # Environment:
 #   MI300A_BENCH_OUT    where BENCH_*.json baselines land (default: rust/)
 #   MI300A_CHAR_THREADS worker count for parallel sweeps (default: nproc)
-#   MI300A_FMT_STRICT   1 = fail on rustfmt drift (default: warn only,
-#                       until the pre-gate tree is formatted)
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
-echo "== rustfmt: cargo fmt --check =="
+echo "== rustfmt: cargo fmt --check (strict) =="
 if cargo fmt --version >/dev/null 2>&1; then
-    if ! cargo fmt --all -- --check; then
-        if [ "${MI300A_FMT_STRICT:-0}" = "1" ]; then
-            echo "rustfmt drift (MI300A_FMT_STRICT=1)" >&2
-            exit 1
-        fi
-        echo "warning: rustfmt drift (set MI300A_FMT_STRICT=1 to enforce)"
-    fi
+    cargo fmt --all -- --check
 else
     echo "rustfmt not installed; skipping format check"
 fi
@@ -98,6 +91,68 @@ for needle in '"type":"batch"' '"cache_hits":1' '"engine_runs":1'; do
     fi
 done
 rm -f "$serve_log"
+
+echo "== job-API smoke (submit -> poll -> result, progress frames) =="
+job_log=$(mktemp)
+# No --max-conns: the status-poll loop uses one connection per poll, so
+# a cap could exhaust mid-smoke on a slow machine; the trap kills it.
+"$bin" serve --addr 127.0.0.1:0 >"$job_log" &
+job_pid=$!
+trap 'kill "$job_pid" 2>/dev/null || true' EXIT
+jaddr=""
+for _ in $(seq 1 100); do
+    jaddr=$(sed -n 's/^serving on //p' "$job_log" | head -n 1)
+    [ -n "$jaddr" ] && break
+    sleep 0.05
+done
+if [ -z "$jaddr" ]; then
+    echo "job-smoke serve did not print its bound address" >&2
+    exit 1
+fi
+sub=$("$bin" client --addr "$jaddr" \
+    '{"v":1,"type":"submit","spec":{"n":256,"sweep":{"streams":[1,2]}}}')
+echo "submit response: $sub"
+job=$(printf '%s' "$sub" | sed -n 's/.*"job":\([0-9]*\).*/\1/p')
+if [ -z "$job" ]; then
+    echo "submit did not return a job id" >&2
+    exit 1
+fi
+state=""
+for _ in $(seq 1 200); do
+    st=$("$bin" client --addr "$jaddr" \
+        "{\"v\":1,\"type\":\"job_status\",\"job\":$job}")
+    case "$st" in
+        *'"state":"done"'*) state=done; break ;;
+        *'"state":"failed"'*|*'"state":"cancelled"'*)
+            echo "job $job ended badly: $st" >&2; exit 1 ;;
+    esac
+    sleep 0.05
+done
+if [ "$state" != done ]; then
+    echo "job $job did not finish" >&2
+    exit 1
+fi
+res=$("$bin" client --addr "$jaddr" \
+    "{\"v\":1,\"type\":\"job_result\",\"job\":$job}")
+echo "job result: $res"
+for needle in '"type":"scenario"' '"points"' '"speedup_vs_serial"'; do
+    if ! printf '%s' "$res" | grep -qF "$needle"; then
+        echo "job result missing $needle" >&2
+        exit 1
+    fi
+done
+# The scenario subcommand submits with progress push and prints one
+# "progress k/N" line per frame — at least one must arrive.
+watch=$("$bin" scenario --addr "$jaddr" --size 256 --sweep-streams 1,2)
+echo "$watch" | head -n 5
+if ! printf '%s\n' "$watch" | grep -q '^progress '; then
+    echo "no progress frame observed by the scenario watcher" >&2
+    exit 1
+fi
+kill "$job_pid" 2>/dev/null || true
+wait "$job_pid" 2>/dev/null || true
+trap - EXIT
+rm -f "$job_log"
 
 echo "== bench smoke (1 warmup / 1 iter, full targets) =="
 MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench
