@@ -110,7 +110,7 @@ fn main() -> std::io::Result<()> {
     let batched = probe.batch(&request_mix())?;
     assert_eq!(batched.len(), request_mix().len());
     let mut cache_line = String::from("stats request failed");
-    if let Response::Stats { cache, engine_runs } =
+    if let Response::Stats { cache, engine_runs, .. } =
         probe.request(&Request::Stats)?
     {
         cache_line = format!(

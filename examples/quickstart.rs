@@ -94,7 +94,7 @@ fn main() -> std::io::Result<()> {
         Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 },
         Request::Stats,
     ])?;
-    if let Response::Stats { cache, engine_runs } = &batch[1] {
+    if let Response::Stats { cache, engine_runs, .. } = &batch[1] {
         println!(
             "cache after the batch: {} hits / {} misses, {} cold engine \
              runs",

@@ -1,0 +1,114 @@
+//! `cargo bench` — per-backend execution rates (DESIGN.md §6.8,
+//! `BENCH_backends.json` is the machine-readable baseline; PERF.md
+//! documents the schema).
+//!
+//! The analytic backend exists to answer scenario points ~orders of
+//! magnitude faster than the DES replay. This target measures both
+//! sides of that claim on the same point (the §6.1 512³ FP8 4-stream
+//! workload) and on a cookbook-sized sweep:
+//!
+//! * `des` sim point — wall time per point plus exact DES events/sec
+//!   (the engine reports its processed event count; one point costs
+//!   one concurrent run + 4 solo runs for the serial baseline).
+//! * `analytic` sim point — wall time per point (zero events).
+//! * an 8-point stream sweep per backend, points/sec.
+//!
+//! `extra` carries `des_events_per_point`, `des_events_per_sec`,
+//! `des_points_per_sec`, `analytic_points_per_sec`, and
+//! `analytic_speedup_per_point` (des mean / analytic mean — the ≥100×
+//! fast-path headline).
+//!
+//! Smoke mode: `MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench`
+//! (scripts/ci.sh) keeps the target compiling and running cheaply.
+
+use mi300a_char::api::ScenarioSpec;
+use mi300a_char::backend::{self, BackendId};
+use mi300a_char::config::Config;
+use mi300a_char::isa::Precision;
+use mi300a_char::sim::{ConcurrencyProfile, Engine};
+use mi300a_char::util::bench::Bencher;
+use mi300a_char::util::json::Json;
+
+fn main() {
+    let cfg = Config::mi300a();
+    let mut b = Bencher::from_env(2, 10);
+    let mut extra: Vec<(&str, Json)> = Vec::new();
+
+    let des = backend::get(BackendId::Des);
+    let analytic = backend::get(BackendId::Analytic);
+
+    // The §6.1 anchor point: 512^3 FP8 across 4 streams.
+    let spec = ScenarioSpec::sim(512, Precision::Fp8, 4);
+    let p = spec.expand()[0];
+
+    // Exact event count for one des point: the concurrent run plus one
+    // solo run per stream (the serial-makespan baseline).
+    let engine = Engine::new(&cfg, ConcurrencyProfile::ace());
+    let ks = spec.kernels(&p);
+    let mut events = engine.run(&ks, cfg.seed).events as f64;
+    for (i, k) in ks.iter().enumerate() {
+        events +=
+            engine.run_solo(k, cfg.seed.wrapping_add(i as u64)).events as f64;
+    }
+
+    let rd = b.bench("sim_point/des", || {
+        Bencher::black_box(des.simulate(&cfg, &spec, &p).makespan_ms);
+    });
+    let ra = b.bench("sim_point/analytic", || {
+        Bencher::black_box(analytic.simulate(&cfg, &spec, &p).makespan_ms);
+    });
+    let per_point_speedup = rd.mean_ns / ra.mean_ns.max(1e-9);
+    println!(
+        "  -> des: {events:.0} events/point, ~{:.0} events/sec; analytic \
+         {per_point_speedup:.0}x faster per point",
+        rd.units_per_sec(events)
+    );
+    extra.push(("des_events_per_point", Json::Num(events)));
+    extra.push(("des_events_per_sec", Json::Num(rd.units_per_sec(events))));
+    extra.push(("des_points_per_sec", Json::Num(rd.throughput_per_sec())));
+    extra.push((
+        "analytic_points_per_sec",
+        Json::Num(ra.throughput_per_sec()),
+    ));
+    extra.push((
+        "analytic_speedup_per_point",
+        Json::Num(per_point_speedup),
+    ));
+
+    // A cookbook-sized sweep (docs/scenarios.md #1: the occupancy
+    // threshold) through each backend, points/sec.
+    let mut sweep = ScenarioSpec::sim(512, Precision::Fp8, 4);
+    sweep.sweep.streams = vec![1, 2, 3, 4, 6, 8, 12, 16];
+    let points = sweep.expand();
+    let rs = b.bench("sweep/8pts_des", || {
+        for q in &points {
+            Bencher::black_box(des.simulate(&cfg, &sweep, q).makespan_ms);
+        }
+    });
+    let rsa = b.bench("sweep/8pts_analytic", || {
+        for q in &points {
+            Bencher::black_box(
+                analytic.simulate(&cfg, &sweep, q).makespan_ms,
+            );
+        }
+    });
+    println!(
+        "  -> sweep: des {:.1} points/sec, analytic {:.0} points/sec",
+        rs.units_per_sec(points.len() as f64),
+        rsa.units_per_sec(points.len() as f64)
+    );
+    extra.push((
+        "sweep_des_points_per_sec",
+        Json::Num(rs.units_per_sec(points.len() as f64)),
+    ));
+    extra.push((
+        "sweep_analytic_points_per_sec",
+        Json::Num(rsa.units_per_sec(points.len() as f64)),
+    ));
+
+    println!("\n{}", b.markdown());
+    match b.write_json("backends", extra) {
+        Ok(path) => println!("baseline written: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_backends.json: {e}"),
+    }
+}

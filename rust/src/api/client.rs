@@ -25,7 +25,7 @@
 //! [`Client::submit_and_wait`] consumes them as a callback stream.
 
 use super::job::JobView;
-use super::protocol::{Request, Response};
+use super::protocol::{BackendInfo, Request, RequestEnvelope, Response};
 use super::scenario::ScenarioSpec;
 use crate::util::json::Json;
 use std::io::{self, BufRead, BufReader, Write};
@@ -121,7 +121,22 @@ impl Client {
         req: &Request,
         cache: bool,
     ) -> io::Result<Response> {
-        let (v, id) = self.request_json_opts(req, cache)?;
+        self.request_env(
+            req,
+            &RequestEnvelope { cache, ..RequestEnvelope::default() },
+        )
+    }
+
+    /// Issue one typed request with full envelope options — the cache
+    /// escape hatch plus the `"backend"` selector (DESIGN.md §6.8). The
+    /// envelope's `id` is ignored: the client assigns its own
+    /// pipelining id and verifies the echo.
+    pub fn request_env(
+        &mut self,
+        req: &Request,
+        env: &RequestEnvelope,
+    ) -> io::Result<Response> {
+        let (v, id) = self.request_json_env(req, env)?;
         let (resp, got) = Response::from_json(&v)
             .map_err(|e| invalid(format!("bad server response: {e}")))?;
         if got != Some(id) {
@@ -130,6 +145,22 @@ impl Client {
             )));
         }
         Ok(resp)
+    }
+
+    /// Fetch the server's execution-backend registry (capability
+    /// discovery; DESIGN.md §6.8).
+    pub fn backends(&mut self) -> io::Result<Vec<BackendInfo>> {
+        match self.request(&Request::Backends)? {
+            Response::Backends { backends } => Ok(backends),
+            Response::Error { code, message } => Err(invalid(format!(
+                "backends rejected: {}: {message}",
+                code.as_str()
+            ))),
+            other => Err(invalid(format!(
+                "unexpected backends response type {:?}",
+                other.type_name()
+            ))),
+        }
     }
 
     /// Issue one batch of typed sub-requests and return the per-item
@@ -280,9 +311,42 @@ impl Client {
         req: &Request,
         cache: bool,
     ) -> io::Result<(Json, u64)> {
+        self.request_json_env(
+            req,
+            &RequestEnvelope { cache, ..RequestEnvelope::default() },
+        )
+    }
+
+    /// [`Client::request_json`] with full envelope options (the
+    /// envelope's `id` is replaced by the client's pipelining id).
+    ///
+    /// A top-level `scenario` request flattens its spec into the
+    /// payload, so a spec-level `backend` and a *different* envelope
+    /// `backend` cannot both be represented on the wire (one key). The
+    /// server rejects that pair as `bad_request` when it can see both;
+    /// the client refuses to encode it at all rather than silently
+    /// sending whichever key survives.
+    pub fn request_json_env(
+        &mut self,
+        req: &Request,
+        env: &RequestEnvelope,
+    ) -> io::Result<(Json, u64)> {
+        if let Request::Scenario { spec } = req {
+            if let (Some(a), Some(b)) = (spec.backend, env.backend) {
+                if a != b {
+                    return Err(invalid(format!(
+                        "backend requested twice and disagreeing: the \
+                         spec says {:?}, the envelope says {:?}",
+                        a.as_str(),
+                        b.as_str()
+                    )));
+                }
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
-        writeln!(self.writer, "{}", req.to_json_opts(Some(id), cache))?;
+        let env = RequestEnvelope { id: Some(id), ..*env };
+        writeln!(self.writer, "{}", req.to_json_env(&env))?;
         Ok((self.read_response_json()?, id))
     }
 

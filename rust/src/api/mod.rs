@@ -15,10 +15,13 @@
 //!   behind `submit`/`job_status`/`job_result`/`job_cancel`, with
 //!   per-point progress counters and watcher channels.
 //! * [`service`] — the [`Service`] core owning the shared config, the
-//!   coordinator/engine construction, the result cache, the job
-//!   workers, and the mpsc-isolated PJRT executor worker. `serve.rs`
-//!   and `main.rs` are thin transports over it; neither holds business
-//!   logic of its own.
+//!   result cache, the job workers, and the mpsc-isolated PJRT
+//!   executor worker, dispatching every scenario point to a pluggable
+//!   execution backend ([`crate::backend`], DESIGN.md §6.8: `des`
+//!   replay vs `analytic` closed forms, selected by the `"backend"`
+//!   envelope key / spec field and discovered via the `backends`
+//!   request). `serve.rs` and `main.rs` are thin transports over it;
+//!   neither holds business logic of its own.
 //! * [`cache`] — the canonical-key bounded-LRU result cache, keyed at
 //!   sweep-point granularity for scenario-backed requests, with
 //!   hit/miss/eviction counters surfaced by the `stats` request.
@@ -88,8 +91,9 @@ pub use client::{Client, DEFAULT_TIMEOUT};
 pub use job::{JobLimits, JobState, JobView};
 pub use protocol::{
     objective_name, parse_legacy, parse_objective, precision_wire_name,
-    ApiError, ErrorCode, ExperimentInfo, LegacyCommand, PlanGroup, Request,
-    RequestEnvelope, Response, MAX_BATCH_ITEMS, PROTOCOL_VERSION,
+    ApiError, BackendInfo, ErrorCode, ExperimentInfo, LegacyCommand,
+    PlanGroup, Request, RequestEnvelope, Response, MAX_BATCH_ITEMS,
+    PROTOCOL_VERSION,
 };
 pub use scenario::{
     Ask, Point, PointResult, ScenarioSpec, Shape, Sweep, ITERS_RANGE,

@@ -43,6 +43,17 @@
 //! submitting request's `id`, which is what keeps the one-line-per-
 //! request pipelining contract intact for everything else.
 //!
+//! The backend amendment (DESIGN.md §6.8, same pre-1.0 rule) adds the
+//! optional `"backend"` request-envelope key (also a ScenarioSpec
+//! field) selecting which execution backend answers scenario-backed
+//! requests, the `backends` capability-discovery request, the typed
+//! `unknown_backend` / `unsupported_by_backend` errors, and per-backend
+//! `engine_runs_<id>` counters on `stats`. Omitting `backend` keeps
+//! every scenario-backed request, spec, and response byte-identical to
+//! the pre-backend protocol; the introspection responses (`stats`,
+//! `list_experiments`) gained fields under the §6.4 pre-1.0 rule, like
+//! every amendment before this one.
+//!
 //! The legacy whitespace text commands (`SIM`/`PLAN`/`SPARSITY`/`RUN`/
 //! `QUIT`) survive as [`parse_legacy`], a shim that desugars a text line
 //! into the same typed [`Request`]s — both framings produce
@@ -52,6 +63,7 @@
 use super::cache::CacheStats;
 use super::job::{JobState, JobView};
 use super::scenario::{self, Point, PointResult, ScenarioSpec};
+use crate::backend::BackendId;
 use crate::coordinator::Objective;
 use crate::isa::Precision;
 use crate::util::json::Json;
@@ -96,11 +108,18 @@ pub enum ErrorCode {
     /// `job_result` asked for a job that has not finished (or was
     /// cancelled mid-sweep).
     NotReady,
+    /// A `"backend"` key (envelope or ScenarioSpec) named an id the
+    /// backend registry does not have (DESIGN.md §6.8).
+    UnknownBackend,
+    /// The selected backend is registered but cannot answer this
+    /// ask/shape combination (see `Request::Backends` for the
+    /// capability table).
+    UnsupportedByBackend,
 }
 
 impl ErrorCode {
     /// Every code, for exhaustive protocol tests.
-    pub const ALL: [ErrorCode; 11] = [
+    pub const ALL: [ErrorCode; 13] = [
         ErrorCode::BadVersion,
         ErrorCode::BadRequest,
         ErrorCode::UnknownType,
@@ -112,6 +131,8 @@ impl ErrorCode {
         ErrorCode::Overloaded,
         ErrorCode::UnknownJob,
         ErrorCode::NotReady,
+        ErrorCode::UnknownBackend,
+        ErrorCode::UnsupportedByBackend,
     ];
 
     /// The stable wire spelling (e.g. `bad_range`).
@@ -128,6 +149,8 @@ impl ErrorCode {
             ErrorCode::Overloaded => "overloaded",
             ErrorCode::UnknownJob => "unknown_job",
             ErrorCode::NotReady => "not_ready",
+            ErrorCode::UnknownBackend => "unknown_backend",
+            ErrorCode::UnsupportedByBackend => "unsupported_by_backend",
         }
     }
 
@@ -197,20 +220,27 @@ pub fn parse_objective(s: &str) -> Option<Objective> {
 }
 
 /// Envelope options decoded alongside a [`Request`]: the pipelining
-/// `id` (echoed on the response) and the `cache` escape hatch
+/// `id` (echoed on the response), the `cache` escape hatch
 /// (`"cache":false` bypasses the service's result cache for this one
-/// request). Absent keys take the defaults (`id: None`, `cache: true`).
+/// request), and the `backend` selector (DESIGN.md §6.8 — which
+/// execution backend answers the scenario-backed requests; `None`
+/// means the serving instance's default). Absent keys take the
+/// defaults (`id: None`, `cache: true`, `backend: None`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RequestEnvelope {
     /// Client-chosen request id, echoed verbatim on the response.
     pub id: Option<u64>,
     /// Whether the service may answer from (and fill) its result cache.
     pub cache: bool,
+    /// Execution backend for scenario-backed requests
+    /// (sim/plan/sparsity/scenario/submit); a typed error on anything
+    /// else. `None` = the serving instance's default backend.
+    pub backend: Option<BackendId>,
 }
 
 impl Default for RequestEnvelope {
     fn default() -> RequestEnvelope {
-        RequestEnvelope { id: None, cache: true }
+        RequestEnvelope { id: None, cache: true, backend: None }
     }
 }
 
@@ -248,8 +278,12 @@ pub enum Request {
     },
     /// Service counters: the result-cache hit/miss/eviction/size totals
     /// plus the engine-invocation count (cold executions of a
-    /// simulator/coordinator/driver path). Never cached.
+    /// simulator/coordinator/driver path), split per backend. Never
+    /// cached.
     Stats,
+    /// Enumerate the execution-backend registry with per-backend
+    /// capabilities (DESIGN.md §6.8). Never cached.
+    Backends,
     /// Declarative scenario (DESIGN.md §6.6): run the spec's sweep
     /// synchronously and answer every point in one envelope. The v1
     /// `sim`/`plan`/`sparsity` requests are single-point special cases
@@ -311,9 +345,20 @@ pub enum Response {
     /// failure is that item's `error` entry; the batch envelope itself
     /// still succeeds.
     Batch { items: Vec<Response> },
-    /// Service counters (flattened on the wire as `cache_*` fields plus
-    /// `engine_runs`).
-    Stats { cache: CacheStats, engine_runs: u64 },
+    /// Service counters (flattened on the wire as `cache_*` fields,
+    /// `engine_runs`, plus one `engine_runs_<backend>` field per
+    /// registered backend — `backend_runs` holds them in
+    /// [`BackendId::ALL`] order). `engine_runs` stays the total cold
+    /// executions (scenario points *and* repro drivers), so it can
+    /// exceed the per-backend sum, which counts scenario points only.
+    Stats {
+        cache: CacheStats,
+        engine_runs: u64,
+        backend_runs: Vec<u64>,
+    },
+    /// The execution-backend registry (one entry per backend, registry
+    /// order).
+    Backends { backends: Vec<BackendInfo> },
     /// Every sweep point of a scenario, in expansion order; each item
     /// carries the point coordinates plus the envelope-less response
     /// the equivalent v1 request would produce.
@@ -349,6 +394,27 @@ pub struct ExperimentInfo {
     pub title: String,
     /// Paper section the artifact reproduces.
     pub section: String,
+    /// Whether the driver is a pure function of the `Config` (and its
+    /// `repro` response therefore cacheable) — the registry flag from
+    /// PR 3, surfaced on the wire.
+    pub deterministic: bool,
+}
+
+/// One registry entry inside a `backends` response (DESIGN.md §6.8).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendInfo {
+    /// Stable backend id (the `"backend"` selector spelling).
+    pub id: String,
+    /// One-line description.
+    pub description: String,
+    /// Asks the backend answers (`sim`/`plan`/`sparsity` spellings).
+    pub asks: Vec<String>,
+    /// Stream-set shapes its `sim` ask handles.
+    pub sim_shapes: Vec<String>,
+    /// Whether answers are pure functions of the config (cacheable).
+    pub deterministic: bool,
+    /// Whether this is the serving instance's default backend.
+    pub default: bool,
 }
 
 /// Legacy text command, desugared (see [`parse_legacy`]).
@@ -383,6 +449,7 @@ impl Request {
             Request::Config => "config",
             Request::Batch { .. } => "batch",
             Request::Stats => "stats",
+            Request::Backends => "backends",
             Request::Scenario { .. } => "scenario",
             Request::Submit { .. } => "submit",
             Request::JobStatus { .. } => "job_status",
@@ -401,8 +468,28 @@ impl Request {
     /// bytes as [`Request::to_json`]; `cache: false` emits the
     /// `"cache":false` escape hatch.
     pub fn to_json_opts(&self, id: Option<u64>, cache: bool) -> Json {
-        let mut fields = envelope_fields(id);
-        if !cache {
+        self.to_json_env(&RequestEnvelope { id, cache, backend: None })
+    }
+
+    /// Encode with a full [`RequestEnvelope`]. Defaults (`cache: true`,
+    /// `backend: None`) are omitted on the wire, so the canonical form
+    /// of a default-envelope request is byte-identical to
+    /// [`Request::to_json`].
+    ///
+    /// Caveat: a top-level `scenario` request flattens its spec into
+    /// the payload, so the spec-level `backend` field and the envelope
+    /// key are literally the same wire key — a spec that names a
+    /// backend wins (keys are a map and the payload is pushed last),
+    /// and a *disagreeing* envelope selector is unrepresentable.
+    /// [`super::Client::request_json_env`] refuses to encode that pair;
+    /// the server rejects it whenever both are visible (`submit` nests
+    /// its spec, so both survive there).
+    pub fn to_json_env(&self, env: &RequestEnvelope) -> Json {
+        let mut fields = envelope_fields(env.id);
+        if let Some(b) = env.backend {
+            fields.push(("backend", Json::Str(b.as_str().into())));
+        }
+        if !env.cache {
             fields.push(("cache", Json::Bool(false)));
         }
         fields.push(("type", Json::Str(self.type_name().into())));
@@ -483,7 +570,8 @@ impl Request {
             }
             Request::ListExperiments
             | Request::Config
-            | Request::Stats => {}
+            | Request::Stats
+            | Request::Backends => {}
         }
     }
 
@@ -502,11 +590,18 @@ impl Request {
         v: &Json,
     ) -> Result<(Request, RequestEnvelope), (ApiError, Option<u64>)> {
         let salvaged = salvage_id(v);
-        let (m, id, ty, cache) =
+        let (m, id, ty, cache, backend) =
             envelope(v, "request").map_err(|e| (e, salvaged))?;
         decode_request_payload(m, ty)
             .map(|r| {
-                (r, RequestEnvelope { id, cache: cache.unwrap_or(true) })
+                (
+                    r,
+                    RequestEnvelope {
+                        id,
+                        cache: cache.unwrap_or(true),
+                        backend,
+                    },
+                )
             })
             .map_err(|e| (e, id))
     }
@@ -600,6 +695,10 @@ fn decode_request_payload(
             check_env_fields(m, ty, &[])?;
             Ok(Request::Stats)
         }
+        "backends" => {
+            check_env_fields(m, ty, &[])?;
+            Ok(Request::Backends)
+        }
         "scenario" => {
             check_env_fields(m, ty, scenario::SPEC_FIELDS)?;
             Ok(Request::Scenario {
@@ -643,21 +742,17 @@ fn decode_request_payload(
 }
 
 /// Shared envelope rules for one batch item, request or response side:
-/// it must be an object, envelope keys (`v`/`id`/`cache`) belong to the
-/// batch line rather than to items, and batches do not nest. Returns
-/// the item's map and `type` so the caller runs the payload decoder.
+/// it must be an object, envelope keys (`v`/`id`/`cache`, and
+/// `backend` except on `scenario` items — where it is a legitimate
+/// ScenarioSpec payload field, exactly as on a top-level scenario
+/// line) belong to the batch line rather than to items, and batches do
+/// not nest. Returns the item's map and `type` so the caller runs the
+/// payload decoder.
 fn item_envelope<'a>(
     v: &'a Json,
     what: &str,
 ) -> Result<(&'a BTreeMap<String, Json>, &'a str), ApiError> {
     let m = obj(v, what)?;
-    for k in ["v", "id", "cache"] {
-        if m.contains_key(k) {
-            return Err(ApiError::bad_request(format!(
-                "{what}: {k:?} belongs on the batch envelope, not on items"
-            )));
-        }
-    }
     let ty = match m.get("type") {
         Some(Json::Str(s)) => s.as_str(),
         Some(_) => {
@@ -675,6 +770,16 @@ fn item_envelope<'a>(
         return Err(ApiError::bad_request(format!(
             "{what}: batches do not nest"
         )));
+    }
+    for k in ["v", "id", "cache", "backend"] {
+        if k == "backend" && ty == "scenario" {
+            continue; // a spec field there, decoded by ScenarioSpec
+        }
+        if m.contains_key(k) {
+            return Err(ApiError::bad_request(format!(
+                "{what}: {k:?} belongs on the batch envelope, not on items"
+            )));
+        }
     }
     Ok((m, ty))
 }
@@ -702,6 +807,7 @@ impl Response {
             Response::Config { .. } => "config",
             Response::Batch { .. } => "batch",
             Response::Stats { .. } => "stats",
+            Response::Backends { .. } => "backends",
             Response::Scenario { .. } => "scenario",
             Response::Job(_) => "job",
             Response::Progress(_) => "progress",
@@ -824,6 +930,10 @@ impl Response {
                             .iter()
                             .map(|e| {
                                 Json::obj(vec![
+                                    (
+                                        "deterministic",
+                                        Json::Bool(e.deterministic),
+                                    ),
                                     ("id", Json::Str(e.id.clone())),
                                     ("title", Json::Str(e.title.clone())),
                                     (
@@ -847,7 +957,39 @@ impl Response {
                     ),
                 ));
             }
-            Response::Stats { cache, engine_runs } => {
+            Response::Backends { backends } => {
+                fields.push((
+                    "backends",
+                    Json::Arr(
+                        backends
+                            .iter()
+                            .map(|b| {
+                                Json::obj(vec![
+                                    (
+                                        "asks",
+                                        str_arr_json(&b.asks),
+                                    ),
+                                    ("default", Json::Bool(b.default)),
+                                    (
+                                        "deterministic",
+                                        Json::Bool(b.deterministic),
+                                    ),
+                                    (
+                                        "description",
+                                        Json::Str(b.description.clone()),
+                                    ),
+                                    ("id", Json::Str(b.id.clone())),
+                                    (
+                                        "sim_shapes",
+                                        str_arr_json(&b.sim_shapes),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            Response::Stats { cache, engine_runs, backend_runs } => {
                 fields.push(("cache_hits", Json::Num(cache.hits as f64)));
                 fields
                     .push(("cache_misses", Json::Num(cache.misses as f64)));
@@ -868,6 +1010,18 @@ impl Response {
                 ));
                 fields.push(("cache_enabled", Json::Bool(cache.enabled)));
                 fields.push(("engine_runs", Json::Num(*engine_runs as f64)));
+                // One counter field per registered backend, named after
+                // its id (keys serialize sorted; missing trailing
+                // entries encode as 0 for programmatic constructions).
+                for (i, id) in BackendId::ALL.iter().enumerate() {
+                    fields.push((
+                        id.stat_field(),
+                        Json::Num(
+                            backend_runs.get(i).copied().unwrap_or(0)
+                                as f64,
+                        ),
+                    ));
+                }
             }
             Response::Scenario { points } => {
                 fields.push((
@@ -901,10 +1055,16 @@ impl Response {
     /// Decode a wire object (client side). Strict: unknown fields and
     /// foreign versions are rejected, mirroring request decoding.
     pub fn from_json(v: &Json) -> Result<(Response, Option<u64>), ApiError> {
-        let (m, id, ty, cache) = envelope(v, "response")?;
+        let (m, id, ty, cache, backend) = envelope(v, "response")?;
         if cache.is_some() {
             return Err(ApiError::bad_request(
                 "\"cache\" is a request-envelope key; responses never \
+                 carry it",
+            ));
+        }
+        if backend.is_some() {
+            return Err(ApiError::bad_request(
+                "\"backend\" is a request-envelope key; responses never \
                  carry it",
             ));
         }
@@ -1020,21 +1180,26 @@ fn decode_response_payload(
             Ok(Response::Batch { items })
         }
         "stats" => {
-            check_env_fields(
-                m,
-                ty,
-                &[
-                    "cache_hits",
-                    "cache_misses",
-                    "cache_evictions",
-                    "cache_entries",
-                    "cache_bytes",
-                    "cache_max_entries",
-                    "cache_max_bytes",
-                    "cache_enabled",
-                    "engine_runs",
-                ],
-            )?;
+            // The per-backend counter fields are derived from the
+            // registry, so adding a backend cannot leave this strict
+            // decoder stale.
+            let mut allowed: Vec<&str> = vec![
+                "cache_hits",
+                "cache_misses",
+                "cache_evictions",
+                "cache_entries",
+                "cache_bytes",
+                "cache_max_entries",
+                "cache_max_bytes",
+                "cache_enabled",
+                "engine_runs",
+            ];
+            allowed.extend(BackendId::ALL.iter().map(|b| b.stat_field()));
+            check_env_fields(m, ty, &allowed)?;
+            let backend_runs = BackendId::ALL
+                .iter()
+                .map(|b| u64_field(m, ty, b.stat_field()))
+                .collect::<Result<Vec<_>, _>>()?;
             Ok(Response::Stats {
                 cache: CacheStats {
                     hits: u64_field(m, ty, "cache_hits")?,
@@ -1047,7 +1212,16 @@ fn decode_response_payload(
                     enabled: bool_field(m, ty, "cache_enabled")?,
                 },
                 engine_runs: u64_field(m, ty, "engine_runs")?,
+                backend_runs,
             })
+        }
+        "backends" => {
+            check_env_fields(m, ty, &["backends"])?;
+            let backends = arr_field(m, ty, "backends")?
+                .iter()
+                .map(decode_backend_info)
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Response::Backends { backends })
         }
         "scenario" => {
             check_env_fields(m, ty, &["points"])?;
@@ -1145,11 +1319,58 @@ fn decode_plan_group(v: &Json) -> Result<PlanGroup, ApiError> {
 
 fn decode_experiment_info(v: &Json) -> Result<ExperimentInfo, ApiError> {
     let m = obj(v, "experiment entry")?;
-    check_obj_fields(m, "experiment entry", &["id", "title", "section"])?;
+    check_obj_fields(
+        m,
+        "experiment entry",
+        &["deterministic", "id", "title", "section"],
+    )?;
     Ok(ExperimentInfo {
         id: str_field(m, "experiment entry", "id")?.to_string(),
         title: str_field(m, "experiment entry", "title")?.to_string(),
         section: str_field(m, "experiment entry", "section")?.to_string(),
+        deterministic: bool_field(m, "experiment entry", "deterministic")?,
+    })
+}
+
+/// Encode a string list as a JSON array.
+fn str_arr_json(xs: &[String]) -> Json {
+    Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+/// Decode a JSON array of strings.
+fn str_arr_field(
+    m: &BTreeMap<String, Json>,
+    what: &str,
+    key: &str,
+) -> Result<Vec<String>, ApiError> {
+    arr_field(m, what, key)?
+        .iter()
+        .map(|x| {
+            x.as_str().map(str::to_string).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{what}: field {key:?} must be an array of strings"
+                ))
+            })
+        })
+        .collect()
+}
+
+fn decode_backend_info(v: &Json) -> Result<BackendInfo, ApiError> {
+    let what = "backend entry";
+    let m = obj(v, what)?;
+    check_obj_fields(
+        m,
+        what,
+        &["asks", "default", "deterministic", "description", "id",
+          "sim_shapes"],
+    )?;
+    Ok(BackendInfo {
+        id: str_field(m, what, "id")?.to_string(),
+        description: str_field(m, what, "description")?.to_string(),
+        asks: str_arr_field(m, what, "asks")?,
+        sim_shapes: str_arr_field(m, what, "sim_shapes")?,
+        deterministic: bool_field(m, what, "deterministic")?,
+        default: bool_field(m, what, "default")?,
     })
 }
 
@@ -1169,8 +1390,13 @@ pub(crate) fn obj<'a>(
     }
 }
 
-type EnvelopeParts<'a> =
-    (&'a BTreeMap<String, Json>, Option<u64>, &'a str, Option<bool>);
+type EnvelopeParts<'a> = (
+    &'a BTreeMap<String, Json>,
+    Option<u64>,
+    &'a str,
+    Option<bool>,
+    Option<BackendId>,
+);
 
 fn envelope<'a>(
     v: &'a Json,
@@ -1239,7 +1465,26 @@ fn envelope<'a>(
             ))
         }
     };
-    Ok((m, id, ty, cache))
+    let backend = match m.get("backend") {
+        None => None,
+        Some(Json::Str(s)) => {
+            Some(BackendId::parse(s).ok_or_else(|| {
+                ApiError::new(
+                    ErrorCode::UnknownBackend,
+                    format!(
+                        "unknown backend {s:?} (registered: {})",
+                        BackendId::names()
+                    ),
+                )
+            })?)
+        }
+        Some(_) => {
+            return Err(ApiError::bad_request(
+                "field \"backend\" must be a string",
+            ))
+        }
+    };
+    Ok((m, id, ty, cache, backend))
 }
 
 fn salvage_id(v: &Json) -> Option<u64> {
@@ -1265,6 +1510,7 @@ fn check_env_fields(
             && k != "id"
             && k != "type"
             && k != "cache"
+            && k != "backend"
             && !allowed.contains(&k)
         {
             return Err(ApiError::new(
@@ -1438,11 +1684,12 @@ pub fn parse_legacy(line: &str) -> Result<LegacyCommand, ApiError> {
         ["LIST"] => Request::ListExperiments,
         ["CONFIG"] => Request::Config,
         ["STATS"] => Request::Stats,
+        ["BACKENDS"] => Request::Backends,
         _ => {
             return Err(ApiError::new(
                 ErrorCode::UnknownType,
                 "unknown command (try SIM/PLAN/SPARSITY/RUN/LIST/CONFIG/\
-                 STATS/QUIT or a JSON request line)",
+                 STATS/BACKENDS/QUIT or a JSON request line)",
             ))
         }
     };
@@ -1540,7 +1787,10 @@ mod tests {
     fn cache_envelope_flag_defaults_true_and_roundtrips_false() {
         let req = Request::Sparsity { n: 512, streams: 4 };
         let (_, env) = Request::decode(&req.to_json(Some(3))).unwrap();
-        assert_eq!(env, RequestEnvelope { id: Some(3), cache: true });
+        assert_eq!(
+            env,
+            RequestEnvelope { id: Some(3), cache: true, backend: None }
+        );
 
         let wire = req.to_json_opts(Some(3), false).to_string();
         assert!(wire.contains(r#""cache":false"#), "{wire}");
@@ -1608,5 +1858,57 @@ mod tests {
             parse_legacy("STATS").unwrap(),
             LegacyCommand::Request(Request::Stats)
         );
+        assert_eq!(
+            parse_legacy("BACKENDS").unwrap(),
+            LegacyCommand::Request(Request::Backends)
+        );
+    }
+
+    #[test]
+    fn backend_envelope_key_roundtrips_and_unknown_ids_are_typed() {
+        use crate::backend::BackendId;
+        let req = Request::Sim {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 4,
+        };
+        let env = RequestEnvelope {
+            id: Some(2),
+            cache: true,
+            backend: Some(BackendId::Analytic),
+        };
+        let wire = req.to_json_env(&env).to_string();
+        assert!(wire.contains(r#""backend":"analytic""#), "{wire}");
+        let (back, got) =
+            Request::decode(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(got, env);
+        assert_eq!(back.to_json_env(&got).to_string(), wire);
+        // The default (no backend) is omitted: canonical bytes stay
+        // identical to the pre-backend wire form.
+        assert!(!req.to_json(Some(2)).to_string().contains("backend"));
+        // The cache key never carries envelope keys.
+        assert!(!req.cache_key().contains("backend"));
+
+        // Unknown ids are the typed unknown_backend error, salvaging
+        // the envelope id for the reply.
+        let bad = r#"{"v":1,"id":9,"backend":"slide_rule","type":"config"}"#;
+        let (err, id) =
+            Request::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownBackend);
+        assert!(err.message.contains("slide_rule"), "{err}");
+        assert_eq!(id, Some(9));
+
+        let bad = r#"{"v":1,"backend":7,"type":"config"}"#;
+        let (err, _) =
+            Request::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+
+        // Responses never carry the key.
+        let resp =
+            r#"{"v":1,"backend":"des","type":"config","config":{}}"#;
+        let err =
+            Response::from_json(&Json::parse(resp).unwrap()).unwrap_err();
+        assert!(err.message.contains("request-envelope"), "{err}");
     }
 }

@@ -25,6 +25,7 @@
 use super::protocol::{check_obj_fields, obj, objective_name,
                       parse_objective, precision_wire_name, str_field,
                       usize_field, ApiError, ErrorCode};
+use crate::backend::BackendId;
 use crate::coordinator::Objective;
 use crate::isa::Precision;
 use crate::sim::{KernelDesc, SparsityMode};
@@ -44,8 +45,8 @@ pub const ITERS_RANGE: (usize, usize) = (1, 10_000);
 /// The payload keys a scenario spec may carry (sorted; shared by the
 /// request decoder and [`ScenarioSpec::from_json`]).
 pub(crate) const SPEC_FIELDS: &[&str] = &[
-    "ask", "iters", "n", "objective", "precision", "shape", "small_n",
-    "sparsity", "streams", "sweep",
+    "ask", "backend", "iters", "n", "objective", "precision", "shape",
+    "small_n", "sparsity", "streams", "sweep",
 ];
 
 /// Range check shared by scenario validation (and, transitively, the
@@ -226,6 +227,14 @@ pub struct PointResult {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioSpec {
     pub ask: Ask,
+    /// Execution backend answering the points (DESIGN.md §6.8). `None`
+    /// means "the serving instance's default" (`des` unless
+    /// `serve --backend` overrides it); the service resolves it to a
+    /// concrete id before execution, so the canonical single-point
+    /// cache form always names its backend and backends never share
+    /// cache entries. Omitted from the wire when `None`, which keeps
+    /// every pre-backend fixture byte-identical.
+    pub backend: Option<BackendId>,
     pub n: usize,
     pub precision: Precision,
     pub iters: usize,
@@ -249,6 +258,7 @@ impl ScenarioSpec {
     pub fn new(ask: Ask) -> ScenarioSpec {
         ScenarioSpec {
             ask,
+            backend: None,
             n: 512,
             precision: Precision::Fp8,
             iters: ask.default_iters(),
@@ -517,6 +527,9 @@ impl ScenarioSpec {
         fields: &mut Vec<(&'static str, Json)>,
     ) {
         fields.push(("ask", Json::Str(self.ask.as_str().into())));
+        if let Some(b) = self.backend {
+            fields.push(("backend", Json::Str(b.as_str().into())));
+        }
         fields.push(("iters", Json::Num(self.iters as f64)));
         fields.push(("n", Json::Num(self.n as f64)));
         if let Some(o) = self.objective {
@@ -607,6 +620,18 @@ impl ScenarioSpec {
                 ))
             })?,
         };
+        let backend = match opt_str(m, what, "backend")? {
+            None => None,
+            Some(s) => Some(BackendId::parse(s).ok_or_else(|| {
+                ApiError::new(
+                    ErrorCode::UnknownBackend,
+                    format!(
+                        "{what}: unknown backend {s:?} (registered: {})",
+                        BackendId::names()
+                    ),
+                )
+            })?),
+        };
         let n = usize_field(m, what, "n")?;
         let precision = match opt_str(m, what, "precision")? {
             None => Precision::Fp8,
@@ -650,6 +675,7 @@ impl ScenarioSpec {
         };
         let spec = ScenarioSpec {
             ask,
+            backend,
             n,
             precision,
             iters,
@@ -801,6 +827,36 @@ mod tests {
                 .unwrap();
         assert_eq!(back, spec);
         assert_eq!(back.to_json().to_string(), canonical, "fixpoint");
+    }
+
+    #[test]
+    fn backend_field_canonicalizes_and_unknown_ids_are_typed() {
+        use crate::backend::BackendId;
+        let v = Json::parse(r#"{"n":512,"backend":"analytic"}"#).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(spec.backend, Some(BackendId::Analytic));
+        let canonical = spec.to_json().to_string();
+        assert!(
+            canonical.contains(r#""backend":"analytic""#),
+            "{canonical}"
+        );
+        let back = ScenarioSpec::from_json(&Json::parse(&canonical).unwrap())
+            .unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string(), canonical, "fixpoint");
+        // An omitted backend stays omitted, keeping every pre-backend
+        // wire fixture byte-identical.
+        let plain = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        assert!(!plain.to_json().to_string().contains("backend"));
+        // Unknown ids are the typed unknown_backend error naming the
+        // registry.
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"backend":"slide_rule"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownBackend);
+        assert!(err.message.contains("slide_rule"), "{err}");
+        assert!(err.message.contains("des"), "{err}");
     }
 
     #[test]

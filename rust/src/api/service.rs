@@ -21,6 +21,18 @@
 //! pool, answering each [`Point`] exactly as the equivalent v1 request
 //! would — byte-identically, because both run the same compiled path.
 //!
+//! ## Backends (DESIGN.md §6.8)
+//!
+//! Each point executes on a [`crate::backend::Backend`] from the
+//! backend registry: `des` (discrete-event replay — the default, and
+//! byte-identical to the pre-backend service) or `analytic` (calibrated
+//! closed forms, no DES stepping). Selection comes from the spec's
+//! `backend` field or the request envelope's `"backend"` key, resolved
+//! and capability-gated up front ([`ErrorCode::UnsupportedByBackend`]
+//! before any point runs); the resolved backend is canonicalized into
+//! the per-point cache key, so backends never share cache entries, and
+//! cold executions are counted per backend for the `stats` request.
+//!
 //! ## Caching
 //!
 //! The service embeds a [`ResultCache`] (see [`super::cache`]) keyed at
@@ -47,18 +59,15 @@
 use super::cache::{CachePolicy, CacheStats, ResultCache};
 use super::job::{JobLimits, JobTable, JobView};
 use super::protocol::{
-    objective_name, ApiError, ErrorCode, ExperimentInfo, PlanGroup, Request,
-    Response, MAX_BATCH_ITEMS,
+    objective_name, ApiError, BackendInfo, ErrorCode, ExperimentInfo,
+    PlanGroup, Request, RequestEnvelope, Response, MAX_BATCH_ITEMS,
 };
 use super::scenario::{Ask, Point, PointResult, ScenarioSpec};
+use crate::backend::{self, BackendId};
 use crate::config::Config;
-use crate::coordinator::{decide_sparsity, Coordinator, Objective};
 use crate::experiments;
-use crate::metrics::fairness;
 use crate::runtime::manifest::EntrySpec;
 use crate::runtime::{Executor, Manifest};
-use crate::sim::{ConcurrencyProfile, Engine, KernelDesc, SparsityMode};
-use crate::sparsity::SpeedupModel;
 use crate::util::pool;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -100,6 +109,13 @@ struct Core {
     // touch it, which is what lets tests prove a repeat request did
     // zero re-execution.
     engine_runs: AtomicU64,
+    // Cold scenario-point executions split per backend (DESIGN.md
+    // §6.8): `engine_runs` stays the total (points + repro drivers),
+    // so cache-bypass accounting stays truthful per backend too.
+    backend_runs: [AtomicU64; backend::COUNT],
+    // The backend answering requests that name none (`serve --backend`
+    // overrides; `des` everywhere else, preserving pre-backend bytes).
+    default_backend: BackendId,
 }
 
 /// The single front door to the system. `Send + Sync`: share it behind
@@ -152,14 +168,41 @@ impl Service {
         Service::with_limits(cfg, artifacts_dir, policy, JobLimits::default())
     }
 
-    /// Fully-explicit constructor. Spawns the executor worker thread
-    /// and `limits.max_running` job workers; all exit when the service
-    /// is dropped.
+    /// Service whose requests default to `default_backend` when they
+    /// name none (the CLI's `serve --backend`; DESIGN.md §6.8).
+    pub fn with_default_backend(
+        cfg: Config,
+        policy: CachePolicy,
+        default_backend: BackendId,
+    ) -> Service {
+        Service::build(
+            cfg,
+            Manifest::default_dir(),
+            policy,
+            JobLimits::default(),
+            default_backend,
+        )
+    }
+
+    /// Fully-explicit constructor minus the backend default. Spawns the
+    /// executor worker thread and `limits.max_running` job workers; all
+    /// exit when the service is dropped.
     pub fn with_limits(
         cfg: Config,
         artifacts_dir: PathBuf,
         policy: CachePolicy,
         limits: JobLimits,
+    ) -> Service {
+        Service::build(cfg, artifacts_dir, policy, limits, backend::DEFAULT)
+    }
+
+    /// The one real constructor.
+    fn build(
+        cfg: Config,
+        artifacts_dir: PathBuf,
+        policy: CachePolicy,
+        limits: JobLimits,
+        default_backend: BackendId,
     ) -> Service {
         let (tx, rx) = mpsc::channel::<ExecJob>();
         let worker_dir = artifacts_dir.clone();
@@ -173,6 +216,8 @@ impl Service {
             exec_tx: Mutex::new(tx),
             cache: ResultCache::new(policy),
             engine_runs: AtomicU64::new(0),
+            backend_runs: std::array::from_fn(|_| AtomicU64::new(0)),
+            default_backend,
         });
         let jobs = Arc::new(JobTable::new(limits));
         let job_workers = (0..limits.max_running)
@@ -205,15 +250,29 @@ impl Service {
     /// Handle one typed request through the result cache. Never panics
     /// on bad input: every failure is a typed [`Response::Error`].
     pub fn handle(&self, req: &Request) -> Response {
-        self.handle_opts(req, true)
+        self.handle_env(req, &RequestEnvelope::default())
     }
 
     /// Handle one typed request with an explicit cache mode.
     /// `use_cache: false` is the `"cache":false` / `--no-cache` escape
     /// hatch: the request always runs cold and counts neither a hit
-    /// nor a miss. A batch fans its items through the same path, so
-    /// identical items within one batch share the cache.
+    /// nor a miss.
     pub fn handle_opts(&self, req: &Request, use_cache: bool) -> Response {
+        self.handle_env(
+            req,
+            &RequestEnvelope { cache: use_cache, ..RequestEnvelope::default() },
+        )
+    }
+
+    /// Handle one typed request with full envelope options (`cache`
+    /// escape hatch + `backend` selector, DESIGN.md §6.8). A batch fans
+    /// its items through the same path, so identical items within one
+    /// batch share the cache; the envelope's backend applies to every
+    /// scenario-backed item, and other items (e.g. a trailing `stats`)
+    /// simply ignore it — so a measure-then-read-counters batch works
+    /// under any selector. A *top-level* non-scenario request with a
+    /// backend selector is still a typed error.
+    pub fn handle_env(&self, req: &Request, env: &RequestEnvelope) -> Response {
         if let Request::Batch { items } = req {
             // Mirror the wire decoder's 1..=MAX_BATCH_ITEMS contract for
             // programmatically built batches too.
@@ -235,11 +294,11 @@ impl Service {
             return Response::Batch {
                 items: items
                     .iter()
-                    .map(|item| self.handle_one(item, use_cache))
+                    .map(|item| self.handle_one(item, env, false))
                     .collect(),
             };
         }
-        self.handle_one(req, use_cache)
+        self.handle_one(req, env, true)
     }
 
     /// Result-cache counters (the `stats` request's `cache_*` fields).
@@ -253,32 +312,78 @@ impl Service {
         self.core.engine_runs.load(Ordering::Relaxed)
     }
 
+    /// Cold scenario-point executions per backend, in
+    /// [`BackendId::ALL`] order (the `stats` request's
+    /// `engine_runs_<backend>` fields). Sums to at most
+    /// [`Service::engine_runs`] — repro drivers count only toward the
+    /// total.
+    pub fn backend_runs(&self) -> Vec<u64> {
+        self.core
+            .backend_runs
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// The backend answering requests that name none.
+    pub fn default_backend(&self) -> BackendId {
+        self.core.default_backend
+    }
+
     /// One non-batch request. Scenario-backed requests (the v1
-    /// simulator trio and `scenario` itself) run point-by-point through
-    /// the per-point cache; `repro` keeps request-level memoization;
-    /// everything else runs cold. Error responses are never cached.
-    fn handle_one(&self, req: &Request, use_cache: bool) -> Response {
+    /// simulator trio and `scenario` itself) resolve their backend and
+    /// run point-by-point through the per-point cache; `repro` keeps
+    /// request-level memoization; everything else runs cold. Error
+    /// responses are never cached. `strict_backend` is false for batch
+    /// items: a batch-envelope backend selector applies to the
+    /// scenario-backed items and is ignored by the rest, while a
+    /// top-level misplaced selector is a typed error.
+    fn handle_one(
+        &self,
+        req: &Request,
+        env: &RequestEnvelope,
+        strict_backend: bool,
+    ) -> Response {
         if let Some((spec, single)) = desugar(req) {
-            return match self.core.run_scenario(&spec, use_cache) {
+            let resolved = match self.resolved_spec(&spec, env.backend) {
+                Ok(s) => s,
+                Err(e) => return Response::from(e),
+            };
+            return match self.core.run_scenario(&resolved, env.cache) {
                 Ok(resp) if single => unwrap_single(resp),
                 Ok(resp) => resp,
                 Err(e) => Response::from(e),
             };
         }
-        // Submit carries the envelope's cache flag into the job, so a
-        // `"cache":false` measurement sweep runs cold in the workers
-        // exactly like its synchronous `scenario` form would.
+        // Submit carries the envelope's cache flag and backend into the
+        // job, so a `"cache":false` or `"backend":"analytic"`
+        // measurement sweep runs in the workers exactly like its
+        // synchronous `scenario` form would.
         if let Request::Submit { spec, .. } = req {
-            return match self.submit_job(spec, false, use_cache) {
+            let resolved = match self.resolved_spec(spec, env.backend) {
+                Ok(s) => s,
+                Err(e) => return Response::from(e),
+            };
+            return match self.submit_resolved(resolved, false, env.cache) {
                 Ok((view, _rx)) => Response::Job(view),
                 Err(e) => Response::from(e),
             };
+        }
+        // A top-level backend selector on anything else is a typed
+        // error, not a silent no-op (batch items are lenient — see
+        // `strict_backend`).
+        if strict_backend && env.backend.is_some() {
+            return Response::from(ApiError::bad_request(format!(
+                "\"backend\" only applies to sim/plan/sparsity/scenario/\
+                 submit requests (got {:?})",
+                req.type_name()
+            )));
         }
         let cold = |r: &Request| match self.try_handle(r) {
             Ok(resp) => resp,
             Err(e) => Response::from(e),
         };
-        if use_cache && self.cacheable(req) {
+        if env.cache && self.cacheable(req) {
             let key = req.cache_key();
             if let Some(resp) = self.core.cache.get(&key) {
                 return resp;
@@ -290,6 +395,47 @@ impl Service {
             return resp;
         }
         cold(req)
+    }
+
+    /// Resolve a spec's execution backend (spec field, else envelope
+    /// key, else the service default) and gate it on the backend's
+    /// capabilities (DESIGN.md §6.8). Capability gating runs before
+    /// range validation — all-or-nothing, so an unsupported sweep never
+    /// half-answers. The resolved spec names its backend explicitly,
+    /// which is what keys the per-point cache (backends never share
+    /// entries).
+    fn resolved_spec(
+        &self,
+        spec: &ScenarioSpec,
+        envelope: Option<BackendId>,
+    ) -> Result<ScenarioSpec, ApiError> {
+        let id = match (spec.backend, envelope) {
+            (Some(a), Some(b)) if a != b => {
+                return Err(ApiError::bad_request(format!(
+                    "backend requested twice and disagreeing: the spec \
+                     says {:?}, the envelope says {:?}",
+                    a.as_str(),
+                    b.as_str()
+                )))
+            }
+            (a, b) => a.or(b).unwrap_or(self.core.default_backend),
+        };
+        let caps = backend::get(id).capabilities();
+        if !caps.supports(spec.ask, spec.shape) {
+            return Err(ApiError::new(
+                ErrorCode::UnsupportedByBackend,
+                format!(
+                    "backend {:?} does not support ask {:?} with shape \
+                     {:?} (ask \"backends\" for the capability table)",
+                    id.as_str(),
+                    spec.ask.as_str(),
+                    spec.shape.as_str()
+                ),
+            ));
+        }
+        let mut resolved = spec.clone();
+        resolved.backend = Some(id);
+        Ok(resolved)
     }
 
     /// Whether `req` is memoized at request level: only `repro` of
@@ -305,34 +451,49 @@ impl Service {
         }
     }
 
-    /// Validate + enqueue a scenario as an async job. `watch: true`
-    /// registers a progress receiver atomically with the enqueue (the
-    /// serve transport's push source); `use_cache: false` makes the
-    /// workers run every point cold.
+    /// Validate + enqueue a scenario as an async job. The spec's
+    /// backend is resolved and capability-gated here too, so the direct
+    /// API path is as strict as the wire. `watch: true` registers a
+    /// progress receiver atomically with the enqueue (the serve
+    /// transport's push source); `use_cache: false` makes the workers
+    /// run every point cold.
     pub fn submit_job(
         &self,
         spec: &ScenarioSpec,
         watch: bool,
         use_cache: bool,
     ) -> Result<(JobView, Option<mpsc::Receiver<JobView>>), ApiError> {
-        let points = spec.validated_points()?;
-        self.jobs.submit(
-            spec.clone(),
-            points.len() as u64,
-            watch,
-            use_cache,
-        )
+        let spec = self.resolved_spec(spec, None)?;
+        self.submit_resolved(spec, watch, use_cache)
     }
 
-    /// [`Service::submit_job`] as a transport-ready pair: the response
+    /// Enqueue an already-resolved spec (the transport paths resolve
+    /// with the envelope's selector first, so the gate runs exactly
+    /// once per submit).
+    fn submit_resolved(
+        &self,
+        spec: ScenarioSpec,
+        watch: bool,
+        use_cache: bool,
+    ) -> Result<(JobView, Option<mpsc::Receiver<JobView>>), ApiError> {
+        let points = spec.validated_points()?;
+        self.jobs.submit(spec, points.len() as u64, watch, use_cache)
+    }
+
+    /// [`Service::submit_job`] as a transport-ready pair honoring the
+    /// request envelope (cache flag + backend selector): the response
     /// line to write, plus the progress receiver when the submit was
     /// accepted.
     pub fn submit_watched(
         &self,
         spec: &ScenarioSpec,
-        use_cache: bool,
+        env: &RequestEnvelope,
     ) -> (Response, Option<mpsc::Receiver<JobView>>) {
-        match self.submit_job(spec, true, use_cache) {
+        let resolved = match self.resolved_spec(spec, env.backend) {
+            Ok(s) => s,
+            Err(e) => return (Response::from(e), None),
+        };
+        match self.submit_resolved(resolved, true, env.cache) {
             Ok((view, rx)) => (Response::Job(view), rx),
             Err(e) => (Response::from(e), None),
         }
@@ -435,6 +596,31 @@ impl Service {
                         id: s.id.to_string(),
                         title: s.title.to_string(),
                         section: s.section.to_string(),
+                        deterministic: s.deterministic,
+                    })
+                    .collect(),
+            }),
+            Request::Backends => Ok(Response::Backends {
+                backends: backend::REGISTRY
+                    .iter()
+                    .map(|b| {
+                        let c = b.capabilities();
+                        BackendInfo {
+                            id: c.id.as_str().to_string(),
+                            description: c.description.to_string(),
+                            asks: c
+                                .asks
+                                .iter()
+                                .map(|a| a.as_str().to_string())
+                                .collect(),
+                            sim_shapes: c
+                                .sim_shapes
+                                .iter()
+                                .map(|s| s.as_str().to_string())
+                                .collect(),
+                            deterministic: c.deterministic,
+                            default: c.id == self.core.default_backend,
+                        }
                     })
                     .collect(),
             }),
@@ -444,6 +630,7 @@ impl Service {
             Request::Stats => Ok(Response::Stats {
                 cache: self.core.cache.stats(),
                 engine_runs: self.engine_runs(),
+                backend_runs: self.backend_runs(),
             }),
             // Top-level batches are fanned out by `handle_opts`; a
             // batch reaching this point was nested inside another (the
@@ -542,55 +729,39 @@ impl Core {
         resp
     }
 
-    /// Cold execution of one point — the single place the simulator
-    /// trio is compiled down to engine/coordinator/sparsity layers.
-    /// Infallible by construction: ranges were checked up front.
+    /// Cold execution of one point — dispatch to the resolved
+    /// [`crate::backend::Backend`] (the `des` replay engine or the
+    /// `analytic` closed-form fast path) and map its typed result onto
+    /// the wire response. Infallible by construction: ranges and
+    /// backend capabilities were checked up front. Counts both the
+    /// total and the per-backend cold-execution counters.
     fn run_point_cold(&self, spec: &ScenarioSpec, p: &Point) -> Response {
+        let id = spec.backend.unwrap_or(self.default_backend);
+        let b = backend::get(id);
         self.engine_runs.fetch_add(1, Ordering::Relaxed);
+        self.backend_runs[id.index()].fetch_add(1, Ordering::Relaxed);
         match spec.ask {
             Ask::Sim => {
-                let ks = spec.kernels(p);
-                let engine =
-                    Engine::new(&self.cfg, ConcurrencyProfile::ace());
-                // One concurrent simulation per point: the speedup
-                // derives from this run plus the (much cheaper) serial
-                // solo makespans instead of re-simulating the set.
-                let run = engine.run(&ks, self.cfg.seed);
-                let speedup = engine.serial_makespan_ns(&ks, self.cfg.seed)
-                    / run.makespan_ns;
+                let r = b.simulate(&self.cfg, spec, p);
                 Response::Sim {
-                    makespan_ms: run.makespan_ns / 1e6,
-                    speedup_vs_serial: speedup,
-                    overlap_efficiency: run.overlap_efficiency,
-                    fairness: fairness(&run.per_stream_totals()),
-                    l2_miss: run.l2_miss[0],
-                    lds_util: run.lds_util,
+                    makespan_ms: r.makespan_ms,
+                    speedup_vs_serial: r.speedup_vs_serial,
+                    overlap_efficiency: r.overlap_efficiency,
+                    fairness: r.fairness,
+                    l2_miss: r.l2_miss,
+                    lds_util: r.lds_util,
                 }
             }
             Ask::Plan => {
-                let ks = spec.kernels(p);
-                let objective = spec
-                    .objective
-                    .unwrap_or(Objective::LatencySensitive);
-                let coord = Coordinator::new(
-                    self.cfg.as_ref().clone(),
-                    objective,
-                );
-                let plan = coord.plan(&ks, true);
+                let r = b.plan(&self.cfg, spec, p);
                 Response::Plan {
-                    objective: objective_name(objective).to_string(),
-                    sparse: plan.groups.iter().any(|g| {
-                        g.kernels.iter().any(|k| k.sparsity.is_sparse())
-                    }),
-                    groups: plan
+                    objective: objective_name(r.objective).to_string(),
+                    sparse: r.sparse,
+                    groups: r
                         .groups
-                        .iter()
+                        .into_iter()
                         .map(|g| PlanGroup {
-                            kernels: g
-                                .kernels
-                                .iter()
-                                .map(|k| k.label())
-                                .collect(),
+                            kernels: g.kernels,
                             streams: g.streams,
                             expected_fairness: g.expected_fairness,
                             process_isolation: g.process_isolation,
@@ -599,22 +770,12 @@ impl Core {
                 }
             }
             Ask::Sparsity => {
-                // Validation pins sparsity asks to a dense homogeneous
-                // set, so the single candidate is built directly —
-                // identical to the v1 handler's
-                // `KernelDesc::gemm(n, Fp8)` for desugared requests.
-                let k =
-                    KernelDesc::gemm(p.n, p.precision).with_iters(p.iters);
-                let d = decide_sparsity(&k, p.streams, true);
-                let model = SpeedupModel::new(&self.cfg);
+                let r = b.sparsity(&self.cfg, spec, p);
                 Response::Sparsity {
-                    enable: d.enable,
-                    reason: format!("{:?}", d.reason),
-                    isolated_speedup: model
-                        .isolated(&k, SparsityMode::SparseLhs)
-                        .speedup(),
-                    concurrent_speedup: model
-                        .concurrent_per_stream(&k, p.streams.max(2)),
+                    enable: r.enable,
+                    reason: r.reason,
+                    isolated_speedup: r.isolated_speedup,
+                    concurrent_speedup: r.concurrent_speedup,
                 }
             }
         }
@@ -777,6 +938,192 @@ mod tests {
                 assert_eq!(experiments.len(), experiments::REGISTRY.len());
                 assert_eq!(experiments[0].id, "table1");
                 assert!(!experiments[0].title.is_empty());
+                // The PR-3 purity flag is surfaced on the wire now.
+                for (info, spec) in
+                    experiments.iter().zip(experiments::REGISTRY)
+                {
+                    assert_eq!(
+                        info.deterministic, spec.deterministic,
+                        "{}",
+                        spec.id
+                    );
+                }
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backends_request_mirrors_the_backend_registry() {
+        match svc().handle(&Request::Backends) {
+            Response::Backends { backends } => {
+                assert_eq!(backends.len(), backend::REGISTRY.len());
+                assert_eq!(backends[0].id, "des");
+                assert!(backends[0].default, "des is the default");
+                assert_eq!(backends[1].id, "analytic");
+                assert!(!backends[1].default);
+                assert!(backends
+                    .iter()
+                    .all(|b| b.deterministic && !b.asks.is_empty()));
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        // A service built with another default reports it.
+        let s = Service::with_default_backend(
+            Config::mi300a(),
+            super::CachePolicy::default(),
+            BackendId::Analytic,
+        );
+        match s.handle(&Request::Backends) {
+            Response::Backends { backends } => {
+                assert!(!backends[0].default && backends[1].default);
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// The analytic backend answers the same points with zero DES
+    /// executions, counted truthfully per backend — and the two
+    /// backends never share cache entries.
+    #[test]
+    fn analytic_backend_runs_cold_points_without_the_des() {
+        let s = svc();
+        let mut spec = ScenarioSpec::sparsity_question(256, 2);
+        spec.sweep.streams = vec![1, 2, 4];
+        let mut analytic = spec.clone();
+        analytic.backend = Some(BackendId::Analytic);
+        let a = s.handle(&Request::Scenario { spec: analytic });
+        assert!(!matches!(a, Response::Error { .. }), "{a:?}");
+        assert_eq!(s.engine_runs(), 3);
+        assert_eq!(s.backend_runs(), vec![0, 3], "no DES execution");
+        // The same sweep on the default backend runs cold again —
+        // backends never share entries — and answers identically for
+        // the closed-form sparsity ask.
+        let d = s.handle(&Request::Scenario { spec });
+        assert_eq!(s.backend_runs(), vec![3, 3]);
+        assert_eq!(
+            a.to_json(None).to_string(),
+            d.to_json(None).to_string(),
+            "plan/sparsity asks are backend-invariant"
+        );
+        // Stats surfaces the split.
+        match s.handle(&Request::Stats) {
+            Response::Stats { engine_runs, backend_runs, .. } => {
+                assert_eq!(engine_runs, 6);
+                assert_eq!(backend_runs, vec![3, 3]);
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// The envelope `"backend"` key reaches desugared v1 requests, and
+    /// repeats hit the backend-specific cache entry.
+    #[test]
+    fn envelope_backend_selects_the_engine_for_v1_requests() {
+        let s = svc();
+        let req = Request::Sim {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 4,
+        };
+        let env = super::RequestEnvelope {
+            backend: Some(BackendId::Analytic),
+            ..super::RequestEnvelope::default()
+        };
+        let cold = s.handle_env(&req, &env);
+        assert!(matches!(cold, Response::Sim { .. }), "{cold:?}");
+        assert_eq!(s.backend_runs(), vec![0, 1]);
+        let warm = s.handle_env(&req, &env);
+        assert_eq!(cold, warm);
+        assert_eq!(s.backend_runs(), vec![0, 1], "repeat must hit cache");
+        // The same request without the selector runs the DES — a
+        // different cache entry, a different engine.
+        let des = s.handle(&req);
+        assert_eq!(s.backend_runs(), vec![1, 1]);
+        assert!(matches!(des, Response::Sim { .. }));
+    }
+
+    #[test]
+    fn unsupported_and_misplaced_backend_selectors_are_typed() {
+        let s = svc();
+        // The analytic sim refuses the imbalanced pair, before any
+        // point runs.
+        let mut spec = ScenarioSpec::new(Ask::Sim);
+        spec.shape = super::super::scenario::Shape::ImbalancedPair;
+        spec.streams = 2;
+        spec.backend = Some(BackendId::Analytic);
+        match s.handle(&Request::Scenario { spec: spec.clone() }) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::UnsupportedByBackend);
+                assert!(message.contains("imbalanced_pair"), "{message}");
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        assert_eq!(s.engine_runs(), 0);
+        // Same gate on the job path.
+        match s.handle(&Request::Submit { spec, progress: false }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::UnsupportedByBackend)
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        // A backend selector on a non-scenario request is refused.
+        let env = super::RequestEnvelope {
+            backend: Some(BackendId::Analytic),
+            ..super::RequestEnvelope::default()
+        };
+        match s.handle_env(&Request::Config, &env) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRequest);
+                assert!(message.contains("only applies"), "{message}");
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        // Spec and envelope disagreeing is refused.
+        let mut spec = ScenarioSpec::sparsity_question(256, 2);
+        spec.backend = Some(BackendId::Des);
+        match s.handle_env(&Request::Scenario { spec }, &env) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRequest);
+                assert!(message.contains("twice"), "{message}");
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// A batch-envelope backend selector routes the scenario-backed
+    /// items and is ignored by the rest, so measure-then-read-stats
+    /// batches work under any selector.
+    #[test]
+    fn batch_envelope_backend_applies_to_scenario_items_only() {
+        let s = svc();
+        let env = super::RequestEnvelope {
+            backend: Some(BackendId::Analytic),
+            ..super::RequestEnvelope::default()
+        };
+        let batch = Request::Batch {
+            items: vec![
+                Request::Sparsity { n: 512, streams: 4 },
+                Request::Stats,
+            ],
+        };
+        match s.handle_env(&batch, &env) {
+            Response::Batch { items } => {
+                assert!(
+                    matches!(items[0], Response::Sparsity { .. }),
+                    "{:?}",
+                    items[0]
+                );
+                match &items[1] {
+                    Response::Stats { backend_runs, .. } => {
+                        assert_eq!(
+                            backend_runs,
+                            &vec![0, 1],
+                            "the sparsity item must have run analytic"
+                        );
+                    }
+                    other => panic!("unexpected stats item: {other:?}"),
+                }
             }
             other => panic!("unexpected response: {other:?}"),
         }

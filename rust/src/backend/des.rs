@@ -1,0 +1,106 @@
+//! The `des` backend: the discrete-event engine behind the [`Backend`]
+//! trait.
+//!
+//! This is the pre-backend service execution path moved verbatim — the
+//! `sim` ask replays contention through [`crate::sim::Engine`] exactly
+//! as `api::Service` did before the backend layer existed, so a request
+//! that does not select a backend answers byte-identically to PR 4.
+
+use super::{
+    closed_form_plan, closed_form_sparsity, Backend, BackendId,
+    Capabilities, PlanResult, SimResult, SparsityResult,
+};
+use crate::api::scenario::{Ask, Point, ScenarioSpec, Shape};
+use crate::config::Config;
+use crate::metrics::fairness::fairness;
+use crate::sim::{ConcurrencyProfile, Engine};
+
+/// The reference engine: replay the dynamics, event by event.
+pub struct DesBackend;
+
+impl Backend for DesBackend {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            id: BackendId::Des,
+            description: "discrete-event replay of the contention \
+                          dynamics (the reference engine)",
+            asks: &Ask::ALL,
+            sim_shapes: &Shape::ALL,
+            deterministic: true,
+            steps_des: true,
+        }
+    }
+
+    fn simulate(
+        &self,
+        cfg: &Config,
+        spec: &ScenarioSpec,
+        p: &Point,
+    ) -> SimResult {
+        let ks = spec.kernels(p);
+        let engine = Engine::new(cfg, ConcurrencyProfile::ace());
+        // One concurrent simulation per point: the speedup derives from
+        // this run plus the (much cheaper) serial solo makespans instead
+        // of re-simulating the set.
+        let run = engine.run(&ks, cfg.seed);
+        let speedup =
+            engine.serial_makespan_ns(&ks, cfg.seed) / run.makespan_ns;
+        SimResult {
+            makespan_ms: run.makespan_ns / 1e6,
+            speedup_vs_serial: speedup,
+            overlap_efficiency: run.overlap_efficiency,
+            fairness: fairness(&run.per_stream_totals()),
+            l2_miss: run.l2_miss[0],
+            lds_util: run.lds_util,
+        }
+    }
+
+    fn plan(
+        &self,
+        cfg: &Config,
+        spec: &ScenarioSpec,
+        p: &Point,
+    ) -> PlanResult {
+        closed_form_plan(cfg, spec, p)
+    }
+
+    fn sparsity(
+        &self,
+        cfg: &Config,
+        spec: &ScenarioSpec,
+        p: &Point,
+    ) -> SparsityResult {
+        closed_form_sparsity(cfg, spec, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+
+    #[test]
+    fn sim_points_answer_with_physical_invariants() {
+        let cfg = Config::mi300a();
+        let spec = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        let p = spec.expand()[0];
+        let r = DesBackend.simulate(&cfg, &spec, &p);
+        assert!(
+            r.speedup_vs_serial > 1.0 && r.speedup_vs_serial < 4.0,
+            "speedup {}",
+            r.speedup_vs_serial
+        );
+        assert!((0.0..=1.0).contains(&r.fairness));
+        assert!(r.makespan_ms > 0.0);
+    }
+
+    #[test]
+    fn sim_points_are_deterministic() {
+        let cfg = Config::mi300a();
+        let spec = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        let p = spec.expand()[0];
+        let a = DesBackend.simulate(&cfg, &spec, &p);
+        let b = DesBackend.simulate(&cfg, &spec, &p);
+        assert_eq!(a, b);
+    }
+}

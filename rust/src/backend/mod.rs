@@ -1,0 +1,342 @@
+//! Pluggable execution backends (DESIGN.md §6.8).
+//!
+//! The paper yields two distinct ways to answer the same question:
+//! **replay** the contention dynamics (the DES in [`crate::sim`]) or
+//! **evaluate** the calibrated closed forms directly (occupancy
+//! thresholds, fairness ratios, sparsity break-evens). A [`Backend`]
+//! packages one such answering strategy behind a uniform trait; the
+//! service compiles every scenario point down to whichever backend the
+//! request selected (`"backend"` envelope key / ScenarioSpec field,
+//! default [`DEFAULT`] = `des`).
+//!
+//! Two implementations ship:
+//!
+//! * [`des::DesBackend`] — the existing `sim::engine` discrete-event
+//!   simulator, moved behind the trait with **zero behavior change**:
+//!   a request that does not name a backend answers byte-identically
+//!   to the pre-backend service.
+//! * [`analytic::AnalyticBackend`] — closed-form evaluation from the
+//!   calibrated cost/occupancy/sparsity models (`sim/cost.rs`,
+//!   `coordinator/occupancy.rs` + `concurrency.rs`,
+//!   `sparsity/speedup.rs`) without stepping the DES. Orders of
+//!   magnitude faster per point; first-order accurate (the tolerance
+//!   statement lives in `docs/backends.md` and is enforced by
+//!   `tests/backend_equivalence.rs`).
+//!
+//! [`REGISTRY`] mirrors the `experiments::REGISTRY` pattern: a static
+//! table that `Request::Backends` discovery, the service dispatcher,
+//! the docs-coverage test, and the CI backend-matrix smoke all consume.
+//! Adding a backend is one new module implementing [`Backend`] plus one
+//! [`BackendId`] variant and one registry row.
+//!
+//! The `plan` and `sparsity` asks were already closed-form (the
+//! coordinator and the speedup model never step the DES), so both
+//! backends share one implementation ([`closed_form_plan`] /
+//! [`closed_form_sparsity`]) and answer those asks byte-identically;
+//! only the `sim` ask diverges (replay vs estimate).
+
+pub mod analytic;
+pub mod des;
+
+pub use analytic::AnalyticBackend;
+pub use des::DesBackend;
+
+use crate::api::scenario::{Ask, Point, ScenarioSpec, Shape};
+use crate::config::Config;
+use crate::coordinator::{decide_sparsity, Coordinator, Objective};
+use crate::sim::{KernelDesc, SparsityMode};
+use crate::sparsity::SpeedupModel;
+
+/// Stable backend identifier. The wire spelling ([`BackendId::as_str`])
+/// is part of the protocol: it is what the `"backend"` key carries,
+/// what `Request::Backends` lists, and what the per-backend `stats`
+/// counters are named after.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendId {
+    /// Discrete-event replay (`sim::engine`) — the reference engine.
+    Des,
+    /// Calibrated closed forms — the fast-path estimator.
+    Analytic,
+}
+
+impl BackendId {
+    /// Every registered backend, in [`REGISTRY`] order.
+    pub const ALL: [BackendId; 2] = [BackendId::Des, BackendId::Analytic];
+
+    /// The stable wire spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendId::Des => "des",
+            BackendId::Analytic => "analytic",
+        }
+    }
+
+    /// Inverse of [`BackendId::as_str`].
+    pub fn parse(s: &str) -> Option<BackendId> {
+        BackendId::ALL.iter().copied().find(|b| b.as_str() == s)
+    }
+
+    /// Index into [`REGISTRY`] (and the service's per-backend
+    /// counters).
+    pub fn index(self) -> usize {
+        match self {
+            BackendId::Des => 0,
+            BackendId::Analytic => 1,
+        }
+    }
+
+    /// The flattened `stats` field carrying this backend's cold-run
+    /// counter (pinned by `tests/api_protocol.rs`).
+    pub fn stat_field(self) -> &'static str {
+        match self {
+            BackendId::Des => "engine_runs_des",
+            BackendId::Analytic => "engine_runs_analytic",
+        }
+    }
+
+    /// `des|analytic` — for error messages listing the registry.
+    pub fn names() -> String {
+        BackendId::ALL
+            .iter()
+            .map(|b| b.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+/// Number of registered backends (sizes the service's counters).
+pub const COUNT: usize = BackendId::ALL.len();
+
+/// The backend requests get when they do not name one. `des` keeps
+/// every pre-backend response byte-identical.
+pub const DEFAULT: BackendId = BackendId::Des;
+
+/// What a backend can answer. Requests outside a backend's
+/// capabilities are refused up front with a typed
+/// `unsupported_by_backend` error — never half-answered.
+#[derive(Debug, Clone, Copy)]
+pub struct Capabilities {
+    pub id: BackendId,
+    /// One-line description (surfaced by `Request::Backends`).
+    pub description: &'static str,
+    /// Asks the backend answers at all.
+    pub asks: &'static [Ask],
+    /// Stream-set shapes the backend's `sim` ask handles. (`plan` and
+    /// `sparsity` are shape-complete on every backend: the coordinator
+    /// plans arbitrary pools, and the sparsity ask is validated to a
+    /// homogeneous candidate anyway.)
+    pub sim_shapes: &'static [Shape],
+    /// Whether answers are pure functions of the `Config` (safe to
+    /// cache). Both shipped backends are.
+    pub deterministic: bool,
+    /// Whether `sim` points execute discrete events (the cost the
+    /// analytic fast path exists to avoid).
+    pub steps_des: bool,
+}
+
+impl Capabilities {
+    /// Whether this backend can answer `ask` over `shape`.
+    pub fn supports(&self, ask: Ask, shape: Shape) -> bool {
+        if !self.asks.contains(&ask) {
+            return false;
+        }
+        ask != Ask::Sim || self.sim_shapes.contains(&shape)
+    }
+}
+
+/// What a `sim` point answers (mirrors the wire `sim` response).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    pub makespan_ms: f64,
+    pub speedup_vs_serial: f64,
+    pub overlap_efficiency: f64,
+    pub fairness: f64,
+    pub l2_miss: f64,
+    pub lds_util: f64,
+}
+
+/// One scheduled group inside a [`PlanResult`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanGroupResult {
+    pub kernels: Vec<String>,
+    pub streams: usize,
+    pub expected_fairness: f64,
+    pub process_isolation: bool,
+}
+
+/// What a `plan` point answers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanResult {
+    pub objective: Objective,
+    pub sparse: bool,
+    pub groups: Vec<PlanGroupResult>,
+}
+
+/// What a `sparsity` point answers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsityResult {
+    pub enable: bool,
+    pub reason: String,
+    pub isolated_speedup: f64,
+    pub concurrent_speedup: f64,
+}
+
+/// One answering strategy for scenario points. Implementations must be
+/// stateless (`Send + Sync`, shared from a static registry) and
+/// deterministic per `Config`; callers gate on
+/// [`Capabilities::supports`] before invoking, so the answer methods
+/// are infallible.
+pub trait Backend: Send + Sync {
+    /// What this backend can answer, and how.
+    fn capabilities(&self) -> Capabilities;
+    /// Answer a `sim` point.
+    fn simulate(&self, cfg: &Config, spec: &ScenarioSpec, p: &Point)
+        -> SimResult;
+    /// Answer a `plan` point.
+    fn plan(&self, cfg: &Config, spec: &ScenarioSpec, p: &Point)
+        -> PlanResult;
+    /// Answer a `sparsity` point.
+    fn sparsity(&self, cfg: &Config, spec: &ScenarioSpec, p: &Point)
+        -> SparsityResult;
+}
+
+/// Every backend, in [`BackendId::ALL`] order — the single source of
+/// truth for discovery, dispatch, docs coverage, and the CI matrix.
+pub static REGISTRY: &[&dyn Backend] = &[&DesBackend, &AnalyticBackend];
+
+/// Look a backend up by id (total: every [`BackendId`] is registered).
+pub fn get(id: BackendId) -> &'static dyn Backend {
+    REGISTRY[id.index()]
+}
+
+/// Look a backend up by wire spelling.
+pub fn find(s: &str) -> Option<&'static dyn Backend> {
+    BackendId::parse(s).map(get)
+}
+
+/// The one `plan` implementation both backends share: the coordinator
+/// is already a closed-form layer (occupancy-matched co-scheduling,
+/// the §9.2 concurrency governor, the context-dependent sparsity
+/// policy) — no DES involved. Byte-for-byte the pre-backend service
+/// path.
+pub fn closed_form_plan(
+    cfg: &Config,
+    spec: &ScenarioSpec,
+    p: &Point,
+) -> PlanResult {
+    let ks = spec.kernels(p);
+    let objective = spec.objective.unwrap_or(Objective::LatencySensitive);
+    let coord = Coordinator::new(cfg.clone(), objective);
+    let plan = coord.plan(&ks, true);
+    PlanResult {
+        objective,
+        sparse: plan
+            .groups
+            .iter()
+            .any(|g| g.kernels.iter().any(|k| k.sparsity.is_sparse())),
+        groups: plan
+            .groups
+            .iter()
+            .map(|g| PlanGroupResult {
+                kernels: g.kernels.iter().map(|k| k.label()).collect(),
+                streams: g.streams,
+                expected_fairness: g.expected_fairness,
+                process_isolation: g.process_isolation,
+            })
+            .collect(),
+    }
+}
+
+/// The one `sparsity` implementation both backends share: the §9.2
+/// decision table plus the Fig 11-13 speedup model — closed forms by
+/// construction. Byte-for-byte the pre-backend service path
+/// (validation pins sparsity asks to a dense homogeneous candidate, so
+/// the single kernel is built directly).
+pub fn closed_form_sparsity(
+    cfg: &Config,
+    _spec: &ScenarioSpec,
+    p: &Point,
+) -> SparsityResult {
+    let k = KernelDesc::gemm(p.n, p.precision).with_iters(p.iters);
+    let d = decide_sparsity(&k, p.streams, true);
+    let model = SpeedupModel::new(cfg);
+    SparsityResult {
+        enable: d.enable,
+        reason: format!("{:?}", d.reason),
+        isolated_speedup: model
+            .isolated(&k, SparsityMode::SparseLhs)
+            .speedup(),
+        concurrent_speedup: model.concurrent_per_stream(&k, p.streams.max(2)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+
+    #[test]
+    fn ids_roundtrip_and_index_the_registry() {
+        assert_eq!(REGISTRY.len(), COUNT);
+        for (i, id) in BackendId::ALL.iter().enumerate() {
+            assert_eq!(BackendId::parse(id.as_str()), Some(*id));
+            assert_eq!(id.index(), i);
+            assert_eq!(
+                REGISTRY[i].capabilities().id,
+                *id,
+                "registry order must match BackendId::ALL"
+            );
+            assert!(id.stat_field().starts_with("engine_runs_"));
+            assert!(id.stat_field().ends_with(id.as_str()));
+        }
+        assert_eq!(BackendId::parse("nope"), None);
+        assert!(find("des").is_some());
+        assert!(find("frobnicate").is_none());
+        assert_eq!(DEFAULT, BackendId::Des);
+    }
+
+    #[test]
+    fn capability_table_is_honest() {
+        let des = get(BackendId::Des).capabilities();
+        let analytic = get(BackendId::Analytic).capabilities();
+        // The reference engine answers everything.
+        for ask in Ask::ALL {
+            for shape in Shape::ALL {
+                assert!(des.supports(ask, shape), "{ask:?}/{shape:?}");
+            }
+        }
+        assert!(des.steps_des && !analytic.steps_des);
+        assert!(des.deterministic && analytic.deterministic);
+        // The analytic sim handles homogeneous/mixed but refuses the
+        // imbalanced pair (fragmentation fairness is replay territory).
+        assert!(analytic.supports(Ask::Sim, Shape::Homogeneous));
+        assert!(analytic.supports(Ask::Sim, Shape::MixedSparse));
+        assert!(!analytic.supports(Ask::Sim, Shape::ImbalancedPair));
+        // Plan/sparsity are shape-complete on every backend.
+        for shape in Shape::ALL {
+            assert!(analytic.supports(Ask::Plan, shape));
+            assert!(analytic.supports(Ask::Sparsity, shape));
+        }
+    }
+
+    #[test]
+    fn plan_and_sparsity_are_shared_closed_forms_across_backends() {
+        let cfg = Config::mi300a();
+        let spec = ScenarioSpec::plan(
+            Objective::ThroughputOriented,
+            8,
+            512,
+            Precision::Fp8,
+        );
+        let p = spec.expand()[0];
+        let a = get(BackendId::Des).plan(&cfg, &spec, &p);
+        let b = get(BackendId::Analytic).plan(&cfg, &spec, &p);
+        assert_eq!(a, b, "plan must be backend-invariant");
+
+        let spec = ScenarioSpec::sparsity_question(512, 4);
+        let p = spec.expand()[0];
+        let a = get(BackendId::Des).sparsity(&cfg, &spec, &p);
+        let b = get(BackendId::Analytic).sparsity(&cfg, &spec, &p);
+        assert_eq!(a, b, "sparsity must be backend-invariant");
+    }
+}

@@ -23,8 +23,13 @@
 //! * [`api`] — the typed, versioned request/response surface
 //!   (DESIGN.md §6); the CLI and the TCP serve loop are thin transports
 //!   over its [`api::Service`].
+//! * [`backend`] — pluggable execution backends behind the service
+//!   (DESIGN.md §6.8): the `des` replay engine and the `analytic`
+//!   closed-form fast path, registered for wire-level selection and
+//!   discovery.
 
 pub mod api;
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

@@ -21,9 +21,10 @@
 //! ```
 
 use mi300a_char::api::{
-    parse_objective, Ask, CachePolicy, Client, ErrorCode, Request, Response,
-    ScenarioSpec, Service, Shape,
+    parse_objective, Ask, CachePolicy, Client, ErrorCode, Request,
+    RequestEnvelope, Response, ScenarioSpec, Service, Shape,
 };
+use mi300a_char::backend::BackendId;
 use mi300a_char::config::Config;
 use mi300a_char::isa::Precision;
 use mi300a_char::runtime::Manifest;
@@ -40,14 +41,16 @@ USAGE:
   mi300a-char run <entry> [--artifacts DIR]
   mi300a-char plan [--objective latency|throughput|isolation]
                    [--streams N] [--size N] [--precision P]
+                   [--backend des|analytic]
   mi300a-char scenario [--spec FILE] [--ask sim|plan|sparsity]
                    [--size N] [--precision P] [--streams N] [--iters N]
                    [--shape homogeneous|imbalanced_pair|mixed_sparse]
                    [--small-size N] [--objective O] [--sparsity MODE]
                    [--sweep-size A,B,..] [--sweep-streams A,B,..]
                    [--sweep-precision A,B,..] [--sweep-iters A,B,..]
-                   [--json] [--addr HOST:PORT]
+                   [--backend des|analytic] [--json] [--addr HOST:PORT]
   mi300a-char serve [--addr HOST:PORT] [--max-conns N] [--no-cache]
+                   [--backend des|analytic]
   mi300a-char client <json-request> [--addr HOST:PORT]
   mi300a-char config [--set section.field=value]
   mi300a-char list
@@ -63,7 +66,35 @@ Scenario sweeps (DESIGN.md §6.6, docs/scenarios.md) run locally by
 default; with --addr they submit as an async job and stream progress:
   mi300a-char scenario --size 512 --sweep-streams 1,2,4,8,16
   mi300a-char scenario --addr 127.0.0.1:7300 --ask sparsity --sweep-size 256,512,2048,8192
+Execution backends (DESIGN.md §6.8, docs/backends.md): --backend picks
+the engine answering sim/plan/sparsity points (des = DES replay,
+analytic = calibrated closed forms, ~100x faster per sim point);
+`mi300a-char list` and the `backends` request show the registry:
+  mi300a-char scenario --backend analytic --size 512 --sweep-streams 1,2,4,8,16
 ";
+
+/// Parse an optional `--backend` flag into a [`BackendId`], with the
+/// one error message every CLI path shares.
+fn parse_backend_flag(args: &Args) -> Result<Option<BackendId>, String> {
+    match args.get("backend") {
+        None => Ok(None),
+        Some(b) => BackendId::parse(b).map(Some).ok_or_else(|| {
+            format!(
+                "unknown backend {b:?} (registered: {})",
+                BackendId::names()
+            )
+        }),
+    }
+}
+
+/// [`parse_backend_flag`] for subcommands that print-and-exit: prints
+/// a usage error and returns `Err(2)` on an unknown id.
+fn backend_arg(args: &Args, what: &str) -> Result<Option<BackendId>, i32> {
+    parse_backend_flag(args).map_err(|e| {
+        eprintln!("{what}: {e}");
+        2
+    })
+}
 
 fn build_config(args: &Args) -> Config {
     let mut cfg = if let Some(path) = args.get("config") {
@@ -199,8 +230,16 @@ fn cmd_plan(args: &Args) -> i32 {
             return 2;
         }
     };
+    let backend = match backend_arg(args, "plan") {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
     let svc = one_shot_service(args);
-    match svc.handle(&Request::Plan { objective, streams, n, precision }) {
+    let env = RequestEnvelope { backend, ..RequestEnvelope::default() };
+    match svc.handle_env(
+        &Request::Plan { objective, streams, n, precision },
+        &env,
+    ) {
         Response::Plan { objective, sparse, groups } => {
             println!("objective: {objective}");
             for (i, g) in groups.iter().enumerate() {
@@ -238,7 +277,24 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
             .map_err(|e| format!("cannot read {path}: {e}"))?;
         let v = Json::parse(&text)
             .map_err(|e| format!("{path} is not valid JSON: {e}"))?;
-        return ScenarioSpec::from_json(&v).map_err(|e| e.to_string());
+        let mut spec =
+            ScenarioSpec::from_json(&v).map_err(|e| e.to_string())?;
+        // --backend fills a spec file that names none; a disagreeing
+        // pair is a usage error (mirrors the service's envelope rule).
+        if let Some(id) = parse_backend_flag(args)? {
+            match spec.backend {
+                Some(prev) if prev != id => {
+                    return Err(format!(
+                        "backend requested twice and disagreeing: {path} \
+                         says {:?}, --backend says {:?}",
+                        prev.as_str(),
+                        id.as_str()
+                    ))
+                }
+                _ => spec.backend = Some(id),
+            }
+        }
+        return Ok(spec);
     }
     let ask = Ask::parse(args.get_or("ask", "sim")).ok_or_else(|| {
         format!(
@@ -281,6 +337,9 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
             mi300a_char::sim::SparsityMode::parse(s).ok_or_else(|| {
                 format!("bad sparsity {s:?} (want dense|lhs|rhs|both)")
             })?;
+    }
+    if let Some(id) = parse_backend_flag(args)? {
+        spec.backend = Some(id);
     }
     let usize_list = |key: &str| -> Result<Vec<usize>, String> {
         match args.get(key) {
@@ -428,6 +487,23 @@ fn cmd_list(args: &Args) -> i32 {
             return 1;
         }
     }
+    match svc.handle(&Request::Backends) {
+        Response::Backends { backends } => {
+            println!("backends:");
+            for b in &backends {
+                println!(
+                    "  {:<9} {}{}",
+                    b.id,
+                    b.description,
+                    if b.default { " [default]" } else { "" }
+                );
+            }
+        }
+        other => {
+            eprintln!("list: unexpected response {other:?}");
+            return 1;
+        }
+    }
     match svc.load_manifest() {
         Ok(m) => {
             println!("artifacts ({}):", svc.artifacts_dir().display());
@@ -470,7 +546,13 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         CachePolicy::default()
     };
-    match mi300a_char::serve::serve_with(cfg, &addr, max, policy) {
+    let default_backend = match backend_arg(args, "serve") {
+        Ok(b) => b.unwrap_or(mi300a_char::backend::DEFAULT),
+        Err(code) => return code,
+    };
+    match mi300a_char::serve::serve_opts(cfg, &addr, max, policy,
+                                         default_backend)
+    {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("serve: {e}");
@@ -500,8 +582,9 @@ fn cmd_client(args: &Args) -> i32 {
         }
     };
     // Decode locally first: usage errors are caught (typed) before any
-    // connection is made. The envelope's `cache` flag is forwarded so
-    // `"cache":false` measurement requests stay cache-bypassing.
+    // connection is made. The envelope's `cache` and `backend` options
+    // are forwarded so `"cache":false` measurement requests stay
+    // cache-bypassing and `"backend":…` selections reach the server.
     let (req, env) = match Request::decode(&v) {
         Ok(decoded) => decoded,
         Err((e, _)) => {
@@ -516,7 +599,7 @@ fn cmd_client(args: &Args) -> i32 {
             return 1;
         }
     };
-    match client.request_json_opts(&req, env.cache) {
+    match client.request_json_env(&req, &env) {
         Ok((resp, _id)) => {
             println!("{resp}");
             // Typed error responses must be visible to shell pipelines.

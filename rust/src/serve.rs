@@ -4,12 +4,15 @@
 //! versioned JSON request (DESIGN.md §6); its optional `id` is echoed on
 //! the response so clients can pipeline many requests on one
 //! connection, its optional `"cache":false` envelope flag bypasses the
-//! service's result cache, and a `batch` request answers its items in
-//! one envelope. Any other non-empty line goes through the legacy text
-//! shim (`SIM`/`PLAN`/`SPARSITY`/`RUN`/`LIST`/`CONFIG`/`STATS`/`QUIT`),
-//! which desugars into the same typed requests — the response line is
-//! byte-identical to the JSON form without an `id` (enforced by
-//! tests/serve_integration.rs).
+//! service's result cache, its optional `"backend"` envelope key
+//! selects the execution backend for scenario-backed requests
+//! (DESIGN.md §6.8; `serve --backend` / [`serve_opts`] set the
+//! instance default), and a `batch` request answers its items in one
+//! envelope. Any other non-empty line goes through the legacy text
+//! shim (`SIM`/`PLAN`/`SPARSITY`/`RUN`/`LIST`/`CONFIG`/`STATS`/
+//! `BACKENDS`/`QUIT`), which desugars into the same typed requests —
+//! the response line is byte-identical to the JSON form without an
+//! `id` (enforced by tests/serve_integration.rs).
 //!
 //! ## Progress push (DESIGN.md §6.7)
 //!
@@ -77,9 +80,23 @@ pub fn serve_with(
     max_conns: Option<usize>,
     policy: CachePolicy,
 ) -> std::io::Result<()> {
+    serve_opts(cfg, addr, max_conns, policy, crate::backend::DEFAULT)
+}
+
+/// [`serve_with`] plus the instance's default execution backend
+/// (the CLI's `serve --backend`; DESIGN.md §6.8) — what answers
+/// requests that carry no `"backend"` selector of their own.
+pub fn serve_opts(
+    cfg: Config,
+    addr: &str,
+    max_conns: Option<usize>,
+    policy: CachePolicy,
+    default_backend: crate::backend::BackendId,
+) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
     println!("serving on {}", listener.local_addr()?);
-    let svc = Arc::new(Service::with_cache_policy(cfg, policy));
+    let svc =
+        Arc::new(Service::with_default_backend(cfg, policy, default_backend));
 
     let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
     let mut served = 0usize;
@@ -201,10 +218,10 @@ fn dispatch_json(
     };
     match Request::decode(&v) {
         Ok((Request::Submit { spec, progress: true }, env)) => {
-            let (resp, rx) = svc.submit_watched(&spec, env.cache);
+            let (resp, rx) = svc.submit_watched(&spec, &env);
             (resp, env.id, rx)
         }
-        Ok((req, env)) => (svc.handle_opts(&req, env.cache), env.id, None),
+        Ok((req, env)) => (svc.handle_env(&req, &env), env.id, None),
         Err((e, id)) => (Response::from(e), id, None),
     }
 }

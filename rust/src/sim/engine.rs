@@ -309,8 +309,10 @@ impl<'a> Engine<'a> {
     }
 
     /// Contention pressure in [0,1] for a stream count (drives the
-    /// bias sigma: 4 streams ~0.43, 8 streams 1.0).
-    fn pressure(n_streams: usize) -> f64 {
+    /// bias sigma: 4 streams ~0.43, 8 streams 1.0). Public so the
+    /// analytic backend's order-statistics tail uses the exact same
+    /// sigma scaling the DES draws with.
+    pub fn pressure(n_streams: usize) -> f64 {
         ((((n_streams as f64) - 1.0) / 7.0).clamp(0.0, 1.0)).powf(0.6)
     }
 

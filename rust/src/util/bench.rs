@@ -44,6 +44,14 @@ impl BenchResult {
         }
     }
 
+    /// Work-unit rate: `units_per_iter` units of work per timed call
+    /// (e.g. DES events per simulated point, points per sweep) over the
+    /// mean iteration time. The per-backend bench reports events/sec
+    /// and points/sec through this.
+    pub fn units_per_sec(&self, units_per_iter: f64) -> f64 {
+        units_per_iter * self.throughput_per_sec()
+    }
+
     /// One `results[]` entry of the bench-v1 schema.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -226,6 +234,11 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
         assert_eq!(b.results().len(), 1);
+        // 10 units per iteration = 10x the op rate.
+        assert!(
+            (r.units_per_sec(10.0) - 10.0 * r.throughput_per_sec()).abs()
+                < 1e-6
+        );
     }
 
     #[test]

@@ -4,11 +4,12 @@
 //! (DESIGN.md §6 is the prose spec these tests enforce).
 
 use mi300a_char::api::{
-    parse_legacy, ApiError, Ask, CachePolicy, CacheStats, ErrorCode,
-    ExperimentInfo, JobState, JobView, LegacyCommand, PlanGroup, Point,
-    PointResult, Request, RequestEnvelope, Response, ScenarioSpec, Service,
-    MAX_SWEEP_POINTS, PROTOCOL_VERSION,
+    parse_legacy, ApiError, Ask, BackendInfo, CachePolicy, CacheStats,
+    ErrorCode, ExperimentInfo, JobState, JobView, LegacyCommand, PlanGroup,
+    Point, PointResult, Request, RequestEnvelope, Response, ScenarioSpec,
+    Service, MAX_SWEEP_POINTS, PROTOCOL_VERSION,
 };
+use mi300a_char::backend::BackendId;
 use mi300a_char::config::Config;
 use mi300a_char::coordinator::Objective;
 use mi300a_char::isa::Precision;
@@ -95,6 +96,21 @@ fn every_request_variant_roundtrips() {
     roundtrip_request(Request::JobStatus { job: 3 });
     roundtrip_request(Request::JobResult { job: 3 });
     roundtrip_request(Request::JobCancel { job: 3 });
+    // Backend surface (DESIGN.md §6.8).
+    roundtrip_request(Request::Backends);
+    let mut analytic = ScenarioSpec::sim(512, Precision::Fp8, 4);
+    analytic.backend = Some(BackendId::Analytic);
+    roundtrip_request(Request::Scenario { spec: analytic.clone() });
+    roundtrip_request(Request::Submit {
+        spec: analytic.clone(),
+        progress: false,
+    });
+    // A scenario *batch item* carries its spec-level backend as a
+    // payload field (the one exception to the envelope-keys-on-items
+    // rule), so per-item backend selection round-trips inside batches.
+    roundtrip_request(Request::Batch {
+        items: vec![Request::Scenario { spec: analytic }, Request::Stats],
+    });
 }
 
 #[test]
@@ -109,7 +125,10 @@ fn cache_envelope_flag_roundtrips_on_every_variant() {
         let (back, env) =
             Request::decode(&Json::parse(&wire).unwrap()).unwrap();
         assert_eq!(back, req);
-        assert_eq!(env, RequestEnvelope { id: Some(5), cache: false });
+        assert_eq!(
+            env,
+            RequestEnvelope { id: Some(5), cache: false, backend: None }
+        );
         assert_eq!(
             back.to_json_opts(env.id, env.cache).to_string(),
             wire,
@@ -197,6 +216,17 @@ fn every_response_variant_roundtrips() {
             id: "table1".into(),
             title: "System configuration".into(),
             section: "§4".into(),
+            deterministic: true,
+        }],
+    });
+    roundtrip_response(Response::Backends {
+        backends: vec![BackendInfo {
+            id: "des".into(),
+            description: "discrete-event replay".into(),
+            asks: vec!["sim".into(), "plan".into(), "sparsity".into()],
+            sim_shapes: vec!["homogeneous".into()],
+            deterministic: true,
+            default: true,
         }],
     });
     roundtrip_response(Response::Config {
@@ -214,6 +244,7 @@ fn every_response_variant_roundtrips() {
             enabled: true,
         },
         engine_runs: 3,
+        backend_runs: vec![2, 1],
     });
     roundtrip_response(Response::Batch {
         items: vec![
@@ -303,6 +334,7 @@ fn unknown_fields_are_rejected_per_variant() {
         Request::ListExperiments,
         Request::Config,
         Request::Stats,
+        Request::Backends,
         Request::Batch { items: vec![Request::Stats] },
         Request::Scenario {
             spec: ScenarioSpec::sim(512, Precision::Fp8, 4),
@@ -463,11 +495,13 @@ fn batch_items_share_the_cache_within_one_call() {
     assert_eq!(items[1], items[2]);
     assert_eq!(svc.engine_runs(), 1, "three copies, one cold run");
     match &items[3] {
-        Response::Stats { cache, engine_runs } => {
+        Response::Stats { cache, engine_runs, backend_runs } => {
             assert_eq!(*engine_runs, 1);
             assert_eq!(cache.hits, 2);
             assert_eq!(cache.misses, 1);
             assert_eq!(cache.entries, 1);
+            // All executions ran on the default `des` backend.
+            assert_eq!(backend_runs, &vec![1, 0]);
         }
         other => panic!("unexpected stats item: {other:?}"),
     }
@@ -508,12 +542,13 @@ fn stats_request_mirrors_the_service_counters() {
     svc.handle(&sp);
     svc.handle(&sp);
     match svc.handle(&Request::Stats) {
-        Response::Stats { cache, engine_runs } => {
+        Response::Stats { cache, engine_runs, backend_runs } => {
             assert_eq!(engine_runs, 1);
             assert_eq!(cache, svc.cache_stats());
             assert_eq!((cache.hits, cache.misses), (2, 1));
             assert!(cache.enabled);
             assert!(cache.bytes > 0);
+            assert_eq!(backend_runs, svc.backend_runs());
         }
         other => panic!("unexpected response: {other:?}"),
     }
@@ -716,10 +751,108 @@ fn error_code_wire_spellings_are_stable() {
         "overloaded",
         "unknown_job",
         "not_ready",
+        "unknown_backend",
+        "unsupported_by_backend",
     ];
     assert_eq!(ErrorCode::ALL.len(), want.len());
     for (c, w) in ErrorCode::ALL.iter().zip(want) {
         assert_eq!(c.as_str(), w);
         assert_eq!(ErrorCode::parse(w), Some(*c));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Backend surface (DESIGN.md §6.8).
+// ---------------------------------------------------------------------
+
+/// The per-backend cold-execution counters are flattened onto `stats`
+/// under pinned names, one per registry id.
+#[test]
+fn stats_wire_pins_the_per_backend_counter_fields() {
+    let resp = Response::Stats {
+        cache: CacheStats::default(),
+        engine_runs: 7,
+        backend_runs: vec![4, 3],
+    };
+    let wire = resp.to_json(None).to_string();
+    assert!(wire.contains(r#""engine_runs":7"#), "{wire}");
+    assert!(wire.contains(r#""engine_runs_des":4"#), "{wire}");
+    assert!(wire.contains(r#""engine_runs_analytic":3"#), "{wire}");
+    let (back, _) =
+        Response::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back, resp);
+}
+
+/// Satellite: `list_experiments` surfaces each spec's `deterministic`
+/// flag (added in PR 3, never on the wire until now), round-tripping
+/// through the strict client-side decoder.
+#[test]
+fn list_experiments_surfaces_the_deterministic_flag_on_the_wire() {
+    let svc = Service::new(Config::mi300a());
+    let resp = svc.handle(&Request::ListExperiments);
+    let wire = resp.to_json(None).to_string();
+    assert!(wire.contains(r#""deterministic":true"#), "{wire}");
+    let (back, _) =
+        Response::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back, resp);
+    match back {
+        Response::Experiments { experiments } => {
+            for (info, spec) in
+                experiments.iter().zip(mi300a_char::experiments::REGISTRY)
+            {
+                assert_eq!(info.deterministic, spec.deterministic, "{}",
+                           spec.id);
+            }
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+}
+
+/// On batch items, `"backend"` stays an envelope-only key *except* on
+/// `scenario` items, where it is the spec's own payload field.
+#[test]
+fn batch_items_reject_backend_except_as_a_scenario_spec_field() {
+    let ok = r#"{"v":1,"type":"batch","items":[{"type":"scenario","backend":"analytic","n":512}]}"#;
+    let (req, _) = Request::from_json(&Json::parse(ok).unwrap()).unwrap();
+    match &req {
+        Request::Batch { items } => match &items[0] {
+            Request::Scenario { spec } => {
+                assert_eq!(spec.backend, Some(BackendId::Analytic))
+            }
+            other => panic!("unexpected item: {other:?}"),
+        },
+        other => panic!("unexpected request: {other:?}"),
+    }
+    // ...and the bytes the encoder produces for that value decode back.
+    let wire = req.to_json(None).to_string();
+    let (back, _) = Request::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back, req);
+
+    let bad = r#"{"v":1,"type":"batch","items":[{"type":"sim","backend":"analytic","n":512,"precision":"fp8","streams":4}]}"#;
+    let (err, _) =
+        Request::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+    assert!(err.message.contains("batch envelope"), "{err}");
+}
+
+/// `backends` discovery lists the registry in order and round-trips.
+#[test]
+fn backends_discovery_round_trips_and_names_the_registry() {
+    let svc = Service::new(Config::mi300a());
+    let resp = svc.handle(&Request::Backends);
+    let wire = resp.to_json(Some(4)).to_string();
+    let (back, id) =
+        Response::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(id, Some(4));
+    assert_eq!(back, resp);
+    match back {
+        Response::Backends { backends } => {
+            let ids: Vec<&str> =
+                backends.iter().map(|b| b.id.as_str()).collect();
+            let want: Vec<&str> =
+                BackendId::ALL.iter().map(|b| b.as_str()).collect();
+            assert_eq!(ids, want);
+            assert!(backends[0].default, "des is the default");
+        }
+        other => panic!("unexpected response: {other:?}"),
     }
 }

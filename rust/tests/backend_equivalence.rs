@@ -1,0 +1,210 @@
+//! Cross-backend equivalence (ISSUE 5 acceptance): the `analytic`
+//! backend must track the `des` reference within the tolerance
+//! documented in `docs/backends.md` on the `docs/scenarios.md` cookbook
+//! sweeps, answer the closed-form asks (`plan`/`sparsity`) exactly, and
+//! leave every backend-less request byte-identical to the pre-backend
+//! service. The per-backend `engine_runs` counters prove the analytic
+//! path executed zero DES points.
+
+use mi300a_char::api::{
+    Ask, Request, RequestEnvelope, Response, ScenarioSpec, Service, Shape,
+};
+use mi300a_char::backend::{self, BackendId};
+use mi300a_char::config::Config;
+use mi300a_char::coordinator::Objective;
+use mi300a_char::isa::Precision;
+
+/// Documented tolerance (docs/backends.md): time-domain outputs are
+/// first-order estimates.
+const REL_TOL_TIME: f64 = 0.45; // makespan_ms, speedup_vs_serial
+const ABS_TOL_OVERLAP: f64 = 0.35; // overlap_efficiency
+const ABS_TOL_FAIRNESS: f64 = 0.40; // fairness
+const EXACT: f64 = 1e-9; // l2_miss, lds_util share the model code
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// Compare both backends on every point of a sim sweep.
+fn assert_sim_sweep_within_tolerance(spec: &ScenarioSpec) {
+    let cfg = Config::mi300a();
+    let des = backend::get(BackendId::Des);
+    let analytic = backend::get(BackendId::Analytic);
+    for p in spec.expand() {
+        let d = des.simulate(&cfg, spec, &p);
+        let a = analytic.simulate(&cfg, spec, &p);
+        let ctx = format!(
+            "point n={} precision={:?} streams={}: des={d:?} analytic={a:?}",
+            p.n, p.precision, p.streams
+        );
+        assert!(
+            rel(a.makespan_ms, d.makespan_ms) <= REL_TOL_TIME,
+            "makespan drift {:.3} > {REL_TOL_TIME} at {ctx}",
+            rel(a.makespan_ms, d.makespan_ms)
+        );
+        assert!(
+            rel(a.speedup_vs_serial, d.speedup_vs_serial) <= REL_TOL_TIME,
+            "speedup drift {:.3} > {REL_TOL_TIME} at {ctx}",
+            rel(a.speedup_vs_serial, d.speedup_vs_serial)
+        );
+        assert!(
+            (a.overlap_efficiency - d.overlap_efficiency).abs()
+                <= ABS_TOL_OVERLAP,
+            "overlap drift at {ctx}"
+        );
+        assert!(
+            (a.fairness - d.fairness).abs() <= ABS_TOL_FAIRNESS,
+            "fairness drift at {ctx}"
+        );
+        assert!(
+            (a.l2_miss - d.l2_miss).abs() <= EXACT,
+            "l2_miss must match exactly at {ctx}"
+        );
+        assert!(
+            (a.lds_util - d.lds_util).abs() <= EXACT,
+            "lds_util must match exactly at {ctx}"
+        );
+    }
+}
+
+/// Cookbook sweep 1 (occupancy threshold, paper §6.1 Fig 4): streams
+/// across the full ACE range at 512³ FP8.
+#[test]
+fn cookbook_occupancy_threshold_within_tolerance() {
+    let mut spec = ScenarioSpec::sim(512, Precision::Fp8, 4);
+    spec.sweep.streams = vec![1, 2, 3, 4, 6, 8, 12, 16];
+    assert_sim_sweep_within_tolerance(&spec);
+}
+
+/// Cookbook sweep 2 (FP8-vs-FP16 crossover, paper §5/§8): precision ×
+/// streams at 1024³.
+#[test]
+fn cookbook_precision_crossover_within_tolerance() {
+    let mut spec = ScenarioSpec::sim(1024, Precision::Fp8, 4);
+    spec.sweep.precision = vec![Precision::Fp8, Precision::F16];
+    spec.sweep.streams = vec![1, 2, 4, 8];
+    assert_sim_sweep_within_tolerance(&spec);
+}
+
+/// The advertised mixed_sparse sim capability: alternating
+/// sparse/dense streams exercise the analytic model's sparse weighting
+/// (per-stream mem_w / sparse_w, effective-stream rounding) against
+/// the DES under the same tolerance as the homogeneous sweeps.
+#[test]
+fn mixed_sparse_sim_within_tolerance() {
+    let mut spec = ScenarioSpec::new(Ask::Sim);
+    spec.shape = Shape::MixedSparse;
+    spec.n = 512;
+    spec.sweep.streams = vec![2, 4, 8];
+    assert_sim_sweep_within_tolerance(&spec);
+}
+
+/// Cookbook sweep 3 (sparsity break-even, paper §7): the sparsity ask
+/// is a shared closed form — backends must agree *exactly*.
+#[test]
+fn cookbook_sparsity_break_even_is_exact_across_backends() {
+    let cfg = Config::mi300a();
+    let des = backend::get(BackendId::Des);
+    let analytic = backend::get(BackendId::Analytic);
+    let mut spec = ScenarioSpec::sparsity_question(512, 4);
+    spec.sweep.n = vec![256, 512, 2048, 8192];
+    spec.sweep.streams = vec![1, 4];
+    for p in spec.expand() {
+        assert_eq!(
+            des.sparsity(&cfg, &spec, &p),
+            analytic.sparsity(&cfg, &spec, &p),
+            "sparsity must be backend-invariant at n={} streams={}",
+            p.n,
+            p.streams
+        );
+    }
+    // Plan asks are the same shared closed form.
+    let plan = ScenarioSpec::plan(
+        Objective::ThroughputOriented,
+        8,
+        512,
+        Precision::Fp8,
+    );
+    let p = plan.expand()[0];
+    assert_eq!(
+        des.plan(&cfg, &plan, &p),
+        analytic.plan(&cfg, &plan, &p),
+        "plan must be backend-invariant"
+    );
+}
+
+/// Cookbook sweep 4 (imbalanced-pair fairness, paper §6.3): outside the
+/// analytic capability surface — a typed `unsupported_by_backend`
+/// before any point runs, while `des` answers it.
+#[test]
+fn cookbook_imbalanced_pair_is_des_only() {
+    let svc = Service::new(Config::mi300a());
+    let mut spec = ScenarioSpec::new(Ask::Sim);
+    spec.shape = Shape::ImbalancedPair;
+    spec.streams = 2;
+    spec.n = 2048;
+    spec.iters = 10;
+    match svc.handle(&Request::Scenario { spec: spec.clone() }) {
+        Response::Scenario { points } => assert_eq!(points.len(), 1),
+        other => panic!("des must answer the pair: {other:?}"),
+    }
+    spec.backend = Some(BackendId::Analytic);
+    match svc.handle(&Request::Scenario { spec }) {
+        Response::Error { code, message } => {
+            assert_eq!(
+                code,
+                mi300a_char::api::ErrorCode::UnsupportedByBackend
+            );
+            assert!(message.contains("analytic"), "{message}");
+        }
+        other => panic!("expected unsupported_by_backend, got {other:?}"),
+    }
+    // Only the des point executed.
+    assert_eq!(svc.backend_runs(), vec![1, 0]);
+}
+
+/// Acceptance: with `backend` omitted, responses are byte-identical to
+/// the explicit-`des` selection (i.e. the pre-backend behavior), and an
+/// analytic sweep executes **zero** DES points — ≥100× fewer by any
+/// measure, proven through the per-backend counters.
+#[test]
+fn omitted_backend_is_des_and_analytic_runs_zero_des_points() {
+    let default_svc = Service::new(Config::mi300a());
+    let explicit_svc = Service::new(Config::mi300a());
+    let req = Request::Sim {
+        n: 512,
+        precision: Precision::Fp8,
+        streams: 4,
+    };
+    let omitted = default_svc.handle(&req);
+    let explicit = explicit_svc.handle_env(
+        &req,
+        &RequestEnvelope {
+            backend: Some(BackendId::Des),
+            ..RequestEnvelope::default()
+        },
+    );
+    assert_eq!(
+        omitted.to_json(Some(1)).to_string(),
+        explicit.to_json(Some(1)).to_string(),
+        "omitting backend must be byte-identical to selecting des"
+    );
+    assert_eq!(default_svc.backend_runs(), vec![1, 0]);
+
+    // A 16-point analytic sweep: all analytic, zero des.
+    let svc = Service::new(Config::mi300a());
+    let mut spec = ScenarioSpec::sim(512, Precision::Fp8, 4);
+    spec.sweep.streams = vec![1, 2, 4, 8];
+    spec.sweep.iters = vec![25, 50, 75, 100];
+    spec.backend = Some(BackendId::Analytic);
+    match svc.handle(&Request::Scenario { spec }) {
+        Response::Scenario { points } => assert_eq!(points.len(), 16),
+        other => panic!("unexpected response: {other:?}"),
+    }
+    assert_eq!(
+        svc.backend_runs(),
+        vec![0, 16],
+        "an analytic sweep must execute zero DES points"
+    );
+    assert_eq!(svc.engine_runs(), 16, "totals stay truthful");
+}

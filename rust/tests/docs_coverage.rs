@@ -3,6 +3,7 @@
 //! the per-experiment document trail), and the serving guide must name
 //! every request type the protocol speaks.
 
+use mi300a_char::backend;
 use mi300a_char::experiments::REGISTRY;
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
@@ -76,6 +77,7 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         "serving.md",
         "architecture.md",
         "scenarios.md",
+        "backends.md",
     ] {
         assert!(
             docs_dir().join(page).is_file(),
@@ -99,6 +101,7 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         "job_result",
         "job_cancel",
         "progress",
+        "backends",
     ] {
         assert!(
             serving.contains(&format!("`{ty}`")),
@@ -115,6 +118,54 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         read("README.md").contains("scenarios.md"),
         "docs/README.md must index the scenario cookbook"
     );
+    assert!(
+        read("README.md").contains("backends.md"),
+        "docs/README.md must index the backend guide"
+    );
+}
+
+/// The backend guide must track `backend::REGISTRY` exactly (the
+/// acceptance gate the CI backend-matrix smoke double-checks over the
+/// wire): one capability-table row per registered backend, no stale
+/// rows, and the tolerance/selection machinery documented.
+#[test]
+fn backends_doc_covers_the_backend_registry_exactly() {
+    let doc = read("backends.md");
+    let in_doc = doc_ids(&doc);
+    let in_registry: BTreeSet<String> = backend::BackendId::ALL
+        .iter()
+        .map(|b| b.as_str().to_string())
+        .collect();
+    assert_eq!(
+        in_doc, in_registry,
+        "docs/backends.md id rows must match backend::REGISTRY exactly \
+         (missing rows: {:?}; stale rows: {:?})",
+        in_registry.difference(&in_doc).collect::<Vec<_>>(),
+        in_doc.difference(&in_registry).collect::<Vec<_>>(),
+    );
+    for b in backend::REGISTRY {
+        let caps = b.capabilities();
+        // Each backend's per-backend stats counter must be documented.
+        assert!(
+            doc.contains(caps.id.stat_field()),
+            "{}: stats counter {} missing from docs/backends.md",
+            caps.id.as_str(),
+            caps.id.stat_field()
+        );
+    }
+    for needle in [
+        "\"backend\":\"analytic\"",
+        "--backend",
+        "\"type\":\"backends\"",
+        "unknown_backend",
+        "unsupported_by_backend",
+        "tolerance",
+    ] {
+        assert!(
+            doc.contains(needle),
+            "docs/backends.md never documents {needle:?}"
+        );
+    }
 }
 
 /// The scenario cookbook must stay a worked, runnable document: every

@@ -668,6 +668,93 @@ fn client_read_timeout_is_a_typed_error_not_a_hang() {
     silent.join().unwrap();
 }
 
+/// Backend selection over the wire (DESIGN.md §6.8): the `"backend"`
+/// envelope key routes a v1 `sim` to the analytic engine (zero DES
+/// executions, proven via the per-backend `stats` counters), `backends`
+/// discovery lists the registry, unknown ids are typed, and the
+/// backend-less form answers byte-identically either way.
+#[test]
+fn backend_selection_and_discovery_over_the_wire() {
+    let (port, handle) = spawn_server(1);
+    let conn = connect(port);
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut ask_raw = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+
+    // Discovery first: the registry over the wire.
+    let discovery = ask_raw(r#"{"v":1,"type":"backends"}"#);
+    assert_eq!(discovery.get("type").unwrap().as_str(), Some("backends"));
+    let backends = discovery.get("backends").unwrap().as_arr().unwrap();
+    let ids: Vec<&str> = backends
+        .iter()
+        .map(|b| b.get("id").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(ids, vec!["des", "analytic"]);
+    assert_eq!(backends[0].get("default"), Some(&Json::Bool(true)));
+
+    // An analytic sim answers the v1 shape without touching the DES.
+    let analytic = ask_raw(
+        r#"{"v":1,"backend":"analytic","type":"sim","n":512,"precision":"fp8","streams":4}"#,
+    );
+    assert_eq!(analytic.get("type").unwrap().as_str(), Some("sim"));
+    let sp = analytic.get("speedup_vs_serial").unwrap().as_f64().unwrap();
+    assert!(sp > 1.0 && sp < 4.0, "analytic speedup {sp}");
+    let stats = ask_raw(r#"{"v":1,"type":"stats"}"#);
+    assert_eq!(stats.get("engine_runs_analytic"), Some(&Json::Num(1.0)));
+    assert_eq!(stats.get("engine_runs_des"), Some(&Json::Num(0.0)));
+
+    // The backend-less form runs the DES and stays byte-identical to
+    // the explicit des selection (modulo the cache: ask des twice, once
+    // per spelling — the second is a cache hit of the first).
+    let omitted = ask_raw(
+        r#"{"v":1,"type":"sim","n":512,"precision":"fp8","streams":4}"#,
+    );
+    let explicit = ask_raw(
+        r#"{"v":1,"backend":"des","type":"sim","n":512,"precision":"fp8","streams":4}"#,
+    );
+    assert_eq!(omitted.to_string(), explicit.to_string());
+    let stats = ask_raw(r#"{"v":1,"type":"stats"}"#);
+    assert_eq!(stats.get("engine_runs_des"), Some(&Json::Num(1.0)));
+
+    // Typed errors: unknown id, and a selector on a non-scenario type.
+    let unknown = ask_raw(
+        r#"{"v":1,"id":3,"backend":"slide_rule","type":"stats"}"#,
+    );
+    assert_eq!(
+        unknown.get("code").unwrap().as_str(),
+        Some("unknown_backend")
+    );
+    assert_eq!(unknown.get("id"), Some(&Json::Num(3.0)));
+    let misplaced = ask_raw(r#"{"v":1,"backend":"analytic","type":"config"}"#);
+    assert_eq!(
+        misplaced.get("code").unwrap().as_str(),
+        Some("bad_request")
+    );
+
+    // The analytic capability gate over the wire.
+    let unsupported = ask_raw(
+        r#"{"v":1,"backend":"analytic","type":"scenario","ask":"sim","shape":"imbalanced_pair","n":2048,"streams":2}"#,
+    );
+    assert_eq!(
+        unsupported.get("code").unwrap().as_str(),
+        Some("unsupported_by_backend")
+    );
+
+    // Legacy BACKENDS desugars to the same discovery response (no id).
+    let legacy = ask_raw("BACKENDS");
+    assert_eq!(legacy.to_string(), discovery.to_string());
+
+    writeln!(writer, "QUIT").unwrap();
+    drop(writer);
+    drop(reader);
+    handle.join().unwrap();
+}
+
 /// The three simulator-path commands every client in the concurrency
 /// test issues (legacy framing keeps exercising the shim under
 /// concurrency).

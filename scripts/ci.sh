@@ -4,8 +4,11 @@
 # guidebook, a bench smoke pass so the `cargo bench` targets (and
 # their BENCH_*.json emitters) cannot bit-rot, a client-vs-serve smoke
 # over the versioned wire protocol (DESIGN.md §6) including a batch +
-# cache-stats request, and a job-API smoke (submit a sweep, poll it to
-# done, fetch the result, observe >=1 pushed progress frame).
+# cache-stats request, a job-API smoke (submit a sweep, poll it to
+# done, fetch the result, observe >=1 pushed progress frame), and a
+# backend-matrix smoke (DESIGN.md §6.8: one sim per registered
+# backend, per-backend stats counters, docs/backends.md drift, typed
+# unknown_backend on an unregistered id).
 #
 # Usage: scripts/ci.sh
 #
@@ -154,12 +157,76 @@ wait "$job_pid" 2>/dev/null || true
 trap - EXIT
 rm -f "$job_log"
 
+echo "== backend-matrix smoke (one sim per registered backend, docs drift) =="
+bk_log=$(mktemp)
+"$bin" serve --addr 127.0.0.1:0 >"$bk_log" &
+bk_pid=$!
+trap 'kill "$bk_pid" 2>/dev/null || true' EXIT
+baddr=""
+for _ in $(seq 1 100); do
+    baddr=$(sed -n 's/^serving on //p' "$bk_log" | head -n 1)
+    [ -n "$baddr" ] && break
+    sleep 0.05
+done
+if [ -z "$baddr" ]; then
+    echo "backend-smoke serve did not print its bound address" >&2
+    exit 1
+fi
+# Live registry from the wire; each id must answer a sim point and be
+# documented in docs/backends.md (REGISTRY <-> docs drift fails here).
+discovery=$("$bin" client --addr "$baddr" '{"v":1,"type":"backends"}')
+echo "backends: $discovery"
+ids=$(printf '%s' "$discovery" | grep -oE '"id":"[a-z_]+"' \
+    | sed 's/"id":"//; s/"//')
+if [ -z "$ids" ]; then
+    echo "backends discovery returned no ids" >&2
+    exit 1
+fi
+for id in $ids; do
+    resp=$("$bin" client --addr "$baddr" \
+        "{\"v\":1,\"backend\":\"$id\",\"type\":\"sim\",\"n\":256,\"precision\":\"fp8\",\"streams\":2}")
+    if ! printf '%s' "$resp" | grep -qF '"speedup_vs_serial"'; then
+        echo "backend $id failed the sim smoke: $resp" >&2
+        exit 1
+    fi
+    if ! grep -qF "\`$id\`" ../docs/backends.md; then
+        echo "backend $id missing from docs/backends.md" >&2
+        exit 1
+    fi
+done
+# Per-backend counters cover every id, and an unregistered id is the
+# typed unknown_backend error (registry <-> error-path drift).
+stats=$("$bin" client --addr "$baddr" '{"v":1,"type":"stats"}')
+for id in $ids; do
+    if ! printf '%s' "$stats" | grep -qF "\"engine_runs_$id\""; then
+        echo "stats missing engine_runs_$id: $stats" >&2
+        exit 1
+    fi
+done
+# (The client decodes locally, so the typed rejection — the same
+# protocol path the server runs — lands on stderr with exit 2.)
+if bad=$("$bin" client --addr "$baddr" \
+    '{"v":1,"backend":"no_such_backend","type":"sim","n":256,"precision":"fp8","streams":2}' 2>&1); then
+    echo "unregistered backend did not fail the client: $bad" >&2
+    exit 1
+else
+    echo "unknown-backend probe: $bad"
+fi
+if ! printf '%s' "$bad" | grep -qF 'unknown_backend'; then
+    echo "expected unknown_backend, got: $bad" >&2
+    exit 1
+fi
+kill "$bk_pid" 2>/dev/null || true
+wait "$bk_pid" 2>/dev/null || true
+trap - EXIT
+rm -f "$bk_log"
+
 echo "== bench smoke (1 warmup / 1 iter, full targets) =="
 MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench
 
 echo "== bench baselines =="
 out_dir="${MI300A_BENCH_OUT:-.}"
-for name in hotpath ablations paper_experiments; do
+for name in hotpath ablations paper_experiments backends; do
     f="$out_dir/BENCH_$name.json"
     if [ ! -s "$f" ]; then
         echo "missing bench baseline: $f" >&2
