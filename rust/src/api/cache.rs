@@ -1,5 +1,6 @@
 //! Canonical-key result cache behind [`super::Service`] (DESIGN.md
-//! §6.5, `docs/serving.md` is the operator guide).
+//! §6.5, `docs/serving.md` is the operator guide,
+//! `docs/performance.md` covers tuning).
 //!
 //! The paper's product is *practical guidance* — occupancy thresholds,
 //! fairness-vs-streams trade-offs, context-dependent sparsity decisions
@@ -15,12 +16,29 @@
 //! spec ([`super::scenario::ScenarioSpec::at`]), so a sweep, its v1
 //! equivalents, and an async job all share entries.
 //!
-//! The cache is bounded by an entry cap and an approximate byte cap
-//! ([`CachePolicy`]); when either is exceeded the least-recently-used
-//! entry is evicted. Hit/miss/eviction/size counters ([`CacheStats`])
-//! surface through the `stats` request, so a load test can *prove* a
-//! hot request never re-entered the DES engine instead of inferring it
-//! from latency.
+//! ## Sharding
+//!
+//! The map is split into N hash-sharded segments (FNV-1a over the key;
+//! N is a power of two, defaulting to the machine's parallelism —
+//! [`CachePolicy::shards`]). A **hit takes only the owning shard's read
+//! path**: a shared `RwLock` read guard plus an atomically-bumped LRU
+//! clock, so concurrent hits — even on the *same* hot key — never
+//! contend with each other, the way the paper's ACEs serve independent
+//! queues without a global lock. Writes take the owning shard's write
+//! lock only. Recency is a global monotone clock (`AtomicU64`), so LRU
+//! order is comparable *across* shards.
+//!
+//! The caps stay **global**: one entry cap and one approximate byte cap
+//! ([`CachePolicy`]) over the whole cache, enforced by evicting the
+//! globally least-recently-used entry (a read-only scan across shards
+//! picks the victim; only its owning shard takes a write lock to remove
+//! it). Evictors serialize on a small mutex so concurrent
+//! over-cap inserts cannot double-evict, but that mutex is never
+//! touched on the hit path. Hit/miss/eviction counters are per-shard
+//! atomics summed on demand, so [`CacheStats`] keeps the exact counter
+//! semantics of the unsharded cache, and a load test can *prove* a hot
+//! request never re-entered the DES engine instead of inferring it from
+//! latency.
 //!
 //! What is never cached: `run` (real PJRT execution), `repro` of a
 //! registry entry not flagged deterministic (see
@@ -30,7 +48,8 @@
 
 use super::protocol::Response;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Sizing and on/off switch for a [`ResultCache`].
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -38,11 +57,17 @@ pub struct CachePolicy {
     /// Master switch. Disabled caches store nothing and count nothing
     /// (the `--no-cache` serving mode for measurement runs).
     pub enabled: bool,
-    /// Maximum number of cached responses (LRU-evicted beyond this).
+    /// Maximum number of cached responses across all shards
+    /// (LRU-evicted beyond this).
     pub max_entries: usize,
-    /// Approximate byte budget: each entry is charged its key length
-    /// plus its compact wire serialization length.
+    /// Approximate byte budget across all shards: each entry is charged
+    /// its key length plus its compact wire serialization length.
     pub max_bytes: usize,
+    /// Number of hash shards. `0` (the default) sizes to the machine's
+    /// available parallelism; any other value is rounded up to the next
+    /// power of two. Sharding changes contention only — caps, counters,
+    /// LRU order, and responses are byte-identical at any shard count.
+    pub shards: usize,
 }
 
 impl Default for CachePolicy {
@@ -51,6 +76,7 @@ impl Default for CachePolicy {
             enabled: true,
             max_entries: 1024,
             max_bytes: 64 << 20,
+            shards: 0,
         }
     }
 }
@@ -63,7 +89,8 @@ impl CachePolicy {
 }
 
 /// A point-in-time snapshot of cache counters, surfaced on the wire by
-/// the `stats` request (`cache_*` fields).
+/// the `stats` request (`cache_*` fields). Counters are summed across
+/// shards; under a quiescent cache they are exact.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct CacheStats {
     /// Lookups answered from the cache.
@@ -86,39 +113,87 @@ pub struct CacheStats {
 }
 
 struct Slot {
-    // Arc so a hit only bumps a refcount under the lock; the deep
-    // clone the caller receives happens after the guard drops.
+    // Arc so a hit only bumps a refcount under the shard's read lock;
+    // the deep clone the caller receives happens after the guard drops.
     resp: Arc<Response>,
     bytes: usize,
-    last_used: u64,
+    // Atomic so a *read*-locked hit can refresh recency without
+    // upgrading to the write lock (monotone via fetch_max).
+    last_used: AtomicU64,
 }
 
+/// One hash shard: its slice of the map plus its share of the hit/miss/
+/// eviction counters (summed by [`ResultCache::stats`]).
 #[derive(Default)]
-struct Inner {
-    map: HashMap<String, Slot>,
-    bytes: usize,
-    tick: u64,
-    hits: u64,
-    misses: u64,
-    evictions: u64,
+struct Shard {
+    map: RwLock<HashMap<String, Slot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
-/// A bounded, thread-safe LRU of canonical request key → response.
+/// A bounded, thread-safe, hash-sharded LRU of canonical request key →
+/// response.
 ///
-/// Exact LRU: every hit refreshes the entry's recency; eviction always
-/// removes the least-recently-used entry. Shared by reference from
-/// every connection thread of a serving instance (interior `Mutex`; the
-/// critical sections are map operations only — cold executions never
-/// run under the lock).
+/// Exact LRU under a global clock: every hit refreshes the entry's
+/// recency; eviction removes the globally least-recently-used entry.
+/// Shared by reference from every connection of a serving instance.
+/// Hits touch only the owning shard's `RwLock` read path (reads never
+/// contend with reads); cold executions never run under any lock.
 pub struct ResultCache {
     policy: CachePolicy,
-    inner: Mutex<Inner>,
+    shards: Vec<Shard>,
+    /// `shards.len() - 1`; shard count is a power of two.
+    mask: usize,
+    /// Global LRU clock; bumped once per get/insert.
+    clock: AtomicU64,
+    /// Live entries across all shards (kept exact under shard locks).
+    entries: AtomicUsize,
+    /// Approximate bytes across all shards.
+    bytes: AtomicUsize,
+    /// Serializes evictors so concurrent over-cap inserts cannot
+    /// double-evict. Never touched on the hit path.
+    evict: Mutex<()>,
+}
+
+/// Round `n` up to the next power of two, minimum 1.
+fn pow2_at_least(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// FNV-1a: tiny, allocation-free, and good enough to spread canonical
+/// JSON keys across a handful of shards.
+fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
 }
 
 impl ResultCache {
     /// An empty cache under `policy`.
     pub fn new(policy: CachePolicy) -> ResultCache {
-        ResultCache { policy, inner: Mutex::new(Inner::default()) }
+        let n = if policy.shards == 0 {
+            pow2_at_least(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+            )
+        } else {
+            pow2_at_least(policy.shards)
+        };
+        let shards = (0..n).map(|_| Shard::default()).collect();
+        ResultCache {
+            policy,
+            shards,
+            mask: n - 1,
+            clock: AtomicU64::new(0),
+            entries: AtomicUsize::new(0),
+            bytes: AtomicUsize::new(0),
+            evict: Mutex::new(()),
+        }
     }
 
     /// Whether the policy enables caching at all.
@@ -126,45 +201,66 @@ impl ResultCache {
         self.policy.enabled
     }
 
-    fn lock(&self) -> MutexGuard<'_, Inner> {
-        // Counters and map stay usable even if a panic poisoned the
-        // lock mid-update; stale recency is acceptable, losing the
-        // serving cache is not.
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    /// The resolved shard count (policy value normalized to a power of
+    /// two, or the machine's parallelism for `shards: 0`).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, key: &str) -> &Shard {
+        &self.shards[fnv1a(key) as usize & self.mask]
+    }
+
+    // Counters and map stay usable even if a panic poisoned a lock
+    // mid-update; stale recency is acceptable, losing the serving
+    // cache is not.
+    fn read_map<'a>(
+        shard: &'a Shard,
+    ) -> RwLockReadGuard<'a, HashMap<String, Slot>> {
+        shard.map.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write_map<'a>(
+        shard: &'a Shard,
+    ) -> RwLockWriteGuard<'a, HashMap<String, Slot>> {
+        shard.map.write().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Look `key` up, refreshing its recency. Counts a hit or a miss;
-    /// returns `None` without counting when the cache is disabled. The
-    /// lock is held only for the map touch — the returned deep clone is
-    /// made after the guard drops, so concurrent hits do not serialize
-    /// on response size.
+    /// returns `None` without counting when the cache is disabled. Only
+    /// the owning shard's **read** lock is taken — concurrent hits
+    /// (same key or not) proceed in parallel — and the returned deep
+    /// clone is made after the guard drops, so hits do not serialize on
+    /// response size.
     pub fn get(&self, key: &str) -> Option<Response> {
         if !self.policy.enabled {
             return None;
         }
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let shard = self.shard_of(key);
         let hit = {
-            let mut guard = self.lock();
-            let inner = &mut *guard;
-            inner.tick += 1;
-            let tick = inner.tick;
-            if let Some(slot) = inner.map.get_mut(key) {
-                slot.last_used = tick;
-                let arc = Arc::clone(&slot.resp);
-                inner.hits += 1;
-                Some(arc)
-            } else {
-                inner.misses += 1;
-                None
+            let map = Self::read_map(shard);
+            match map.get(key) {
+                Some(slot) => {
+                    slot.last_used.fetch_max(tick, Ordering::Relaxed);
+                    shard.hits.fetch_add(1, Ordering::Relaxed);
+                    Some(Arc::clone(&slot.resp))
+                }
+                None => {
+                    shard.misses.fetch_add(1, Ordering::Relaxed);
+                    None
+                }
             }
         };
         hit.map(|arc| (*arc).clone())
     }
 
-    /// Store `resp` under `key`, then evict LRU entries until both caps
-    /// hold. Replacing an existing key (two threads racing the same
-    /// cold request) is not an eviction. An entry alone larger than the
-    /// byte cap is not stored at all. The clone and the byte-accounting
-    /// serialization happen before the lock is taken.
+    /// Store `resp` under `key`, then evict globally-LRU entries until
+    /// both caps hold. Replacing an existing key (two threads racing
+    /// the same cold request) is not an eviction. An entry alone larger
+    /// than the byte cap is not stored at all. The clone and the
+    /// byte-accounting serialization happen before any lock is taken;
+    /// only the owning shard's write lock is held for the map touch.
     pub fn insert(&self, key: String, resp: &Response) {
         if !self.policy.enabled {
             return;
@@ -174,48 +270,94 @@ impl ResultCache {
             return;
         }
         let stored = Arc::new(resp.clone());
-        let mut guard = self.lock();
-        let inner = &mut *guard;
-        inner.tick += 1;
-        let tick = inner.tick;
-        let slot = Slot { resp: stored, bytes: cost, last_used: tick };
-        if let Some(old) = inner.map.insert(key, slot) {
-            inner.bytes -= old.bytes;
-        }
-        inner.bytes += cost;
-        // The fresh entry carries the newest tick, so it is never the
-        // LRU victim unless it is the only entry — excluded by the
-        // single-entry cost pre-check and the >=1 cap normalization.
-        let max_entries = self.policy.max_entries.max(1);
-        while inner.map.len() > max_entries
-            || inner.bytes > self.policy.max_bytes
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let shard = self.shard_of(&key);
         {
-            let victim = inner
-                .map
-                .iter()
-                .min_by_key(|(_, s)| s.last_used)
-                .map(|(k, _)| k.clone());
-            match victim {
-                Some(k) => {
-                    if let Some(s) = inner.map.remove(&k) {
-                        inner.bytes -= s.bytes;
+            let mut map = Self::write_map(shard);
+            let slot = Slot {
+                resp: stored,
+                bytes: cost,
+                last_used: AtomicU64::new(tick),
+            };
+            match map.insert(key, slot) {
+                Some(old) => {
+                    self.bytes.fetch_sub(old.bytes, Ordering::Relaxed);
+                }
+                None => {
+                    self.entries.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            self.bytes.fetch_add(cost, Ordering::Relaxed);
+        }
+        self.evict_until_within_caps();
+    }
+
+    /// Evict globally least-recently-used entries until both caps hold.
+    /// Victim selection scans every shard under its *read* lock (hits
+    /// stay unblocked); removal takes only the victim's shard write
+    /// lock. The evictor mutex keeps concurrent over-cap inserts from
+    /// racing each other past the caps.
+    fn evict_until_within_caps(&self) {
+        let max_entries = self.policy.max_entries.max(1);
+        if self.entries.load(Ordering::Relaxed) <= max_entries
+            && self.bytes.load(Ordering::Relaxed) <= self.policy.max_bytes
+        {
+            return;
+        }
+        let _evictor = self.evict.lock().unwrap_or_else(|e| e.into_inner());
+        while self.entries.load(Ordering::Relaxed) > max_entries
+            || self.bytes.load(Ordering::Relaxed) > self.policy.max_bytes
+        {
+            // The freshest entry carries the newest tick, so it is
+            // never the victim unless it is the only entry — excluded
+            // by the single-entry cost pre-check and the >=1 cap
+            // normalization.
+            let mut victim: Option<(usize, String, u64)> = None;
+            for (i, shard) in self.shards.iter().enumerate() {
+                let map = Self::read_map(shard);
+                for (k, slot) in map.iter() {
+                    let used = slot.last_used.load(Ordering::Relaxed);
+                    let older = match &victim {
+                        Some((_, _, best)) => used < *best,
+                        None => true,
+                    };
+                    if older {
+                        victim = Some((i, k.clone(), used));
                     }
-                    inner.evictions += 1;
+                }
+            }
+            match victim {
+                Some((i, key, _)) => {
+                    let shard = &self.shards[i];
+                    let mut map = Self::write_map(shard);
+                    if let Some(slot) = map.remove(&key) {
+                        self.bytes.fetch_sub(slot.bytes, Ordering::Relaxed);
+                        self.entries.fetch_sub(1, Ordering::Relaxed);
+                        shard.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
                 None => break,
             }
         }
     }
 
-    /// Snapshot the counters.
+    /// Snapshot the counters (per-shard tallies summed, global sizes
+    /// read once).
     pub fn stats(&self) -> CacheStats {
-        let guard = self.lock();
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut evictions = 0u64;
+        for shard in &self.shards {
+            hits += shard.hits.load(Ordering::Relaxed);
+            misses += shard.misses.load(Ordering::Relaxed);
+            evictions += shard.evictions.load(Ordering::Relaxed);
+        }
         CacheStats {
-            hits: guard.hits,
-            misses: guard.misses,
-            evictions: guard.evictions,
-            entries: guard.map.len() as u64,
-            bytes: guard.bytes as u64,
+            hits,
+            misses,
+            evictions,
+            entries: self.entries.load(Ordering::Relaxed) as u64,
+            bytes: self.bytes.load(Ordering::Relaxed) as u64,
             max_entries: self.policy.max_entries as u64,
             max_bytes: self.policy.max_bytes as u64,
             enabled: self.policy.enabled,
@@ -233,7 +375,12 @@ mod tests {
     }
 
     fn policy(max_entries: usize, max_bytes: usize) -> CachePolicy {
-        CachePolicy { enabled: true, max_entries, max_bytes }
+        CachePolicy {
+            enabled: true,
+            max_entries,
+            max_bytes,
+            ..CachePolicy::default()
+        }
     }
 
     #[test]
@@ -299,5 +446,80 @@ mod tests {
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
         assert!(!s.enabled);
+    }
+
+    #[test]
+    fn shard_count_resolution() {
+        let one = ResultCache::new(CachePolicy {
+            shards: 1,
+            ..policy(8, 1 << 20)
+        });
+        assert_eq!(one.shard_count(), 1);
+        let rounded = ResultCache::new(CachePolicy {
+            shards: 5,
+            ..policy(8, 1 << 20)
+        });
+        assert_eq!(rounded.shard_count(), 8);
+        let auto = ResultCache::new(policy(8, 1 << 20));
+        assert!(auto.shard_count().is_power_of_two());
+        assert!(auto.shard_count() >= 1);
+    }
+
+    /// Behavior must be byte- and counter-identical at any shard
+    /// count: the same key sequence against 1 shard and 8 shards
+    /// yields identical responses, stats, and the same global-LRU
+    /// victim even when keys land on different shards.
+    #[test]
+    fn global_lru_semantics_hold_across_shard_counts() {
+        for shards in [1usize, 2, 8] {
+            let c = ResultCache::new(CachePolicy {
+                shards,
+                ..policy(2, 1 << 20)
+            });
+            c.insert("alpha".into(), &resp("alpha"));
+            c.insert("beta".into(), &resp("beta"));
+            assert!(c.get("alpha").is_some());
+            c.insert("gamma".into(), &resp("gamma"));
+            assert_eq!(
+                c.get("beta"),
+                None,
+                "{shards}-shard cache must evict the global LRU"
+            );
+            assert_eq!(c.get("alpha"), Some(resp("alpha")));
+            assert_eq!(c.get("gamma"), Some(resp("gamma")));
+            let s = c.stats();
+            assert_eq!((s.hits, s.misses, s.evictions), (3, 1, 1));
+            assert_eq!(s.entries, 2);
+        }
+    }
+
+    /// Concurrent hits on one hot key all succeed with identical
+    /// bytes and sum to an exact hit count (the read-path contract the
+    /// serve-layer stress test exercises end to end).
+    #[test]
+    fn concurrent_hot_key_hits_count_exactly() {
+        let c = std::sync::Arc::new(ResultCache::new(CachePolicy {
+            shards: 4,
+            ..policy(64, 1 << 20)
+        }));
+        c.insert("hot".into(), &resp("hot"));
+        let threads = 8;
+        let per = 50;
+        let mut joins = Vec::new();
+        for _ in 0..threads {
+            let c = std::sync::Arc::clone(&c);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..per {
+                    assert_eq!(c.get("hot"), Some(resp("hot")));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let s = c.stats();
+        assert_eq!(s.hits, (threads * per) as u64);
+        assert_eq!(s.misses, 0);
+        assert_eq!(s.entries, 1);
     }
 }

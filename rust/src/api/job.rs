@@ -107,6 +107,31 @@ impl Default for JobLimits {
     }
 }
 
+/// A progress-frame sink registered at submit time. Two transports
+/// exist: the thread-per-connection path drains a [`Watcher::Channel`]
+/// receiver on a dedicated pusher thread, while the epoll reactor
+/// registers a [`Watcher::Callback`] that enqueues the frame to the
+/// event loop (no thread per watched submit).
+pub enum Watcher {
+    /// Buffered channel; the receiver side is handed to the submitter.
+    Channel(mpsc::Sender<JobView>),
+    /// Direct callback, invoked under the job-table lock — it must be
+    /// cheap and non-blocking (the reactor's is a queue push plus an
+    /// eventfd wake).
+    Callback(Box<dyn Fn(JobView) + Send>),
+}
+
+impl Watcher {
+    fn send(&self, view: JobView) {
+        match self {
+            Watcher::Channel(tx) => {
+                let _ = tx.send(view);
+            }
+            Watcher::Callback(f) => f(view),
+        }
+    }
+}
+
 struct JobEntry {
     spec: ScenarioSpec,
     /// The submit envelope's `cache` flag: `false` makes every point
@@ -117,7 +142,7 @@ struct JobEntry {
     total: u64,
     cancel_requested: bool,
     result: Option<Result<Response, ApiError>>,
-    watchers: Vec<mpsc::Sender<JobView>>,
+    watchers: Vec<Watcher>,
 }
 
 impl JobEntry {
@@ -187,6 +212,33 @@ impl JobTable {
         watch: bool,
         use_cache: bool,
     ) -> Result<(JobView, Option<mpsc::Receiver<JobView>>), ApiError> {
+        if watch {
+            let (tx, rx) = mpsc::channel();
+            let view = self.submit_with(
+                spec,
+                total,
+                Some(Watcher::Channel(tx)),
+                use_cache,
+            )?;
+            Ok((view, Some(rx)))
+        } else {
+            let view = self.submit_with(spec, total, None, use_cache)?;
+            Ok((view, None))
+        }
+    }
+
+    /// [`JobTable::submit`] with an explicit frame sink: the epoll
+    /// reactor registers a [`Watcher::Callback`] here instead of a
+    /// channel + pusher thread. The watcher receives the queued
+    /// snapshot atomically with the enqueue, exactly like the channel
+    /// path.
+    pub fn submit_with(
+        &self,
+        spec: ScenarioSpec,
+        total: u64,
+        watcher: Option<Watcher>,
+        use_cache: bool,
+    ) -> Result<JobView, ApiError> {
         let mut g = self.lock();
         let inner = &mut *g;
         if inner.shutdown {
@@ -219,18 +271,14 @@ impl JobTable {
             watchers: Vec::new(),
         };
         let view = entry.view(id);
-        let rx = if watch {
-            let (tx, rx) = mpsc::channel();
-            let _ = tx.send(view);
-            entry.watchers.push(tx);
-            Some(rx)
-        } else {
-            None
-        };
+        if let Some(w) = watcher {
+            w.send(view);
+            entry.watchers.push(w);
+        }
         inner.jobs.insert(id, entry);
         inner.queue.push_back(id);
         self.cond.notify_one();
-        Ok((view, rx))
+        Ok(view)
     }
 
     /// Worker side: block until a job is queued, mark it running, and
@@ -496,6 +544,37 @@ mod tests {
         assert_eq!(last.state, JobState::Done);
         assert_eq!(last.completed, 2);
         assert!(t.result(id).is_ok());
+    }
+
+    #[test]
+    fn callback_watcher_sees_the_same_frame_sequence_as_a_channel() {
+        let t = table(4);
+        let frames = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let sink = std::sync::Arc::clone(&frames);
+        let v = t
+            .submit_with(
+                spec(),
+                2,
+                Some(Watcher::Callback(Box::new(move |f| {
+                    sink.lock().unwrap().push(f)
+                }))),
+                true,
+            )
+            .unwrap();
+        let (id, _, _) = t.next_job().unwrap();
+        assert_eq!(id, v.job);
+        assert!(t.point_done(id));
+        assert!(t.point_done(id));
+        t.finish(id, Ok(Response::Scenario { points: vec![] }));
+        let got = frames.lock().unwrap().clone();
+        // N+3 frames: queued snapshot, running, one per point, terminal.
+        assert_eq!(got.len(), 5);
+        assert_eq!(got[0].state, JobState::Queued);
+        assert_eq!(got[1].state, JobState::Running);
+        assert_eq!((got[2].completed, got[3].completed), (1, 2));
+        let last = got.last().unwrap();
+        assert_eq!(last.state, JobState::Done);
+        assert_eq!(last.completed, 2);
     }
 
     #[test]

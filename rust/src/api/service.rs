@@ -499,6 +499,37 @@ impl Service {
         }
     }
 
+    /// [`Service::submit_watched`] with a callback frame sink instead
+    /// of a channel: the epoll reactor registers its queue-and-wake
+    /// forwarder here, so a watched submit costs no pusher thread. The
+    /// callback runs under the job-table lock (it must be cheap and
+    /// non-blocking) and receives the queued snapshot at registration,
+    /// then the same frame sequence the channel path delivers.
+    pub fn submit_watched_with(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+        on_frame: Box<dyn Fn(JobView) + Send>,
+    ) -> Response {
+        let resolved = match self.resolved_spec(spec, env.backend) {
+            Ok(s) => s,
+            Err(e) => return Response::from(e),
+        };
+        let points = match resolved.validated_points() {
+            Ok(p) => p,
+            Err(e) => return Response::from(e),
+        };
+        match self.jobs.submit_with(
+            resolved,
+            points.len() as u64,
+            Some(super::job::Watcher::Callback(on_frame)),
+            env.cache,
+        ) {
+            Ok(view) => Response::Job(view),
+            Err(e) => Response::from(e),
+        }
+    }
+
     /// Run the whole experiment registry with up to `workers` driver
     /// threads (the CLI's `repro all`; reports come back in registry
     /// order, byte-identical to a serial run).

@@ -27,6 +27,10 @@
 //!   (DESIGN.md §6.8): the `des` replay engine and the `analytic`
 //!   closed-form fast path, registered for wire-level selection and
 //!   discovery.
+//! * [`serve`], [`loadgen`] — the TCP transport (two io models: an
+//!   epoll reactor and thread-per-connection) and its built-in
+//!   closed-loop load generator (`BENCH_serve.json`,
+//!   docs/performance.md).
 
 pub mod api;
 pub mod backend;
@@ -35,6 +39,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod hw;
 pub mod isa;
+pub mod loadgen;
 pub mod metrics;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,568 @@
+//! `mi300a-char loadgen` — a built-in closed-loop load generator for
+//! the serve transport, measuring sustained request throughput and
+//! latency percentiles under either io model (`docs/performance.md`).
+//!
+//! The generator drives N worker threads, each owning one
+//! [`crate::api::Client`] connection (closed loop: a worker issues its
+//! next request only after the previous response arrives, so offered
+//! load self-regulates instead of queueing unboundedly). A run has
+//! three phases flipped by a wall-clock timer on the main thread:
+//! warm-up (requests run but are not counted — connections settle and
+//! the hot cache entry warms), the measured window (every completed
+//! request records a wall-clock latency), and stop. Throughput is
+//! completed-requests-in-window over the window's measured duration;
+//! percentiles are nearest-rank over the merged latency samples.
+//!
+//! ## Request mix
+//!
+//! Three mixes ([`Mix`], the CLI's `--mix`) exercise different serve
+//! paths:
+//!
+//! * `hot` — one repeated `sim` point: after warm-up every request is a
+//!   result-cache hit, so the number measures transport + framing +
+//!   cache-read overhead (the sharded cache's contended read path).
+//! * `cold` — unique `sparsity` points (per-worker disjoint strides
+//!   over the validated keyspace): every request misses and executes,
+//!   measuring the dispatch/execution path.
+//! * `mixed` (default) — ~84% hot, ~9% cold, ~5% two-point `scenario`
+//!   sweeps, and ~1.6% watched job submits awaited to their terminal
+//!   state (progress frames and all), approximating a polling fleet
+//!   with occasional heavy work. A watched job counts as one logical
+//!   request.
+//!
+//! Typed `overloaded` rejections (the bounded job queue refusing a
+//! submit) are retryable by design, so they are counted separately and
+//! fail nothing; any other typed error is unexpected under this
+//! request mix and fails the run. Results land in `BENCH_serve.json`
+//! (schema `mi300a-char/bench-v1`, PERF.md) via [`crate::util::bench`],
+//! with throughput/percentiles/hit-rate in the `extra` block.
+
+use crate::api::{
+    Ask, CachePolicy, Client, ErrorCode, Request, Response, ScenarioSpec,
+    Service,
+};
+use crate::backend::BackendId;
+use crate::config::Config;
+use crate::isa::Precision;
+use crate::serve::{serve_on, IoModel};
+use crate::util::bench::{BenchResult, Bencher};
+use crate::util::json::Json;
+use std::io;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Run phases, shared with the workers as one atomic.
+const PHASE_WARMUP: u8 = 0;
+const PHASE_MEASURE: u8 = 1;
+const PHASE_STOP: u8 = 2;
+
+/// Which request mix the workers issue (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    /// One repeated cacheable `sim` point (cache-hit path).
+    Hot,
+    /// Unique `sparsity` points per request (cold execution path).
+    Cold,
+    /// Mostly hot with cold, scenario, and watched-job traffic mixed in.
+    Mixed,
+}
+
+impl Mix {
+    pub const ALL: [Mix; 3] = [Mix::Hot, Mix::Cold, Mix::Mixed];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mix::Hot => "hot",
+            Mix::Cold => "cold",
+            Mix::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mix> {
+        Mix::ALL.iter().copied().find(|m| m.as_str() == s)
+    }
+}
+
+/// Load-generator options (the `loadgen` subcommand's flags).
+pub struct LoadgenOptions {
+    /// Service configuration for a self-hosted target (ignored with
+    /// [`LoadgenOptions::addr`] set).
+    pub cfg: Config,
+    /// Measure an already-running server at this address instead of
+    /// self-hosting one. Self-hosting (None) binds an ephemeral
+    /// 127.0.0.1 port and serves from a background thread, so the
+    /// measurement includes a known-fresh cache.
+    pub addr: Option<String>,
+    /// Concurrent closed-loop connections (workers).
+    pub connections: usize,
+    /// Warm-up before the measured window, milliseconds.
+    pub warmup_ms: u64,
+    /// Measured-window length, milliseconds.
+    pub duration_ms: u64,
+    /// Request mix.
+    pub mix: Mix,
+    /// Io model for the self-hosted server (ignored with `addr`).
+    pub io: IoModel,
+    /// `false` sends `"cache":false` on every request *and* disables
+    /// the self-hosted server's cache — the `--no-cache` measurement
+    /// escape hatch.
+    pub cache: bool,
+    /// Default execution backend for the self-hosted server.
+    pub default_backend: BackendId,
+}
+
+impl LoadgenOptions {
+    pub fn new(cfg: Config) -> LoadgenOptions {
+        LoadgenOptions {
+            cfg,
+            addr: None,
+            connections: 64,
+            warmup_ms: 500,
+            duration_ms: 2000,
+            mix: Mix::Mixed,
+            io: IoModel::default_for_platform(),
+            cache: true,
+            default_backend: crate::backend::DEFAULT,
+        }
+    }
+}
+
+/// One finished run's numbers (everything `BENCH_serve.json` records).
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Requests completed inside the measured window.
+    pub requests: u64,
+    /// Sustained completed-requests per second over the window.
+    pub req_per_sec: f64,
+    /// Nearest-rank latency percentiles over the window, nanoseconds.
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    /// Worker connections driven.
+    pub connections: usize,
+    /// Io model measured (self-host) or `None` for a remote target
+    /// whose model the client cannot observe (by design).
+    pub io: Option<IoModel>,
+    /// Measured window length, milliseconds (wall clock, not the
+    /// requested `duration_ms`).
+    pub measured_ms: f64,
+    /// Typed `overloaded` rejections (retryable; not failures).
+    pub overloaded: u64,
+    /// Unexpected typed errors (any is a run failure).
+    pub errors: u64,
+    /// First unexpected error message, for the failure report.
+    pub first_error: Option<String>,
+    /// Server result-cache hit rate after the run (`hits / lookups`),
+    /// if a final `stats` request answered.
+    pub cache_hit_rate: Option<f64>,
+}
+
+/// Per-worker tally, merged after the stop flag.
+#[derive(Default)]
+struct WorkerStats {
+    latencies_ns: Vec<u64>,
+    measured: u64,
+    overloaded: u64,
+    errors: u64,
+    first_error: Option<String>,
+    transport: Option<String>,
+}
+
+/// What one issued operation came back as.
+enum Outcome {
+    Served,
+    Overloaded,
+    TypedError(String),
+}
+
+/// The hot request: one cacheable point repeated by every worker, so
+/// after warm-up it is the cache-hit fast path.
+fn hot_request() -> Request {
+    Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 }
+}
+
+/// The `k`-th cold request of worker `w`: a `sparsity` point nobody
+/// else asks for. Worker-strided indexing keeps the keyspace disjoint
+/// across workers (unique for the first ~1M points — far beyond any
+/// window), so every cold request is a genuine miss.
+fn cold_request(worker: usize, k: u64, connections: usize) -> Request {
+    let idx = worker as u64 + connections as u64 * k;
+    Request::Sparsity {
+        n: 1 + (idx % 16384) as usize,
+        streams: 1 + ((idx / 16384) % 64) as usize,
+    }
+}
+
+/// A small synchronous two-point sweep (the `scenario` serve path).
+fn scenario_spec() -> ScenarioSpec {
+    let mut spec = ScenarioSpec::new(Ask::Sim);
+    spec.sweep.streams = vec![1, 2];
+    spec
+}
+
+/// Issue one operation per the mix and classify its outcome. `cold_k`
+/// advances only when a cold point was actually spent.
+fn issue(
+    client: &mut Client,
+    mix: Mix,
+    worker: usize,
+    connections: usize,
+    k: u64,
+    cold_k: &mut u64,
+    cache: bool,
+) -> io::Result<Outcome> {
+    let classify = |resp: Response| match resp {
+        Response::Error { code: ErrorCode::Overloaded, .. } => {
+            Outcome::Overloaded
+        }
+        Response::Error { code, message } => Outcome::TypedError(format!(
+            "{}: {message}",
+            code.as_str()
+        )),
+        _ => Outcome::Served,
+    };
+    let simple = |client: &mut Client, req: &Request| {
+        client.request_opts(req, cache).map(classify)
+    };
+    match mix {
+        Mix::Hot => simple(client, &hot_request()),
+        Mix::Cold => {
+            let req = cold_request(worker, *cold_k, connections);
+            *cold_k += 1;
+            simple(client, &req)
+        }
+        Mix::Mixed => match k % 64 {
+            // One watched job per 64 ops: submit, stream every progress
+            // frame, fetch the result — one logical request end to end.
+            0 => client
+                .submit_and_wait(&scenario_spec(), |_| {})
+                .map(classify),
+            1..=3 => {
+                simple(client, &Request::Scenario { spec: scenario_spec() })
+            }
+            4..=9 => {
+                let req = cold_request(worker, *cold_k, connections);
+                *cold_k += 1;
+                simple(client, &req)
+            }
+            _ => simple(client, &hot_request()),
+        },
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted_ns: &[u64], p: f64) -> u64 {
+    if sorted_ns.is_empty() {
+        return 0;
+    }
+    let rank = (p / 100.0 * sorted_ns.len() as f64).ceil() as usize;
+    sorted_ns[rank.clamp(1, sorted_ns.len()) - 1]
+}
+
+/// Run the load generator. Self-hosts a server when
+/// [`LoadgenOptions::addr`] is `None`. `Ok` means the run *executed*;
+/// inspect [`LoadgenReport::errors`] / `requests` for pass/fail (the
+/// CLI and ci.sh fail on any unexpected typed error or a zero-request
+/// window).
+pub fn run(opts: &LoadgenOptions) -> io::Result<LoadgenReport> {
+    // Self-host if no target was given: bind the ephemeral port
+    // ourselves so the address is known without parsing stdout, and
+    // cap accepts at exactly our connection count (workers + the final
+    // stats probe) so the server thread exits cleanly when we do.
+    let accepts = opts.connections + 1;
+    let (addr, server) = match &opts.addr {
+        Some(a) => (a.clone(), None),
+        None => {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?.to_string();
+            let policy = if opts.cache {
+                CachePolicy::default()
+            } else {
+                CachePolicy::disabled()
+            };
+            let svc = Arc::new(Service::with_default_backend(
+                opts.cfg.clone(),
+                policy,
+                opts.default_backend,
+            ));
+            let io = opts.io;
+            let handle = thread::Builder::new()
+                .name("loadgen-server".into())
+                .spawn(move || serve_on(listener, svc, Some(accepts), io))?;
+            (addr, Some(handle))
+        }
+    };
+
+    let phase = Arc::new(AtomicU8::new(PHASE_WARMUP));
+    let mut workers = Vec::with_capacity(opts.connections);
+    for w in 0..opts.connections {
+        let phase = Arc::clone(&phase);
+        let addr = addr.clone();
+        let mix = opts.mix;
+        let cache = opts.cache;
+        let connections = opts.connections;
+        workers.push(
+            thread::Builder::new()
+                .name(format!("loadgen-worker-{w}"))
+                .spawn(move || -> WorkerStats {
+                    let mut stats = WorkerStats::default();
+                    let mut client =
+                        match Client::connect_retry(addr.as_str(), 400) {
+                            Ok(c) => c,
+                            Err(e) => {
+                                stats.transport =
+                                    Some(format!("connect: {e}"));
+                                return stats;
+                            }
+                        };
+                    let mut k = 0u64;
+                    let mut cold_k = 0u64;
+                    loop {
+                        let p = phase.load(Ordering::Acquire);
+                        if p == PHASE_STOP {
+                            break;
+                        }
+                        let start = Instant::now();
+                        let outcome = issue(
+                            &mut client,
+                            mix,
+                            w,
+                            connections,
+                            k,
+                            &mut cold_k,
+                            cache,
+                        );
+                        k += 1;
+                        match outcome {
+                            Ok(Outcome::Served) => {
+                                if p == PHASE_MEASURE {
+                                    stats.measured += 1;
+                                    stats.latencies_ns.push(
+                                        start.elapsed().as_nanos() as u64,
+                                    );
+                                }
+                            }
+                            Ok(Outcome::Overloaded) => {
+                                if p == PHASE_MEASURE {
+                                    stats.overloaded += 1;
+                                }
+                                // Retryable by design: back off a touch
+                                // so the queue can drain.
+                                thread::sleep(Duration::from_millis(2));
+                            }
+                            Ok(Outcome::TypedError(msg)) => {
+                                stats.errors += 1;
+                                stats.first_error.get_or_insert(msg);
+                            }
+                            Err(e) => {
+                                stats.transport =
+                                    Some(format!("request: {e}"));
+                                break;
+                            }
+                        }
+                    }
+                    stats
+                })?,
+        );
+    }
+
+    // Phase timer (this thread): warm up, open the window, close it.
+    thread::sleep(Duration::from_millis(opts.warmup_ms));
+    let window_open = Instant::now();
+    phase.store(PHASE_MEASURE, Ordering::Release);
+    thread::sleep(Duration::from_millis(opts.duration_ms));
+    phase.store(PHASE_STOP, Ordering::Release);
+    let measured_ms = window_open.elapsed().as_secs_f64() * 1e3;
+
+    let mut all = WorkerStats::default();
+    for h in workers {
+        let s = h.join().map_err(|_| {
+            io::Error::new(io::ErrorKind::Other, "loadgen worker panicked")
+        })?;
+        all.measured += s.measured;
+        all.overloaded += s.overloaded;
+        all.errors += s.errors;
+        all.latencies_ns.extend(s.latencies_ns);
+        if all.first_error.is_none() {
+            all.first_error = s.first_error;
+        }
+        // A worker that lost its transport mid-run is a failure too.
+        if let Some(t) = s.transport {
+            all.errors += 1;
+            all.first_error.get_or_insert(t);
+        }
+    }
+
+    // Final probe: the server-side cache hit rate (also the +1 accept
+    // that lets a self-hosted server finish).
+    let cache_hit_rate = Client::connect_retry(addr.as_str(), 100)
+        .ok()
+        .and_then(|mut c| c.request(&Request::Stats).ok())
+        .and_then(|resp| match resp {
+            Response::Stats { cache, .. } => {
+                let lookups = cache.hits + cache.misses;
+                if lookups > 0 {
+                    Some(cache.hits as f64 / lookups as f64)
+                } else {
+                    Some(0.0)
+                }
+            }
+            _ => None,
+        });
+    if let Some(h) = server {
+        // Self-hosted: all accepts are spent, the server loop exits.
+        let _ = h.join();
+    }
+
+    all.latencies_ns.sort_unstable();
+    let window_s = measured_ms / 1e3;
+    Ok(LoadgenReport {
+        requests: all.measured,
+        req_per_sec: if window_s > 0.0 {
+            all.measured as f64 / window_s
+        } else {
+            0.0
+        },
+        p50_ns: percentile(&all.latencies_ns, 50.0),
+        p90_ns: percentile(&all.latencies_ns, 90.0),
+        p99_ns: percentile(&all.latencies_ns, 99.0),
+        connections: opts.connections,
+        io: if opts.addr.is_none() { Some(opts.io) } else { None },
+        measured_ms,
+        overloaded: all.overloaded,
+        errors: all.errors,
+        first_error: all.first_error,
+        cache_hit_rate,
+    })
+}
+
+/// Write a report as `BENCH_serve.json` (bench-v1; throughput,
+/// percentiles, and run shape in `extra`) and return the path.
+pub fn write_bench(
+    report: &LoadgenReport,
+    opts: &LoadgenOptions,
+) -> io::Result<std::path::PathBuf> {
+    let lat = if report.requests > 0 {
+        // The summary row: mean is unavailable from percentiles alone,
+        // so record the median as the representative per-request cost
+        // and let `extra` carry the tail.
+        BenchResult {
+            name: format!("serve/request_{}", opts.mix.as_str()),
+            iters: report.requests as usize,
+            mean_ns: report.p50_ns as f64,
+            std_ns: 0.0,
+            min_ns: report.p50_ns as f64,
+            max_ns: report.p99_ns as f64,
+        }
+    } else {
+        BenchResult {
+            name: format!("serve/request_{}", opts.mix.as_str()),
+            iters: 0,
+            mean_ns: 0.0,
+            std_ns: 0.0,
+            min_ns: 0.0,
+            max_ns: 0.0,
+        }
+    };
+    let mut bencher = Bencher::new(0, report.requests as usize);
+    bencher.record(lat);
+    let io_name = report
+        .io
+        .map(|m| m.as_str().to_string())
+        .unwrap_or_else(|| "remote".to_string());
+    bencher.write_json(
+        "serve",
+        vec![
+            ("req_per_sec", Json::Num(report.req_per_sec)),
+            ("requests", Json::Num(report.requests as f64)),
+            ("p50_ns", Json::Num(report.p50_ns as f64)),
+            ("p90_ns", Json::Num(report.p90_ns as f64)),
+            ("p99_ns", Json::Num(report.p99_ns as f64)),
+            ("connections", Json::Num(report.connections as f64)),
+            ("io_model", Json::Str(io_name)),
+            ("mix", Json::Str(opts.mix.as_str().to_string())),
+            ("cache", Json::Bool(opts.cache)),
+            (
+                "cache_hit_rate",
+                report
+                    .cache_hit_rate
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
+            ("overloaded", Json::Num(report.overloaded as f64)),
+            ("errors", Json::Num(report.errors as f64)),
+            ("duration_ms", Json::Num(report.measured_ms)),
+            ("warmup_ms", Json::Num(opts.warmup_ms as f64)),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_spellings_round_trip() {
+        for m in Mix::ALL {
+            assert_eq!(Mix::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(Mix::parse("warm"), None);
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 50.0), 50);
+        assert_eq!(percentile(&s, 90.0), 90);
+        assert_eq!(percentile(&s, 99.0), 99);
+        assert_eq!(percentile(&s, 100.0), 100);
+        assert_eq!(percentile(&[7], 50.0), 7);
+        assert_eq!(percentile(&[], 99.0), 0);
+    }
+
+    #[test]
+    fn cold_keyspace_is_disjoint_across_workers() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for w in 0..8 {
+            for k in 0..200 {
+                match cold_request(w, k, 8) {
+                    Request::Sparsity { n, streams } => {
+                        assert!((1..=16384).contains(&n));
+                        assert!((1..=64).contains(&streams));
+                        assert!(
+                            seen.insert((n, streams)),
+                            "duplicate cold point n={n} streams={streams}"
+                        );
+                    }
+                    other => panic!("unexpected request {other:?}"),
+                }
+            }
+        }
+    }
+
+    /// End-to-end smoke over a real self-hosted server: a short hot run
+    /// must complete requests, no typed errors, and (cache on) a high
+    /// hit rate. Uses the threads model so the test is portable; the
+    /// epoll path is covered by tests/serve_integration.rs and the
+    /// ci.sh loadgen smoke.
+    #[test]
+    fn self_hosted_hot_run_completes() {
+        let mut opts = LoadgenOptions::new(Config::mi300a());
+        opts.connections = 2;
+        opts.warmup_ms = 50;
+        opts.duration_ms = 150;
+        opts.mix = Mix::Hot;
+        opts.io = IoModel::Threads;
+        let report = run(&opts).expect("loadgen run");
+        assert_eq!(report.errors, 0, "{:?}", report.first_error);
+        assert!(report.requests > 0, "zero throughput: {report:?}");
+        assert!(report.p50_ns > 0);
+        assert!(report.p99_ns >= report.p50_ns);
+        let rate = report.cache_hit_rate.expect("stats probe");
+        assert!(rate > 0.5, "hot mix should be cache-hit dominated: {rate}");
+    }
+}

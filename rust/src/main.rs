@@ -14,7 +14,10 @@
 //!   scenario            run a declarative ScenarioSpec sweep, locally
 //!                       or as an async job with progress (--addr)
 //!   serve               serve the JSON-line protocol over TCP
-//!                       (batching + result cache; --no-cache disables)
+//!                       (batching + result cache; --no-cache disables;
+//!                       --io-model picks epoll or threads)
+//!   loadgen             measure a serving instance (or a self-hosted
+//!                       one) with the built-in load generator
 //!   client <json>       send one JSON request to a serving instance
 //!   config              dump the active configuration
 //!   list                list experiments and artifacts
@@ -27,7 +30,9 @@ use mi300a_char::api::{
 use mi300a_char::backend::BackendId;
 use mi300a_char::config::Config;
 use mi300a_char::isa::Precision;
+use mi300a_char::loadgen::{LoadgenOptions, Mix};
 use mi300a_char::runtime::Manifest;
+use mi300a_char::serve::IoModel;
 use mi300a_char::util::cli::Args;
 use mi300a_char::util::json::Json;
 use mi300a_char::util::pool;
@@ -50,7 +55,11 @@ USAGE:
                    [--sweep-precision A,B,..] [--sweep-iters A,B,..]
                    [--backend des|analytic] [--json] [--addr HOST:PORT]
   mi300a-char serve [--addr HOST:PORT] [--max-conns N] [--no-cache]
-                   [--backend des|analytic]
+                   [--backend des|analytic] [--io-model epoll|threads]
+  mi300a-char loadgen [--addr HOST:PORT] [--connections N]
+                   [--warmup-ms N] [--duration-ms N]
+                   [--mix hot|cold|mixed] [--io-model epoll|threads]
+                   [--no-cache] [--backend des|analytic]
   mi300a-char client <json-request> [--addr HOST:PORT]
   mi300a-char config [--set section.field=value]
   mi300a-char list
@@ -66,6 +75,9 @@ Scenario sweeps (DESIGN.md §6.6, docs/scenarios.md) run locally by
 default; with --addr they submit as an async job and stream progress:
   mi300a-char scenario --size 512 --sweep-streams 1,2,4,8,16
   mi300a-char scenario --addr 127.0.0.1:7300 --ask sparsity --sweep-size 256,512,2048,8192
+The load generator (docs/performance.md) self-hosts an ephemeral server
+when no --addr is given and writes BENCH_serve.json (PERF.md):
+  mi300a-char loadgen --connections 64 --duration-ms 2000 --mix mixed
 Execution backends (DESIGN.md §6.8, docs/backends.md): --backend picks
 the engine answering sim/plan/sparsity points (des = DES replay,
 analytic = calibrated closed forms, ~100x faster per sim point);
@@ -94,6 +106,31 @@ fn backend_arg(args: &Args, what: &str) -> Result<Option<BackendId>, i32> {
         eprintln!("{what}: {e}");
         2
     })
+}
+
+/// Parse an optional `--io-model` flag: unknown spellings and models
+/// the platform cannot run are usage errors (`Err(2)`).
+fn io_model_arg(args: &Args, what: &str) -> Result<IoModel, i32> {
+    match args.get("io-model") {
+        None => Ok(IoModel::default_for_platform()),
+        Some(v) => match IoModel::parse(v) {
+            Some(m) if m.available() => Ok(m),
+            Some(m) => {
+                eprintln!(
+                    "{what}: io model {:?} is not available on this \
+                     platform (try threads)",
+                    m.as_str()
+                );
+                Err(2)
+            }
+            None => {
+                eprintln!(
+                    "{what}: unknown io model {v:?} (want epoll|threads)"
+                );
+                Err(2)
+            }
+        },
+    }
 }
 
 fn build_config(args: &Args) -> Config {
@@ -550,8 +587,12 @@ fn cmd_serve(args: &Args) -> i32 {
         Ok(b) => b.unwrap_or(mi300a_char::backend::DEFAULT),
         Err(code) => return code,
     };
-    match mi300a_char::serve::serve_opts(cfg, &addr, max, policy,
-                                         default_backend)
+    let io = match io_model_arg(args, "serve") {
+        Ok(m) => m,
+        Err(code) => return code,
+    };
+    match mi300a_char::serve::serve_io(cfg, &addr, max, policy,
+                                       default_backend, io)
     {
         Ok(()) => 0,
         Err(e) => {
@@ -559,6 +600,90 @@ fn cmd_serve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+fn cmd_loadgen(args: &Args) -> i32 {
+    let mut opts = LoadgenOptions::new(build_config(args));
+    opts.addr = args.get("addr").map(str::to_string);
+    opts.connections = args.get_usize("connections", opts.connections);
+    if opts.connections == 0 {
+        eprintln!("loadgen: --connections wants a positive integer");
+        return 2;
+    }
+    opts.warmup_ms = args.get_u64("warmup-ms", opts.warmup_ms);
+    opts.duration_ms = args.get_u64("duration-ms", opts.duration_ms);
+    if opts.duration_ms == 0 {
+        eprintln!("loadgen: --duration-ms wants a positive integer");
+        return 2;
+    }
+    opts.mix = match Mix::parse(args.get_or("mix", opts.mix.as_str())) {
+        Some(m) => m,
+        None => {
+            eprintln!(
+                "loadgen: unknown mix {:?} (want hot|cold|mixed)",
+                args.get_or("mix", "")
+            );
+            return 2;
+        }
+    };
+    opts.io = match io_model_arg(args, "loadgen") {
+        Ok(m) => m,
+        Err(code) => return code,
+    };
+    opts.cache = !args.flag("no-cache");
+    opts.default_backend = match backend_arg(args, "loadgen") {
+        Ok(b) => b.unwrap_or(mi300a_char::backend::DEFAULT),
+        Err(code) => return code,
+    };
+    let report = match mi300a_char::loadgen::run(&opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("loadgen: {e}");
+            return 1;
+        }
+    };
+    match mi300a_char::loadgen::write_bench(&report, &opts) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("loadgen: cannot write BENCH_serve.json: {e}");
+            return 1;
+        }
+    }
+    println!(
+        "loadgen: {:.0} req/s sustained ({} requests / {:.0} ms, {} \
+         connections, io {}, mix {})",
+        report.req_per_sec,
+        report.requests,
+        report.measured_ms,
+        report.connections,
+        report.io.map(IoModel::as_str).unwrap_or("remote"),
+        opts.mix.as_str()
+    );
+    println!(
+        "latency p50 {:.1} us, p90 {:.1} us, p99 {:.1} us; overloaded \
+         {}; cache hit rate {}",
+        report.p50_ns as f64 / 1e3,
+        report.p90_ns as f64 / 1e3,
+        report.p99_ns as f64 / 1e3,
+        report.overloaded,
+        report
+            .cache_hit_rate
+            .map(|r| format!("{:.1}%", r * 100.0))
+            .unwrap_or_else(|| "unknown".to_string())
+    );
+    if report.errors > 0 {
+        eprintln!(
+            "loadgen: {} unexpected typed/transport errors (first: {})",
+            report.errors,
+            report.first_error.as_deref().unwrap_or("unknown")
+        );
+        return 1;
+    }
+    if report.requests == 0 {
+        eprintln!("loadgen: zero requests completed in the measured window");
+        return 1;
+    }
+    0
 }
 
 fn cmd_client(args: &Args) -> i32 {
@@ -626,6 +751,7 @@ fn main() {
         Some("config") => cmd_config(&args),
         Some("list") => cmd_list(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("client") => cmd_client(&args),
         _ => {
             print!("{USAGE}");

@@ -1,0 +1,270 @@
+//! `mi300a-char serve` — a thin TCP transport over [`crate::api`].
+//!
+//! Framing: one message per line. A line starting with `{` is a
+//! versioned JSON request (DESIGN.md §6); its optional `id` is echoed on
+//! the response so clients can pipeline many requests on one
+//! connection, its optional `"cache":false` envelope flag bypasses the
+//! service's result cache, its optional `"backend"` envelope key
+//! selects the execution backend for scenario-backed requests
+//! (DESIGN.md §6.8; `serve --backend` / [`serve_opts`] set the
+//! instance default), and a `batch` request answers its items in one
+//! envelope. Any other non-empty line goes through the legacy text
+//! shim (`SIM`/`PLAN`/`SPARSITY`/`RUN`/`LIST`/`CONFIG`/`STATS`/
+//! `BACKENDS`/`QUIT`), which desugars into the same typed requests —
+//! the response line is byte-identical to the JSON form without an
+//! `id` (enforced by tests/serve_integration.rs). Request lines are
+//! capped at [`MAX_LINE_BYTES`]; a longer line is answered with a
+//! typed `bad_request` (and the rest of the line is discarded) instead
+//! of growing the server's memory without bound.
+//!
+//! ## Progress push (DESIGN.md §6.7)
+//!
+//! A top-level `submit` with `"progress":true` registers a watcher on
+//! the job atomically with the enqueue. After the `job` response line,
+//! the connection pushes `{"type":"progress",…}` frames — each tagged
+//! with the *submitting request's* `id` — interleaved with other
+//! response lines as the job advances: one snapshot at registration (so
+//! at least one frame always arrives), one on the queued→running
+//! transition, one per completed sweep point, and one at the terminal
+//! state, after which the stream of frames ends. Every line is written
+//! atomically (one writer lock per connection in the threads model, the
+//! single reactor thread in the epoll model), so pipelined responses
+//! and frames never interleave mid-line; clients attribute frames by
+//! `id` and skip the rest (the native [`crate::api::Client`] does this
+//! automatically).
+//!
+//! All business logic lives in [`crate::api::Service`]: this module
+//! only accepts connections, frames lines, and serializes responses.
+//! Repeat requests across *all* connections share the service's result
+//! cache ([`crate::api::cache`]); start with [`serve_with`] and
+//! [`crate::api::CachePolicy::disabled`] (the CLI's `--no-cache`) for
+//! measurement runs. Jobs are service-wide too: a job submitted on one
+//! connection can be polled, fetched, or cancelled from any other.
+//!
+//! ## Concurrency
+//!
+//! Two io models ([`IoModel`], the CLI's `serve --io-model`) share one
+//! protocol implementation; the model is observable only through
+//! resource usage and benchmarks (`mi300a-char loadgen`,
+//! `docs/performance.md`), never through response bytes:
+//!
+//! * **`epoll`** (Linux, the default there): a single reactor thread
+//!   multiplexes every connection through a readiness-based event loop
+//!   (raw `epoll` via std-only syscalls — no external deps). An idle
+//!   connection costs one fd plus bounded buffers instead of an OS
+//!   thread stack, which is what lets one node hold thousands of
+//!   job-polling clients. Request execution never runs on the reactor:
+//!   each decoded line is dispatched to a shared
+//!   [`crate::util::pool::TaskPool`], so a slow DES point parks a pool
+//!   worker — the way a long kernel occupies one ACE queue — while the
+//!   reactor keeps accepting, framing, and flushing. Progress frames
+//!   are queued to the reactor (an eventfd wake) and written when the
+//!   socket is writable; a watched submit costs no thread.
+//! * **`threads`** (every platform, the non-Linux default): one OS
+//!   thread per connection over the shared `Arc<Service>`, with a
+//!   pusher thread per watched submit. Finished connection threads are
+//!   reaped by join (a completion channel), so a long-lived server
+//!   holds O(live-connections) state.
+//!
+//! In both models `sim`/`plan`/`sparsity`/`scenario` requests are pure
+//! functions of the immutable config and scale across cores, the way
+//! the paper's ACEs scale independent streams. The one non-`Sync`
+//! resource — the PJRT executor — is isolated inside the service on a
+//! single mpsc worker thread, so `run` requests serialize through it
+//! (exactly like launches serialize through a command lane) without
+//! blocking the simulator paths. Responses are deterministic per
+//! request for a fixed config/seed, so concurrent clients observe
+//! byte-identical answers to a single client — at any connection count,
+//! under either io model.
+
+#[cfg(target_os = "linux")]
+mod reactor;
+#[cfg(target_os = "linux")]
+mod sys;
+mod threads;
+
+use crate::api::{CachePolicy, Response, Service};
+use crate::config::Config;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+/// Maximum accepted request-line length in bytes (1 MiB), newline
+/// excluded. A longer line is answered with a typed `bad_request` and
+/// discarded up to its newline; the connection stays usable. Both io
+/// models enforce the same cap (tests/serve_integration.rs).
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// How a serving instance waits for socket readiness (the CLI's
+/// `serve --io-model {epoll,threads}`). The protocol — framing,
+/// response bytes, progress-frame order, the legacy shim — is identical
+/// under both; only the concurrency structure differs (see the module
+/// docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoModel {
+    /// Readiness-based event loop over raw `epoll` (Linux only; the
+    /// default there): one reactor thread, execution on a task pool,
+    /// O(1) threads regardless of connection count.
+    Epoll,
+    /// One OS thread per connection (available everywhere; the default
+    /// off Linux).
+    Threads,
+}
+
+impl IoModel {
+    pub const ALL: [IoModel; 2] = [IoModel::Epoll, IoModel::Threads];
+
+    /// Wire/CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IoModel::Epoll => "epoll",
+            IoModel::Threads => "threads",
+        }
+    }
+
+    /// Inverse of [`IoModel::as_str`].
+    pub fn parse(s: &str) -> Option<IoModel> {
+        IoModel::ALL.iter().copied().find(|m| m.as_str() == s)
+    }
+
+    /// Whether this model can run on the compiled-for platform.
+    pub fn available(self) -> bool {
+        match self {
+            IoModel::Epoll => cfg!(target_os = "linux"),
+            IoModel::Threads => true,
+        }
+    }
+
+    /// The platform default: `epoll` on Linux, `threads` elsewhere.
+    pub fn default_for_platform() -> IoModel {
+        if cfg!(target_os = "linux") {
+            IoModel::Epoll
+        } else {
+            IoModel::Threads
+        }
+    }
+}
+
+/// Serve on `addr` (e.g. "127.0.0.1:0") with the default cache policy;
+/// returns after `max_conns` connections have been accepted and fully
+/// served (None = forever). Prints the bound address on stdout so
+/// callers/tests can discover the ephemeral port.
+pub fn serve(
+    cfg: Config,
+    addr: &str,
+    max_conns: Option<usize>,
+) -> std::io::Result<()> {
+    serve_with(cfg, addr, max_conns, CachePolicy::default())
+}
+
+/// [`serve`] with an explicit result-cache policy (`--no-cache` passes
+/// [`CachePolicy::disabled`]).
+pub fn serve_with(
+    cfg: Config,
+    addr: &str,
+    max_conns: Option<usize>,
+    policy: CachePolicy,
+) -> std::io::Result<()> {
+    serve_opts(cfg, addr, max_conns, policy, crate::backend::DEFAULT)
+}
+
+/// [`serve_with`] plus the instance's default execution backend
+/// (the CLI's `serve --backend`; DESIGN.md §6.8) — what answers
+/// requests that carry no `"backend"` selector of their own.
+pub fn serve_opts(
+    cfg: Config,
+    addr: &str,
+    max_conns: Option<usize>,
+    policy: CachePolicy,
+    default_backend: crate::backend::BackendId,
+) -> std::io::Result<()> {
+    serve_io(
+        cfg,
+        addr,
+        max_conns,
+        policy,
+        default_backend,
+        IoModel::default_for_platform(),
+    )
+}
+
+/// [`serve_opts`] with an explicit io model (the CLI's
+/// `serve --io-model`). Requesting [`IoModel::Epoll`] off Linux is an
+/// `Unsupported` error rather than a silent fallback.
+pub fn serve_io(
+    cfg: Config,
+    addr: &str,
+    max_conns: Option<usize>,
+    policy: CachePolicy,
+    default_backend: crate::backend::BackendId,
+    io: IoModel,
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!("serving on {}", listener.local_addr()?);
+    let svc =
+        Arc::new(Service::with_default_backend(cfg, policy, default_backend));
+    serve_on(listener, svc, max_conns, io)
+}
+
+/// Serve an already-bound listener with an already-built service — the
+/// embedding entry point ([`crate::loadgen`] self-hosts through it so
+/// it can learn the ephemeral port without parsing stdout). Returns
+/// after `max_conns` connections have been accepted and fully served
+/// (None = forever).
+pub fn serve_on(
+    listener: TcpListener,
+    svc: Arc<Service>,
+    max_conns: Option<usize>,
+    io: IoModel,
+) -> std::io::Result<()> {
+    match io {
+        IoModel::Threads => threads::run(listener, svc, max_conns),
+        IoModel::Epoll => {
+            #[cfg(target_os = "linux")]
+            {
+                reactor::run(listener, svc, max_conns)
+            }
+            #[cfg(not(target_os = "linux"))]
+            {
+                drop((listener, svc, max_conns));
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::Unsupported,
+                    "the epoll io model requires Linux; \
+                     use --io-model threads",
+                ))
+            }
+        }
+    }
+}
+
+/// The typed rejection for a request line over [`MAX_LINE_BYTES`],
+/// shared by both io models so the response bytes match.
+pub(crate) fn line_cap_error() -> Response {
+    Response::from(crate::api::ApiError::bad_request(format!(
+        "request line longer than {MAX_LINE_BYTES} bytes \
+         (the serve framing cap)"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_model_spellings_round_trip() {
+        for m in IoModel::ALL {
+            assert_eq!(IoModel::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(IoModel::parse("select"), None);
+        assert!(IoModel::Threads.available());
+        assert!(IoModel::default_for_platform().available());
+        #[cfg(target_os = "linux")]
+        assert_eq!(IoModel::default_for_platform(), IoModel::Epoll);
+    }
+
+    #[test]
+    fn line_cap_rejection_is_a_typed_bad_request() {
+        let line = line_cap_error().to_json(None).to_string();
+        assert!(line.contains("\"bad_request\""), "{line}");
+        assert!(line.contains(&MAX_LINE_BYTES.to_string()), "{line}");
+    }
+}

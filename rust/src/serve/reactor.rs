@@ -1,0 +1,617 @@
+//! The epoll io model (`--io-model epoll`, Linux default): one reactor
+//! thread multiplexing every connection, request execution on a
+//! [`TaskPool`], progress frames queued back to the reactor.
+//!
+//! ## Structure
+//!
+//! * **Tokens**: `0` is the listener, `1` the wake eventfd, connections
+//!   count up from `2` (monotonic, never reused — a stale completion
+//!   for a closed connection is simply ignored).
+//! * **Reads**: level-triggered `EPOLLIN`; bytes accumulate in a
+//!   per-connection buffer, complete lines move to that connection's
+//!   request queue. A line over [`MAX_LINE_BYTES`] is replaced by a
+//!   `TooLong` marker *in order* (the typed rejection is written in the
+//!   line's response position) and the remainder discarded. `QUIT`
+//!   (and EOF) stop reading; queued work still completes.
+//! * **Execution**: at most **one in-flight request per connection**,
+//!   dispatched to the shared pool — responses come back in request
+//!   order exactly like the thread model's sequential loop, while
+//!   different connections execute in parallel across the pool.
+//!   Completions are queued to the reactor and flushed via an eventfd
+//!   wake.
+//! * **Progress push**: a watched submit registers a callback watcher
+//!   ([`Service::submit_watched_with`]) wrapping a [`Forwarder`]. The
+//!   forwarder *buffers* frames until the reactor has written the
+//!   submit's response line (a job can finish before its response is
+//!   even queued), then goes live: each further frame is queued to the
+//!   reactor and written when the socket allows. No thread per watched
+//!   submit.
+//! * **Writes**: per-connection bounded write buffer; `EPOLLOUT`
+//!   interest only while bytes are pending (level-triggered `EPOLLOUT`
+//!   with an empty buffer would spin). A consumer slower than
+//!   [`MAX_WBUF_BYTES`] of backlog is disconnected.
+//! * **Close**: a connection closes when it is quitting (QUIT/EOF/
+//!   error) *and* fully served — no in-flight request, no queued
+//!   requests, no live watchers, no unflushed bytes — matching the
+//!   thread model's "handler returned and pushers drained".
+//!
+//! The reactor itself never parses JSON or runs the engine; its work
+//! per event is O(bytes moved).
+
+use super::sys::{
+    Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
+};
+use super::{line_cap_error, MAX_LINE_BYTES};
+use crate::api::{JobView, LegacyCommand, Request, Response, Service};
+use crate::util::json::Json;
+use crate::util::pool::TaskPool;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::{Arc, Mutex};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Backpressure: past this many decoded-but-unexecuted request lines,
+/// the reactor stops reading a connection (drops `EPOLLIN`) until the
+/// queue drains — the bound the thread model gets implicitly from its
+/// one-line-at-a-time loop.
+const MAX_PIPELINED: usize = 1024;
+/// Slow-consumer bound: a connection whose unflushed output exceeds
+/// this is disconnected rather than buffered without limit.
+const MAX_WBUF_BYTES: usize = 8 << 20;
+/// Per-syscall read chunk.
+const READ_CHUNK: usize = 64 << 10;
+
+/// One framed unit from a connection, queued in arrival order.
+enum QItem {
+    /// A complete, cap-respecting, non-empty request line.
+    Line(String),
+    /// Placeholder for a line over the cap: answered with the typed
+    /// rejection in this position.
+    TooLong,
+}
+
+/// Cross-thread completions, queued by pool workers and job watchers,
+/// drained by the reactor on an eventfd wake.
+enum Event {
+    /// A dispatched request finished: its response line (None only for
+    /// the defensive legacy-QUIT arm) and, for an accepted watched
+    /// submit, the forwarder to bring live.
+    Done {
+        token: u64,
+        line: Option<String>,
+        forwarder: Option<Arc<Forwarder>>,
+    },
+    /// A live forwarder's progress frame.
+    Frame { token: u64, id: Option<u64>, view: JobView },
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Event>>,
+    wake: EventFd,
+}
+
+impl Shared {
+    fn push(&self, ev: Event) {
+        self.queue
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push_back(ev);
+        self.wake.signal();
+    }
+}
+
+enum FwdState {
+    /// Frames arriving before the submit's response line is written
+    /// (the job table delivers the queued snapshot synchronously at
+    /// registration, and a fast job can finish entirely in between).
+    Buffering(Vec<JobView>),
+    Live,
+}
+
+/// The reactor-side watcher for one watched submit: job-table
+/// callbacks land here (on job-worker threads) and are turned into
+/// ordered [`Event::Frame`]s for the submitting connection.
+struct Forwarder {
+    token: u64,
+    /// The submitting request's `id`, echoed on every frame.
+    id: Option<u64>,
+    shared: Arc<Shared>,
+    state: Mutex<FwdState>,
+}
+
+impl Forwarder {
+    fn on_frame(&self, view: JobView) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        match &mut *st {
+            FwdState::Buffering(buf) => buf.push(view),
+            // Queue while holding the state lock so frames from
+            // different job-worker threads cannot reorder between the
+            // state check and the queue push.
+            FwdState::Live => self.shared.push(Event::Frame {
+                token: self.token,
+                id: self.id,
+                view,
+            }),
+        }
+    }
+
+    /// Flip to live, returning everything buffered so far (written by
+    /// the reactor immediately after the submit's response line).
+    fn go_live(&self) -> Vec<JobView> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        match std::mem::replace(&mut *st, FwdState::Live) {
+            FwdState::Buffering(buf) => buf,
+            FwdState::Live => Vec::new(),
+        }
+    }
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Unframed inbound bytes (bounded by the line cap + one chunk).
+    rbuf: Vec<u8>,
+    /// Unflushed outbound bytes (bounded by [`MAX_WBUF_BYTES`]).
+    wbuf: VecDeque<u8>,
+    /// Framed lines awaiting dispatch, in arrival order.
+    reqq: VecDeque<QItem>,
+    /// Whether a request line is currently executing on the pool (at
+    /// most one per connection — the ordering guarantee).
+    inflight: bool,
+    /// Live progress watchers whose terminal frame has not been
+    /// written yet; the connection is not "fully served" before 0.
+    watchers: usize,
+    /// No more reads: QUIT or EOF seen. Queued work still completes.
+    quitting: bool,
+    /// Mid-oversized-line: drop bytes until the next newline.
+    discarding: bool,
+    /// The connection failed (io error / slow consumer / hangup):
+    /// close as soon as the event is processed.
+    dead: bool,
+    /// Currently-registered epoll interest bits.
+    interest: u32,
+}
+
+/// Reactor accept-and-serve loop; returns after `max_conns` accepted
+/// connections have been fully served (None = forever).
+pub(super) fn run(
+    listener: TcpListener,
+    svc: Arc<Service>,
+    max_conns: Option<usize>,
+) -> io::Result<()> {
+    // Declaration order is drop order in reverse: the pool drops first
+    // (joins in-flight request tasks, so nothing touches `svc` or
+    // `shared` from a pool worker afterwards), then `svc` (its job
+    // workers stop, so no more watcher callbacks), then `shared` and
+    // the epoll fd close.
+    let epoll = Epoll::new()?;
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(VecDeque::new()),
+        wake: EventFd::new()?,
+    });
+    let svc = svc;
+    let pool = TaskPool::new(crate::util::pool::default_workers());
+
+    listener.set_nonblocking(true)?;
+    epoll.add(listener.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)?;
+    epoll.add(shared.wake.raw(), EPOLLIN, TOKEN_WAKE)?;
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut accepted = 0usize;
+    let mut accepting = true;
+    let mut events = vec![EpollEvent { events: 0, token: 0 }; 256];
+    let mut scratch = vec![0u8; READ_CHUNK];
+
+    loop {
+        let n = epoll.wait(&mut events, -1)?;
+        for slot in 0..n {
+            let ev = events[slot];
+            match ev.token {
+                TOKEN_LISTENER => {
+                    accept_ready(
+                        &listener,
+                        &epoll,
+                        &mut conns,
+                        &mut next_token,
+                        &mut accepted,
+                        &mut accepting,
+                        max_conns,
+                    )?;
+                }
+                TOKEN_WAKE => {
+                    shared.wake.drain();
+                    loop {
+                        let queued = {
+                            let mut q = shared
+                                .queue
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner());
+                            q.pop_front()
+                        };
+                        let Some(event) = queued else { break };
+                        handle_completion(
+                            event, &mut conns, &epoll, &svc, &pool, &shared,
+                        );
+                    }
+                }
+                token => {
+                    if let Some(conn) = conns.get_mut(&token) {
+                        if ev.events & (EPOLLERR | EPOLLHUP) != 0 {
+                            conn.dead = true;
+                        }
+                        if ev.events & EPOLLIN != 0 && !conn.dead {
+                            read_ready(conn, &mut scratch);
+                        }
+                        if ev.events & EPOLLOUT != 0 && !conn.dead {
+                            flush(conn);
+                        }
+                        pump(conn, token, &svc, &pool, &shared);
+                    }
+                    settle(&epoll, &mut conns, token);
+                }
+            }
+        }
+        if !accepting && conns.is_empty() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Accept until `WouldBlock`; after `max_conns` accepts, deregister the
+/// listener so the loop can wind down once live connections finish.
+fn accept_ready(
+    listener: &TcpListener,
+    epoll: &Epoll,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    accepted: &mut usize,
+    accepting: &mut bool,
+    max_conns: Option<usize>,
+) -> io::Result<()> {
+    while *accepting {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                *accepted += 1;
+                let token = *next_token;
+                *next_token += 1;
+                if stream.set_nonblocking(true).is_ok()
+                    && epoll.add(stream.as_raw_fd(), EPOLLIN, token).is_ok()
+                {
+                    conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            rbuf: Vec::new(),
+                            wbuf: VecDeque::new(),
+                            reqq: VecDeque::new(),
+                            inflight: false,
+                            watchers: 0,
+                            quitting: false,
+                            discarding: false,
+                            dead: false,
+                            interest: EPOLLIN,
+                        },
+                    );
+                }
+                if max_conns.map_or(false, |m| *accepted >= m) {
+                    *accepting = false;
+                    let _ = epoll.delete(listener.as_raw_fd());
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Drain the socket into the line framer (one bounded chunk at a time
+/// so an oversized line never accumulates more than a chunk).
+fn read_ready(conn: &mut Conn, scratch: &mut [u8]) {
+    while !conn.quitting && !conn.dead {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                // Match BufReader::lines: a final partial line without
+                // a newline is still a request.
+                if !conn.discarding && !conn.rbuf.is_empty() {
+                    conn.rbuf.push(b'\n');
+                    extract_lines(conn);
+                }
+                conn.quitting = true;
+                conn.rbuf.clear();
+                break;
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+                extract_lines(conn);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                eprintln!("connection error: {e}");
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Move complete lines from `rbuf` to the request queue, enforcing the
+/// line cap and the QUIT/empty-line/UTF-8 framing rules.
+fn extract_lines(conn: &mut Conn) {
+    loop {
+        if conn.quitting {
+            conn.rbuf.clear();
+            return;
+        }
+        let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') else {
+            if !conn.discarding && conn.rbuf.len() > MAX_LINE_BYTES {
+                // Cap tripped mid-line: queue the rejection in this
+                // line's position, then discard to the newline.
+                conn.reqq.push_back(QItem::TooLong);
+                conn.discarding = true;
+            }
+            if conn.discarding {
+                conn.rbuf.clear();
+            }
+            return;
+        };
+        let line: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+        if conn.discarding {
+            // The tail of an oversized line; its rejection is already
+            // queued.
+            conn.discarding = false;
+            continue;
+        }
+        let content = &line[..line.len() - 1];
+        if content.len() > MAX_LINE_BYTES {
+            conn.reqq.push_back(QItem::TooLong);
+            continue;
+        }
+        match std::str::from_utf8(content) {
+            Ok(s) => {
+                let text = s.trim();
+                if text.is_empty() {
+                    continue;
+                }
+                if text == "QUIT" || text == "quit" {
+                    conn.quitting = true;
+                    conn.rbuf.clear();
+                    return;
+                }
+                conn.reqq.push_back(QItem::Line(text.to_string()));
+            }
+            Err(_) => {
+                eprintln!(
+                    "connection error: request line is not valid UTF-8"
+                );
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Dispatch the connection's next queued line if none is in flight —
+/// the one-at-a-time rule that keeps responses in request order.
+fn pump(
+    conn: &mut Conn,
+    token: u64,
+    svc: &Arc<Service>,
+    pool: &TaskPool,
+    shared: &Arc<Shared>,
+) {
+    while !conn.inflight && !conn.dead {
+        match conn.reqq.pop_front() {
+            Some(QItem::TooLong) => {
+                let line = line_cap_error().to_json(None).to_string();
+                queue_line(conn, &line);
+            }
+            Some(QItem::Line(text)) => {
+                conn.inflight = true;
+                let svc = Arc::clone(svc);
+                let shared = Arc::clone(shared);
+                pool.execute(move || {
+                    let (line, forwarder) =
+                        process_line(&svc, &shared, token, &text);
+                    shared.push(Event::Done { token, line, forwarder });
+                });
+                break;
+            }
+            None => break,
+        }
+    }
+}
+
+/// Runs on a pool worker: parse, route through the service, serialize.
+/// A watched submit registers its forwarder (buffering) and hands it
+/// back for the reactor to bring live after the response line.
+fn process_line(
+    svc: &Service,
+    shared: &Arc<Shared>,
+    token: u64,
+    text: &str,
+) -> (Option<String>, Option<Arc<Forwarder>>) {
+    if text.starts_with('{') {
+        let v = match Json::parse(text) {
+            Ok(v) => v,
+            Err(e) => {
+                let resp =
+                    Response::from(crate::api::ApiError::bad_request(
+                        format!("unparseable request: {e}"),
+                    ));
+                return (Some(resp.to_json(None).to_string()), None);
+            }
+        };
+        match Request::decode(&v) {
+            Ok((Request::Submit { spec, progress: true }, env)) => {
+                let fwd = Arc::new(Forwarder {
+                    token,
+                    id: env.id,
+                    shared: Arc::clone(shared),
+                    state: Mutex::new(FwdState::Buffering(Vec::new())),
+                });
+                let cb = {
+                    let fwd = Arc::clone(&fwd);
+                    Box::new(move |view: JobView| fwd.on_frame(view))
+                        as Box<dyn Fn(JobView) + Send>
+                };
+                let resp = svc.submit_watched_with(&spec, &env, cb);
+                let accepted = matches!(resp, Response::Job(_));
+                let line = resp.to_json(env.id).to_string();
+                (Some(line), if accepted { Some(fwd) } else { None })
+            }
+            Ok((req, env)) => (
+                Some(svc.handle_env(&req, &env).to_json(env.id).to_string()),
+                None,
+            ),
+            Err((e, id)) => {
+                (Some(Response::from(e).to_json(id).to_string()), None)
+            }
+        }
+    } else {
+        match crate::api::parse_legacy(text) {
+            // QUIT is consumed by the framing layer; this arm is
+            // defensive.
+            Ok(LegacyCommand::Quit) => (None, None),
+            Ok(LegacyCommand::Request(req)) => {
+                (Some(svc.handle(&req).to_json(None).to_string()), None)
+            }
+            Err(e) => {
+                (Some(Response::from(e).to_json(None).to_string()), None)
+            }
+        }
+    }
+}
+
+/// Apply one cross-thread completion to its connection (ignored if the
+/// connection already closed — tokens are never reused).
+fn handle_completion(
+    event: Event,
+    conns: &mut HashMap<u64, Conn>,
+    epoll: &Epoll,
+    svc: &Arc<Service>,
+    pool: &TaskPool,
+    shared: &Arc<Shared>,
+) {
+    match event {
+        Event::Done { token, line, forwarder } => {
+            let Some(conn) = conns.get_mut(&token) else { return };
+            conn.inflight = false;
+            if let Some(line) = line {
+                queue_line(conn, &line);
+            }
+            if let Some(fwd) = forwarder {
+                // Response line first, then the buffered frames, then
+                // live — preserving the thread model's byte order (the
+                // snapshot frame never precedes the submit response).
+                let buffered = fwd.go_live();
+                let mut terminal = false;
+                for view in buffered {
+                    terminal |= view.state.terminal();
+                    let frame =
+                        Response::Progress(view).to_json(fwd.id).to_string();
+                    queue_line(conn, &frame);
+                }
+                if !terminal {
+                    conn.watchers += 1;
+                }
+            }
+            pump(conn, token, svc, pool, shared);
+            settle(epoll, conns, token);
+        }
+        Event::Frame { token, id, view } => {
+            let Some(conn) = conns.get_mut(&token) else { return };
+            let frame = Response::Progress(view).to_json(id).to_string();
+            queue_line(conn, &frame);
+            if view.state.terminal() && conn.watchers > 0 {
+                conn.watchers -= 1;
+            }
+            settle(epoll, conns, token);
+        }
+    }
+}
+
+/// Append one response/frame line and flush what the socket will take
+/// now; over-cap backlog marks the consumer dead.
+fn queue_line(conn: &mut Conn, line: &str) {
+    if conn.dead {
+        return;
+    }
+    conn.wbuf.extend(line.as_bytes().iter().copied());
+    conn.wbuf.push_back(b'\n');
+    flush(conn);
+    if conn.wbuf.len() > MAX_WBUF_BYTES {
+        eprintln!(
+            "connection error: write backlog over {MAX_WBUF_BYTES} bytes \
+             (slow consumer)"
+        );
+        conn.dead = true;
+    }
+}
+
+/// Write buffered bytes until the socket would block (or fails).
+fn flush(conn: &mut Conn) {
+    while !conn.wbuf.is_empty() {
+        let (front, _) = conn.wbuf.as_slices();
+        match conn.stream.write(front) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => {
+                conn.wbuf.drain(..n);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                eprintln!("connection error: {e}");
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Recompute a connection's epoll interest, and close it once it is
+/// dead or fully served after QUIT/EOF.
+fn settle(epoll: &Epoll, conns: &mut HashMap<u64, Conn>, token: u64) {
+    let close = {
+        let Some(conn) = conns.get_mut(&token) else { return };
+        let fully_served = !conn.inflight
+            && conn.reqq.is_empty()
+            && conn.watchers == 0
+            && conn.wbuf.is_empty();
+        if conn.dead || (conn.quitting && fully_served) {
+            true
+        } else {
+            let mut want = 0u32;
+            if !conn.quitting && conn.reqq.len() < MAX_PIPELINED {
+                want |= EPOLLIN;
+            }
+            if !conn.wbuf.is_empty() {
+                want |= EPOLLOUT;
+            }
+            if want != conn.interest {
+                let _ =
+                    epoll.modify(conn.stream.as_raw_fd(), want, token);
+                conn.interest = want;
+            }
+            false
+        }
+    };
+    if close {
+        if let Some(conn) = conns.remove(&token) {
+            let _ = epoll.delete(conn.stream.as_raw_fd());
+            // Dropping the stream closes the fd; in-flight completions
+            // for this token are ignored when they arrive.
+        }
+    }
+}

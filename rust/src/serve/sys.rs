@@ -1,0 +1,207 @@
+//! Raw `epoll`/`eventfd` bindings (Linux only; offline build: no libc
+//! crate, so the handful of syscall wrappers the reactor needs are
+//! declared here against the C symbols std already links).
+//!
+//! Everything is wrapped in owning types ([`Epoll`], [`EventFd`]) whose
+//! `Drop` closes the fd; the only raw surface the reactor touches is
+//! the `u64` token carried in each event.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+const EFD_NONBLOCK: i32 = 0o4000;
+
+/// Mirror of the kernel's `struct epoll_event`. Packed on x86-64 (the
+/// kernel ABI there has no padding between the fields); read the fields
+/// by value only — never take a reference into one.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Debug, Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub token: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(
+        epfd: i32,
+        op: i32,
+        fd: i32,
+        event: *mut EpollEvent,
+    ) -> i32;
+    fn epoll_wait(
+        epfd: i32,
+        events: *mut EpollEvent,
+        maxevents: i32,
+        timeout: i32,
+    ) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+}
+
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// An owned epoll instance.
+pub struct Epoll {
+    epfd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Epoll { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, token };
+        cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+        Ok(())
+    }
+
+    /// Register `fd` with a level-triggered interest set and a token
+    /// returned verbatim in its events.
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Change an already-registered fd's interest set.
+    pub fn modify(
+        &self,
+        fd: RawFd,
+        events: u32,
+        token: u64,
+    ) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    /// Deregister `fd` (idempotent enough for shutdown paths: the
+    /// caller ignores the error if the fd already closed).
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block until at least one registered fd is ready (negative
+    /// `timeout_ms` = forever), retrying on `EINTR`. Returns how many
+    /// of `events`' leading entries were filled.
+    pub fn wait(
+        &self,
+        events: &mut [EpollEvent],
+        timeout_ms: i32,
+    ) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    events.as_mut_ptr(),
+                    events.len() as i32,
+                    timeout_ms,
+                )
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+/// An owned nonblocking eventfd: the reactor's cross-thread wake-up.
+/// Pool workers and job-table watcher callbacks `signal()` it after
+/// queuing a completion event; the reactor `drain()`s it when its token
+/// fires.
+pub struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+        Ok(EventFd { fd })
+    }
+
+    pub fn raw(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Add 1 to the counter, waking any epoll_wait watching it. A full
+    /// counter (`EAGAIN`) is fine — the fd is already readable, which
+    /// is all a wake-up needs.
+    pub fn signal(&self) {
+        let one: u64 = 1;
+        unsafe {
+            write(self.fd, one.to_ne_bytes().as_ptr(), 8);
+        }
+    }
+
+    /// Reset the counter so level-triggered epoll stops reporting it.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        unsafe {
+            read(self.fd, buf.as_mut_ptr(), 8);
+        }
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_signals_and_drains_through_epoll() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.raw(), EPOLLIN, 42).unwrap();
+        let mut events = [EpollEvent { events: 0, token: 0 }; 4];
+        // Nothing signalled yet: a zero-timeout wait returns empty.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        ev.signal();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        let got = events[0];
+        assert_eq!(got.token, 42);
+        assert_ne!(got.events & EPOLLIN, 0);
+        // Draining resets the level-triggered readiness.
+        ev.drain();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        ep.delete(ev.raw()).unwrap();
+    }
+}

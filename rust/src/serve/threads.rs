@@ -1,0 +1,224 @@
+//! Thread-per-connection serving (`--io-model threads`): the portable
+//! fallback io model, and the reference implementation the epoll
+//! reactor must match byte for byte.
+//!
+//! One OS thread per accepted connection over the shared
+//! `Arc<Service>`; a pusher thread per watched submit forwards progress
+//! frames from the job table's channel watcher. Request lines are read
+//! through a [`MAX_LINE_BYTES`]-capped `read_until`, so an endless line
+//! without a newline costs bounded memory and earns a typed
+//! `bad_request` instead of an OOM. Finished connection threads are
+//! reaped by *joining* them (each thread reports its id on a completion
+//! channel drained in the accept loop), so a long-lived server holds
+//! O(live-connections) handles — the old `retain(|h|
+//! !h.is_finished())` dropped finished handles without joining and
+//! still grew under churn between reaps.
+
+use super::{line_cap_error, MAX_LINE_BYTES};
+use crate::api::{LegacyCommand, Request, Response, Service};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Accept loop: spawn one handler thread per connection, joining
+/// finished ones as their ids arrive on the completion channel.
+pub(super) fn run(
+    listener: TcpListener,
+    svc: Arc<Service>,
+    max_conns: Option<usize>,
+) -> std::io::Result<()> {
+    let (done_tx, done_rx) = mpsc::channel::<u64>();
+    let mut conns: HashMap<u64, thread::JoinHandle<()>> = HashMap::new();
+    let mut served = 0u64;
+    for conn in listener.incoming() {
+        let stream = conn?;
+        let svc = Arc::clone(&svc);
+        let done = done_tx.clone();
+        let id = served;
+        conns.insert(
+            id,
+            thread::spawn(move || {
+                if let Err(e) = handle(&svc, stream) {
+                    eprintln!("connection error: {e}");
+                }
+                // The send target outlives the thread (the accept loop
+                // owns the receiver); failure only means the server is
+                // already past its accept loop and about to join us.
+                let _ = done.send(id);
+            }),
+        );
+        // Reap by join: each finished handler's id is waiting on the
+        // channel, and joining an exited thread is immediate.
+        while let Ok(finished) = done_rx.try_recv() {
+            if let Some(h) = conns.remove(&finished) {
+                let _ = h.join();
+            }
+        }
+        served += 1;
+        if let Some(max) = max_conns {
+            if served as usize >= max {
+                break;
+            }
+        }
+    }
+    for (_, h) in conns {
+        let _ = h.join();
+    }
+    // Dropping the service (last Arc) shuts its executor and job
+    // workers down.
+    Ok(())
+}
+
+/// Write one line under the shared writer lock (responses and pushed
+/// progress frames share it, so lines never interleave mid-line).
+fn write_line(
+    writer: &Arc<Mutex<TcpStream>>,
+    v: &Json,
+) -> std::io::Result<()> {
+    let mut guard = writer.lock().unwrap_or_else(|e| e.into_inner());
+    writeln!(&mut *guard, "{v}")
+}
+
+/// Read one `\n`-terminated line of at most [`MAX_LINE_BYTES`] content
+/// bytes. `Ok(None)` is EOF. `Err(line_too_long…)` means the cap
+/// tripped: the caller answers the typed rejection after the rest of
+/// the oversized line has been discarded here.
+fn read_bounded_line<R: BufRead>(
+    reader: &mut R,
+    line: &mut Vec<u8>,
+) -> std::io::Result<Option<bool>> {
+    line.clear();
+    let n = reader
+        .by_ref()
+        .take(MAX_LINE_BYTES as u64 + 1)
+        .read_until(b'\n', line)?;
+    if n == 0 {
+        return Ok(None); // EOF
+    }
+    if line.last() != Some(&b'\n') && line.len() > MAX_LINE_BYTES {
+        // Cap tripped mid-line: discard up to the newline (or EOF) in
+        // bounded chunks so the rejection leaves the framing aligned.
+        let mut chunk = Vec::with_capacity(64 << 10);
+        loop {
+            chunk.clear();
+            let m = reader
+                .by_ref()
+                .take(64 << 10)
+                .read_until(b'\n', &mut chunk)?;
+            if m == 0 || chunk.last() == Some(&b'\n') {
+                break;
+            }
+        }
+        return Ok(Some(false)); // a line arrived but was over the cap
+    }
+    Ok(Some(true))
+}
+
+/// One connection: frame lines, route through the service, write one
+/// response line per request line (plus pushed progress frames for
+/// watched submits).
+fn handle(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = BufReader::new(stream);
+    let mut pushers: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        match read_bounded_line(&mut reader, &mut line)? {
+            None => break, // EOF
+            Some(false) => {
+                write_line(&writer, &line_cap_error().to_json(None))?;
+                continue;
+            }
+            Some(true) => {}
+        }
+        let text = match std::str::from_utf8(&line) {
+            Ok(s) => s.trim(),
+            Err(_) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "request line is not valid UTF-8",
+                ))
+            }
+        };
+        if text.is_empty() {
+            continue;
+        }
+        if text.starts_with('{') {
+            let (resp, id, watch) = dispatch_json(svc, text);
+            write_line(&writer, &resp.to_json(id))?;
+            if let Some(rx) = watch {
+                // Forward progress frames for this submit. The receiver
+                // closes at the job's terminal state; a write failure
+                // just means the client went away.
+                let w = Arc::clone(&writer);
+                pushers.push(thread::spawn(move || {
+                    while let Ok(view) = rx.recv() {
+                        let frame = Response::Progress(view).to_json(id);
+                        if write_line(&w, &frame).is_err() {
+                            break;
+                        }
+                    }
+                }));
+            }
+            // Reap pushers whose jobs already finished, so a long-lived
+            // connection submitting many watched jobs does not
+            // accumulate exited threads.
+            pushers.retain(|h| !h.is_finished());
+        } else {
+            match crate::api::parse_legacy(text) {
+                Ok(LegacyCommand::Quit) => break,
+                Ok(LegacyCommand::Request(req)) => {
+                    write_line(&writer, &svc.handle(&req).to_json(None))?
+                }
+                Err(e) => {
+                    write_line(&writer, &Response::from(e).to_json(None))?
+                }
+            }
+        }
+    }
+    // Drain the frame forwarders (each ends at its job's terminal
+    // state) so "fully served" includes the pushes.
+    for h in pushers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Decode one JSON request line and route it, honoring the envelope's
+/// `cache` flag; decode failures become typed error responses, still
+/// tagged with the request's `id` whenever the envelope was readable
+/// enough to salvage it. A top-level `submit` with `"progress":true`
+/// additionally returns the job's watcher receiver for the caller to
+/// forward.
+fn dispatch_json(
+    svc: &Service,
+    text: &str,
+) -> (
+    Response,
+    Option<u64>,
+    Option<std::sync::mpsc::Receiver<crate::api::JobView>>,
+) {
+    let v = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            return (
+                Response::from(crate::api::ApiError::bad_request(format!(
+                    "unparseable request: {e}"
+                ))),
+                None,
+                None,
+            )
+        }
+    };
+    match Request::decode(&v) {
+        Ok((Request::Submit { spec, progress: true }, env)) => {
+            let (resp, rx) = svc.submit_watched(&spec, &env);
+            (resp, env.id, rx)
+        }
+        Ok((req, env)) => (svc.handle_env(&req, &env), env.id, None),
+        Err((e, id)) => (Response::from(e), id, None),
+    }
+}

@@ -146,6 +146,21 @@ impl Bencher {
         &self.results
     }
 
+    /// Record an externally-measured result (e.g. the serve load
+    /// generator's latency percentiles, which come from wall-clock
+    /// samples rather than a `bench()` closure) so it lands in the same
+    /// bench-v1 document as timed results.
+    pub fn record(&mut self, r: BenchResult) {
+        println!(
+            "{:<52} {:>12.1} ns/iter (±{:>5.1}%, {} iters)",
+            r.name,
+            r.mean_ns,
+            r.cv() * 100.0,
+            r.iters
+        );
+        self.results.push(r);
+    }
+
     /// All recorded results as a bench-v1 JSON document:
     ///
     /// ```text

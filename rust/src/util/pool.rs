@@ -24,6 +24,11 @@
 //! its items under the caller's requested budget. `default_workers`
 //! returns the active budget when one is set, so inner `scoped_map` /
 //! [`join`] calls inherit the division automatically.
+//!
+//! [`TaskPool`] is the third primitive: a *persistent* executor
+//! (long-lived workers, fire-and-forget boxed tasks) for callers that
+//! dispatch work continuously rather than mapping a known slice — the
+//! serve reactor offloads request execution through one.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -155,6 +160,71 @@ where
     })
 }
 
+/// A small persistent executor: long-lived worker threads pulling boxed
+/// tasks from a shared queue. Built for the serve reactor, which must
+/// never run request execution on the event-loop thread — a slow DES
+/// point parks a *worker*, not the reactor — but is generic enough for
+/// any fire-and-forget fan-out. Dropping the pool closes the queue and
+/// joins the workers after in-flight tasks finish.
+pub struct TaskPool {
+    tx: Option<std::sync::mpsc::Sender<Task>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+impl TaskPool {
+    /// Spawn `workers` (min 1) threads named `task-pool-worker-{i}`.
+    pub fn new(workers: usize) -> TaskPool {
+        let workers = workers.max(1);
+        let (tx, rx) = std::sync::mpsc::channel::<Task>();
+        let rx = std::sync::Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = std::sync::Arc::clone(&rx);
+            let h = std::thread::Builder::new()
+                .name(format!("task-pool-worker-{i}"))
+                .spawn(move || loop {
+                    // Hold the receiver lock only for the dequeue; the
+                    // task itself runs unlocked so workers overlap.
+                    let task = {
+                        let guard =
+                            rx.lock().unwrap_or_else(|e| e.into_inner());
+                        guard.recv()
+                    };
+                    match task {
+                        Ok(task) => task(),
+                        Err(_) => break, // sender dropped: shutdown
+                    }
+                })
+                .expect("spawn task-pool worker");
+            handles.push(h);
+        }
+        TaskPool { tx: Some(tx), workers: handles }
+    }
+
+    /// Enqueue a task. Tasks run in roughly FIFO order across the
+    /// workers; ordering between tasks is otherwise unspecified —
+    /// callers needing per-key serialization (the reactor's
+    /// one-in-flight-per-connection rule) enforce it themselves.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        if let Some(tx) = &self.tx {
+            // Send only fails after shutdown began; dropping the task
+            // is the correct behavior then.
+            let _ = tx.send(Box::new(f));
+        }
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue: workers exit after draining
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +302,22 @@ mod tests {
             (a, b)
         });
         assert_eq!(flags, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn task_pool_runs_all_tasks_and_joins_on_drop() {
+        let counter = std::sync::Arc::new(AtomicUsize::new(0));
+        {
+            let pool = TaskPool::new(4);
+            for _ in 0..64 {
+                let c = std::sync::Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop joins the workers after the queue drains.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
     }
 
     #[test]

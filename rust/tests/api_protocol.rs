@@ -513,7 +513,12 @@ fn batch_items_share_the_cache_within_one_call() {
 fn service_cache_evicts_lru_at_the_entry_cap() {
     let svc = Service::with_cache_policy(
         Config::mi300a(),
-        CachePolicy { enabled: true, max_entries: 2, max_bytes: 1 << 20 },
+        CachePolicy {
+            enabled: true,
+            max_entries: 2,
+            max_bytes: 1 << 20,
+            ..CachePolicy::default()
+        },
     );
     let reqs: Vec<Request> = (1..=3)
         .map(|streams| Request::Sparsity { n: 512, streams })

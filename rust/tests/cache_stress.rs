@@ -1,0 +1,139 @@
+//! Concurrency stress for the sharded result cache behind a real
+//! [`mi300a_char::api::Service`] (ISSUE 6 satellite): many threads
+//! hammering one hot key while others churn a cold keyspace must
+//! produce byte-identical responses and *exact* hit/miss/eviction
+//! accounting — the shard split may not lose or double-count anything,
+//! and `engine_runs` must equal the number of distinct cold points
+//! (each cold execution happens exactly once; concurrent identical
+//! requests after the prewarm are all hits).
+
+use mi300a_char::api::{CachePolicy, Request, Response, Service};
+use mi300a_char::config::Config;
+use std::thread;
+
+const THREADS: usize = 8;
+
+fn response_bytes(svc: &Service, req: &Request) -> String {
+    svc.handle(req).to_json(None).to_string()
+}
+
+fn assert_not_error(line: &str) {
+    assert!(
+        !line.contains("\"type\":\"error\""),
+        "unexpected error response: {line}"
+    );
+}
+
+/// Hot-key contention: one prewarmed key read 50x by each of 8 threads
+/// while each thread also inserts 25 distinct cold keys. Large caps, so
+/// nothing evicts and every counter is exactly predictable.
+#[test]
+fn hot_key_and_cold_churn_account_exactly() {
+    let svc = Service::with_cache_policy(
+        Config::mi300a(),
+        CachePolicy {
+            enabled: true,
+            max_entries: 4096,
+            max_bytes: 256 << 20,
+            shards: 8,
+        },
+    );
+    let hot = Request::Sparsity { n: 512, streams: 4 };
+    // Prewarm single-threaded: 1 miss, 1 cold execution, and the
+    // reference bytes every concurrent hit must reproduce.
+    let expected = response_bytes(&svc, &hot);
+    assert_not_error(&expected);
+    assert_eq!(svc.engine_runs(), 1);
+
+    thread::scope(|s| {
+        for t in 0..THREADS {
+            let svc = &svc;
+            let hot = &hot;
+            let expected = &expected;
+            s.spawn(move || {
+                for i in 0..50 {
+                    // Interleave so hot reads race the cold inserts.
+                    if i < 25 {
+                        let cold = Request::Sparsity {
+                            n: 1000 + t * 25 + i,
+                            streams: 3,
+                        };
+                        assert_not_error(&response_bytes(svc, &cold));
+                    }
+                    assert_eq!(
+                        &response_bytes(svc, hot),
+                        expected,
+                        "hot hit diverged on thread {t} iteration {i}"
+                    );
+                }
+            });
+        }
+    });
+
+    let stats = svc.cache_stats();
+    assert_eq!(stats.hits, (THREADS * 50) as u64, "{stats:?}");
+    assert_eq!(stats.misses, 1 + (THREADS * 25) as u64, "{stats:?}");
+    assert_eq!(stats.evictions, 0, "{stats:?}");
+    assert_eq!(stats.entries, 1 + (THREADS * 25) as u64, "{stats:?}");
+    // Every distinct point executed exactly once; hits re-ran nothing.
+    assert_eq!(svc.engine_runs(), 1 + (THREADS * 25) as u64);
+}
+
+/// Eviction churn: a tiny entry cap under concurrent inserts of
+/// all-distinct keys. Every insert must land (its response is computed
+/// either way), so evictions are exactly inserts minus the cap, and
+/// the global LRU bound holds at the end.
+#[test]
+fn concurrent_churn_keeps_global_caps_and_exact_eviction_counts() {
+    const CAP: usize = 8;
+    const PER_THREAD: usize = 16;
+    let svc = Service::with_cache_policy(
+        Config::mi300a(),
+        CachePolicy {
+            enabled: true,
+            max_entries: CAP,
+            max_bytes: 64 << 20,
+            shards: 4,
+        },
+    );
+    thread::scope(|s| {
+        for t in 0..THREADS {
+            let svc = &svc;
+            s.spawn(move || {
+                for i in 0..PER_THREAD {
+                    let req = Request::Sparsity {
+                        n: 1 + t * PER_THREAD + i,
+                        streams: 7,
+                    };
+                    assert_not_error(&response_bytes(svc, &req));
+                }
+            });
+        }
+    });
+    let stats = svc.cache_stats();
+    let inserts = (THREADS * PER_THREAD) as u64;
+    assert_eq!(stats.hits, 0, "{stats:?}");
+    assert_eq!(stats.misses, inserts, "{stats:?}");
+    assert_eq!(stats.entries, CAP as u64, "{stats:?}");
+    assert_eq!(stats.evictions, inserts - CAP as u64, "{stats:?}");
+    assert_eq!(svc.engine_runs(), inserts);
+    // Re-request every key once, single-threaded. Which keys survived
+    // the race is order-dependent, but the accounting identities are
+    // not: every lookup is a hit or a miss, every miss re-executes and
+    // re-inserts, and the cap forces one eviction per insert.
+    let before_runs = svc.engine_runs();
+    for t in 0..THREADS {
+        for i in 0..PER_THREAD {
+            let req = Request::Sparsity { n: 1 + t * PER_THREAD + i, streams: 7 };
+            assert_not_error(&response_bytes(&svc, &req));
+        }
+    }
+    let after = svc.cache_stats();
+    let hits_delta = after.hits - stats.hits;
+    let misses_delta = after.misses - stats.misses;
+    assert!(hits_delta <= CAP as u64, "{after:?}");
+    assert_eq!(hits_delta + misses_delta, inserts, "{after:?}");
+    assert_eq!(after.entries, CAP as u64, "{after:?}");
+    assert_eq!(after.evictions - stats.evictions, misses_delta, "{after:?}");
+    assert_eq!(svc.engine_runs() - before_runs, misses_delta);
+}

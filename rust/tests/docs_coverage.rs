@@ -78,6 +78,7 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         "architecture.md",
         "scenarios.md",
         "backends.md",
+        "performance.md",
     ] {
         assert!(
             docs_dir().join(page).is_file(),
@@ -121,6 +122,41 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
     assert!(
         read("README.md").contains("backends.md"),
         "docs/README.md must index the backend guide"
+    );
+    assert!(
+        read("README.md").contains("performance.md"),
+        "docs/README.md must index the performance guide"
+    );
+}
+
+/// The performance guide must document the serving-layer tuning
+/// surface this repo actually ships: io-model selection, the sharded
+/// cache, the load generator, and its bench baseline file.
+#[test]
+fn performance_doc_covers_io_models_cache_and_loadgen() {
+    let doc = read("performance.md");
+    for needle in [
+        "--io-model",
+        "`epoll`",
+        "`threads`",
+        "loadgen",
+        "BENCH_serve.json",
+        "shard",
+        "req_per_sec",
+        "p99_ns",
+        "--no-cache",
+        "overloaded",
+    ] {
+        assert!(
+            doc.contains(needle),
+            "docs/performance.md never documents {needle:?}"
+        );
+    }
+    // Serving guide points at both io models too.
+    let serving = read("serving.md");
+    assert!(
+        serving.contains("--io-model"),
+        "docs/serving.md must document --io-model"
     );
 }
 

@@ -8,14 +8,15 @@
 //! so the tests are artifact-independent.
 
 use mi300a_char::api::{
-    Ask, Client, ErrorCode, Request, Response, ScenarioSpec,
+    Ask, Client, ErrorCode, Request, Response, ScenarioSpec, Service,
 };
 use mi300a_char::config::Config;
 use mi300a_char::isa::Precision;
-use mi300a_char::serve::serve;
+use mi300a_char::serve::{serve, serve_on, IoModel, MAX_LINE_BYTES};
 use mi300a_char::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Connect to the server (retrying while the listener comes up).
@@ -782,6 +783,135 @@ fn client_session(port: u16) -> Vec<Json> {
     }
     writeln!(conn, "QUIT").unwrap();
     responses
+}
+
+/// Spawn a server with an explicit io model on a fresh ephemeral port
+/// (the listener is bound here, so no stdout parsing is needed).
+fn spawn_server_io(
+    conns: usize,
+    io: IoModel,
+) -> (u16, std::thread::JoinHandle<()>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let svc = Arc::new(Service::new(Config::mi300a()));
+    let handle = std::thread::spawn(move || {
+        serve_on(listener, svc, Some(conns), io).unwrap();
+    });
+    (port, handle)
+}
+
+/// Satellite (ISSUE 6): a request line over the 1 MiB framing cap is
+/// answered with a typed `bad_request` naming the cap, the oversized
+/// bytes are discarded, and the connection keeps serving — under both
+/// io models available on this platform.
+#[test]
+fn oversized_request_line_is_rejected_and_connection_survives() {
+    for io in IoModel::ALL {
+        if !io.available() {
+            continue;
+        }
+        let (port, handle) = spawn_server_io(1, io);
+        let conn = connect(port);
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+
+        // One line of cap+1 content bytes. Written in chunks so the
+        // test does not assume socket buffer sizes.
+        let chunk = vec![b'A'; 64 << 10];
+        let mut remaining = MAX_LINE_BYTES + 1;
+        while remaining > 0 {
+            let k = remaining.min(chunk.len());
+            writer.write_all(&chunk[..k]).unwrap();
+            remaining -= k;
+        }
+        writer.write_all(b"\n").unwrap();
+
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let rejection = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            rejection.get("code").unwrap().as_str(),
+            Some("bad_request"),
+            "{io:?}: {line}"
+        );
+        let msg = rejection.get("error").unwrap().as_str().unwrap();
+        assert!(
+            msg.contains(&MAX_LINE_BYTES.to_string()),
+            "{io:?}: rejection must name the cap: {msg}"
+        );
+
+        // The connection is still usable and framing re-aligned.
+        line.clear();
+        writeln!(writer, "SPARSITY 512 4").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let after = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            after.get("enable"),
+            Some(&Json::Bool(true)),
+            "{io:?}: connection must survive the rejection: {line}"
+        );
+
+        writeln!(writer, "QUIT").unwrap();
+        drop(writer);
+        drop(reader);
+        handle.join().unwrap();
+    }
+}
+
+/// The explicit `threads` io model answers the same protocol bytes as
+/// the platform default (which is the epoll reactor on Linux): JSON and
+/// legacy framing agree, ids echo, the cache proves itself over `stats`,
+/// and a watched submit streams progress frames to their terminal state.
+#[test]
+fn threads_io_model_speaks_the_same_protocol() {
+    let (port, handle) = spawn_server_io(1, IoModel::Threads);
+    let conn = connect(port);
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut ask_raw = |line: &str| -> String {
+        writeln!(writer, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    };
+
+    // Legacy and JSON framings agree byte for byte.
+    let legacy = ask_raw("SIM 512 fp8 4");
+    let json = ask_raw(
+        r#"{"v":1,"type":"sim","n":512,"precision":"fp8","streams":4}"#,
+    );
+    assert_eq!(legacy, json);
+
+    // Ids echo; the repeat above was a cache hit (one engine run).
+    let stats = ask_raw(r#"{"v":1,"id":2,"type":"stats"}"#);
+    let v = Json::parse(stats.trim()).unwrap();
+    assert_eq!(v.get("id"), Some(&Json::Num(2.0)));
+    assert_eq!(v.get("engine_runs"), Some(&Json::Num(1.0)));
+    assert_eq!(v.get("cache_hits"), Some(&Json::Num(1.0)));
+
+    writeln!(writer, "QUIT").unwrap();
+    drop(writer);
+    drop(reader);
+    handle.join().unwrap();
+
+    // The native client's watched-submit flow under threads io.
+    let (port, handle) = spawn_server_io(1, IoModel::Threads);
+    let mut client =
+        Client::connect_retry(format!("127.0.0.1:{port}").as_str(), 200)
+            .unwrap();
+    let mut spec = ScenarioSpec::new(Ask::Sparsity);
+    spec.n = 256;
+    spec.sweep.streams = vec![1, 2];
+    let mut frames = Vec::new();
+    match client.submit_and_wait(&spec, |p| frames.push(*p)).unwrap() {
+        Response::Scenario { points } => assert_eq!(points.len(), 2),
+        other => panic!("unexpected response: {other:?}"),
+    }
+    assert!(!frames.is_empty());
+    assert!(frames.last().unwrap().state.terminal());
+    client.raw_line("QUIT").ok();
+    drop(client);
+    handle.join().unwrap();
 }
 
 #[test]

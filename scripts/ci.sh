@@ -8,7 +8,10 @@
 # done, fetch the result, observe >=1 pushed progress frame), and a
 # backend-matrix smoke (DESIGN.md §6.8: one sim per registered
 # backend, per-backend stats counters, docs/backends.md drift, typed
-# unknown_backend on an unregistered id).
+# unknown_backend on an unregistered id), and a loadgen smoke (a short
+# self-hosted load-generator run per available io model, writing the
+# BENCH_serve.json baseline and failing on typed errors or zero
+# throughput).
 #
 # Usage: scripts/ci.sh
 #
@@ -221,12 +224,28 @@ wait "$bk_pid" 2>/dev/null || true
 trap - EXIT
 rm -f "$bk_log"
 
+echo "== loadgen smoke (self-hosted, ~1s per available io model) =="
+# The load generator self-hosts an ephemeral server, drives a short
+# mixed window, and exits nonzero on any unexpected typed error or a
+# zero-request window; it also writes BENCH_serve.json (checked with
+# the other baselines below). Exercise every io model this platform
+# has: threads everywhere, epoll on Linux (where it is the default).
+models="threads"
+if [ "$(uname -s)" = Linux ]; then
+    models="epoll threads"
+fi
+for model in $models; do
+    echo "-- loadgen --io-model $model --"
+    "$bin" loadgen --io-model "$model" --mix mixed \
+        --connections 8 --warmup-ms 200 --duration-ms 1000
+done
+
 echo "== bench smoke (1 warmup / 1 iter, full targets) =="
 MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench
 
 echo "== bench baselines =="
 out_dir="${MI300A_BENCH_OUT:-.}"
-for name in hotpath ablations paper_experiments backends; do
+for name in hotpath ablations paper_experiments backends serve; do
     f="$out_dir/BENCH_$name.json"
     if [ ! -s "$f" ]; then
         echo "missing bench baseline: $f" >&2
