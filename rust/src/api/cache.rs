@@ -162,8 +162,10 @@ fn pow2_at_least(n: usize) -> usize {
 }
 
 /// FNV-1a: tiny, allocation-free, and good enough to spread canonical
-/// JSON keys across a handful of shards.
-fn fnv1a(key: &str) -> u64 {
+/// JSON keys across a handful of shards. Shared with the cluster hash
+/// ring ([`crate::cluster`]), which routes the *same* canonical
+/// per-point cache keys across workers.
+pub(crate) fn fnv1a(key: &str) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in key.bytes() {
         h ^= b as u64;

@@ -25,7 +25,9 @@
 //! [`Client::submit_and_wait`] consumes them as a callback stream.
 
 use super::job::JobView;
-use super::protocol::{BackendInfo, Request, RequestEnvelope, Response};
+use super::protocol::{
+    BackendInfo, ErrorCode, Request, RequestEnvelope, Response,
+};
 use super::scenario::ScenarioSpec;
 use crate::util::json::Json;
 use std::io::{self, BufRead, BufReader, Write};
@@ -35,6 +37,28 @@ use std::time::Duration;
 /// Default connect/read timeout; see [`Client::set_timeout`].
 pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Bounded retry policy for typed `overloaded` responses (DESIGN.md
+/// §6.7): re-issue the request up to `attempts` further times, sleeping
+/// `backoff` before the first retry and doubling it per attempt (capped
+/// at 250 ms, like [`Client::wait_job`]'s poll backoff). Opt-in via
+/// [`Client::set_overloaded_retry`]; the default client fails fast so
+/// the CLI surfaces `overloaded` as the typed error it is. The
+/// cluster coordinator turns it on for inter-node calls
+/// (docs/cluster.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverloadedRetry {
+    /// Further attempts after the first `overloaded` answer.
+    pub attempts: u32,
+    /// Sleep before the first retry; doubles per further attempt.
+    pub backoff: Duration,
+}
+
+impl Default for OverloadedRetry {
+    fn default() -> OverloadedRetry {
+        OverloadedRetry { attempts: 3, backoff: Duration::from_millis(10) }
+    }
+}
+
 /// One connection to a serving instance. Requests are tagged with an
 /// auto-incrementing `id`; [`Client::request`] verifies the echo so
 /// pipelined connections cannot misattribute replies.
@@ -43,6 +67,7 @@ pub struct Client {
     writer: TcpStream,
     next_id: u64,
     timeout: Option<Duration>,
+    overloaded_retry: Option<OverloadedRetry>,
 }
 
 impl Client {
@@ -71,6 +96,7 @@ impl Client {
             writer,
             next_id: 1,
             timeout: Some(DEFAULT_TIMEOUT),
+            overloaded_retry: None,
         })
     }
 
@@ -105,6 +131,21 @@ impl Client {
         self.timeout
     }
 
+    /// Opt in to (or with `None` restore the fail-fast default and
+    /// disable) bounded retry-with-backoff on typed `overloaded`
+    /// responses. Only the typed request paths
+    /// ([`Client::request`]/[`Client::request_env`] and everything
+    /// built on them) retry; the raw-JSON paths the `client`
+    /// subcommand prints always surface the first answer verbatim.
+    pub fn set_overloaded_retry(&mut self, retry: Option<OverloadedRetry>) {
+        self.overloaded_retry = retry;
+    }
+
+    /// The active `overloaded` retry policy (`None` = fail fast).
+    pub fn overloaded_retry(&self) -> Option<OverloadedRetry> {
+        self.overloaded_retry
+    }
+
     /// Issue one typed request, returning the typed response (which may
     /// be [`Response::Error`] — protocol-level failures the server
     /// reported; transport failures surface as `io::Error`).
@@ -130,8 +171,35 @@ impl Client {
     /// Issue one typed request with full envelope options — the cache
     /// escape hatch plus the `"backend"` selector (DESIGN.md §6.8). The
     /// envelope's `id` is ignored: the client assigns its own
-    /// pipelining id and verifies the echo.
+    /// pipelining id and verifies the echo. When an
+    /// [`OverloadedRetry`] policy is set, a typed `overloaded` answer
+    /// is retried with exponential backoff before being surfaced.
     pub fn request_env(
+        &mut self,
+        req: &Request,
+        env: &RequestEnvelope,
+    ) -> io::Result<Response> {
+        let mut left = self.overloaded_retry.map_or(0, |r| r.attempts);
+        let mut wait = self
+            .overloaded_retry
+            .map_or(Duration::ZERO, |r| r.backoff);
+        loop {
+            let resp = self.request_env_once(req, env)?;
+            let overloaded = matches!(
+                resp,
+                Response::Error { code: ErrorCode::Overloaded, .. }
+            );
+            if !overloaded || left == 0 {
+                return Ok(resp);
+            }
+            left -= 1;
+            std::thread::sleep(wait);
+            wait = (wait * 2).min(Duration::from_millis(250));
+        }
+    }
+
+    /// One send/receive round of [`Client::request_env`], no retries.
+    fn request_env_once(
         &mut self,
         req: &Request,
         env: &RequestEnvelope,

@@ -87,13 +87,13 @@ pub mod scenario;
 pub mod service;
 
 pub use cache::{CachePolicy, CacheStats, ResultCache};
-pub use client::{Client, DEFAULT_TIMEOUT};
+pub use client::{Client, OverloadedRetry, DEFAULT_TIMEOUT};
 pub use job::{JobLimits, JobState, JobView};
 pub use protocol::{
     objective_name, parse_legacy, parse_objective, precision_wire_name,
-    ApiError, BackendInfo, ErrorCode, ExperimentInfo, LegacyCommand,
-    PlanGroup, Request, RequestEnvelope, Response, MAX_BATCH_ITEMS,
-    PROTOCOL_VERSION,
+    ApiError, BackendInfo, ClusterStats, ErrorCode, ExperimentInfo,
+    LegacyCommand, PlanGroup, Request, RequestEnvelope, Response,
+    CLUSTER_STAT_FIELDS, MAX_BATCH_ITEMS, PROTOCOL_VERSION,
 };
 pub use scenario::{
     Ask, Point, PointResult, ScenarioSpec, Shape, Sweep, ITERS_RANGE,

@@ -351,10 +351,16 @@ pub enum Response {
     /// [`BackendId::ALL`] order). `engine_runs` stays the total cold
     /// executions (scenario points *and* repro drivers), so it can
     /// exceed the per-backend sum, which counts scenario points only.
+    /// A cluster coordinator (DESIGN.md §6.9) additionally carries the
+    /// `cluster_*` routing counters; standalone servers omit them, so
+    /// their `stats` bytes are unchanged.
     Stats {
         cache: CacheStats,
         engine_runs: u64,
         backend_runs: Vec<u64>,
+        /// `Some` only on a cluster coordinator; `None` keeps the
+        /// standalone encoding byte-identical to the pre-cluster wire.
+        cluster: Option<ClusterStats>,
     },
     /// The execution-backend registry (one entry per backend, registry
     /// order).
@@ -416,6 +422,38 @@ pub struct BackendInfo {
     /// Whether this is the serving instance's default backend.
     pub default: bool,
 }
+
+/// Coordinator-side routing counters inside a cluster `stats` response
+/// (DESIGN.md §6.9). Flattened on the wire as `cluster_*` fields; the
+/// block is all-or-nothing, keyed on `cluster_workers`, so a standalone
+/// server's `stats` response never carries any of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClusterStats {
+    /// Configured worker count (static set; includes dead workers).
+    pub workers: u64,
+    /// Sweep points fanned out over the hash ring (incl. retried ones
+    /// counted once — retries are tracked separately).
+    pub points_routed: u64,
+    /// Whole non-scenario requests forwarded to their owning worker.
+    pub proxied: u64,
+    /// Replica fail-overs: one per attempt that moved a point or a
+    /// proxied request off a dead/`overloaded` worker.
+    pub retries: u64,
+    /// Points (or proxied requests) that exhausted every replica and
+    /// answered a typed per-point error instead.
+    pub point_failures: u64,
+}
+
+/// Wire spellings of the [`ClusterStats`] block, in encode order. One
+/// list shared by the encoder, the strict decoder, and the docs tests,
+/// so a new counter cannot drift between them.
+pub const CLUSTER_STAT_FIELDS: [&str; 5] = [
+    "cluster_workers",
+    "cluster_points_routed",
+    "cluster_proxied",
+    "cluster_retries",
+    "cluster_point_failures",
+];
 
 /// Legacy text command, desugared (see [`parse_legacy`]).
 #[derive(Debug, Clone, PartialEq)]
@@ -989,7 +1027,7 @@ impl Response {
                     ),
                 ));
             }
-            Response::Stats { cache, engine_runs, backend_runs } => {
+            Response::Stats { cache, engine_runs, backend_runs, cluster } => {
                 fields.push(("cache_hits", Json::Num(cache.hits as f64)));
                 fields
                     .push(("cache_misses", Json::Num(cache.misses as f64)));
@@ -1020,6 +1058,28 @@ impl Response {
                             backend_runs.get(i).copied().unwrap_or(0)
                                 as f64,
                         ),
+                    ));
+                }
+                if let Some(c) = cluster {
+                    fields.push((
+                        "cluster_workers",
+                        Json::Num(c.workers as f64),
+                    ));
+                    fields.push((
+                        "cluster_points_routed",
+                        Json::Num(c.points_routed as f64),
+                    ));
+                    fields.push((
+                        "cluster_proxied",
+                        Json::Num(c.proxied as f64),
+                    ));
+                    fields.push((
+                        "cluster_retries",
+                        Json::Num(c.retries as f64),
+                    ));
+                    fields.push((
+                        "cluster_point_failures",
+                        Json::Num(c.point_failures as f64),
                     ));
                 }
             }
@@ -1195,11 +1255,42 @@ fn decode_response_payload(
                 "engine_runs",
             ];
             allowed.extend(BackendId::ALL.iter().map(|b| b.stat_field()));
+            allowed.extend(CLUSTER_STAT_FIELDS);
             check_env_fields(m, ty, &allowed)?;
             let backend_runs = BackendId::ALL
                 .iter()
                 .map(|b| u64_field(m, ty, b.stat_field()))
                 .collect::<Result<Vec<_>, _>>()?;
+            // The cluster block is all-or-nothing, keyed on
+            // `cluster_workers`: present means every `cluster_*` field
+            // is required, absent means none may appear.
+            let cluster = if m.contains_key("cluster_workers") {
+                Some(ClusterStats {
+                    workers: u64_field(m, ty, "cluster_workers")?,
+                    points_routed: u64_field(
+                        m,
+                        ty,
+                        "cluster_points_routed",
+                    )?,
+                    proxied: u64_field(m, ty, "cluster_proxied")?,
+                    retries: u64_field(m, ty, "cluster_retries")?,
+                    point_failures: u64_field(
+                        m,
+                        ty,
+                        "cluster_point_failures",
+                    )?,
+                })
+            } else {
+                for k in CLUSTER_STAT_FIELDS {
+                    if m.contains_key(k) {
+                        return Err(ApiError::bad_request(format!(
+                            "stats: {k:?} requires the full cluster_* \
+                             block (missing \"cluster_workers\")"
+                        )));
+                    }
+                }
+                None
+            };
             Ok(Response::Stats {
                 cache: CacheStats {
                     hits: u64_field(m, ty, "cache_hits")?,
@@ -1213,6 +1304,7 @@ fn decode_response_payload(
                 },
                 engine_runs: u64_field(m, ty, "engine_runs")?,
                 backend_runs,
+                cluster,
             })
         }
         "backends" => {

@@ -662,6 +662,9 @@ impl Service {
                 cache: self.core.cache.stats(),
                 engine_runs: self.engine_runs(),
                 backend_runs: self.backend_runs(),
+                // Standalone servers never carry the cluster block;
+                // only `cluster::Coordinator` fills it.
+                cluster: None,
             }),
             // Top-level batches are fanned out by `handle_opts`; a
             // batch reaching this point was nested inside another (the

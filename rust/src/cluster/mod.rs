@@ -1,0 +1,759 @@
+//! Cluster mode: a coordinator sharding scenario sweeps across a
+//! static set of workers (DESIGN.md §6.9, docs/cluster.md).
+//!
+//! A **worker** is an ordinary `mi300a-char serve` instance — cluster
+//! mode adds nothing to it. The **coordinator** ([`Coordinator`]) is a
+//! second [`crate::serve::Dispatch`] implementation served through the
+//! identical framing machinery ([`crate::serve::serve_on`]), so clients
+//! — the typed [`Client`], `scenario --addr`, `loadgen --addr` — speak
+//! the unchanged v1 protocol and cannot tell a coordinator from a
+//! standalone service.
+//!
+//! ## Routing
+//!
+//! Every sweep point is routed by the consistent hash
+//! ([`ring::Ring`]) of its canonical per-point cache key — the same
+//! key a standalone service memoizes the point under, with the
+//! resolved backend baked in — so a given point always lands on the
+//! same worker and repeats hit that worker's warm result cache.
+//! Single-point and non-scenario requests (`run`, `repro`, `config`,
+//! `backends`, `list_experiments`) proxy whole to the owner of their
+//! request cache key, keeping request-level cache entries per-worker
+//! too. Job requests (`submit`/`job_*`) are answered from the
+//! coordinator's own bounded [`JobTable`]; its cluster job workers
+//! execute each job's points remotely through the same routed path, so
+//! progress frames and cancel semantics match a standalone service
+//! frame for frame.
+//!
+//! ## Failure handling
+//!
+//! A dead or `overloaded` worker is retried on the surviving replicas:
+//! the ring yields every worker once in a key-deterministic preference
+//! order, the coordinator walks that order up to [`ROUTE_ROUNDS`]
+//! times with doubling backoff between rounds, and only when every
+//! replica has refused every round does the point answer a typed
+//! `runtime` error naming the last failure. Typed worker errors other
+//! than `overloaded` are not retried — they would fail identically on
+//! every replica — and flow through as the point's result, exactly as
+//! a standalone service embeds per-point errors.
+//!
+//! ## Observability
+//!
+//! `stats` on the coordinator aggregates the reachable workers'
+//! `cache_*`/`engine_runs*` counters and adds the coordinator-only
+//! `cluster_*` block ([`crate::api::ClusterStats`]): configured worker
+//! count, points routed, requests proxied, delivery retries, and
+//! points that exhausted every replica.
+
+pub mod ring;
+
+pub use ring::Ring;
+
+use crate::api::job::{JobTable, Watcher};
+use crate::api::{
+    ApiError, CacheStats, Client, ClusterStats, ErrorCode, JobLimits,
+    JobView, OverloadedRetry, Point, PointResult, Request, RequestEnvelope,
+    Response, ScenarioSpec, MAX_BATCH_ITEMS,
+};
+use crate::backend::{self, BackendId};
+use crate::serve::{serve_on, Dispatch, IoModel};
+use crate::util::pool;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+/// How many times the coordinator walks the full replica order before
+/// a point (or proxied request) answers a typed `runtime` failure.
+/// Between rounds the walk sleeps with doubling backoff (the
+/// [`OverloadedRetry`] default's base, capped at 250 ms).
+pub const ROUTE_ROUNDS: usize = 3;
+
+/// The shared routing state: worker addresses, the hash ring, and the
+/// `cluster_*` counters. Connection threads and cluster job workers
+/// share it behind an `Arc`.
+struct ClusterCore {
+    /// Worker addresses, index-aligned with the ring's members.
+    workers: Vec<String>,
+    ring: Ring,
+    /// The backend answering requests that name none — resolved into
+    /// the spec *before* hashing, so the routed key equals the worker's
+    /// cache key.
+    default_backend: BackendId,
+    /// Inter-node `overloaded` retry policy (always on; see
+    /// [`OverloadedRetry`]).
+    retry: OverloadedRetry,
+    points_routed: AtomicU64,
+    proxied: AtomicU64,
+    retries: AtomicU64,
+    point_failures: AtomicU64,
+}
+
+/// The cluster front door: a [`Dispatch`] implementation that fans
+/// sweep points out across workers and merges their answers. Serve it
+/// with [`serve_cluster`] (or [`serve_on`] directly); use it in-process
+/// exactly like a [`crate::api::Service`].
+pub struct Coordinator {
+    core: Arc<ClusterCore>,
+    jobs: Arc<JobTable>,
+    job_workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Coordinator over `workers` (non-empty; the CLI validates the
+    /// `--workers` list before building one) with default job limits.
+    pub fn new(workers: Vec<String>, default_backend: BackendId) -> Coordinator {
+        Coordinator::with_limits(workers, default_backend, JobLimits::default())
+    }
+
+    /// [`Coordinator::new`] with explicit job-table limits (tests
+    /// shrink the queue to exercise `overloaded` deterministically).
+    /// Spawns `limits.max_running` cluster job workers; all exit when
+    /// the coordinator is dropped.
+    pub fn with_limits(
+        workers: Vec<String>,
+        default_backend: BackendId,
+        limits: JobLimits,
+    ) -> Coordinator {
+        let ring = Ring::new(workers.len());
+        let core = Arc::new(ClusterCore {
+            workers,
+            ring,
+            default_backend,
+            retry: OverloadedRetry::default(),
+            points_routed: AtomicU64::new(0),
+            proxied: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            point_failures: AtomicU64::new(0),
+        });
+        let jobs = Arc::new(JobTable::new(limits));
+        let job_workers = (0..limits.max_running)
+            .map(|i| {
+                let core = Arc::clone(&core);
+                let jobs = Arc::clone(&jobs);
+                thread::Builder::new()
+                    .name(format!("cluster-job-worker-{i}"))
+                    .spawn(move || cluster_job_worker(&core, &jobs))
+                    .expect("spawn cluster job worker")
+            })
+            .collect();
+        Coordinator { core, jobs, job_workers }
+    }
+
+    /// The configured worker addresses (ring order).
+    pub fn workers(&self) -> &[String] {
+        &self.core.workers
+    }
+
+    /// A point-in-time snapshot of the `cluster_*` counters (what the
+    /// `stats` request reports).
+    pub fn cluster_stats(&self) -> ClusterStats {
+        self.core.snapshot()
+    }
+
+    /// Answer one typed request under the default envelope. Mirrors
+    /// [`crate::api::Service::handle`].
+    pub fn handle(&self, req: &Request) -> Response {
+        self.handle_env(req, &RequestEnvelope::default())
+    }
+
+    /// Answer one typed request honoring the envelope options. The
+    /// batch contract (item count bounds, per-item fan-out, lenient
+    /// per-item backend selectors) matches
+    /// [`crate::api::Service::handle_env`] message for message.
+    pub fn handle_env(&self, req: &Request, env: &RequestEnvelope) -> Response {
+        if let Request::Batch { items } = req {
+            if items.is_empty() {
+                return Response::from(ApiError::bad_request(
+                    "batch: \"items\" must not be empty",
+                ));
+            }
+            if items.len() > MAX_BATCH_ITEMS {
+                return Response::from(ApiError::new(
+                    ErrorCode::BadRange,
+                    format!(
+                        "batch items must be in 1..={MAX_BATCH_ITEMS} \
+                         (got {})",
+                        items.len()
+                    ),
+                ));
+            }
+            return Response::Batch {
+                items: items
+                    .iter()
+                    .map(|item| self.handle_one(item, env, false))
+                    .collect(),
+            };
+        }
+        self.handle_one(req, env, true)
+    }
+
+    /// One non-batch request: scenario-backed requests fan their points
+    /// across the ring, `submit` enqueues into the coordinator's own
+    /// job table, `job_*` and `stats` answer locally, and everything
+    /// else proxies whole to the worker owning its cache key.
+    fn handle_one(
+        &self,
+        req: &Request,
+        env: &RequestEnvelope,
+        strict_backend: bool,
+    ) -> Response {
+        if let Some((spec, single)) = desugar(req) {
+            let resolved = match self.core.resolved_spec(&spec, env.backend) {
+                Ok(s) => s,
+                Err(e) => return Response::from(e),
+            };
+            return match self.core.run_scenario(&resolved, env.cache) {
+                Ok(resp) if single => unwrap_single(resp),
+                Ok(resp) => resp,
+                Err(e) => Response::from(e),
+            };
+        }
+        if let Request::Submit { spec, .. } = req {
+            let resolved = match self.core.resolved_spec(spec, env.backend) {
+                Ok(s) => s,
+                Err(e) => return Response::from(e),
+            };
+            let points = match resolved.validated_points() {
+                Ok(p) => p,
+                Err(e) => return Response::from(e),
+            };
+            return match self.jobs.submit(
+                resolved,
+                points.len() as u64,
+                false,
+                env.cache,
+            ) {
+                Ok((view, _rx)) => Response::Job(view),
+                Err(e) => Response::from(e),
+            };
+        }
+        if strict_backend && env.backend.is_some() {
+            return Response::from(ApiError::bad_request(format!(
+                "\"backend\" only applies to sim/plan/sparsity/scenario/\
+                 submit requests (got {:?})",
+                req.type_name()
+            )));
+        }
+        match req {
+            Request::JobStatus { job } => match self.jobs.status(*job) {
+                Ok(view) => Response::Job(view),
+                Err(e) => Response::from(e),
+            },
+            Request::JobResult { job } => match self.jobs.result(*job) {
+                Ok(resp) => resp,
+                Err(e) => Response::from(e),
+            },
+            Request::JobCancel { job } => match self.jobs.cancel(*job) {
+                Ok(view) => Response::Job(view),
+                Err(e) => Response::from(e),
+            },
+            Request::Stats => self.core.aggregated_stats(),
+            Request::Batch { .. } => {
+                Response::from(ApiError::bad_request("batches do not nest"))
+            }
+            other => self.core.proxy(other, env.cache),
+        }
+    }
+
+    /// Enqueue a watched submit; mirrors
+    /// [`crate::api::Service::submit_watched`] (the threads io model's
+    /// progress-push source).
+    pub fn submit_watched(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+    ) -> (Response, Option<mpsc::Receiver<JobView>>) {
+        let resolved = match self.core.resolved_spec(spec, env.backend) {
+            Ok(s) => s,
+            Err(e) => return (Response::from(e), None),
+        };
+        let points = match resolved.validated_points() {
+            Ok(p) => p,
+            Err(e) => return (Response::from(e), None),
+        };
+        match self.jobs.submit(resolved, points.len() as u64, true, env.cache)
+        {
+            Ok((view, rx)) => (Response::Job(view), rx),
+            Err(e) => (Response::from(e), None),
+        }
+    }
+
+    /// Enqueue a watched submit with a callback watcher; mirrors
+    /// [`crate::api::Service::submit_watched_with`] (the epoll io
+    /// model's thread-free progress push).
+    pub fn submit_watched_with(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+        on_frame: Box<dyn Fn(JobView) + Send>,
+    ) -> Response {
+        let resolved = match self.core.resolved_spec(spec, env.backend) {
+            Ok(s) => s,
+            Err(e) => return Response::from(e),
+        };
+        let points = match resolved.validated_points() {
+            Ok(p) => p,
+            Err(e) => return Response::from(e),
+        };
+        match self.jobs.submit_with(
+            resolved,
+            points.len() as u64,
+            Some(Watcher::Callback(on_frame)),
+            env.cache,
+        ) {
+            Ok(view) => Response::Job(view),
+            Err(e) => Response::from(e),
+        }
+    }
+}
+
+impl Dispatch for Coordinator {
+    fn handle(&self, req: &Request) -> Response {
+        Coordinator::handle(self, req)
+    }
+
+    fn handle_env(&self, req: &Request, env: &RequestEnvelope) -> Response {
+        Coordinator::handle_env(self, req, env)
+    }
+
+    fn submit_watched(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+    ) -> (Response, Option<mpsc::Receiver<JobView>>) {
+        Coordinator::submit_watched(self, spec, env)
+    }
+
+    fn submit_watched_with(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+        on_frame: Box<dyn Fn(JobView) + Send>,
+    ) -> Response {
+        Coordinator::submit_watched_with(self, spec, env, on_frame)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Stop handing out jobs; running jobs cancel between points.
+        self.jobs.shutdown();
+        for h in self.job_workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl ClusterCore {
+    /// Resolve a spec's execution backend exactly like
+    /// [`crate::api::Service`] does (same precedence, same gate, same
+    /// message bytes) — resolution happens on the coordinator so the
+    /// routed per-point keys name the backend explicitly and match the
+    /// workers' cache keys.
+    fn resolved_spec(
+        &self,
+        spec: &ScenarioSpec,
+        envelope: Option<BackendId>,
+    ) -> Result<ScenarioSpec, ApiError> {
+        let id = match (spec.backend, envelope) {
+            (Some(a), Some(b)) if a != b => {
+                return Err(ApiError::bad_request(format!(
+                    "backend requested twice and disagreeing: the spec \
+                     says {:?}, the envelope says {:?}",
+                    a.as_str(),
+                    b.as_str()
+                )))
+            }
+            (a, b) => a.or(b).unwrap_or(self.default_backend),
+        };
+        let caps = backend::get(id).capabilities();
+        if !caps.supports(spec.ask, spec.shape) {
+            return Err(ApiError::new(
+                ErrorCode::UnsupportedByBackend,
+                format!(
+                    "backend {:?} does not support ask {:?} with shape \
+                     {:?} (ask \"backends\" for the capability table)",
+                    id.as_str(),
+                    spec.ask.as_str(),
+                    spec.shape.as_str()
+                ),
+            ));
+        }
+        let mut resolved = spec.clone();
+        resolved.backend = Some(id);
+        Ok(resolved)
+    }
+
+    /// Validate, expand, and fan a sweep's points across the ring in
+    /// parallel (results merge back in expansion order, so the merged
+    /// response is byte-identical to a standalone run of the same
+    /// spec).
+    fn run_scenario(
+        &self,
+        spec: &ScenarioSpec,
+        use_cache: bool,
+    ) -> Result<Response, ApiError> {
+        let points = spec.validated_points()?;
+        let results = pool::scoped_map(
+            &points,
+            pool::default_workers(),
+            |_, p| PointResult {
+                point: *p,
+                result: Box::new(self.run_point_remote(spec, p, use_cache)),
+            },
+        );
+        Ok(Response::Scenario { points: results })
+    }
+
+    /// Execute one validated point on its owning worker (falling back
+    /// across replicas), unwrapping the worker's single-point scenario
+    /// answer into the point's result.
+    fn run_point_remote(
+        &self,
+        spec: &ScenarioSpec,
+        p: &Point,
+        use_cache: bool,
+    ) -> Response {
+        let single = spec.at(p);
+        let req = Request::Scenario { spec: single };
+        let key = req.cache_key();
+        self.points_routed.fetch_add(1, Ordering::Relaxed);
+        let resp = match self.route(&key, &req, use_cache) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.point_failures.fetch_add(1, Ordering::Relaxed);
+                return Response::from(e);
+            }
+        };
+        match resp {
+            Response::Scenario { mut points } if points.len() == 1 => {
+                *points.remove(0).result
+            }
+            resp @ Response::Error { .. } => resp,
+            other => {
+                self.point_failures.fetch_add(1, Ordering::Relaxed);
+                Response::from(ApiError::new(
+                    ErrorCode::Runtime,
+                    format!(
+                        "worker answered {:?} to a single-point scenario \
+                         request",
+                        other.type_name()
+                    ),
+                ))
+            }
+        }
+    }
+
+    /// Forward a non-scenario request whole to the worker owning its
+    /// cache key (so request-level cache entries stay per-worker),
+    /// walking replicas on failure like a point does.
+    fn proxy(&self, req: &Request, use_cache: bool) -> Response {
+        self.proxied.fetch_add(1, Ordering::Relaxed);
+        match self.route(&req.cache_key(), req, use_cache) {
+            Ok(resp) => resp,
+            Err(e) => Response::from(e),
+        }
+    }
+
+    /// Deliver `req` to the first answering worker in `key`'s replica
+    /// order. Transport failures and typed `overloaded` answers move to
+    /// the next replica (counting a retry); any other answer — success
+    /// or typed error — is final. After [`ROUTE_ROUNDS`] full walks
+    /// with doubling backoff between rounds, the delivery fails with a
+    /// typed `runtime` error naming the last per-worker failure.
+    fn route(
+        &self,
+        key: &str,
+        req: &Request,
+        use_cache: bool,
+    ) -> Result<Response, ApiError> {
+        let order = self.ring.replicas(key);
+        let mut wait = self.retry.backoff;
+        let mut last = String::from("no delivery attempted");
+        for round in 0..ROUTE_ROUNDS {
+            for (i, &w) in order.iter().enumerate() {
+                if round > 0 || i > 0 {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                match self.call_worker(w, req, use_cache) {
+                    Ok(Response::Error {
+                        code: ErrorCode::Overloaded,
+                        message,
+                    }) => {
+                        last = format!(
+                            "worker {}: overloaded: {message}",
+                            self.workers[w]
+                        );
+                    }
+                    Ok(resp) => return Ok(resp),
+                    Err(e) => {
+                        last = format!("worker {}: {e}", self.workers[w]);
+                    }
+                }
+            }
+            if round + 1 < ROUTE_ROUNDS {
+                thread::sleep(wait);
+                wait = (wait * 2).min(Duration::from_millis(250));
+            }
+        }
+        Err(ApiError::new(
+            ErrorCode::Runtime,
+            format!(
+                "all {} workers failed to answer after {ROUTE_ROUNDS} \
+                 rounds (last: {last})",
+                self.workers.len()
+            ),
+        ))
+    }
+
+    /// One request/response round against worker `w` over a fresh
+    /// connection, with the inter-node `overloaded` retry policy
+    /// enabled (same-worker retries happen inside the client; replica
+    /// fallback happens in [`ClusterCore::route`]).
+    fn call_worker(
+        &self,
+        w: usize,
+        req: &Request,
+        use_cache: bool,
+    ) -> std::io::Result<Response> {
+        let mut c = Client::connect(self.workers[w].as_str())?;
+        c.set_overloaded_retry(Some(self.retry));
+        c.request_env(
+            req,
+            &RequestEnvelope { cache: use_cache, ..RequestEnvelope::default() },
+        )
+    }
+
+    /// The coordinator's `stats` answer: best-effort sums of every
+    /// *reachable* worker's cache and execution counters (an
+    /// unreachable worker is skipped, not an error — `stats` must work
+    /// mid-outage), plus the coordinator-only `cluster_*` block.
+    /// `cache_enabled` reports whether every reachable worker has its
+    /// cache on; the caps are summed (total cluster capacity). Workers'
+    /// own nested `cluster` blocks (a coordinator fronting
+    /// coordinators) are not aggregated.
+    fn aggregated_stats(&self) -> Response {
+        let mut cache = CacheStats { enabled: true, ..CacheStats::default() };
+        let mut engine_runs = 0u64;
+        let mut backend_runs = vec![0u64; backend::COUNT];
+        let mut reachable = 0usize;
+        for w in 0..self.workers.len() {
+            let resp = match self.call_worker(w, &Request::Stats, true) {
+                Ok(resp) => resp,
+                Err(_) => continue,
+            };
+            if let Response::Stats {
+                cache: c,
+                engine_runs: runs,
+                backend_runs: per,
+                ..
+            } = resp
+            {
+                reachable += 1;
+                cache.hits += c.hits;
+                cache.misses += c.misses;
+                cache.evictions += c.evictions;
+                cache.entries += c.entries;
+                cache.bytes += c.bytes;
+                cache.max_entries += c.max_entries;
+                cache.max_bytes += c.max_bytes;
+                cache.enabled &= c.enabled;
+                engine_runs += runs;
+                for (i, v) in per.into_iter().enumerate() {
+                    if i < backend_runs.len() {
+                        backend_runs[i] += v;
+                    } else {
+                        backend_runs.push(v);
+                    }
+                }
+            }
+        }
+        if reachable == 0 {
+            cache.enabled = false;
+        }
+        Response::Stats {
+            cache,
+            engine_runs,
+            backend_runs,
+            cluster: Some(self.snapshot()),
+        }
+    }
+
+    /// The `cluster_*` counter snapshot.
+    fn snapshot(&self) -> ClusterStats {
+        ClusterStats {
+            workers: self.workers.len() as u64,
+            points_routed: self.points_routed.load(Ordering::Relaxed),
+            proxied: self.proxied.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            point_failures: self.point_failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A cluster job worker: identical loop shape to the standalone
+/// service's job worker — pull queued jobs, run points sequentially
+/// (the progress/cancel granularity), frame watchers via the table —
+/// but each point executes remotely through the routed path.
+fn cluster_job_worker(core: &ClusterCore, jobs: &JobTable) {
+    while let Some((id, spec, use_cache)) = jobs.next_job() {
+        let points = spec.expand();
+        let mut results = Vec::with_capacity(points.len());
+        for p in &points {
+            if !jobs.should_continue(id) {
+                break;
+            }
+            let resp = core.run_point_remote(&spec, p, use_cache);
+            results.push(PointResult { point: *p, result: Box::new(resp) });
+            if !jobs.point_done(id) {
+                break;
+            }
+        }
+        if results.len() == points.len() {
+            jobs.finish(id, Ok(Response::Scenario { points: results }));
+        } else {
+            // A cancel (or shutdown) was honored mid-sweep.
+            jobs.mark_cancelled(id);
+        }
+    }
+}
+
+/// The scenario-backed request kinds and their single-point unwrap
+/// flag — the coordinator desugars exactly like the standalone
+/// service, so v1 requests answer in their v1 shape.
+fn desugar(req: &Request) -> Option<(ScenarioSpec, bool)> {
+    match req {
+        Request::Sim { n, precision, streams } => {
+            Some((ScenarioSpec::sim(*n, *precision, *streams), true))
+        }
+        Request::Plan { objective, streams, n, precision } => Some((
+            ScenarioSpec::plan(*objective, *streams, *n, *precision),
+            true,
+        )),
+        Request::Sparsity { n, streams } => {
+            Some((ScenarioSpec::sparsity_question(*n, *streams), true))
+        }
+        Request::Scenario { spec } => Some((spec.clone(), false)),
+        _ => None,
+    }
+}
+
+/// Unwrap a single-point scenario response back into its v1 shape.
+fn unwrap_single(resp: Response) -> Response {
+    match resp {
+        Response::Scenario { mut points } if points.len() == 1 => {
+            *points.remove(0).result
+        }
+        other => other,
+    }
+}
+
+/// Serve a coordinator on `addr` over `workers` (the CLI's
+/// `serve --coordinator --workers a,b,...`): bind, print the bound
+/// address on stdout (callers/tests discover the ephemeral port), and
+/// run the shared accept machinery under `io`. Returns after
+/// `max_conns` connections have been accepted and fully served
+/// (None = forever).
+pub fn serve_cluster(
+    addr: &str,
+    workers: Vec<String>,
+    max_conns: Option<usize>,
+    default_backend: BackendId,
+    io: IoModel,
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!("serving on {}", listener.local_addr()?);
+    let coord = Arc::new(Coordinator::new(workers, default_backend));
+    serve_on(listener, coord, max_conns, io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coordinator_rejects_misplaced_backend_like_a_service() {
+        // No worker is ever contacted: the strict check fires first.
+        let coord = Coordinator::new(
+            vec!["127.0.0.1:1".into()],
+            backend::DEFAULT,
+        );
+        let env = RequestEnvelope {
+            backend: Some(BackendId::Analytic),
+            ..RequestEnvelope::default()
+        };
+        match coord.handle_env(&Request::Config, &env) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRequest);
+                assert!(message.contains("only applies"), "{message}");
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_and_oversized_batches_mirror_the_service_messages() {
+        let coord = Coordinator::new(
+            vec!["127.0.0.1:1".into()],
+            backend::DEFAULT,
+        );
+        match coord.handle(&Request::Batch { items: vec![] }) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRequest);
+                assert!(message.contains("must not be empty"), "{message}");
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        let items = vec![Request::Config; MAX_BATCH_ITEMS + 1];
+        match coord.handle(&Request::Batch { items }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::BadRange)
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn job_requests_answer_locally_without_workers() {
+        let coord = Coordinator::new(
+            vec!["127.0.0.1:1".into()],
+            backend::DEFAULT,
+        );
+        match coord.handle(&Request::JobStatus { job: 42 }) {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::UnknownJob)
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unreachable_workers_fail_points_with_a_typed_runtime_error() {
+        // Port 1 refuses connections; the routed point must exhaust its
+        // replicas and answer a typed error, and the counters must
+        // record the failure.
+        let coord = Coordinator::new(
+            vec!["127.0.0.1:1".into()],
+            backend::DEFAULT,
+        );
+        let req = Request::Sim {
+            n: 256,
+            precision: crate::isa::Precision::Fp8,
+            streams: 2,
+        };
+        match coord.handle(&req) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::Runtime);
+                assert!(message.contains("workers failed"), "{message}");
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        let stats = coord.cluster_stats();
+        assert_eq!(stats.workers, 1);
+        assert_eq!(stats.points_routed, 1);
+        assert_eq!(stats.point_failures, 1);
+        assert!(stats.retries >= 1, "replica walk counted no retries");
+    }
+}

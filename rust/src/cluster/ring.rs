@@ -1,0 +1,157 @@
+//! Consistent-hash ring over a static worker set (DESIGN.md §6.9).
+//!
+//! The coordinator routes every sweep point by the FNV-1a hash of its
+//! canonical per-point cache key — the *same* key and the *same* hash
+//! the workers' result caches shard on ([`crate::api::cache`]) — so a
+//! point lands on the same worker every time and repeats hit that
+//! worker's warm cache. Each worker owns [`Ring::VNODES`] virtual
+//! nodes, which spreads a 256-point sweep close to evenly across even a
+//! two-worker set; the successor walk ([`Ring::replicas`]) yields every
+//! worker exactly once in a key-deterministic preference order, which
+//! is the retry path when the owner is dead or overloaded.
+
+use crate::api::cache::fnv1a;
+
+/// An immutable consistent-hash ring over `workers` indexes
+/// (`0..workers`). Built once at coordinator startup; the worker set is
+/// static for the instance's lifetime (docs/cluster.md).
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// `(hash, worker)` pairs sorted by hash — the ring positions.
+    points: Vec<(u64, usize)>,
+    workers: usize,
+}
+
+impl Ring {
+    /// Virtual nodes per worker: enough that a maximum-size
+    /// ([`crate::api::MAX_SWEEP_POINTS`]-point) sweep splits
+    /// near-evenly across small worker sets.
+    pub const VNODES: usize = 128;
+
+    /// Ring over `workers` members with [`Ring::VNODES`] virtual nodes
+    /// each. `workers` must be at least 1.
+    pub fn new(workers: usize) -> Ring {
+        Ring::with_vnodes(workers, Ring::VNODES)
+    }
+
+    /// [`Ring::new`] with an explicit virtual-node count (tests shrink
+    /// it to make collisions and skew observable).
+    pub fn with_vnodes(workers: usize, vnodes: usize) -> Ring {
+        assert!(workers >= 1, "a ring needs at least one worker");
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(workers * vnodes);
+        for w in 0..workers {
+            for v in 0..vnodes {
+                points.push((fnv1a(&format!("worker-{w}#vnode-{v}")), w));
+            }
+        }
+        // Ties (identical hashes across workers) break by worker index
+        // so the ring order is fully deterministic.
+        points.sort();
+        Ring { points, workers }
+    }
+
+    /// The number of ring members.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The worker owning `key`: the first ring position at or after the
+    /// key's hash, wrapping at the top.
+    pub fn owner(&self, key: &str) -> usize {
+        let h = fnv1a(key);
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        self.points[i % self.points.len()].1
+    }
+
+    /// Every worker exactly once, in the key's successor order around
+    /// the ring: `replicas(key)[0]` is [`Ring::owner`], the rest are
+    /// the deterministic fallback sequence the coordinator walks when
+    /// earlier replicas are unreachable or overloaded.
+    pub fn replicas(&self, key: &str) -> Vec<usize> {
+        let h = fnv1a(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut seen = vec![false; self.workers];
+        let mut order = Vec::with_capacity(self.workers);
+        for i in 0..self.points.len() {
+            let w = self.points[(start + i) % self.points.len()].1;
+            if !seen[w] {
+                seen[w] = true;
+                order.push(w);
+                if order.len() == self.workers {
+                    break;
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic() {
+        let a = Ring::new(3);
+        let b = Ring::new(3);
+        for k in 0..64 {
+            let key = format!("key-{k}");
+            assert_eq!(a.owner(&key), b.owner(&key));
+            assert_eq!(a.replicas(&key), b.replicas(&key));
+        }
+    }
+
+    #[test]
+    fn owner_heads_the_replica_order() {
+        let ring = Ring::new(4);
+        for k in 0..64 {
+            let key = format!("key-{k}");
+            let reps = ring.replicas(&key);
+            assert_eq!(reps[0], ring.owner(&key));
+        }
+    }
+
+    #[test]
+    fn replicas_cover_every_worker_exactly_once() {
+        for workers in 1..=5 {
+            let ring = Ring::new(workers);
+            let mut reps = ring.replicas("some-key");
+            assert_eq!(reps.len(), workers);
+            reps.sort();
+            assert_eq!(reps, (0..workers).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn two_worker_split_is_roughly_even() {
+        // The acceptance bar for a 256-point sweep over 2 workers is
+        // >= 64 points (a quarter) each; hold the ring to that bound
+        // over a larger key population so the sweep case has margin.
+        let ring = Ring::new(2);
+        let mut counts = [0usize; 2];
+        for k in 0..1024 {
+            counts[ring.owner(&format!("key-{k}"))] += 1;
+        }
+        for (w, &c) in counts.iter().enumerate() {
+            assert!(
+                c >= 256,
+                "worker {w} owns only {c}/1024 keys — ring is skewed"
+            );
+        }
+    }
+
+    #[test]
+    fn few_vnodes_still_cover_all_workers() {
+        let ring = Ring::with_vnodes(3, 1);
+        let mut reps = ring.replicas("k");
+        reps.sort();
+        assert_eq!(reps, vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn empty_ring_is_refused() {
+        let _ = Ring::new(0);
+    }
+}

@@ -31,9 +31,14 @@
 //!   epoll reactor and thread-per-connection) and its built-in
 //!   closed-loop load generator (`BENCH_serve.json`,
 //!   docs/performance.md).
+//! * [`cluster`] — coordinator/worker scale-out (DESIGN.md §6.9):
+//!   a coordinator speaks the same v1 protocol and consistent-hashes
+//!   sweep points across a static worker set over [`api::Client`]
+//!   connections (docs/cluster.md).
 
 pub mod api;
 pub mod backend;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

@@ -84,6 +84,17 @@ impl Mix {
     pub fn parse(s: &str) -> Option<Mix> {
         Mix::ALL.iter().copied().find(|m| m.as_str() == s)
     }
+
+    /// Every accepted spelling joined with `|` — the single source for
+    /// the CLI's unknown-mix usage error, so the error can never drift
+    /// from the registry (mirrors [`BackendId::names`]).
+    pub fn names() -> String {
+        Mix::ALL
+            .iter()
+            .map(|m| m.as_str())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
 }
 
 /// Load-generator options (the `loadgen` subcommand's flags).
@@ -510,6 +521,14 @@ mod tests {
             assert_eq!(Mix::parse(m.as_str()), Some(m));
         }
         assert_eq!(Mix::parse("warm"), None);
+    }
+
+    #[test]
+    fn mix_names_lists_every_spelling() {
+        assert_eq!(Mix::names(), "hot|cold|mixed");
+        for m in Mix::ALL {
+            assert!(Mix::names().contains(m.as_str()));
+        }
     }
 
     #[test]

@@ -56,6 +56,7 @@ USAGE:
                    [--backend des|analytic] [--json] [--addr HOST:PORT]
   mi300a-char serve [--addr HOST:PORT] [--max-conns N] [--no-cache]
                    [--backend des|analytic] [--io-model epoll|threads]
+                   [--coordinator --workers HOST:PORT,HOST:PORT,...]
   mi300a-char loadgen [--addr HOST:PORT] [--connections N]
                    [--warmup-ms N] [--duration-ms N]
                    [--mix hot|cold|mixed] [--io-model epoll|threads]
@@ -83,6 +84,10 @@ the engine answering sim/plan/sparsity points (des = DES replay,
 analytic = calibrated closed forms, ~100x faster per sim point);
 `mi300a-char list` and the `backends` request show the registry:
   mi300a-char scenario --backend analytic --size 512 --sweep-streams 1,2,4,8,16
+Cluster mode (DESIGN.md §6.9, docs/cluster.md): a coordinator speaks the
+same protocol and consistent-hashes sweep points across plain serve
+workers, so `scenario --addr` and `loadgen --addr` work unchanged:
+  mi300a-char serve --addr 127.0.0.1:7400 --coordinator --workers 127.0.0.1:7301,127.0.0.1:7302
 ";
 
 /// Parse an optional `--backend` flag into a [`BackendId`], with the
@@ -591,6 +596,42 @@ fn cmd_serve(args: &Args) -> i32 {
         Ok(m) => m,
         Err(code) => return code,
     };
+    // Coordinator mode (DESIGN.md §6.9): same protocol, same transport
+    // machinery, but every sweep point routes to a worker instead of a
+    // local engine. Caching happens on the workers (the coordinator
+    // forwards the per-request `cache` flag), so --no-cache here only
+    // affects what clients of this process send onward.
+    if args.flag("coordinator") {
+        let workers: Vec<String> = args
+            .get("workers")
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default();
+        if workers.is_empty() {
+            eprintln!(
+                "serve: --coordinator wants --workers \
+                 HOST:PORT,HOST:PORT,..."
+            );
+            return 2;
+        }
+        return match mi300a_char::cluster::serve_cluster(
+            &addr,
+            workers,
+            max,
+            default_backend,
+            io,
+        ) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                1
+            }
+        };
+    }
     match mi300a_char::serve::serve_io(cfg, &addr, max, policy,
                                        default_backend, io)
     {
@@ -620,8 +661,9 @@ fn cmd_loadgen(args: &Args) -> i32 {
         Some(m) => m,
         None => {
             eprintln!(
-                "loadgen: unknown mix {:?} (want hot|cold|mixed)",
-                args.get_or("mix", "")
+                "loadgen: unknown mix {:?} (want {})",
+                args.get_or("mix", ""),
+                Mix::names()
             );
             return 2;
         }
@@ -742,7 +784,7 @@ fn cmd_client(args: &Args) -> i32 {
 }
 
 fn main() {
-    let args = Args::from_env(&["json", "verbose", "no-cache"]);
+    let args = Args::from_env(&["json", "verbose", "no-cache", "coordinator"]);
     let code = match args.subcommand.as_deref() {
         Some("repro") => cmd_repro(&args),
         Some("run") => cmd_run(&args),

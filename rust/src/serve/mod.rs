@@ -83,10 +83,75 @@ mod reactor;
 mod sys;
 mod threads;
 
-use crate::api::{CachePolicy, Response, Service};
+use crate::api::{
+    CachePolicy, JobView, Request, RequestEnvelope, Response, ScenarioSpec,
+    Service,
+};
 use crate::config::Config;
 use std::net::TcpListener;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
+
+/// What the io models need from a request handler: the four entry
+/// points [`Service`] exposes to its transports. The serve loops are
+/// generic over this trait rather than over `Service` itself, so a
+/// [`crate::cluster::Coordinator`] (DESIGN.md §6.9) serves through the
+/// identical framing, line-cap, and progress-push machinery under
+/// either io model — transports cannot tell a coordinator from a
+/// standalone service, and neither can clients.
+pub trait Dispatch: Send + Sync + 'static {
+    /// Answer one typed request under the default envelope (the legacy
+    /// text shim's path).
+    fn handle(&self, req: &Request) -> Response;
+
+    /// Answer one typed request honoring the envelope options (`cache`
+    /// escape hatch, `backend` selector).
+    fn handle_env(&self, req: &Request, env: &RequestEnvelope) -> Response;
+
+    /// Enqueue a watched submit, returning the response plus — when the
+    /// job was accepted — the progress-frame receiver (the threads io
+    /// model forwards it from a pusher thread).
+    fn submit_watched(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+    ) -> (Response, Option<mpsc::Receiver<JobView>>);
+
+    /// Enqueue a watched submit with a callback watcher (the epoll io
+    /// model's thread-free progress push).
+    fn submit_watched_with(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+        on_frame: Box<dyn Fn(JobView) + Send>,
+    ) -> Response;
+}
+
+impl Dispatch for Service {
+    fn handle(&self, req: &Request) -> Response {
+        Service::handle(self, req)
+    }
+
+    fn handle_env(&self, req: &Request, env: &RequestEnvelope) -> Response {
+        Service::handle_env(self, req, env)
+    }
+
+    fn submit_watched(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+    ) -> (Response, Option<mpsc::Receiver<JobView>>) {
+        Service::submit_watched(self, spec, env)
+    }
+
+    fn submit_watched_with(
+        &self,
+        spec: &ScenarioSpec,
+        env: &RequestEnvelope,
+        on_frame: Box<dyn Fn(JobView) + Send>,
+    ) -> Response {
+        Service::submit_watched_with(self, spec, env, on_frame)
+    }
+}
 
 /// Maximum accepted request-line length in bytes (1 MiB), newline
 /// excluded. A longer line is answered with a typed `bad_request` and
@@ -205,14 +270,15 @@ pub fn serve_io(
     serve_on(listener, svc, max_conns, io)
 }
 
-/// Serve an already-bound listener with an already-built service — the
-/// embedding entry point ([`crate::loadgen`] self-hosts through it so
-/// it can learn the ephemeral port without parsing stdout). Returns
-/// after `max_conns` connections have been accepted and fully served
-/// (None = forever).
-pub fn serve_on(
+/// Serve an already-bound listener with an already-built dispatcher —
+/// the embedding entry point ([`crate::loadgen`] self-hosts a
+/// `Service` through it so it can learn the ephemeral port without
+/// parsing stdout; [`crate::cluster`] serves its `Coordinator` the
+/// same way). Returns after `max_conns` connections have been accepted
+/// and fully served (None = forever).
+pub fn serve_on<D: Dispatch>(
     listener: TcpListener,
-    svc: Arc<Service>,
+    svc: Arc<D>,
     max_conns: Option<usize>,
     io: IoModel,
 ) -> std::io::Result<()> {

@@ -20,7 +20,7 @@
 //!   Completions are queued to the reactor and flushed via an eventfd
 //!   wake.
 //! * **Progress push**: a watched submit registers a callback watcher
-//!   ([`Service::submit_watched_with`]) wrapping a [`Forwarder`]. The
+//!   ([`Dispatch::submit_watched_with`]) wrapping a [`Forwarder`]. The
 //!   forwarder *buffers* frames until the reactor has written the
 //!   submit's response line (a job can finish before its response is
 //!   even queued), then goes live: each further frame is queued to the
@@ -41,8 +41,8 @@
 use super::sys::{
     Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT,
 };
-use super::{line_cap_error, MAX_LINE_BYTES};
-use crate::api::{JobView, LegacyCommand, Request, Response, Service};
+use super::{line_cap_error, Dispatch, MAX_LINE_BYTES};
+use crate::api::{JobView, LegacyCommand, Request, Response};
 use crate::util::json::Json;
 use crate::util::pool::TaskPool;
 use std::collections::{HashMap, VecDeque};
@@ -178,9 +178,9 @@ struct Conn {
 
 /// Reactor accept-and-serve loop; returns after `max_conns` accepted
 /// connections have been fully served (None = forever).
-pub(super) fn run(
+pub(super) fn run<D: Dispatch>(
     listener: TcpListener,
-    svc: Arc<Service>,
+    svc: Arc<D>,
     max_conns: Option<usize>,
 ) -> io::Result<()> {
     // Declaration order is drop order in reverse: the pool drops first
@@ -401,10 +401,10 @@ fn extract_lines(conn: &mut Conn) {
 
 /// Dispatch the connection's next queued line if none is in flight —
 /// the one-at-a-time rule that keeps responses in request order.
-fn pump(
+fn pump<D: Dispatch>(
     conn: &mut Conn,
     token: u64,
-    svc: &Arc<Service>,
+    svc: &Arc<D>,
     pool: &TaskPool,
     shared: &Arc<Shared>,
 ) {
@@ -433,8 +433,8 @@ fn pump(
 /// Runs on a pool worker: parse, route through the service, serialize.
 /// A watched submit registers its forwarder (buffering) and hands it
 /// back for the reactor to bring live after the response line.
-fn process_line(
-    svc: &Service,
+fn process_line<D: Dispatch>(
+    svc: &D,
     shared: &Arc<Shared>,
     token: u64,
     text: &str,
@@ -493,11 +493,11 @@ fn process_line(
 
 /// Apply one cross-thread completion to its connection (ignored if the
 /// connection already closed — tokens are never reused).
-fn handle_completion(
+fn handle_completion<D: Dispatch>(
     event: Event,
     conns: &mut HashMap<u64, Conn>,
     epoll: &Epoll,
-    svc: &Arc<Service>,
+    svc: &Arc<D>,
     pool: &TaskPool,
     shared: &Arc<Shared>,
 ) {

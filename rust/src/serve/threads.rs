@@ -14,8 +14,8 @@
 //! !h.is_finished())` dropped finished handles without joining and
 //! still grew under churn between reaps.
 
-use super::{line_cap_error, MAX_LINE_BYTES};
-use crate::api::{LegacyCommand, Request, Response, Service};
+use super::{line_cap_error, Dispatch, MAX_LINE_BYTES};
+use crate::api::{LegacyCommand, Request, Response};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -25,9 +25,9 @@ use std::thread;
 
 /// Accept loop: spawn one handler thread per connection, joining
 /// finished ones as their ids arrive on the completion channel.
-pub(super) fn run(
+pub(super) fn run<D: Dispatch>(
     listener: TcpListener,
-    svc: Arc<Service>,
+    svc: Arc<D>,
     max_conns: Option<usize>,
 ) -> std::io::Result<()> {
     let (done_tx, done_rx) = mpsc::channel::<u64>();
@@ -117,10 +117,10 @@ fn read_bounded_line<R: BufRead>(
     Ok(Some(true))
 }
 
-/// One connection: frame lines, route through the service, write one
-/// response line per request line (plus pushed progress frames for
+/// One connection: frame lines, route through the dispatcher, write
+/// one response line per request line (plus pushed progress frames for
 /// watched submits).
-fn handle(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
+fn handle<D: Dispatch>(svc: &D, stream: TcpStream) -> std::io::Result<()> {
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let mut reader = BufReader::new(stream);
     let mut pushers: Vec<thread::JoinHandle<()>> = Vec::new();
@@ -193,8 +193,8 @@ fn handle(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
 /// enough to salvage it. A top-level `submit` with `"progress":true`
 /// additionally returns the job's watcher receiver for the caller to
 /// forward.
-fn dispatch_json(
-    svc: &Service,
+fn dispatch_json<D: Dispatch>(
+    svc: &D,
     text: &str,
 ) -> (
     Response,

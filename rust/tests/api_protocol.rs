@@ -5,9 +5,9 @@
 
 use mi300a_char::api::{
     parse_legacy, ApiError, Ask, BackendInfo, CachePolicy, CacheStats,
-    ErrorCode, ExperimentInfo, JobState, JobView, LegacyCommand, PlanGroup,
-    Point, PointResult, Request, RequestEnvelope, Response, ScenarioSpec,
-    Service, MAX_SWEEP_POINTS, PROTOCOL_VERSION,
+    ClusterStats, ErrorCode, ExperimentInfo, JobLimits, JobState, JobView,
+    LegacyCommand, PlanGroup, Point, PointResult, Request, RequestEnvelope,
+    Response, ScenarioSpec, Service, MAX_SWEEP_POINTS, PROTOCOL_VERSION,
 };
 use mi300a_char::backend::BackendId;
 use mi300a_char::config::Config;
@@ -245,6 +245,21 @@ fn every_response_variant_roundtrips() {
         },
         engine_runs: 3,
         backend_runs: vec![2, 1],
+        cluster: None,
+    });
+    // The coordinator variant: the same payload plus the all-or-
+    // nothing cluster_* block (DESIGN.md §6.9).
+    roundtrip_response(Response::Stats {
+        cache: CacheStats::default(),
+        engine_runs: 9,
+        backend_runs: vec![6, 3],
+        cluster: Some(ClusterStats {
+            workers: 2,
+            points_routed: 256,
+            proxied: 3,
+            retries: 5,
+            point_failures: 1,
+        }),
     });
     roundtrip_response(Response::Batch {
         items: vec![
@@ -495,13 +510,14 @@ fn batch_items_share_the_cache_within_one_call() {
     assert_eq!(items[1], items[2]);
     assert_eq!(svc.engine_runs(), 1, "three copies, one cold run");
     match &items[3] {
-        Response::Stats { cache, engine_runs, backend_runs } => {
+        Response::Stats { cache, engine_runs, backend_runs, cluster } => {
             assert_eq!(*engine_runs, 1);
             assert_eq!(cache.hits, 2);
             assert_eq!(cache.misses, 1);
             assert_eq!(cache.entries, 1);
             // All executions ran on the default `des` backend.
             assert_eq!(backend_runs, &vec![1, 0]);
+            assert!(cluster.is_none(), "standalone stats carry no cluster");
         }
         other => panic!("unexpected stats item: {other:?}"),
     }
@@ -547,13 +563,14 @@ fn stats_request_mirrors_the_service_counters() {
     svc.handle(&sp);
     svc.handle(&sp);
     match svc.handle(&Request::Stats) {
-        Response::Stats { cache, engine_runs, backend_runs } => {
+        Response::Stats { cache, engine_runs, backend_runs, cluster } => {
             assert_eq!(engine_runs, 1);
             assert_eq!(cache, svc.cache_stats());
             assert_eq!((cache.hits, cache.misses), (2, 1));
             assert!(cache.enabled);
             assert!(cache.bytes > 0);
             assert_eq!(backend_runs, svc.backend_runs());
+            assert!(cluster.is_none(), "standalone stats carry no cluster");
         }
         other => panic!("unexpected response: {other:?}"),
     }
@@ -740,6 +757,83 @@ fn job_lifecycle_through_the_service() {
     );
 }
 
+/// Drive a submitted job to its terminal state through `job_status`
+/// polling; panics if it never finishes.
+fn wait_terminal(svc: &Service, job: u64) -> JobView {
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        match svc.handle(&Request::JobStatus { job }) {
+            Response::Job(v) if v.state.terminal() => return v,
+            Response::Job(_) => {}
+            other => panic!("unexpected status: {other:?}"),
+        }
+        assert!(std::time::Instant::now() < deadline, "job never finished");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+}
+
+/// Submit a cheap single-point job and return its accepted view.
+fn submit_one_point(svc: &Service, n: usize) -> JobView {
+    let spec = ScenarioSpec::sparsity_question(n, 2);
+    match svc.handle(&Request::Submit { spec, progress: false }) {
+        Response::Job(v) => v,
+        other => panic!("unexpected submit response: {other:?}"),
+    }
+}
+
+/// `job_result` on a job evicted past the retention window answers the
+/// typed `unknown_job` error, not a hang or a stale result.
+#[test]
+fn job_result_after_eviction_is_a_typed_unknown_job() {
+    // max_finished 1: finishing a second job evicts the first.
+    let svc = Service::with_job_limits(
+        Config::mi300a(),
+        JobLimits { max_running: 1, max_queued: 16, max_finished: 1 },
+    );
+    let first = submit_one_point(&svc, 256);
+    assert_eq!(wait_terminal(&svc, first.job).state, JobState::Done);
+    assert!(matches!(
+        svc.handle(&Request::JobResult { job: first.job }),
+        Response::Scenario { .. }
+    ));
+    let second = submit_one_point(&svc, 512);
+    assert_eq!(wait_terminal(&svc, second.job).state, JobState::Done);
+    match svc.handle(&Request::JobResult { job: first.job }) {
+        Response::Error { code, message } => {
+            assert_eq!(code, ErrorCode::UnknownJob);
+            assert!(message.contains("evicted"), "{message}");
+        }
+        other => panic!("unexpected evicted-job response: {other:?}"),
+    }
+    // The survivor still answers.
+    assert!(matches!(
+        svc.handle(&Request::JobResult { job: second.job }),
+        Response::Scenario { .. }
+    ));
+}
+
+/// `job_cancel` on an already-done job is a no-op: the terminal state
+/// is preserved (not rewritten to cancelled) and the result survives.
+#[test]
+fn job_cancel_on_a_done_job_is_a_noop() {
+    let svc = Service::new(Config::mi300a());
+    let view = submit_one_point(&svc, 256);
+    assert_eq!(wait_terminal(&svc, view.job).state, JobState::Done);
+    match svc.handle(&Request::JobCancel { job: view.job }) {
+        Response::Job(v) => {
+            assert_eq!(v.state, JobState::Done, "cancel rewrote a terminal");
+            assert_eq!((v.completed, v.total), (1, 1));
+        }
+        other => panic!("unexpected cancel response: {other:?}"),
+    }
+    // The no-op cancel leaves the stored result fetchable.
+    assert!(matches!(
+        svc.handle(&Request::JobResult { job: view.job }),
+        Response::Scenario { .. }
+    ));
+}
+
 #[test]
 fn error_code_wire_spellings_are_stable() {
     // The wire spellings are part of the v1 contract (DESIGN.md §6.3):
@@ -778,14 +872,64 @@ fn stats_wire_pins_the_per_backend_counter_fields() {
         cache: CacheStats::default(),
         engine_runs: 7,
         backend_runs: vec![4, 3],
+        cluster: None,
     };
     let wire = resp.to_json(None).to_string();
     assert!(wire.contains(r#""engine_runs":7"#), "{wire}");
     assert!(wire.contains(r#""engine_runs_des":4"#), "{wire}");
     assert!(wire.contains(r#""engine_runs_analytic":3"#), "{wire}");
+    // The cluster amendment (DESIGN.md §6.9) must not leak into a
+    // standalone stats line: no cluster_* key when `cluster` is None.
+    assert!(!wire.contains("cluster"), "{wire}");
     let (back, _) =
         Response::from_json(&Json::parse(&wire).unwrap()).unwrap();
     assert_eq!(back, resp);
+}
+
+/// Coordinator stats flatten the `cluster_*` block under pinned names;
+/// the block is all-or-nothing on decode (a stray subset is typed
+/// `bad_request`, keyed on `cluster_workers`).
+#[test]
+fn stats_wire_pins_the_cluster_counter_fields() {
+    let resp = Response::Stats {
+        cache: CacheStats::default(),
+        engine_runs: 7,
+        backend_runs: vec![4, 3],
+        cluster: Some(ClusterStats {
+            workers: 2,
+            points_routed: 64,
+            proxied: 1,
+            retries: 9,
+            point_failures: 0,
+        }),
+    };
+    let wire = resp.to_json(None).to_string();
+    for needle in [
+        r#""cluster_workers":2"#,
+        r#""cluster_points_routed":64"#,
+        r#""cluster_proxied":1"#,
+        r#""cluster_retries":9"#,
+        r#""cluster_point_failures":0"#,
+    ] {
+        assert!(wire.contains(needle), "missing {needle} in {wire}");
+    }
+    let (back, _) =
+        Response::from_json(&Json::parse(&wire).unwrap()).unwrap();
+    assert_eq!(back, resp);
+    // A lone cluster counter without `cluster_workers` is rejected.
+    let partial = wire
+        .replace(r#""cluster_workers":2,"#, "")
+        .replace(r#""cluster_points_routed":64,"#, "");
+    let err =
+        Response::from_json(&Json::parse(&partial).unwrap()).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("cluster_workers"), "{}", err.message);
+    // And a full block missing one member is a typed missing-field
+    // error rather than a silent zero.
+    let hole = wire.replace(r#""cluster_retries":9,"#, "");
+    let err =
+        Response::from_json(&Json::parse(&hole).unwrap()).unwrap_err();
+    assert!(err.message.contains("cluster_retries"), "{}", err.message);
 }
 
 /// Satellite: `list_experiments` surfaces each spec's `deterministic`

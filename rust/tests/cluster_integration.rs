@@ -1,0 +1,317 @@
+//! Cluster-mode integration: a coordinator sharding sweeps across real
+//! served workers must answer byte-identically to a standalone
+//! service, split the work across the worker set, and survive worker
+//! death by retrying on the survivors (DESIGN.md §6.9,
+//! docs/cluster.md).
+
+use mi300a_char::api::{
+    ApiError, Ask, Client, ErrorCode, JobState, OverloadedRetry, Request,
+    Response, ScenarioSpec, Service,
+};
+use mi300a_char::backend;
+use mi300a_char::cluster::Coordinator;
+use mi300a_char::config::Config;
+use mi300a_char::serve::{serve_on, IoModel};
+use mi300a_char::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Bind an ephemeral standalone worker and serve it from a background
+/// thread; returns its address. `max_conns` bounds its life: after
+/// that many accepted connections the worker exits and its port
+/// refuses further connects (the deterministic "worker death" lever).
+fn spawn_worker(max_conns: Option<usize>) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let svc = Arc::new(Service::new(Config::mi300a()));
+        serve_on(listener, svc, max_conns, IoModel::Threads)
+    });
+    addr
+}
+
+/// Bind an ephemeral coordinator over `workers` and serve it from a
+/// background thread; returns its address.
+fn spawn_coordinator(workers: Vec<String>) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let coord = Arc::new(Coordinator::new(workers, backend::DEFAULT));
+        serve_on(listener, coord, None, IoModel::Threads)
+    });
+    addr
+}
+
+/// A sparsity sweep of exactly `nv * sv` points (cheap per point, so a
+/// full 256-point sweep stays test-sized).
+fn sweep(nv: usize, sv: usize) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::new(Ask::Sparsity);
+    spec.sweep.n = (1..=nv).map(|i| i * 32).collect();
+    spec.sweep.streams = (1..=sv).collect();
+    spec
+}
+
+/// The worker's `engine_runs` counter, read directly off its port.
+fn engine_runs(addr: &str) -> u64 {
+    let mut c = Client::connect_retry(addr, 200).unwrap();
+    match c.request(&Request::Stats).unwrap() {
+        Response::Stats { engine_runs, .. } => engine_runs,
+        other => panic!("unexpected stats response: {other:?}"),
+    }
+}
+
+/// The acceptance sweep: 256 points through a 2-worker coordinator are
+/// byte-identical to a standalone service, the points split across
+/// both workers, v1 single-point and non-scenario requests proxy
+/// through unchanged, and the coordinator's `stats` aggregates the
+/// workers plus the `cluster_*` block.
+#[test]
+fn coordinator_sweep_matches_standalone_and_splits_work() {
+    let w1 = spawn_worker(None);
+    let w2 = spawn_worker(None);
+    let coord = spawn_coordinator(vec![w1.clone(), w2.clone()]);
+    let mut client = Client::connect_retry(coord.as_str(), 200).unwrap();
+    client.set_timeout(None).unwrap();
+
+    let spec = sweep(16, 16); // 256 points
+    let merged =
+        client.request(&Request::Scenario { spec: spec.clone() }).unwrap();
+    let standalone = Service::new(Config::mi300a());
+    let local = standalone.handle(&Request::Scenario { spec });
+    assert_eq!(
+        merged.to_json(None).to_string(),
+        local.to_json(None).to_string(),
+        "merged cluster sweep drifted from the standalone bytes"
+    );
+
+    // Both workers executed a substantial share of the 256 points.
+    let (r1, r2) = (engine_runs(&w1), engine_runs(&w2));
+    assert_eq!(r1 + r2, 256, "points were lost or double-executed");
+    assert!(r1 >= 64, "worker 1 ran only {r1}/256 points");
+    assert!(r2 >= 64, "worker 2 ran only {r2}/256 points");
+
+    // A v1 single-point request proxies through in its v1 shape.
+    let sim = Request::Sim {
+        n: 256,
+        precision: mi300a_char::isa::Precision::Fp8,
+        streams: 2,
+    };
+    assert_eq!(
+        client.request(&sim).unwrap().to_json(None).to_string(),
+        standalone.handle(&sim).to_json(None).to_string(),
+        "proxied v1 request drifted from the standalone bytes"
+    );
+
+    // A non-scenario request proxies whole to one worker.
+    let cfg = Request::Config;
+    assert_eq!(
+        client.request(&cfg).unwrap().to_json(None).to_string(),
+        standalone.handle(&cfg).to_json(None).to_string(),
+        "proxied config drifted from the standalone bytes"
+    );
+
+    // Cluster-wide stats: aggregated worker counters + cluster_* block.
+    match client.request(&Request::Stats).unwrap() {
+        Response::Stats { cache, engine_runs, cluster, .. } => {
+            let c = cluster.expect("coordinator stats carry the block");
+            assert_eq!(c.workers, 2);
+            // 256 sweep points + 1 from the proxied v1 sim.
+            assert_eq!(c.points_routed, 257);
+            assert_eq!(c.proxied, 1, "only config proxies whole");
+            assert_eq!(c.point_failures, 0);
+            assert_eq!(engine_runs, 257);
+            assert_eq!(cache.entries, 257, "every point cached once");
+        }
+        other => panic!("unexpected stats response: {other:?}"),
+    }
+}
+
+/// Points owned by a dead worker retry on the survivor: kill one
+/// worker deterministically (its connection budget is burned before
+/// the sweep), then run a 64-point sweep — every point must answer,
+/// the retry counter must move, and the survivor must have executed
+/// the whole sweep.
+#[test]
+fn dead_worker_points_retry_on_the_survivor() {
+    let frail = spawn_worker(Some(3));
+    let solid = spawn_worker(None);
+    // Burn the frail worker's three connections, then confirm death.
+    for _ in 0..3 {
+        let mut c = Client::connect_retry(frail.as_str(), 200).unwrap();
+        let _ = c.request(&Request::Config).unwrap();
+    }
+    for _ in 0..400 {
+        if Client::connect(frail.as_str()).is_err() {
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    let coord = Coordinator::new(
+        vec![frail.clone(), solid.clone()],
+        backend::DEFAULT,
+    );
+    let spec = sweep(8, 8); // 64 points
+    let merged = coord.handle(&Request::Scenario { spec: spec.clone() });
+    let local = Service::new(Config::mi300a())
+        .handle(&Request::Scenario { spec });
+    assert_eq!(
+        merged.to_json(None).to_string(),
+        local.to_json(None).to_string(),
+        "sweep over a dead worker drifted from the standalone bytes"
+    );
+
+    let stats = coord.cluster_stats();
+    assert_eq!(stats.points_routed, 64);
+    assert_eq!(stats.point_failures, 0, "no point may fail the sweep");
+    assert!(
+        stats.retries >= 1,
+        "the dead worker's points never exercised the retry path"
+    );
+    assert_eq!(engine_runs(&solid), 64, "the survivor must run all points");
+}
+
+/// A worker dying *mid-sweep* (its connection budget runs out while
+/// points are in flight) must not lose the sweep: the survivor picks
+/// up the remainder and the merged response stays byte-identical.
+#[test]
+fn mid_sweep_worker_death_still_completes() {
+    let frail = spawn_worker(Some(10));
+    let solid = spawn_worker(None);
+    let coord = Coordinator::new(
+        vec![frail.clone(), solid.clone()],
+        backend::DEFAULT,
+    );
+    let spec = sweep(8, 8); // 64 points >> the frail worker's budget
+    let merged = coord.handle(&Request::Scenario { spec: spec.clone() });
+    let local = Service::new(Config::mi300a())
+        .handle(&Request::Scenario { spec });
+    assert_eq!(
+        merged.to_json(None).to_string(),
+        local.to_json(None).to_string(),
+        "mid-sweep worker death changed the merged bytes"
+    );
+    let stats = coord.cluster_stats();
+    assert_eq!(stats.points_routed, 64);
+    assert_eq!(stats.point_failures, 0, "no point may fail the sweep");
+}
+
+/// The job API on a coordinator: a watched submit streams the full
+/// progress-frame ladder while the cluster job worker executes points
+/// remotely, and the job result matches the synchronous sweep bytes.
+#[test]
+fn watched_jobs_run_remotely_with_full_progress() {
+    let w1 = spawn_worker(None);
+    let w2 = spawn_worker(None);
+    let coord = spawn_coordinator(vec![w1, w2]);
+    let mut client = Client::connect_retry(coord.as_str(), 200).unwrap();
+    client.set_timeout(None).unwrap();
+
+    let spec = sweep(4, 2); // 8 points
+    let mut frames = Vec::new();
+    let result = client
+        .submit_and_wait(&spec, |v| frames.push(*v))
+        .unwrap();
+    let last = frames.last().expect("at least the terminal frame");
+    assert_eq!(last.state, JobState::Done);
+    assert_eq!((last.completed, last.total), (8, 8));
+    // Queued snapshot + running + one per point + terminal.
+    assert_eq!(frames.len() as u64, 8 + 3);
+
+    let local = Service::new(Config::mi300a())
+        .handle(&Request::Scenario { spec });
+    assert_eq!(
+        result.to_json(None).to_string(),
+        local.to_json(None).to_string(),
+        "job result drifted from the synchronous sweep bytes"
+    );
+}
+
+/// The opt-in client retry policy: typed `overloaded` answers are
+/// retried with backoff until a real answer arrives (the coordinator's
+/// inter-node setting), while the fail-fast default surfaces the first
+/// `overloaded` verbatim.
+#[test]
+fn client_overloaded_retry_is_bounded_and_opt_in() {
+    // A hand-rolled server: per connection, answer `overloaded` twice,
+    // then a real response — always echoing the request's id.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        for conn in listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => break,
+            };
+            thread::spawn(move || {
+                let mut reader =
+                    BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                let mut seen = 0usize;
+                loop {
+                    line.clear();
+                    if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                        break;
+                    }
+                    let v = Json::parse(line.trim()).unwrap();
+                    let id = v
+                        .get("id")
+                        .and_then(Json::as_f64)
+                        .map(|x| x as u64);
+                    seen += 1;
+                    let resp = if seen <= 2 {
+                        Response::from(ApiError::new(
+                            ErrorCode::Overloaded,
+                            "job queue is full (test fixture)",
+                        ))
+                    } else {
+                        Response::Config { config: Json::obj(vec![]) }
+                    };
+                    if writeln!(writer, "{}", resp.to_json(id)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+
+    // Fail-fast default: the first overloaded answer surfaces.
+    let mut plain = Client::connect_retry(addr.as_str(), 200).unwrap();
+    assert_eq!(plain.overloaded_retry(), None);
+    match plain.request(&Request::Config).unwrap() {
+        Response::Error { code, .. } => {
+            assert_eq!(code, ErrorCode::Overloaded)
+        }
+        other => panic!("unexpected fail-fast response: {other:?}"),
+    }
+
+    // Opt-in retry: two overloaded answers are absorbed, the third
+    // answer (the real one) comes back.
+    let mut retrying = Client::connect_retry(addr.as_str(), 200).unwrap();
+    retrying.set_overloaded_retry(Some(OverloadedRetry {
+        attempts: 3,
+        backoff: Duration::from_millis(1),
+    }));
+    match retrying.request(&Request::Config).unwrap() {
+        Response::Config { .. } => {}
+        other => panic!("unexpected retried response: {other:?}"),
+    }
+
+    // Bounded: a policy smaller than the failure streak surfaces the
+    // typed error after its attempts run out.
+    let mut bounded = Client::connect_retry(addr.as_str(), 200).unwrap();
+    bounded.set_overloaded_retry(Some(OverloadedRetry {
+        attempts: 1,
+        backoff: Duration::from_millis(1),
+    }));
+    match bounded.request(&Request::Config).unwrap() {
+        Response::Error { code, .. } => {
+            assert_eq!(code, ErrorCode::Overloaded)
+        }
+        other => panic!("unexpected bounded response: {other:?}"),
+    }
+}

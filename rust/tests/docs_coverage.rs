@@ -79,6 +79,7 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         "scenarios.md",
         "backends.md",
         "performance.md",
+        "cluster.md",
     ] {
         assert!(
             docs_dir().join(page).is_file(),
@@ -127,6 +128,45 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         read("README.md").contains("performance.md"),
         "docs/README.md must index the performance guide"
     );
+    assert!(
+        read("README.md").contains("cluster.md"),
+        "docs/README.md must index the cluster guide"
+    );
+}
+
+/// The cluster guide must document the coordinator surface this repo
+/// ships: the CLI flags, point routing, the retry semantics, and every
+/// `cluster_*` stats counter — and the serving/performance guides must
+/// point at it.
+#[test]
+fn cluster_doc_covers_routing_retries_and_stats() {
+    let doc = read("cluster.md");
+    for needle in [
+        "--coordinator",
+        "--workers",
+        "consistent-hash",
+        "replica",
+        "overloaded",
+        "loadgen --addr",
+        "byte-identi",
+        "cluster_workers",
+        "cluster_points_routed",
+        "cluster_proxied",
+        "cluster_retries",
+        "cluster_point_failures",
+    ] {
+        assert!(
+            doc.contains(needle),
+            "docs/cluster.md never documents {needle:?}"
+        );
+    }
+    // The neighbouring guides route readers to the cluster page.
+    for page in ["serving.md", "performance.md"] {
+        assert!(
+            read(page).contains("cluster.md"),
+            "docs/{page} never cross-links cluster.md"
+        );
+    }
 }
 
 /// The performance guide must document the serving-layer tuning

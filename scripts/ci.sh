@@ -8,10 +8,13 @@
 # done, fetch the result, observe >=1 pushed progress frame), and a
 # backend-matrix smoke (DESIGN.md §6.8: one sim per registered
 # backend, per-backend stats counters, docs/backends.md drift, typed
-# unknown_backend on an unregistered id), and a loadgen smoke (a short
+# unknown_backend on an unregistered id), a loadgen smoke (a short
 # self-hosted load-generator run per available io model, writing the
 # BENCH_serve.json baseline and failing on typed errors or zero
-# throughput).
+# throughput), and a cluster smoke (2 workers + a coordinator on
+# ephemeral ports: a 64-point sweep must split across both workers,
+# and a sweep after killing one worker must still complete on the
+# survivor — docs/cluster.md, DESIGN.md §6.9).
 #
 # Usage: scripts/ci.sh
 #
@@ -239,6 +242,88 @@ for model in $models; do
     "$bin" loadgen --io-model "$model" --mix mixed \
         --connections 8 --warmup-ms 200 --duration-ms 1000
 done
+
+echo "== cluster smoke (2 workers + coordinator, sweep + worker kill) =="
+w1_log=$(mktemp); w2_log=$(mktemp); co_log=$(mktemp)
+"$bin" serve --addr 127.0.0.1:0 >"$w1_log" &
+w1_pid=$!
+"$bin" serve --addr 127.0.0.1:0 >"$w2_log" &
+w2_pid=$!
+trap 'kill "$w1_pid" "$w2_pid" 2>/dev/null || true' EXIT
+w1_addr=""; w2_addr=""
+for _ in $(seq 1 100); do
+    w1_addr=$(sed -n 's/^serving on //p' "$w1_log" | head -n 1)
+    w2_addr=$(sed -n 's/^serving on //p' "$w2_log" | head -n 1)
+    [ -n "$w1_addr" ] && [ -n "$w2_addr" ] && break
+    sleep 0.05
+done
+if [ -z "$w1_addr" ] || [ -z "$w2_addr" ]; then
+    echo "cluster-smoke workers did not print their bound addresses" >&2
+    exit 1
+fi
+"$bin" serve --addr 127.0.0.1:0 \
+    --coordinator --workers "$w1_addr,$w2_addr" >"$co_log" &
+co_pid=$!
+trap 'kill "$w1_pid" "$w2_pid" "$co_pid" 2>/dev/null || true' EXIT
+co_addr=""
+for _ in $(seq 1 100); do
+    co_addr=$(sed -n 's/^serving on //p' "$co_log" | head -n 1)
+    [ -n "$co_addr" ] && break
+    sleep 0.05
+done
+if [ -z "$co_addr" ]; then
+    echo "cluster-smoke coordinator did not print its bound address" >&2
+    exit 1
+fi
+# A 64-point sweep through the coordinator, via the unchanged client
+# CLI (the watcher prints progress frames, then the merged result).
+sweep=$("$bin" scenario --addr "$co_addr" --ask sparsity \
+    --sweep-size 32,64,96,128,160,192,224,256 \
+    --sweep-streams 1,2,3,4,5,6,7,8)
+if ! printf '%s\n' "$sweep" | grep -q '"points"'; then
+    echo "cluster sweep returned no points: $sweep" >&2
+    exit 1
+fi
+# Both workers must have executed a share of the 64 points (their
+# engine counters are read directly, off the coordinator's path).
+for waddr in "$w1_addr" "$w2_addr"; do
+    wruns=$("$bin" client --addr "$waddr" '{"v":1,"type":"stats"}' \
+        | sed -n 's/.*"engine_runs":\([0-9]*\).*/\1/p')
+    if [ -z "$wruns" ] || [ "$wruns" -eq 0 ]; then
+        echo "worker $waddr executed no points (engine_runs=$wruns)" >&2
+        exit 1
+    fi
+    echo "worker $waddr engine_runs=$wruns"
+done
+# Coordinator stats aggregate the fleet and carry the cluster_* block.
+co_stats=$("$bin" client --addr "$co_addr" '{"v":1,"type":"stats"}')
+echo "coordinator stats: $co_stats"
+for needle in '"cluster_workers":2' '"cluster_points_routed":64' \
+    '"cluster_point_failures":0'; do
+    if ! printf '%s' "$co_stats" | grep -qF "$needle"; then
+        echo "coordinator stats missing $needle" >&2
+        exit 1
+    fi
+done
+# Kill one worker; a fresh sweep (new points) must still complete on
+# the survivor via the replica retry path.
+kill "$w1_pid" 2>/dev/null || true
+wait "$w1_pid" 2>/dev/null || true
+sweep2=$("$bin" scenario --addr "$co_addr" --ask sparsity \
+    --sweep-size 288,320,352,384 --sweep-streams 1,2,3,4)
+if ! printf '%s\n' "$sweep2" | grep -q '"points"'; then
+    echo "cluster sweep after worker kill failed: $sweep2" >&2
+    exit 1
+fi
+if printf '%s\n' "$sweep2" | grep -qF '"code":"runtime"'; then
+    echo "points failed after worker kill: $sweep2" >&2
+    exit 1
+fi
+echo "cluster smoke ok (sweep split across workers, survived a kill)"
+kill "$w2_pid" "$co_pid" 2>/dev/null || true
+wait "$w2_pid" "$co_pid" 2>/dev/null || true
+trap - EXIT
+rm -f "$w1_log" "$w2_log" "$co_log"
 
 echo "== bench smoke (1 warmup / 1 iter, full targets) =="
 MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench
