@@ -11,12 +11,15 @@
 //!   (the engine reports its processed event count; one point costs
 //!   one concurrent run + 4 solo runs for the serial baseline).
 //! * `analytic` sim point — wall time per point (zero events).
-//! * an 8-point stream sweep per backend, points/sec.
+//! * an 8-point stream sweep per backend (des, analytic, and the auto
+//!   router), points/sec.
 //!
 //! `extra` carries `des_events_per_point`, `des_events_per_sec`,
-//! `des_points_per_sec`, `analytic_points_per_sec`, and
+//! `des_points_per_sec`, `analytic_points_per_sec`,
 //! `analytic_speedup_per_point` (des mean / analytic mean — the ≥100×
-//! fast-path headline).
+//! fast-path headline), plus `auto_points_per_sec` and
+//! `auto_des_fraction` (what share of the cookbook sweep the trust
+//! table sends to the reference engine; docs/auto_backend.md).
 //!
 //! Smoke mode: `MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench`
 //! (scripts/ci.sh) keeps the target compiling and running cheaply.
@@ -104,6 +107,37 @@ fn main() {
     extra.push((
         "sweep_analytic_points_per_sec",
         Json::Num(rsa.units_per_sec(points.len() as f64)),
+    ));
+
+    // The same sweep through the auto router: most points stay on the
+    // analytic fast path, the out-of-trust-region tail (streams > 8)
+    // falls back to the DES, so the rate lands between the two
+    // concrete backends. `auto_des_fraction` records the split.
+    let auto = backend::get(BackendId::Auto);
+    let des_routed = points
+        .iter()
+        .filter(|q| {
+            mi300a_char::backend::auto::TrustTable::route(&sweep, q)
+                == BackendId::Des
+        })
+        .count();
+    let rauto = b.bench("sweep/8pts_auto", || {
+        for q in &points {
+            Bencher::black_box(auto.simulate(&cfg, &sweep, q).makespan_ms);
+        }
+    });
+    println!(
+        "  -> sweep: auto {:.1} points/sec ({des_routed}/{} routed to des)",
+        rauto.units_per_sec(points.len() as f64),
+        points.len()
+    );
+    extra.push((
+        "auto_points_per_sec",
+        Json::Num(rauto.units_per_sec(points.len() as f64)),
+    ));
+    extra.push((
+        "auto_des_fraction",
+        Json::Num(des_routed as f64 / points.len() as f64),
     ));
 
     println!("\n{}", b.markdown());

@@ -25,7 +25,12 @@
 //! always pushed, however fast the job — then one on the
 //! queued→running transition, one per completed point, and a final one
 //! at the terminal state, after which the channel closes (an N-point
-//! job pushes N+3 frames).
+//! job pushes N+3 frames). Budgeted `auto` jobs additionally run a
+//! background refinement pass after every point is answered
+//! (DESIGN.md §6.10): each DES re-run of a low-confidence point bumps
+//! the `refined` counter and frames watchers again, so such a job
+//! pushes N+3+R frames (`refined` is carried on the wire only when
+//! nonzero, keeping unrefined frames byte-identical).
 
 use super::protocol::{ApiError, ErrorCode, Response};
 use super::scenario::ScenarioSpec;
@@ -83,6 +88,9 @@ pub struct JobView {
     pub state: JobState,
     /// Sweep points finished so far.
     pub completed: u64,
+    /// Low-confidence points re-answered on the DES by the refinement
+    /// pass of a budgeted `auto` job (0 everywhere else).
+    pub refined: u64,
     /// Total sweep points.
     pub total: u64,
 }
@@ -139,6 +147,7 @@ struct JobEntry {
     use_cache: bool,
     state: JobState,
     completed: u64,
+    refined: u64,
     total: u64,
     cancel_requested: bool,
     result: Option<Result<Response, ApiError>>,
@@ -151,6 +160,7 @@ impl JobEntry {
             job: id,
             state: self.state,
             completed: self.completed,
+            refined: self.refined,
             total: self.total,
         }
     }
@@ -265,6 +275,7 @@ impl JobTable {
             use_cache,
             state: JobState::Queued,
             completed: 0,
+            refined: 0,
             total,
             cancel_requested: false,
             result: None,
@@ -323,6 +334,24 @@ impl JobTable {
         match inner.jobs.get_mut(&id) {
             Some(e) => {
                 e.completed += 1;
+                e.notify(id);
+                !e.cancel_requested && !shutdown
+            }
+            None => false,
+        }
+    }
+
+    /// Worker side: one low-confidence point re-answered on the DES by
+    /// the refinement pass; frames watchers (the frame's `completed`
+    /// already equals `total` — only `refined` moves). Returns whether
+    /// refinement may continue. Never touches `completed`.
+    pub fn point_refined(&self, id: u64) -> bool {
+        let mut g = self.lock();
+        let inner = &mut *g;
+        let shutdown = inner.shutdown;
+        match inner.jobs.get_mut(&id) {
+            Some(e) => {
+                e.refined += 1;
                 e.notify(id);
                 !e.cancel_requested && !shutdown
             }
@@ -575,6 +604,28 @@ mod tests {
         let last = got.last().unwrap();
         assert_eq!(last.state, JobState::Done);
         assert_eq!(last.completed, 2);
+    }
+
+    #[test]
+    fn refinement_frames_move_refined_without_touching_completed() {
+        let t = table(4);
+        let (v, rx) = t.submit(spec(), 1, true, true).unwrap();
+        let rx = rx.unwrap();
+        let (id, _, _) = t.next_job().unwrap();
+        assert_eq!(id, v.job);
+        assert!(t.point_done(id));
+        // The refinement pass re-answers the point on the DES.
+        assert!(t.point_refined(id));
+        t.finish(id, Ok(Response::Scenario { points: vec![] }));
+        let frames: Vec<JobView> = rx.iter().collect();
+        // queued, running, point, refined, terminal.
+        assert_eq!(frames.len(), 5);
+        let refined = frames[3];
+        assert_eq!((refined.completed, refined.refined, refined.total),
+                   (1, 1, 1));
+        assert_eq!(t.status(id).unwrap().refined, 1);
+        // Unrefined frames all carry refined == 0.
+        assert!(frames[..3].iter().all(|f| f.refined == 0));
     }
 
     #[test]

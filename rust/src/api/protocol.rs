@@ -1102,6 +1102,11 @@ impl Response {
             Response::Job(v) | Response::Progress(v) => {
                 fields.push(("completed", Json::Num(v.completed as f64)));
                 fields.push(("job", Json::Num(v.job as f64)));
+                // Only budgeted auto jobs ever refine; omitting the
+                // zero keeps every pre-refinement frame byte-identical.
+                if v.refined > 0 {
+                    fields.push(("refined", Json::Num(v.refined as f64)));
+                }
                 fields.push(("state", Json::Str(v.state.as_str().into())));
                 fields.push(("total", Json::Num(v.total as f64)));
             }
@@ -1365,7 +1370,11 @@ fn decode_job_view(
     m: &BTreeMap<String, Json>,
     ty: &str,
 ) -> Result<JobView, ApiError> {
-    check_env_fields(m, ty, &["completed", "job", "state", "total"])?;
+    check_env_fields(
+        m,
+        ty,
+        &["completed", "job", "refined", "state", "total"],
+    )?;
     let s = str_field(m, ty, "state")?;
     Ok(JobView {
         job: u64_field(m, ty, "job")?,
@@ -1373,6 +1382,11 @@ fn decode_job_view(
             ApiError::bad_request(format!("{ty}: unknown job state {s:?}"))
         })?,
         completed: u64_field(m, ty, "completed")?,
+        refined: if m.contains_key("refined") {
+            u64_field(m, ty, "refined")?
+        } else {
+            0
+        },
         total: u64_field(m, ty, "total")?,
     })
 }

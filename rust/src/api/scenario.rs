@@ -15,8 +15,9 @@
 //! `api::Service`).
 //!
 //! Canonical form: decoding fills every default, and encoding always
-//! emits the full field set (conditional fields — `objective`,
-//! `small_n`, `sweep` — only when applicable), so decode→encode→decode
+//! emits the full field set (conditional fields — `backend`,
+//! `max_error`, `max_time_ms`, `objective`, `small_n`, `sweep` — only
+//! when applicable), so decode→encode→decode
 //! is a fixpoint and semantically identical specs collide on one cache
 //! key no matter how they were spelled (`tests/api_protocol.rs`
 //! enforces this). The per-point cache key is the canonical wire form
@@ -45,8 +46,9 @@ pub const ITERS_RANGE: (usize, usize) = (1, 10_000);
 /// The payload keys a scenario spec may carry (sorted; shared by the
 /// request decoder and [`ScenarioSpec::from_json`]).
 pub(crate) const SPEC_FIELDS: &[&str] = &[
-    "ask", "backend", "iters", "n", "objective", "precision", "shape",
-    "small_n", "sparsity", "streams", "sweep",
+    "ask", "backend", "iters", "max_error", "max_time_ms", "n",
+    "objective", "precision", "shape", "small_n", "sparsity", "streams",
+    "sweep",
 ];
 
 /// Range check shared by scenario validation (and, transitively, the
@@ -238,6 +240,18 @@ pub struct ScenarioSpec {
     pub n: usize,
     pub precision: Precision,
     pub iters: usize,
+    /// Accuracy budget (DESIGN.md §6.10): the worst relative error the
+    /// caller will accept on time-like answers. Only the `auto` backend
+    /// consults it — a budget tighter than the trust table's advertised
+    /// envelope routes every sim point to the DES, and its presence on
+    /// a job arms the refinement pass. Dropped by [`ScenarioSpec::at`],
+    /// so budgeted and unbudgeted sweeps share per-point cache entries.
+    pub max_error: Option<f64>,
+    /// Latency budget in milliseconds: a soft wall-clock bound on the
+    /// background refinement pass of a budgeted `auto` job (phase one
+    /// always answers every point). Dropped by [`ScenarioSpec::at`]
+    /// like `max_error`.
+    pub max_time_ms: Option<f64>,
     pub streams: usize,
     pub shape: Shape,
     /// Small-kernel size for `imbalanced_pair` (default `n/4`, min 64,
@@ -262,6 +276,8 @@ impl ScenarioSpec {
             n: 512,
             precision: Precision::Fp8,
             iters: ask.default_iters(),
+            max_error: None,
+            max_time_ms: None,
             streams: 4,
             shape: Shape::Homogeneous,
             small_n: None,
@@ -359,6 +375,21 @@ impl ScenarioSpec {
                 ));
             }
         }
+        for (key, v) in [
+            ("max_error", self.max_error),
+            ("max_time_ms", self.max_time_ms),
+        ] {
+            if let Some(x) = v {
+                if !(x.is_finite() && x > 0.0) {
+                    return Err(ApiError::new(
+                        ErrorCode::BadRange,
+                        format!(
+                            "{key:?} must be a positive number (got {x})"
+                        ),
+                    ));
+                }
+            }
+        }
         let points = self.sweep.points();
         if points > MAX_SWEEP_POINTS {
             return Err(ApiError::new(
@@ -448,13 +479,19 @@ impl ScenarioSpec {
     }
 
     /// The canonical single-point spec at `p` (sweep cleared, base
-    /// fields replaced) — its wire form is the per-point cache key.
+    /// fields replaced, budgets dropped) — its wire form is the
+    /// per-point cache key. Budgets steer *routing and refinement*,
+    /// never a point's answer, so budgeted and unbudgeted sweeps
+    /// share cache entries; the service resolves `backend:"auto"` to
+    /// its routed concrete id before keying for the same reason.
     pub fn at(&self, p: &Point) -> ScenarioSpec {
         let mut s = self.clone();
         s.n = p.n;
         s.precision = p.precision;
         s.streams = p.streams;
         s.iters = p.iters;
+        s.max_error = None;
+        s.max_time_ms = None;
         s.sweep = Sweep::default();
         s
     }
@@ -531,6 +568,12 @@ impl ScenarioSpec {
             fields.push(("backend", Json::Str(b.as_str().into())));
         }
         fields.push(("iters", Json::Num(self.iters as f64)));
+        if let Some(e) = self.max_error {
+            fields.push(("max_error", Json::Num(e)));
+        }
+        if let Some(t) = self.max_time_ms {
+            fields.push(("max_time_ms", Json::Num(t)));
+        }
         fields.push(("n", Json::Num(self.n as f64)));
         if let Some(o) = self.objective {
             fields.push(("objective", Json::Str(objective_name(o).into())));
@@ -643,6 +686,8 @@ impl ScenarioSpec {
         };
         let iters = opt_usize(m, what, "iters")?
             .unwrap_or_else(|| ask.default_iters());
+        let max_error = opt_f64(m, what, "max_error")?;
+        let max_time_ms = opt_f64(m, what, "max_time_ms")?;
         let streams = opt_usize(m, what, "streams")?
             .unwrap_or_else(|| shape.default_streams());
         let small_n = opt_usize(m, what, "small_n")?;
@@ -679,6 +724,8 @@ impl ScenarioSpec {
             n,
             precision,
             iters,
+            max_error,
+            max_time_ms,
             streams,
             shape,
             small_n,
@@ -772,8 +819,19 @@ fn axis_arr<'a>(
 // protocol.rs and is shared).
 // ---------------------------------------------------------------------
 
-
-
+fn opt_f64(
+    m: &BTreeMap<String, Json>,
+    what: &str,
+    key: &str,
+) -> Result<Option<f64>, ApiError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(x)) => Ok(Some(*x)),
+        Some(_) => Err(ApiError::bad_request(format!(
+            "{what}: field {key:?} must be a number"
+        ))),
+    }
+}
 
 fn opt_usize(
     m: &BTreeMap<String, Json>,
@@ -857,6 +915,61 @@ mod tests {
         assert_eq!(err.code, ErrorCode::UnknownBackend);
         assert!(err.message.contains("slide_rule"), "{err}");
         assert!(err.message.contains("des"), "{err}");
+    }
+
+    #[test]
+    fn budget_fields_canonicalize_and_are_dropped_from_cache_points() {
+        let v = Json::parse(
+            r#"{"n":512,"backend":"auto","max_error":0.25,"max_time_ms":1500}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(spec.max_error, Some(0.25));
+        assert_eq!(spec.max_time_ms, Some(1500.0));
+        let canonical = spec.to_json().to_string();
+        assert!(canonical.contains(r#""max_error":0.25"#), "{canonical}");
+        assert!(
+            canonical.contains(r#""max_time_ms":1500"#),
+            "{canonical}"
+        );
+        let back = ScenarioSpec::from_json(&Json::parse(&canonical).unwrap())
+            .unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string(), canonical, "fixpoint");
+        // Budgets steer routing, not answers: the per-point cache form
+        // drops them (and so collides with the unbudgeted sweep).
+        let single = spec.at(&spec.expand()[0]);
+        assert_eq!(single.max_error, None);
+        assert_eq!(single.max_time_ms, None);
+        let wire = single.to_json().to_string();
+        assert!(!wire.contains("max_"), "{wire}");
+        // Omitted budgets stay omitted, keeping pre-budget fixtures
+        // byte-identical.
+        let plain = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        assert!(!plain.to_json().to_string().contains("max_"));
+    }
+
+    #[test]
+    fn bad_budgets_get_typed_errors() {
+        // Wrong type: bad_request at decode.
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"max_error":"tight"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("max_error"), "{err}");
+        // Out of range: bad_range from validation.
+        for line in [
+            r#"{"n":512,"max_error":0}"#,
+            r#"{"n":512,"max_error":-0.1}"#,
+            r#"{"n":512,"max_time_ms":-5}"#,
+        ] {
+            let err =
+                ScenarioSpec::from_json(&Json::parse(line).unwrap())
+                    .unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRange, "{line}");
+            assert!(err.message.contains("positive"), "{err}");
+        }
     }
 
     #[test]

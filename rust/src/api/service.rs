@@ -25,13 +25,22 @@
 //!
 //! Each point executes on a [`crate::backend::Backend`] from the
 //! backend registry: `des` (discrete-event replay — the default, and
-//! byte-identical to the pre-backend service) or `analytic` (calibrated
-//! closed forms, no DES stepping). Selection comes from the spec's
-//! `backend` field or the request envelope's `"backend"` key, resolved
-//! and capability-gated up front ([`ErrorCode::UnsupportedByBackend`]
+//! byte-identical to the pre-backend service), `analytic` (calibrated
+//! closed forms, no DES stepping), or `auto` (the trust-region router,
+//! DESIGN.md §6.10). Selection comes from the spec's `backend` field or
+//! the request envelope's `"backend"` key, resolved and
+//! capability-gated up front ([`ErrorCode::UnsupportedByBackend`]
 //! before any point runs); the resolved backend is canonicalized into
 //! the per-point cache key, so backends never share cache entries, and
 //! cold executions are counted per backend for the `stats` request.
+//! `auto` is resolved one step further, per point: the router's
+//! concrete pick (analytic inside the measured trust region, DES
+//! elsewhere) is what lands in the cache key and the counters, so
+//! routed points share entries with explicit requests and
+//! `engine_runs_auto` stays 0 by design. Budgeted `auto` *jobs*
+//! additionally get a DES refinement pass over their
+//! lowest-confidence analytic answers ([`refine_job`]), streamed as
+//! `refined` progress frames.
 //!
 //! ## Caching
 //!
@@ -63,6 +72,7 @@ use super::protocol::{
     PlanGroup, Request, RequestEnvelope, Response, MAX_BATCH_ITEMS,
 };
 use super::scenario::{Ask, Point, PointResult, ScenarioSpec};
+use crate::backend::auto::TrustTable;
 use crate::backend::{self, BackendId};
 use crate::config::Config;
 use crate::experiments;
@@ -748,7 +758,16 @@ impl Core {
         p: &Point,
         use_cache: bool,
     ) -> Response {
-        let single = spec.at(p);
+        let mut single = spec.at(p);
+        // The auto router resolves to its concrete engine *before*
+        // cache-keying and cold-run accounting (routing reads the
+        // budgets off `spec`, which `at` strips from the cache form),
+        // so routed points share cache entries — and counters — with
+        // explicit des/analytic requests; `engine_runs_auto` stays 0
+        // by design (DESIGN.md §6.10).
+        if single.backend == Some(BackendId::Auto) {
+            single.backend = Some(TrustTable::route(spec, p));
+        }
         let key =
             Request::Scenario { spec: single.clone() }.cache_key();
         if use_cache {
@@ -834,10 +853,68 @@ fn job_worker(core: &Core, jobs: &JobTable) {
             }
         }
         if results.len() == points.len() {
+            refine_job(core, jobs, id, &spec, &mut results, use_cache);
             jobs.finish(id, Ok(Response::Scenario { points: results }));
         } else {
             // A cancel (or shutdown) was honored mid-sweep.
             jobs.mark_cancelled(id);
+        }
+    }
+}
+
+/// The refinement pass of a **budgeted `auto` job** (DESIGN.md §6.10):
+/// phase one answered every point through the trust-table route (the
+/// normal `job_worker` loop above — analytic inside the envelope, DES
+/// outside), and here the analytic-answered `sim` points are re-run on
+/// the DES ascending by [`TrustTable::confidence`] — least trusted
+/// first — replacing their results in place and framing watchers via
+/// [`JobTable::point_refined`]. A `max_time_ms` budget soft-bounds the
+/// pass: no refinement starts past the deadline (the one in flight
+/// finishes — points are never half-answered). Unbudgeted or
+/// non-`auto` jobs skip the pass entirely, keeping their frame counts
+/// untouched.
+fn refine_job(
+    core: &Core,
+    jobs: &JobTable,
+    id: u64,
+    spec: &ScenarioSpec,
+    results: &mut [PointResult],
+    use_cache: bool,
+) {
+    if spec.backend != Some(BackendId::Auto)
+        || (spec.max_error.is_none() && spec.max_time_ms.is_none())
+    {
+        return;
+    }
+    let mut todo: Vec<usize> = (0..results.len())
+        .filter(|&i| {
+            TrustTable::wants_refinement(spec, &results[i].point)
+        })
+        .collect();
+    // Stable sort: equal confidences keep expansion order, so the
+    // refinement sequence is deterministic.
+    todo.sort_by(|&a, &b| {
+        TrustTable::confidence(spec, &results[a].point)
+            .partial_cmp(&TrustTable::confidence(spec, &results[b].point))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let started = std::time::Instant::now();
+    let mut des = spec.clone();
+    des.backend = Some(BackendId::Des);
+    for i in todo {
+        if !jobs.should_continue(id) {
+            return;
+        }
+        if let Some(budget) = spec.max_time_ms {
+            if started.elapsed().as_secs_f64() * 1000.0 >= budget {
+                return;
+            }
+        }
+        let p = results[i].point;
+        results[i].result =
+            Box::new(core.run_point(&des, &p, use_cache));
+        if !jobs.point_refined(id) {
+            return;
         }
     }
 }
@@ -996,6 +1073,8 @@ mod tests {
                 assert!(backends[0].default, "des is the default");
                 assert_eq!(backends[1].id, "analytic");
                 assert!(!backends[1].default);
+                assert_eq!(backends[2].id, "auto");
+                assert!(!backends[2].default);
                 assert!(backends
                     .iter()
                     .all(|b| b.deterministic && !b.asks.is_empty()));
@@ -1029,12 +1108,12 @@ mod tests {
         let a = s.handle(&Request::Scenario { spec: analytic });
         assert!(!matches!(a, Response::Error { .. }), "{a:?}");
         assert_eq!(s.engine_runs(), 3);
-        assert_eq!(s.backend_runs(), vec![0, 3], "no DES execution");
+        assert_eq!(s.backend_runs(), vec![0, 3, 0], "no DES execution");
         // The same sweep on the default backend runs cold again —
         // backends never share entries — and answers identically for
         // the closed-form sparsity ask.
         let d = s.handle(&Request::Scenario { spec });
-        assert_eq!(s.backend_runs(), vec![3, 3]);
+        assert_eq!(s.backend_runs(), vec![3, 3, 0]);
         assert_eq!(
             a.to_json(None).to_string(),
             d.to_json(None).to_string(),
@@ -1044,10 +1123,93 @@ mod tests {
         match s.handle(&Request::Stats) {
             Response::Stats { engine_runs, backend_runs, .. } => {
                 assert_eq!(engine_runs, 6);
-                assert_eq!(backend_runs, vec![3, 3]);
+                assert_eq!(backend_runs, vec![3, 3, 0]);
             }
             other => panic!("unexpected response: {other:?}"),
         }
+    }
+
+    /// The auto router resolves each point to its concrete engine
+    /// before cache-keying and accounting: in-region points run
+    /// analytic, out-of-region points run the DES, `engine_runs_auto`
+    /// never moves, and routed points share cache entries with
+    /// explicit des/analytic requests.
+    #[test]
+    fn auto_backend_routes_per_point_and_shares_concrete_cache_entries() {
+        let s = svc();
+        let mut spec = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        spec.backend = Some(BackendId::Auto);
+        spec.sweep.streams = vec![1, 2, 4, 12];
+        let a = s.handle(&Request::Scenario { spec });
+        assert!(!matches!(a, Response::Error { .. }), "{a:?}");
+        assert_eq!(
+            s.backend_runs(),
+            vec![1, 3, 0],
+            "streams 12 is outside the trust region (DES); 1/2/4 are \
+             inside (analytic); the router itself never executes"
+        );
+        // An explicit analytic request for an in-region point hits the
+        // routed point's cache entry — zero new cold runs.
+        let mut warm = ScenarioSpec::sim(256, Precision::Fp8, 4);
+        warm.backend = Some(BackendId::Analytic);
+        let w = s.handle(&Request::Scenario { spec: warm });
+        assert!(matches!(w, Response::Scenario { .. }), "{w:?}");
+        assert_eq!(s.backend_runs(), vec![1, 3, 0], "cache entry shared");
+        // Same for an explicit des request at the out-of-region point.
+        let mut hot = ScenarioSpec::sim(256, Precision::Fp8, 12);
+        hot.backend = Some(BackendId::Des);
+        s.handle(&Request::Scenario { spec: hot });
+        assert_eq!(s.backend_runs(), vec![1, 3, 0], "cache entry shared");
+    }
+
+    /// A budgeted auto job answers every point first (trust-table
+    /// routed), then re-runs its low-confidence analytic answers on
+    /// the DES, streaming `refined` frames and replacing the stored
+    /// results.
+    #[test]
+    fn budgeted_auto_jobs_refine_low_confidence_points_on_the_des() {
+        let s = svc();
+        let mut spec = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        spec.backend = Some(BackendId::Auto);
+        spec.max_error = Some(0.45);
+        spec.sweep.streams = vec![1, 2, 12];
+        let (view, rx) = s.submit_job(&spec, true, true).unwrap();
+        let frames: Vec<JobView> = rx.unwrap().iter().collect();
+        let last = frames.last().unwrap();
+        assert_eq!(last.state, JobState::Done);
+        assert_eq!((last.completed, last.total), (3, 3));
+        // streams 1 is fully trusted, streams 12 already ran on the
+        // DES; only streams 2 wants refinement.
+        assert_eq!(last.refined, 1, "{frames:?}");
+        assert!(
+            frames.iter().any(|f| f.refined == 1
+                && f.completed == f.total
+                && !f.state.terminal()),
+            "the refinement frame streams before the terminal one: \
+             {frames:?}"
+        );
+        match s.handle(&Request::JobStatus { job: view.job }) {
+            Response::Job(v) => assert_eq!(v.refined, 1),
+            other => panic!("unexpected status: {other:?}"),
+        }
+        // Phase one: des 1 (streams 12) + analytic 2; refinement adds
+        // one DES re-run of the streams-2 point.
+        assert_eq!(s.backend_runs(), vec![2, 2, 0]);
+        // The refined point landed in the cache under its des key: an
+        // explicit des request for it is a pure cache hit.
+        let mut des = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        des.backend = Some(BackendId::Des);
+        s.handle(&Request::Scenario { spec: des });
+        assert_eq!(s.backend_runs(), vec![2, 2, 0], "cache entry shared");
+        // An unbudgeted auto job never refines (frame counts are the
+        // plain N+3).
+        let mut plain = ScenarioSpec::sim(256, Precision::Fp8, 2);
+        plain.backend = Some(BackendId::Auto);
+        plain.sweep.streams = vec![1, 2, 12];
+        let (_, rx) = s.submit_job(&plain, true, true).unwrap();
+        let frames: Vec<JobView> = rx.unwrap().iter().collect();
+        assert_eq!(frames.len(), 3 + 3);
+        assert!(frames.iter().all(|f| f.refined == 0), "{frames:?}");
     }
 
     /// The envelope `"backend"` key reaches desugared v1 requests, and
@@ -1066,14 +1228,18 @@ mod tests {
         };
         let cold = s.handle_env(&req, &env);
         assert!(matches!(cold, Response::Sim { .. }), "{cold:?}");
-        assert_eq!(s.backend_runs(), vec![0, 1]);
+        assert_eq!(s.backend_runs(), vec![0, 1, 0]);
         let warm = s.handle_env(&req, &env);
         assert_eq!(cold, warm);
-        assert_eq!(s.backend_runs(), vec![0, 1], "repeat must hit cache");
+        assert_eq!(
+            s.backend_runs(),
+            vec![0, 1, 0],
+            "repeat must hit cache"
+        );
         // The same request without the selector runs the DES — a
         // different cache entry, a different engine.
         let des = s.handle(&req);
-        assert_eq!(s.backend_runs(), vec![1, 1]);
+        assert_eq!(s.backend_runs(), vec![1, 1, 0]);
         assert!(matches!(des, Response::Sim { .. }));
     }
 
@@ -1152,7 +1318,7 @@ mod tests {
                     Response::Stats { backend_runs, .. } => {
                         assert_eq!(
                             backend_runs,
-                            &vec![0, 1],
+                            &vec![0, 1, 0],
                             "the sparsity item must have run analytic"
                         );
                     }

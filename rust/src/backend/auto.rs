@@ -1,0 +1,305 @@
+//! The `auto` backend: a trust-region **router** between the analytic
+//! fast path and the DES reference engine (DESIGN.md §6.10).
+//!
+//! The equivalence corpus (`tests/backend_equivalence.rs`, regenerated
+//! as ground truth by `tests/trust_table.rs`) measures where the
+//! closed forms track the replay within the advertised error envelope:
+//! homogeneous and mixed-sparse stream sets up to moderate contention.
+//! Outside that envelope — the imbalanced pair's fragmentation
+//! fairness, high-contention corners past [`TRUST_MAX_STREAMS`]
+//! streams — only the DES is trustworthy. [`TrustTable`] encodes that
+//! measured boundary as a static routing function: shape × streams ×
+//! precision × sparsity in, a concrete [`BackendId`] out.
+//!
+//! The router is deliberately **not** an engine. The service resolves
+//! `backend:"auto"` to the routed concrete id *before* cache-keying
+//! and cold-run accounting (`api::Service::run_point`,
+//! `cluster::ClusterCore::run_point_remote`), so auto-routed points
+//! share cache entries with explicitly-`des`/`analytic` requests and
+//! `engine_runs_auto` stays 0 by design. The trait implementation here
+//! still answers directly (delegating through [`TrustTable::route`])
+//! so the registry row is a complete backend for discovery, the CI
+//! backend matrix, and direct library use.
+//!
+//! Budgets sharpen the route: a spec carrying `max_error` tighter than
+//! [`DEFAULT_MAX_ERROR`] demands more accuracy than the measured
+//! envelope advertises, so every sim point routes to the DES. Budgeted
+//! *jobs* additionally get a refinement pass — analytic answers first,
+//! then the lowest-[`TrustTable::confidence`] points re-run on the DES
+//! in the background, streamed as `refined` progress frames (see
+//! `api::job` and `docs/auto_backend.md`).
+
+use super::{Backend, BackendId, Capabilities, PlanResult, SimResult,
+            SparsityResult};
+use crate::api::scenario::{Ask, Point, ScenarioSpec, Shape};
+use crate::config::Config;
+
+/// The advertised error envelope of an analytic-routed point: the
+/// worst-case relative error on time-like metrics inside the trust
+/// region, matching `REL_TOL_TIME` in the equivalence corpus.
+/// `tests/trust_table.rs` re-measures every analytic-routed cookbook
+/// region against DES ground truth and fails (naming the offending
+/// shape/streams/precision triple) if calibration drifts past this.
+pub const DEFAULT_MAX_ERROR: f64 = 0.45;
+
+/// Highest stream count the analytic sim is trusted at. Past this the
+/// §6 contention dynamics (queueing, fairness collapse) are replay
+/// territory: the closed forms' error grows with contention, and the
+/// equivalence corpus only pins them up to here.
+pub const TRUST_MAX_STREAMS: usize = 8;
+
+/// The measured trust region, as a static routing function. Keyed on
+/// shape × streams × precision × sparsity buckets (precision and the
+/// 2:4 sparsity overlays are *inside* the trusted envelope — the cost
+/// model treats them as throughput scalars both backends share — so
+/// they shift [`TrustTable::confidence`], not the route).
+pub struct TrustTable;
+
+impl TrustTable {
+    /// Resolve one point to the concrete engine that answers it.
+    pub fn route(spec: &ScenarioSpec, p: &Point) -> BackendId {
+        // plan/sparsity are shared closed forms — exact on every
+        // backend, so the fast path is always safe.
+        if spec.ask != Ask::Sim {
+            return BackendId::Analytic;
+        }
+        // A budget tighter than the measured envelope can only be
+        // honored by the reference engine.
+        if let Some(e) = spec.max_error {
+            if e < DEFAULT_MAX_ERROR {
+                return BackendId::Des;
+            }
+        }
+        // Fragmentation fairness on the imbalanced pair is replay
+        // territory (the analytic backend refuses the shape outright).
+        if spec.shape == Shape::ImbalancedPair {
+            return BackendId::Des;
+        }
+        // High-contention corners fall outside the measured envelope.
+        if p.streams > TRUST_MAX_STREAMS {
+            return BackendId::Des;
+        }
+        BackendId::Analytic
+    }
+
+    /// How confidently the routed answer sits inside the envelope, in
+    /// `[0, 1]`. DES-routed points (and the exact closed-form asks)
+    /// score 1.0; analytic sim points lose confidence with contention
+    /// and with sparsity overlays. Refinement re-runs ascending by
+    /// this score, so the least-trusted answers are replaced first.
+    pub fn confidence(spec: &ScenarioSpec, p: &Point) -> f64 {
+        if spec.ask != Ask::Sim
+            || Self::route(spec, p) == BackendId::Des
+        {
+            return 1.0;
+        }
+        let mut c = 1.0 - 0.06 * p.streams.saturating_sub(1) as f64;
+        if spec.shape == Shape::MixedSparse {
+            c -= 0.15;
+        }
+        if spec.sparsity.is_sparse() {
+            c -= 0.05;
+        }
+        c.clamp(0.0, 1.0)
+    }
+
+    /// Whether a routed answer is a candidate for DES refinement: an
+    /// analytic-routed `sim` point whose confidence is below 1.0.
+    pub fn wants_refinement(spec: &ScenarioSpec, p: &Point) -> bool {
+        spec.ask == Ask::Sim
+            && Self::route(spec, p) == BackendId::Analytic
+            && Self::confidence(spec, p) < 1.0
+    }
+}
+
+/// The router registered as the third backend. Answers by delegating
+/// each point to [`TrustTable::route`]'s pick, so it covers everything
+/// the DES covers (nothing is refused — out-of-region points fall back
+/// to replay, hence `steps_des`).
+pub struct AutoBackend;
+
+impl Backend for AutoBackend {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            id: BackendId::Auto,
+            description: "trust-region router: analytic inside the \
+                          measured error envelope, DES elsewhere",
+            asks: &Ask::ALL,
+            sim_shapes: &Shape::ALL,
+            deterministic: true,
+            steps_des: true,
+        }
+    }
+
+    fn simulate(
+        &self,
+        cfg: &Config,
+        spec: &ScenarioSpec,
+        p: &Point,
+    ) -> SimResult {
+        super::get(TrustTable::route(spec, p)).simulate(cfg, spec, p)
+    }
+
+    fn plan(
+        &self,
+        cfg: &Config,
+        spec: &ScenarioSpec,
+        p: &Point,
+    ) -> PlanResult {
+        super::get(TrustTable::route(spec, p)).plan(cfg, spec, p)
+    }
+
+    fn sparsity(
+        &self,
+        cfg: &Config,
+        spec: &ScenarioSpec,
+        p: &Point,
+    ) -> SparsityResult {
+        super::get(TrustTable::route(spec, p)).sparsity(cfg, spec, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Precision;
+    use crate::sim::SparsityMode;
+
+    fn point(n: usize, streams: usize) -> Point {
+        Point { n, precision: Precision::Fp8, streams, iters: 50 }
+    }
+
+    #[test]
+    fn routing_matches_the_measured_trust_region() {
+        // Closed-form asks always take the fast path.
+        let plan = ScenarioSpec::new(Ask::Plan);
+        assert_eq!(
+            TrustTable::route(&plan, &plan.expand()[0]),
+            BackendId::Analytic
+        );
+        let sp = ScenarioSpec::sparsity_question(512, 4);
+        assert_eq!(
+            TrustTable::route(&sp, &sp.expand()[0]),
+            BackendId::Analytic
+        );
+        // Homogeneous sim inside the envelope is analytic...
+        let sim = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        assert_eq!(
+            TrustTable::route(&sim, &point(512, 4)),
+            BackendId::Analytic
+        );
+        // ...but high contention falls back to replay.
+        assert_eq!(
+            TrustTable::route(&sim, &point(512, TRUST_MAX_STREAMS + 1)),
+            BackendId::Des
+        );
+        assert_eq!(
+            TrustTable::route(&sim, &point(512, TRUST_MAX_STREAMS)),
+            BackendId::Analytic
+        );
+        // The imbalanced pair is always replay.
+        let mut pair = ScenarioSpec::new(Ask::Sim);
+        pair.shape = Shape::ImbalancedPair;
+        pair.streams = 2;
+        assert_eq!(
+            TrustTable::route(&pair, &point(2048, 2)),
+            BackendId::Des
+        );
+    }
+
+    #[test]
+    fn tight_error_budgets_force_the_reference_engine() {
+        let mut sim = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        sim.max_error = Some(DEFAULT_MAX_ERROR / 10.0);
+        assert_eq!(TrustTable::route(&sim, &point(512, 4)), BackendId::Des);
+        // At or above the advertised envelope the fast path stays on.
+        sim.max_error = Some(DEFAULT_MAX_ERROR);
+        assert_eq!(
+            TrustTable::route(&sim, &point(512, 4)),
+            BackendId::Analytic
+        );
+        // Budgets never loosen plan/sparsity (already exact).
+        let mut plan = ScenarioSpec::new(Ask::Plan);
+        plan.max_error = Some(0.01);
+        assert_eq!(
+            TrustTable::route(&plan, &plan.expand()[0]),
+            BackendId::Analytic
+        );
+    }
+
+    #[test]
+    fn confidence_orders_refinement_most_uncertain_first() {
+        let sim = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        let mut prev = 1.1;
+        for s in 1..=TRUST_MAX_STREAMS {
+            let c = TrustTable::confidence(&sim, &point(512, s));
+            assert!((0.0..=1.0).contains(&c));
+            assert!(c < prev, "confidence falls with contention");
+            prev = c;
+        }
+        // DES-routed and closed-form points are fully trusted.
+        assert_eq!(
+            TrustTable::confidence(&sim, &point(512, 16)),
+            1.0
+        );
+        let plan = ScenarioSpec::new(Ask::Plan);
+        assert_eq!(
+            TrustTable::confidence(&plan, &plan.expand()[0]),
+            1.0
+        );
+        // Sparsity overlays and the mixed shape cost confidence.
+        let mut mixed = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        mixed.shape = Shape::MixedSparse;
+        assert!(
+            TrustTable::confidence(&mixed, &point(512, 4))
+                < TrustTable::confidence(&sim, &point(512, 4))
+        );
+        let mut sparse = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        sparse.sparsity = SparsityMode::SparseLhs;
+        assert!(
+            TrustTable::confidence(&sparse, &point(512, 4))
+                < TrustTable::confidence(&sim, &point(512, 4))
+        );
+        // Refinement wants exactly the analytic sim points that are
+        // not fully trusted.
+        assert!(TrustTable::wants_refinement(&sim, &point(512, 4)));
+        assert!(!TrustTable::wants_refinement(&sim, &point(512, 16)));
+        assert!(!TrustTable::wants_refinement(&plan, &plan.expand()[0]));
+    }
+
+    #[test]
+    fn the_router_answers_exactly_like_its_routed_engine() {
+        let cfg = Config::mi300a();
+        let auto = super::super::get(BackendId::Auto);
+        let analytic = super::super::get(BackendId::Analytic);
+        let des = super::super::get(BackendId::Des);
+
+        // In-region sim: byte-for-byte the analytic answer.
+        let sim = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        let p = point(512, 4);
+        assert_eq!(
+            auto.simulate(&cfg, &sim, &p),
+            analytic.simulate(&cfg, &sim, &p)
+        );
+        // Out-of-region sim: byte-for-byte the replay answer.
+        let hot = point(512, 12);
+        assert_eq!(
+            auto.simulate(&cfg, &sim, &hot),
+            des.simulate(&cfg, &sim, &hot)
+        );
+        // Closed-form asks match both engines (they share one
+        // implementation).
+        let plan = ScenarioSpec::new(Ask::Plan);
+        let pp = plan.expand()[0];
+        assert_eq!(
+            auto.plan(&cfg, &plan, &pp),
+            analytic.plan(&cfg, &plan, &pp)
+        );
+        let sp = ScenarioSpec::sparsity_question(512, 4);
+        let spp = sp.expand()[0];
+        assert_eq!(
+            auto.sparsity(&cfg, &sp, &spp),
+            des.sparsity(&cfg, &sp, &spp)
+        );
+    }
+}

@@ -9,7 +9,7 @@
 //! request selected (`"backend"` envelope key / ScenarioSpec field,
 //! default [`DEFAULT`] = `des`).
 //!
-//! Two implementations ship:
+//! Three implementations ship:
 //!
 //! * [`des::DesBackend`] — the existing `sim::engine` discrete-event
 //!   simulator, moved behind the trait with **zero behavior change**:
@@ -22,6 +22,14 @@
 //!   magnitude faster per point; first-order accurate (the tolerance
 //!   statement lives in `docs/backends.md` and is enforced by
 //!   `tests/backend_equivalence.rs`).
+//! * [`auto::AutoBackend`] — a **router**, not an engine: each point
+//!   resolves through the measured [`auto::TrustTable`] to `analytic`
+//!   where the equivalence corpus proves the closed forms trustworthy
+//!   and to `des` elsewhere (DESIGN.md §6.10, `docs/auto_backend.md`;
+//!   calibration is regression-tested by `tests/trust_table.rs`). The
+//!   service resolves the route *before* execution and cache-keying,
+//!   so auto-routed points share cache entries — and cold-run
+//!   counters — with their concrete backend.
 //!
 //! [`REGISTRY`] mirrors the `experiments::REGISTRY` pattern: a static
 //! table that `Request::Backends` discovery, the service dispatcher,
@@ -36,9 +44,11 @@
 //! only the `sim` ask diverges (replay vs estimate).
 
 pub mod analytic;
+pub mod auto;
 pub mod des;
 
 pub use analytic::AnalyticBackend;
+pub use auto::AutoBackend;
 pub use des::DesBackend;
 
 use crate::api::scenario::{Ask, Point, ScenarioSpec, Shape};
@@ -57,17 +67,22 @@ pub enum BackendId {
     Des,
     /// Calibrated closed forms — the fast-path estimator.
     Analytic,
+    /// Trust-region router: analytic inside the measured envelope,
+    /// DES elsewhere.
+    Auto,
 }
 
 impl BackendId {
     /// Every registered backend, in [`REGISTRY`] order.
-    pub const ALL: [BackendId; 2] = [BackendId::Des, BackendId::Analytic];
+    pub const ALL: [BackendId; 3] =
+        [BackendId::Des, BackendId::Analytic, BackendId::Auto];
 
     /// The stable wire spelling.
     pub fn as_str(self) -> &'static str {
         match self {
             BackendId::Des => "des",
             BackendId::Analytic => "analytic",
+            BackendId::Auto => "auto",
         }
     }
 
@@ -82,19 +97,23 @@ impl BackendId {
         match self {
             BackendId::Des => 0,
             BackendId::Analytic => 1,
+            BackendId::Auto => 2,
         }
     }
 
     /// The flattened `stats` field carrying this backend's cold-run
-    /// counter (pinned by `tests/api_protocol.rs`).
+    /// counter (pinned by `tests/api_protocol.rs`). `engine_runs_auto`
+    /// stays 0 by design: the router resolves to a concrete engine
+    /// before execution, so its points count under `des`/`analytic`.
     pub fn stat_field(self) -> &'static str {
         match self {
             BackendId::Des => "engine_runs_des",
             BackendId::Analytic => "engine_runs_analytic",
+            BackendId::Auto => "engine_runs_auto",
         }
     }
 
-    /// `des|analytic` — for error messages listing the registry.
+    /// `des|analytic|auto` — for error messages listing the registry.
     pub fn names() -> String {
         BackendId::ALL
             .iter()
@@ -202,7 +221,8 @@ pub trait Backend: Send + Sync {
 
 /// Every backend, in [`BackendId::ALL`] order — the single source of
 /// truth for discovery, dispatch, docs coverage, and the CI matrix.
-pub static REGISTRY: &[&dyn Backend] = &[&DesBackend, &AnalyticBackend];
+pub static REGISTRY: &[&dyn Backend] =
+    &[&DesBackend, &AnalyticBackend, &AutoBackend];
 
 /// Look a backend up by id (total: every [`BackendId`] is registered).
 pub fn get(id: BackendId) -> &'static dyn Backend {
@@ -299,6 +319,7 @@ mod tests {
     fn capability_table_is_honest() {
         let des = get(BackendId::Des).capabilities();
         let analytic = get(BackendId::Analytic).capabilities();
+        let auto = get(BackendId::Auto).capabilities();
         // The reference engine answers everything.
         for ask in Ask::ALL {
             for shape in Shape::ALL {
@@ -317,6 +338,15 @@ mod tests {
             assert!(analytic.supports(Ask::Plan, shape));
             assert!(analytic.supports(Ask::Sparsity, shape));
         }
+        // The router covers everything the DES covers (out-of-region
+        // points fall back to replay, so nothing is refused) and may
+        // step the DES on the fallback path.
+        for ask in Ask::ALL {
+            for shape in Shape::ALL {
+                assert!(auto.supports(ask, shape), "auto {ask:?}/{shape:?}");
+            }
+        }
+        assert!(auto.steps_des && auto.deterministic);
     }
 
     #[test]

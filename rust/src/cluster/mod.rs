@@ -23,7 +23,9 @@
 //! coordinator's own bounded [`JobTable`]; its cluster job workers
 //! execute each job's points remotely through the same routed path, so
 //! progress frames and cancel semantics match a standalone service
-//! frame for frame.
+//! frame for frame — including the DES refinement pass of budgeted
+//! `auto` jobs ([`refine_job_remote`]), whose re-runs route through
+//! the same ring to the owner of each point's des-resolved key.
 //!
 //! ## Failure handling
 //!
@@ -55,6 +57,7 @@ use crate::api::{
     JobView, OverloadedRetry, Point, PointResult, Request, RequestEnvelope,
     Response, ScenarioSpec, MAX_BATCH_ITEMS,
 };
+use crate::backend::auto::TrustTable;
 use crate::backend::{self, BackendId};
 use crate::serve::{serve_on, Dispatch, IoModel};
 use crate::util::pool;
@@ -416,7 +419,16 @@ impl ClusterCore {
         p: &Point,
         use_cache: bool,
     ) -> Response {
-        let single = spec.at(p);
+        let mut single = spec.at(p);
+        // Resolve the auto router to its concrete engine before
+        // hashing (routing reads the budgets off `spec`, which `at`
+        // strips from the cache form), so the routed key equals the
+        // worker's cache key for the concrete backend and routed
+        // points share the worker's entries with explicit requests
+        // (DESIGN.md §6.10).
+        if single.backend == Some(BackendId::Auto) {
+            single.backend = Some(TrustTable::route(spec, p));
+        }
         let req = Request::Scenario { spec: single };
         let key = req.cache_key();
         self.points_routed.fetch_add(1, Ordering::Relaxed);
@@ -612,10 +624,61 @@ fn cluster_job_worker(core: &ClusterCore, jobs: &JobTable) {
             }
         }
         if results.len() == points.len() {
+            refine_job_remote(core, jobs, id, &spec, &mut results, use_cache);
             jobs.finish(id, Ok(Response::Scenario { points: results }));
         } else {
             // A cancel (or shutdown) was honored mid-sweep.
             jobs.mark_cancelled(id);
+        }
+    }
+}
+
+/// The refinement pass of a budgeted `auto` cluster job — the
+/// coordinator-side mirror of the service's `refine_job` (DESIGN.md
+/// §6.10): the same trust-table selection and ascending-confidence
+/// order, with each DES re-run delivered through the routed path, so a
+/// refined point lands on the ring owner of its des-resolved key and
+/// warms that worker's cache exactly like an explicit `des` request.
+fn refine_job_remote(
+    core: &ClusterCore,
+    jobs: &JobTable,
+    id: u64,
+    spec: &ScenarioSpec,
+    results: &mut [PointResult],
+    use_cache: bool,
+) {
+    if spec.backend != Some(BackendId::Auto)
+        || (spec.max_error.is_none() && spec.max_time_ms.is_none())
+    {
+        return;
+    }
+    let mut todo: Vec<usize> = (0..results.len())
+        .filter(|&i| {
+            TrustTable::wants_refinement(spec, &results[i].point)
+        })
+        .collect();
+    todo.sort_by(|&a, &b| {
+        TrustTable::confidence(spec, &results[a].point)
+            .partial_cmp(&TrustTable::confidence(spec, &results[b].point))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let started = std::time::Instant::now();
+    let mut des = spec.clone();
+    des.backend = Some(BackendId::Des);
+    for i in todo {
+        if !jobs.should_continue(id) {
+            return;
+        }
+        if let Some(budget) = spec.max_time_ms {
+            if started.elapsed().as_secs_f64() * 1000.0 >= budget {
+                return;
+            }
+        }
+        let p = results[i].point;
+        results[i].result =
+            Box::new(core.run_point_remote(&des, &p, use_cache));
+        if !jobs.point_refined(id) {
+            return;
         }
     }
 }

@@ -46,21 +46,22 @@ USAGE:
   mi300a-char run <entry> [--artifacts DIR]
   mi300a-char plan [--objective latency|throughput|isolation]
                    [--streams N] [--size N] [--precision P]
-                   [--backend des|analytic]
+                   [--backend des|analytic|auto]
   mi300a-char scenario [--spec FILE] [--ask sim|plan|sparsity]
                    [--size N] [--precision P] [--streams N] [--iters N]
                    [--shape homogeneous|imbalanced_pair|mixed_sparse]
                    [--small-size N] [--objective O] [--sparsity MODE]
                    [--sweep-size A,B,..] [--sweep-streams A,B,..]
                    [--sweep-precision A,B,..] [--sweep-iters A,B,..]
-                   [--backend des|analytic] [--json] [--addr HOST:PORT]
+                   [--backend des|analytic|auto] [--max-error X]
+                   [--max-time-ms N] [--json] [--addr HOST:PORT]
   mi300a-char serve [--addr HOST:PORT] [--max-conns N] [--no-cache]
-                   [--backend des|analytic] [--io-model epoll|threads]
+                   [--backend des|analytic|auto] [--io-model epoll|threads]
                    [--coordinator --workers HOST:PORT,HOST:PORT,...]
   mi300a-char loadgen [--addr HOST:PORT] [--connections N]
                    [--warmup-ms N] [--duration-ms N]
                    [--mix hot|cold|mixed] [--io-model epoll|threads]
-                   [--no-cache] [--backend des|analytic]
+                   [--no-cache] [--backend des|analytic|auto]
   mi300a-char client <json-request> [--addr HOST:PORT]
   mi300a-char config [--set section.field=value]
   mi300a-char list
@@ -81,9 +82,14 @@ when no --addr is given and writes BENCH_serve.json (PERF.md):
   mi300a-char loadgen --connections 64 --duration-ms 2000 --mix mixed
 Execution backends (DESIGN.md §6.8, docs/backends.md): --backend picks
 the engine answering sim/plan/sparsity points (des = DES replay,
-analytic = calibrated closed forms, ~100x faster per sim point);
-`mi300a-char list` and the `backends` request show the registry:
+analytic = calibrated closed forms, ~100x faster per sim point;
+auto = trust-region router, docs/auto_backend.md — analytic inside the
+measured error envelope, DES elsewhere; with --max-error/--max-time-ms
+a remote job refines its least-trusted answers on the DES, streaming
+`refined` progress frames); `mi300a-char list` and the `backends`
+request show the registry:
   mi300a-char scenario --backend analytic --size 512 --sweep-streams 1,2,4,8,16
+  mi300a-char scenario --addr 127.0.0.1:7300 --backend auto --max-error 0.45 --sweep-streams 1,2,4,8,16
 Cluster mode (DESIGN.md §6.9, docs/cluster.md): a coordinator speaks the
 same protocol and consistent-hashes sweep points across plain serve
 workers, so `scenario --addr` and `loadgen --addr` work unchanged:
@@ -314,6 +320,14 @@ fn cmd_plan(args: &Args) -> i32 {
 /// Build a [`ScenarioSpec`] from `--spec FILE` or inline flags; usage
 /// errors print and exit 2 via the returned `Err`.
 fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
+    let budget = |key: &str| -> Result<Option<f64>, String> {
+        match args.get(key) {
+            None => Ok(None),
+            Some(v) => v.trim().parse::<f64>().map(Some).map_err(|_| {
+                format!("--{key} wants a number, got {v:?}")
+            }),
+        }
+    };
     if let Some(path) = args.get("spec") {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("cannot read {path}: {e}"))?;
@@ -335,6 +349,13 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
                 }
                 _ => spec.backend = Some(id),
             }
+        }
+        // Budget flags fill (or override) the spec file's budgets.
+        if let Some(e) = budget("max-error")? {
+            spec.max_error = Some(e);
+        }
+        if let Some(t) = budget("max-time-ms")? {
+            spec.max_time_ms = Some(t);
         }
         return Ok(spec);
     }
@@ -383,6 +404,8 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
     if let Some(id) = parse_backend_flag(args)? {
         spec.backend = Some(id);
     }
+    spec.max_error = budget("max-error")?;
+    spec.max_time_ms = budget("max-time-ms")?;
     let usize_list = |key: &str| -> Result<Vec<usize>, String> {
         match args.get(key) {
             None => Ok(Vec::new()),
@@ -446,13 +469,27 @@ fn cmd_scenario(args: &Args) -> i32 {
             }
         };
         let result = client.submit_and_wait(&spec, |p| {
-            println!(
-                "progress {}/{} (job {}, {})",
-                p.completed,
-                p.total,
-                p.job,
-                p.state.as_str()
-            );
+            // Refinement frames (budgeted auto jobs) carry the extra
+            // counter; the `progress ` prefix stays stable for
+            // line-oriented consumers (scripts/ci.sh greps it).
+            if p.refined > 0 {
+                println!(
+                    "progress {}/{} (job {}, {}, refined {})",
+                    p.completed,
+                    p.total,
+                    p.job,
+                    p.state.as_str(),
+                    p.refined
+                );
+            } else {
+                println!(
+                    "progress {}/{} (job {}, {})",
+                    p.completed,
+                    p.total,
+                    p.job,
+                    p.state.as_str()
+                );
+            }
         });
         return match result {
             Ok(resp @ Response::Scenario { .. }) => {

@@ -244,7 +244,7 @@ fn every_response_variant_roundtrips() {
             enabled: true,
         },
         engine_runs: 3,
-        backend_runs: vec![2, 1],
+        backend_runs: vec![2, 1, 0],
         cluster: None,
     });
     // The coordinator variant: the same payload plus the all-or-
@@ -252,7 +252,7 @@ fn every_response_variant_roundtrips() {
     roundtrip_response(Response::Stats {
         cache: CacheStats::default(),
         engine_runs: 9,
-        backend_runs: vec![6, 3],
+        backend_runs: vec![6, 3, 0],
         cluster: Some(ClusterStats {
             workers: 2,
             points_routed: 256,
@@ -314,12 +314,23 @@ fn every_response_variant_roundtrips() {
             job: 7,
             state,
             completed: 3,
+            refined: 0,
             total: 8,
         }));
         roundtrip_response(Response::Progress(JobView {
             job: 7,
             state,
             completed: 3,
+            refined: 0,
+            total: 8,
+        }));
+        // Refinement frames (budgeted auto jobs, DESIGN.md §6.10)
+        // carry the extra counter.
+        roundtrip_response(Response::Progress(JobView {
+            job: 7,
+            state,
+            completed: 8,
+            refined: 2,
             total: 8,
         }));
     }
@@ -516,7 +527,7 @@ fn batch_items_share_the_cache_within_one_call() {
             assert_eq!(cache.misses, 1);
             assert_eq!(cache.entries, 1);
             // All executions ran on the default `des` backend.
-            assert_eq!(backend_runs, &vec![1, 0]);
+            assert_eq!(backend_runs, &vec![1, 0, 0]);
             assert!(cluster.is_none(), "standalone stats carry no cluster");
         }
         other => panic!("unexpected stats item: {other:?}"),
@@ -613,6 +624,105 @@ fn scenario_wire_canonicalization_is_a_fixpoint() {
         Request::from_json(&Json::parse(aliased).unwrap()).unwrap();
     assert_eq!(aliased_req.to_json(None).to_string(), canonical);
     assert_eq!(aliased_req.cache_key(), req.cache_key());
+}
+
+/// Property-style grid over the extended spec surface (ISSUE 8): every
+/// combination of `backend` selection (including `"auto"`) and the
+/// optional `max_error`/`max_time_ms` budgets canonicalizes to a
+/// decode→encode→decode fixpoint with a stable cache key, budget
+/// presence is mirrored exactly in the canonical bytes, and the
+/// cache-form points (`at`) of a budgeted sweep stay byte-identical to
+/// the unbudgeted ones. Sizes/streams come from a seeded LCG so the
+/// grid covers varied shapes deterministically.
+#[test]
+fn scenario_budget_grid_canonicalization_is_a_fixpoint() {
+    let mut state: u64 = 0x9e37_79b9_7f4a_7c15;
+    let mut next = move |m: usize| -> usize {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (state >> 33) as usize % m
+    };
+    for backend in [None, Some("des"), Some("analytic"), Some("auto")] {
+        for me in [None, Some(0.25), Some(0.45)] {
+            for mt in [None, Some(1500.0)] {
+                let n = 128 << next(4);
+                let streams = 1 + next(8);
+                let mut line = format!(
+                    r#"{{"v":1,"type":"scenario","n":{n},"streams":{streams}"#
+                );
+                if let Some(b) = backend {
+                    line += &format!(r#","backend":"{b}""#);
+                }
+                if let Some(e) = me {
+                    line += &format!(r#","max_error":{e}"#);
+                }
+                if let Some(t) = mt {
+                    line += &format!(r#","max_time_ms":{t}"#);
+                }
+                line += "}";
+                let (req, _) =
+                    Request::from_json(&Json::parse(&line).unwrap())
+                        .unwrap();
+                let canonical = req.to_json(None).to_string();
+                let (again, _) =
+                    Request::from_json(&Json::parse(&canonical).unwrap())
+                        .unwrap();
+                assert_eq!(again, req, "{line}");
+                assert_eq!(
+                    again.to_json(None).to_string(),
+                    canonical,
+                    "fixpoint: {line}"
+                );
+                assert_eq!(
+                    again.cache_key(),
+                    req.cache_key(),
+                    "cache key must be stable: {line}"
+                );
+                // The canonical bytes carry a budget key iff the
+                // request did — absent budgets add zero wire surface,
+                // keeping pre-budget requests byte-identical.
+                assert_eq!(
+                    canonical.contains("max_error"),
+                    me.is_some(),
+                    "{canonical}"
+                );
+                assert_eq!(
+                    canonical.contains("max_time_ms"),
+                    mt.is_some(),
+                    "{canonical}"
+                );
+                assert_eq!(
+                    canonical.contains("backend"),
+                    backend.is_some(),
+                    "{canonical}"
+                );
+                // Budgets are job-level concerns: the cache-form
+                // single-point spec strips them, so budgeted and
+                // unbudgeted sweeps share per-point cache entries.
+                let spec = match &req {
+                    Request::Scenario { spec } => spec.clone(),
+                    other => panic!("unexpected request: {other:?}"),
+                };
+                let p = spec.expand()[0];
+                let single = spec.at(&p);
+                assert_eq!(single.max_error, None, "{line}");
+                assert_eq!(single.max_time_ms, None, "{line}");
+                let mut bare = spec.clone();
+                bare.max_error = None;
+                bare.max_time_ms = None;
+                assert_eq!(
+                    Request::Scenario { spec: single }
+                        .to_json(None)
+                        .to_string(),
+                    Request::Scenario { spec: bare.at(&p) }
+                        .to_json(None)
+                        .to_string(),
+                    "cache-form points must not see budgets: {line}"
+                );
+            }
+        }
+    }
 }
 
 #[test]
@@ -871,13 +981,16 @@ fn stats_wire_pins_the_per_backend_counter_fields() {
     let resp = Response::Stats {
         cache: CacheStats::default(),
         engine_runs: 7,
-        backend_runs: vec![4, 3],
+        backend_runs: vec![4, 3, 0],
         cluster: None,
     };
     let wire = resp.to_json(None).to_string();
     assert!(wire.contains(r#""engine_runs":7"#), "{wire}");
     assert!(wire.contains(r#""engine_runs_des":4"#), "{wire}");
     assert!(wire.contains(r#""engine_runs_analytic":3"#), "{wire}");
+    // The router's slot is present but permanently zero: auto resolves
+    // to a concrete engine before counting (DESIGN.md §6.10).
+    assert!(wire.contains(r#""engine_runs_auto":0"#), "{wire}");
     // The cluster amendment (DESIGN.md §6.9) must not leak into a
     // standalone stats line: no cluster_* key when `cluster` is None.
     assert!(!wire.contains("cluster"), "{wire}");
@@ -894,7 +1007,7 @@ fn stats_wire_pins_the_cluster_counter_fields() {
     let resp = Response::Stats {
         cache: CacheStats::default(),
         engine_runs: 7,
-        backend_runs: vec![4, 3],
+        backend_runs: vec![4, 3, 0],
         cluster: Some(ClusterStats {
             workers: 2,
             points_routed: 64,

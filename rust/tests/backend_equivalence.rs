@@ -160,7 +160,7 @@ fn cookbook_imbalanced_pair_is_des_only() {
         other => panic!("expected unsupported_by_backend, got {other:?}"),
     }
     // Only the des point executed.
-    assert_eq!(svc.backend_runs(), vec![1, 0]);
+    assert_eq!(svc.backend_runs(), vec![1, 0, 0]);
 }
 
 /// Acceptance: with `backend` omitted, responses are byte-identical to
@@ -189,7 +189,7 @@ fn omitted_backend_is_des_and_analytic_runs_zero_des_points() {
         explicit.to_json(Some(1)).to_string(),
         "omitting backend must be byte-identical to selecting des"
     );
-    assert_eq!(default_svc.backend_runs(), vec![1, 0]);
+    assert_eq!(default_svc.backend_runs(), vec![1, 0, 0]);
 
     // A 16-point analytic sweep: all analytic, zero des.
     let svc = Service::new(Config::mi300a());
@@ -203,7 +203,7 @@ fn omitted_backend_is_des_and_analytic_runs_zero_des_points() {
     }
     assert_eq!(
         svc.backend_runs(),
-        vec![0, 16],
+        vec![0, 16, 0],
         "an analytic sweep must execute zero DES points"
     );
     assert_eq!(svc.engine_runs(), 16, "totals stay truthful");

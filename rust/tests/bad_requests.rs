@@ -1,0 +1,85 @@
+//! Malformed-request corpus (ISSUE 8 satellite): every fixture line in
+//! `tests/fixtures/bad_requests/` is a syntactically valid JSON value
+//! that must be *rejected at decode time* with exactly the typed error
+//! code its file is named after (`<error_code>.jsonl`). One table test
+//! drives the whole corpus, so adding a regression case is a one-line
+//! fixture edit — no new test code.
+//!
+//! The corpus is hygiene-checked: file names must parse as wire error
+//! codes, files must be non-empty, and the set must cover enough of
+//! the decode-time surface to stay meaningful.
+
+use mi300a_char::api::{ErrorCode, Request};
+use mi300a_char::util::json::Json;
+use std::path::Path;
+
+fn fixtures_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/bad_requests")
+}
+
+/// Every line of every fixture decodes to exactly the error code the
+/// file advertises.
+#[test]
+fn every_fixture_line_rejects_with_its_files_error_code() {
+    let dir = fixtures_dir();
+    let mut files: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .collect();
+    files.sort();
+    assert!(!files.is_empty(), "empty corpus at {}", dir.display());
+
+    let mut codes_seen = Vec::new();
+    let mut lines_seen = 0usize;
+    for path in files {
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or_default();
+        assert_eq!(
+            path.extension().and_then(|s| s.to_str()),
+            Some("jsonl"),
+            "corpus files are .jsonl: {}",
+            path.display()
+        );
+        let want = ErrorCode::parse(stem).unwrap_or_else(|| {
+            panic!(
+                "fixture file name {stem:?} is not a wire error code \
+                 (see ErrorCode::ALL)"
+            )
+        });
+        codes_seen.push(want);
+        let body = std::fs::read_to_string(&path).unwrap();
+        for (lineno, line) in body.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            lines_seen += 1;
+            let ctx = format!("{stem}.jsonl:{}: {line}", lineno + 1);
+            // Corpus lines are well-formed JSON — the *request* is
+            // what's malformed, so the typed decoder owns the error.
+            let v = Json::parse(line)
+                .unwrap_or_else(|e| panic!("fixture not JSON at {ctx}: {e}"));
+            match Request::from_json(&v) {
+                Err((err, _)) => assert_eq!(
+                    err.code, want,
+                    "wrong code at {ctx}: got {:?} ({})",
+                    err.code, err.message
+                ),
+                Ok((req, _)) => {
+                    panic!("fixture decoded cleanly at {ctx}: {req:?}")
+                }
+            }
+        }
+    }
+    // Hygiene floor: the corpus must exercise a meaningful slice of
+    // the decode-time error surface.
+    codes_seen.dedup();
+    assert!(
+        codes_seen.len() >= 6,
+        "corpus covers only {} error codes",
+        codes_seen.len()
+    );
+    assert!(lines_seen >= 20, "corpus has only {lines_seen} lines");
+}

@@ -8,9 +8,11 @@ use mi300a_char::api::{
     ApiError, Ask, Client, ErrorCode, JobState, OverloadedRetry, Request,
     Response, ScenarioSpec, Service,
 };
-use mi300a_char::backend;
-use mi300a_char::cluster::Coordinator;
+use mi300a_char::backend::auto::{TrustTable, DEFAULT_MAX_ERROR};
+use mi300a_char::backend::{self, BackendId};
+use mi300a_char::cluster::{Coordinator, Ring};
 use mi300a_char::config::Config;
+use mi300a_char::isa::Precision;
 use mi300a_char::serve::{serve_on, IoModel};
 use mi300a_char::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -59,6 +61,15 @@ fn engine_runs(addr: &str) -> u64 {
     let mut c = Client::connect_retry(addr, 200).unwrap();
     match c.request(&Request::Stats).unwrap() {
         Response::Stats { engine_runs, .. } => engine_runs,
+        other => panic!("unexpected stats response: {other:?}"),
+    }
+}
+
+/// The worker's per-backend cold-run counters, read off its port.
+fn backend_runs(addr: &str) -> Vec<u64> {
+    let mut c = Client::connect_retry(addr, 200).unwrap();
+    match c.request(&Request::Stats).unwrap() {
+        Response::Stats { backend_runs, .. } => backend_runs,
         other => panic!("unexpected stats response: {other:?}"),
     }
 }
@@ -227,6 +238,108 @@ fn watched_jobs_run_remotely_with_full_progress() {
         result.to_json(None).to_string(),
         local.to_json(None).to_string(),
         "job result drifted from the synchronous sweep bytes"
+    );
+}
+
+/// ISSUE 8: a budgeted `auto` job through a 2-worker coordinator. The
+/// sweep crosses the trust boundary (streams 1 trusted, 2/4 refinable,
+/// 12 DES-routed); the refinement pass re-runs the low-confidence
+/// points on the DES *through the same ring*, so every execution —
+/// analytic, DES, and refined DES — lands on the owner of its
+/// concrete-backend cache key, and the aggregated `cluster_*` /
+/// `engine_runs_*` counters reconcile exactly with the reported
+/// refinement count.
+#[test]
+fn budgeted_auto_jobs_refine_on_the_ring_owner() {
+    let w1 = spawn_worker(None);
+    let w2 = spawn_worker(None);
+    let coord = spawn_coordinator(vec![w1.clone(), w2.clone()]);
+    let mut client = Client::connect_retry(coord.as_str(), 200).unwrap();
+    client.set_timeout(None).unwrap();
+
+    let mut spec = ScenarioSpec::sim(256, Precision::Fp8, 4);
+    spec.sweep.streams = vec![1, 2, 4, 12];
+    spec.backend = Some(BackendId::Auto);
+    spec.max_error = Some(DEFAULT_MAX_ERROR);
+
+    let mut frames = Vec::new();
+    let result =
+        client.submit_and_wait(&spec, |v| frames.push(*v)).unwrap();
+    let last = frames.last().expect("at least the terminal frame");
+    assert_eq!(last.state, JobState::Done);
+    assert_eq!((last.completed, last.total), (4, 4));
+
+    // The refinement count is exactly the trust table's refinable set.
+    let points = spec.expand();
+    let refinable = points
+        .iter()
+        .filter(|p| TrustTable::wants_refinement(&spec, p))
+        .count() as u64;
+    assert_eq!(refinable, 2, "streams 2 and 4 are the refinable points");
+    assert_eq!(last.refined, refinable);
+    // Queued snapshot + running + one per point + one per refinement +
+    // terminal.
+    assert_eq!(frames.len() as u64, 4 + 3 + refinable);
+
+    // Every execution landed on the ring owner of its concrete-backend
+    // cache key: the initial pass keyed on the routed engine, the
+    // refinement pass keyed on `des`.
+    let ring = Ring::new(2);
+    let mut want = vec![vec![0u64; backend::COUNT]; 2];
+    for p in &points {
+        let route = TrustTable::route(&spec, p);
+        let mut single = spec.at(p);
+        single.backend = Some(route);
+        let key = Request::Scenario { spec: single }.cache_key();
+        want[ring.owner(&key)][route.index()] += 1;
+        if TrustTable::wants_refinement(&spec, p) {
+            let mut des = spec.at(p);
+            des.backend = Some(BackendId::Des);
+            let key = Request::Scenario { spec: des }.cache_key();
+            want[ring.owner(&key)][BackendId::Des.index()] += 1;
+        }
+    }
+    assert_eq!(
+        backend_runs(&w1),
+        want[0],
+        "worker 1 ran points it does not own"
+    );
+    assert_eq!(
+        backend_runs(&w2),
+        want[1],
+        "worker 2 ran points it does not own"
+    );
+
+    // Aggregated stats reconcile: routed points = sweep + refinements,
+    // DES runs = boundary points + refinements, the auto slot stays 0.
+    match client.request(&Request::Stats).unwrap() {
+        Response::Stats { engine_runs, backend_runs, cluster, .. } => {
+            let c = cluster.expect("coordinator stats carry the block");
+            assert_eq!(c.points_routed, 4 + refinable);
+            assert_eq!(c.point_failures, 0);
+            assert_eq!(engine_runs, 4 + refinable);
+            assert_eq!(backend_runs[BackendId::Des.index()], 1 + refinable);
+            assert_eq!(backend_runs[BackendId::Analytic.index()], 3);
+            assert_eq!(
+                backend_runs[BackendId::Auto.index()],
+                0,
+                "auto resolves before counting — its slot never moves"
+            );
+        }
+        other => panic!("unexpected stats response: {other:?}"),
+    }
+
+    // The refined job result is byte-identical to the same budgeted
+    // job on a standalone worker (refinement replaces the analytic
+    // answers with DES ground truth on both paths).
+    let solo = spawn_worker(None);
+    let mut sc = Client::connect_retry(solo.as_str(), 200).unwrap();
+    sc.set_timeout(None).unwrap();
+    let solo_result = sc.submit_and_wait(&spec, |_| {}).unwrap();
+    assert_eq!(
+        result.to_json(None).to_string(),
+        solo_result.to_json(None).to_string(),
+        "cluster refinement drifted from the standalone job bytes"
     );
 }
 

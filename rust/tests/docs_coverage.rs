@@ -78,6 +78,7 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         "architecture.md",
         "scenarios.md",
         "backends.md",
+        "auto_backend.md",
         "performance.md",
         "cluster.md",
     ] {
@@ -131,6 +132,10 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
     assert!(
         read("README.md").contains("cluster.md"),
         "docs/README.md must index the cluster guide"
+    );
+    assert!(
+        read("README.md").contains("auto_backend.md"),
+        "docs/README.md must index the auto-backend guide"
     );
 }
 
@@ -242,6 +247,40 @@ fn backends_doc_covers_the_backend_registry_exactly() {
             "docs/backends.md never documents {needle:?}"
         );
     }
+}
+
+/// The auto-backend guide must document the routing surface this repo
+/// ships: the trust table and its boundaries, both budget fields (wire
+/// and CLI spellings), the refinement frame, and the
+/// accounting-by-resolution story — and the backend guide must point
+/// readers at it.
+#[test]
+fn auto_backend_doc_covers_routing_budgets_and_refinement() {
+    let doc = read("auto_backend.md");
+    for needle in [
+        "\"backend\":\"auto\"",
+        "--backend auto",
+        "trust",
+        "max_error",
+        "max_time_ms",
+        "--max-error",
+        "\"refined\"",
+        "engine_runs_auto",
+        "engine_runs_des",
+        "engine_runs_analytic",
+        "imbalanced_pair",
+        "tests/trust_table.rs",
+        "backends.md",
+    ] {
+        assert!(
+            doc.contains(needle),
+            "docs/auto_backend.md never documents {needle:?}"
+        );
+    }
+    assert!(
+        read("backends.md").contains("auto_backend.md"),
+        "docs/backends.md never cross-links auto_backend.md"
+    );
 }
 
 /// The scenario cookbook must stay a worked, runnable document: every

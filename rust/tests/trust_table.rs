@@ -1,0 +1,232 @@
+//! Trust-table calibration (ISSUE 8 satellite): the `auto` router's
+//! advertised error envelope must be *true*. This harness regenerates
+//! the calibration corpus from the `docs/scenarios.md` cookbook sweeps,
+//! routes every point through `TrustTable`, and proves that each
+//! analytic-routed region tracks DES ground truth within the default
+//! `max_error` the router advertises (`DEFAULT_MAX_ERROR`). A failure
+//! names the offending (shape, streams, precision) triple so the table
+//! can be re-drawn around the drifted region.
+//!
+//! DES-routed points are exempt by construction (they *are* ground
+//! truth); the closed-form asks must stay exact on every route.
+
+use mi300a_char::api::{Ask, ScenarioSpec, Shape};
+use mi300a_char::backend::auto::{
+    TrustTable, DEFAULT_MAX_ERROR, TRUST_MAX_STREAMS,
+};
+use mi300a_char::backend::{self, BackendId};
+use mi300a_char::config::Config;
+use mi300a_char::coordinator::Objective;
+use mi300a_char::isa::Precision;
+
+/// Metric tolerances inside the trust region. Time-domain outputs
+/// (makespan, speedup) are bounded by the router's advertised envelope;
+/// the bounded ratio metrics carry the corpus's absolute tolerances
+/// (docs/backends.md).
+const ABS_TOL_OVERLAP: f64 = 0.35;
+const ABS_TOL_FAIRNESS: f64 = 0.40;
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// The calibration corpus: every sim sweep the cookbook publishes.
+/// These are the regions the trust table claims to have measured — new
+/// cookbook sweeps belong here so the claim keeps pace.
+fn calibration_corpus() -> Vec<(&'static str, ScenarioSpec)> {
+    // #1 occupancy threshold: the full ACE stream range at 512³ FP8.
+    let mut occupancy = ScenarioSpec::sim(512, Precision::Fp8, 4);
+    occupancy.sweep.streams = vec![1, 2, 3, 4, 6, 8, 12, 16];
+
+    // #2 precision crossover: precision × streams at 1024³.
+    let mut crossover = ScenarioSpec::sim(1024, Precision::Fp8, 4);
+    crossover.sweep.precision = vec![Precision::Fp8, Precision::F16];
+    crossover.sweep.streams = vec![1, 2, 4, 8];
+
+    // Mixed sparse/dense stream sets (the sparse-weighting model).
+    let mut mixed = ScenarioSpec::new(Ask::Sim);
+    mixed.shape = Shape::MixedSparse;
+    mixed.n = 512;
+    mixed.sweep.streams = vec![2, 4, 8];
+
+    // #4 imbalanced pair: entirely outside the trusted envelope — the
+    // corpus includes it to prove the router sends it to the DES.
+    let mut pair = ScenarioSpec::new(Ask::Sim);
+    pair.shape = Shape::ImbalancedPair;
+    pair.streams = 2;
+    pair.n = 2048;
+    pair.iters = 10;
+    pair.sweep.n = vec![1024, 2048];
+
+    vec![
+        ("occupancy", occupancy),
+        ("crossover", crossover),
+        ("mixed_sparse", mixed),
+        ("imbalanced_pair", pair),
+    ]
+}
+
+/// The headline assertion: every analytic-routed point in the corpus
+/// answers within the advertised default error budget against DES
+/// ground truth, on every tolerance-bearing metric.
+#[test]
+fn analytic_routed_regions_meet_the_advertised_max_error() {
+    let cfg = Config::mi300a();
+    let des = backend::get(BackendId::Des);
+    let analytic = backend::get(BackendId::Analytic);
+    let mut analytic_points = 0usize;
+    let mut des_points = 0usize;
+
+    for (name, spec) in calibration_corpus() {
+        for p in spec.expand() {
+            if TrustTable::route(&spec, &p) == BackendId::Des {
+                // Ground-truth region: nothing to calibrate.
+                des_points += 1;
+                continue;
+            }
+            analytic_points += 1;
+            let d = des.simulate(&cfg, &spec, &p);
+            let a = analytic.simulate(&cfg, &spec, &p);
+            let triple = format!(
+                "(shape={:?}, streams={}, precision={:?})",
+                spec.shape, p.streams, p.precision
+            );
+            assert!(
+                rel(a.makespan_ms, d.makespan_ms) <= DEFAULT_MAX_ERROR,
+                "{name}: makespan error {:.3} > advertised \
+                 max_error {DEFAULT_MAX_ERROR} at {triple} — the trust \
+                 table routes this region to analytic but calibration \
+                 has drifted",
+                rel(a.makespan_ms, d.makespan_ms)
+            );
+            assert!(
+                rel(a.speedup_vs_serial, d.speedup_vs_serial)
+                    <= DEFAULT_MAX_ERROR,
+                "{name}: speedup error {:.3} > advertised \
+                 max_error {DEFAULT_MAX_ERROR} at {triple}",
+                rel(a.speedup_vs_serial, d.speedup_vs_serial)
+            );
+            assert!(
+                (a.overlap_efficiency - d.overlap_efficiency).abs()
+                    <= ABS_TOL_OVERLAP,
+                "{name}: overlap drift at {triple}"
+            );
+            assert!(
+                (a.fairness - d.fairness).abs() <= ABS_TOL_FAIRNESS,
+                "{name}: fairness drift at {triple}"
+            );
+        }
+    }
+    // The corpus must actually exercise both sides of the boundary, or
+    // this harness proves nothing.
+    assert!(
+        analytic_points >= 16,
+        "corpus too small: {analytic_points} analytic-routed points"
+    );
+    assert!(
+        des_points >= 4,
+        "corpus never crossed the boundary: {des_points} des-routed \
+         points"
+    );
+}
+
+/// The routing boundary itself matches the corpus: inside the stream
+/// envelope homogeneous points are analytic, outside they are DES, and
+/// the imbalanced pair is DES at every point.
+#[test]
+fn corpus_routes_split_exactly_at_the_trust_boundary() {
+    for (name, spec) in calibration_corpus() {
+        for p in spec.expand() {
+            let want = if spec.shape == Shape::ImbalancedPair
+                || p.streams > TRUST_MAX_STREAMS
+            {
+                BackendId::Des
+            } else {
+                BackendId::Analytic
+            };
+            assert_eq!(
+                TrustTable::route(&spec, &p),
+                want,
+                "{name}: unexpected route at streams={} shape={:?}",
+                p.streams,
+                spec.shape
+            );
+            // Confidence is consistent with the route: DES-routed
+            // points are fully trusted, analytic ones never more so.
+            let c = TrustTable::confidence(&spec, &p);
+            if want == BackendId::Des {
+                assert_eq!(c, 1.0, "{name}: DES route must score 1.0");
+                assert!(!TrustTable::wants_refinement(&spec, &p));
+            } else {
+                assert!((0.0..=1.0).contains(&c), "{name}: c={c}");
+                assert_eq!(
+                    TrustTable::wants_refinement(&spec, &p),
+                    c < 1.0,
+                    "{name}: refinement must track confidence"
+                );
+            }
+        }
+    }
+}
+
+/// Closed-form asks are exact on every route — the fast path is always
+/// safe for plan/sparsity, so the router keeps them analytic even
+/// under a tight error budget.
+#[test]
+fn closed_form_asks_stay_exact_under_routing() {
+    let cfg = Config::mi300a();
+    let des = backend::get(BackendId::Des);
+    let auto = backend::get(BackendId::Auto);
+
+    let mut sp = ScenarioSpec::sparsity_question(512, 4);
+    sp.sweep.n = vec![256, 512, 2048, 8192];
+    sp.sweep.streams = vec![1, 4];
+    sp.max_error = Some(1e-6); // far tighter than the sim envelope
+    for p in sp.expand() {
+        assert_eq!(
+            TrustTable::route(&sp, &p),
+            BackendId::Analytic,
+            "closed forms never need the replay"
+        );
+        assert_eq!(
+            auto.sparsity(&cfg, &sp, &p),
+            des.sparsity(&cfg, &sp, &p),
+            "sparsity must be route-invariant at n={} streams={}",
+            p.n,
+            p.streams
+        );
+    }
+
+    let plan = ScenarioSpec::plan(
+        Objective::ThroughputOriented,
+        8,
+        512,
+        Precision::Fp8,
+    );
+    let p = plan.expand()[0];
+    assert_eq!(TrustTable::route(&plan, &p), BackendId::Analytic);
+    assert_eq!(
+        auto.plan(&cfg, &plan, &p),
+        des.plan(&cfg, &plan, &p),
+        "plan must be route-invariant"
+    );
+}
+
+/// A budget tighter than the advertised envelope flips every sim point
+/// in the corpus to the DES — the router refuses to answer with less
+/// accuracy than it was asked for.
+#[test]
+fn tight_budgets_route_the_whole_corpus_to_ground_truth() {
+    for (name, mut spec) in calibration_corpus() {
+        spec.max_error = Some(DEFAULT_MAX_ERROR / 2.0);
+        for p in spec.expand() {
+            assert_eq!(
+                TrustTable::route(&spec, &p),
+                BackendId::Des,
+                "{name}: a tight budget must force the reference \
+                 engine at streams={}",
+                p.streams
+            );
+        }
+    }
+}

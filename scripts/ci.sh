@@ -8,7 +8,10 @@
 # done, fetch the result, observe >=1 pushed progress frame), and a
 # backend-matrix smoke (DESIGN.md §6.8: one sim per registered
 # backend, per-backend stats counters, docs/backends.md drift, typed
-# unknown_backend on an unregistered id), a loadgen smoke (a short
+# unknown_backend on an unregistered id) plus an auto-routing smoke
+# (DESIGN.md §6.10: a budgeted `--backend auto` sweep must stream at
+# least one refinement frame and split its cold runs across both
+# concrete engines while engine_runs_auto stays 0), a loadgen smoke (a short
 # self-hosted load-generator run per available io model, writing the
 # BENCH_serve.json baseline and failing on typed errors or zero
 # throughput), and a cluster smoke (2 workers + a coordinator on
@@ -222,6 +225,36 @@ if ! printf '%s' "$bad" | grep -qF 'unknown_backend'; then
     echo "expected unknown_backend, got: $bad" >&2
     exit 1
 fi
+# Auto-routing smoke (DESIGN.md §6.10, docs/auto_backend.md): a
+# budgeted auto sweep crosses the trust boundary (streams 12 routes to
+# the DES, 1 and 4 stay analytic), the budget arms the refinement pass
+# (streams 4 re-runs on the DES, streaming a `refined` progress
+# frame), and the per-engine counters split while the router's own
+# counter stays at zero.
+auto_watch=$("$bin" scenario --addr "$baddr" --backend auto \
+    --max-error 0.45 --size 512 --sweep-streams 1,4,12)
+echo "$auto_watch" | head -n 8
+if ! printf '%s\n' "$auto_watch" | grep '^progress ' | grep -q 'refined'; then
+    echo "budgeted auto sweep streamed no refinement frame" >&2
+    exit 1
+fi
+auto_stats=$("$bin" client --addr "$baddr" '{"v":1,"type":"stats"}')
+echo "auto-smoke stats: $auto_stats"
+for eng in des analytic; do
+    n=$(printf '%s' "$auto_stats" \
+        | sed -n "s/.*\"engine_runs_$eng\":\([0-9]*\).*/\1/p")
+    if [ -z "$n" ] || [ "$n" -eq 0 ]; then
+        echo "auto smoke: engine_runs_$eng=$n (want > 0)" >&2
+        exit 1
+    fi
+done
+n=$(printf '%s' "$auto_stats" \
+    | sed -n 's/.*"engine_runs_auto":\([0-9]*\).*/\1/p')
+if [ "$n" != 0 ]; then
+    echo "auto smoke: engine_runs_auto=$n (must stay 0 by design)" >&2
+    exit 1
+fi
+echo "auto smoke ok (refinement streamed, runs split across engines)"
 kill "$bk_pid" 2>/dev/null || true
 wait "$bk_pid" 2>/dev/null || true
 trap - EXIT
