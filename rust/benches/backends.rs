@@ -21,14 +21,20 @@
 //! `auto_des_fraction` (what share of the cookbook sweep the trust
 //! table sends to the reference engine; docs/auto_backend.md).
 //!
+//! The multi-APU case (docs/multi_apu.md) runs the 1→4 data-parallel
+//! scaling sweep on the DES and adds `fabric_points_per_sec`,
+//! `fabric_transfer_events_per_sweep` (exact, stepped directly through
+//! `sim::fabric`), and `fabric_transfer_events_per_sec`.
+//!
 //! Smoke mode: `MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench`
 //! (scripts/ci.sh) keeps the target compiling and running cheaply.
 
-use mi300a_char::api::ScenarioSpec;
+use mi300a_char::api::{ScenarioSpec, Shape};
 use mi300a_char::backend::{self, BackendId};
 use mi300a_char::config::Config;
+use mi300a_char::fabric::{DeviceSet, Fabric};
 use mi300a_char::isa::Precision;
-use mi300a_char::sim::{ConcurrencyProfile, Engine};
+use mi300a_char::sim::{ConcurrencyProfile, Engine, FabricSim};
 use mi300a_char::util::bench::Bencher;
 use mi300a_char::util::json::Json;
 
@@ -138,6 +144,52 @@ fn main() {
     extra.push((
         "auto_des_fraction",
         Json::Num(des_routed as f64 / points.len() as f64),
+    ));
+
+    // Multi-APU (docs/multi_apu.md, recipe 5): the 1→4 data-parallel
+    // scaling sweep on the DES. The fabric transfer-event count per
+    // sweep pass is exact — stepped directly through `sim::fabric` on
+    // the same schedules the backend composes.
+    let mut fab = ScenarioSpec::sim(512, Precision::Fp8, 4);
+    fab.shape = Shape::DataParallel;
+    fab.sweep.devices = vec![1, 2, 3, 4];
+    let fab_points = fab.expand();
+    let mut transfer_events = 0.0;
+    for q in &fab_points {
+        if q.devices > 1 {
+            let fabric = Fabric::for_set(DeviceSet::normalized(
+                q.devices,
+                fab.device_set.topology,
+            ));
+            let bytes =
+                Fabric::shape_bytes(fab.shape, q.n, q.precision.bytes());
+            let sched = fabric.shape_schedule(fab.shape, bytes);
+            transfer_events +=
+                FabricSim::new(fabric).run_schedule(&sched).events as f64;
+        }
+    }
+    let rf = b.bench("sweep/4apu_data_parallel_des", || {
+        for q in &fab_points {
+            Bencher::black_box(des.simulate(&cfg, &fab, q).makespan_ms);
+        }
+    });
+    println!(
+        "  -> multi-APU: {:.1} points/sec, {transfer_events:.0} transfer \
+         events/sweep (~{:.0} transfer events/sec)",
+        rf.units_per_sec(fab_points.len() as f64),
+        rf.units_per_sec(transfer_events)
+    );
+    extra.push((
+        "fabric_points_per_sec",
+        Json::Num(rf.units_per_sec(fab_points.len() as f64)),
+    ));
+    extra.push((
+        "fabric_transfer_events_per_sweep",
+        Json::Num(transfer_events),
+    ));
+    extra.push((
+        "fabric_transfer_events_per_sec",
+        Json::Num(rf.units_per_sec(transfer_events)),
     ));
 
     println!("\n{}", b.markdown());

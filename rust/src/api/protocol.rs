@@ -315,6 +315,12 @@ pub enum Response {
         fairness: f64,
         l2_miss: f64,
         lds_util: f64,
+        /// Wall-clock spent in Infinity Fabric transfers that the
+        /// compute could not hide (multi-device shapes only; see
+        /// `crate::fabric`). Exactly 0 on single-device points and
+        /// omitted from the wire then, keeping pre-fabric responses
+        /// byte-identical.
+        transfer_ms: f64,
     },
     Plan {
         objective: String,
@@ -878,6 +884,7 @@ impl Response {
                 fairness,
                 l2_miss,
                 lds_util,
+                transfer_ms,
             } => {
                 fields.push(("makespan_ms", Json::Num(*makespan_ms)));
                 fields.push((
@@ -891,6 +898,9 @@ impl Response {
                 fields.push(("fairness", Json::Num(*fairness)));
                 fields.push(("l2_miss", Json::Num(*l2_miss)));
                 fields.push(("lds_util", Json::Num(*lds_util)));
+                if *transfer_ms > 0.0 {
+                    fields.push(("transfer_ms", Json::Num(*transfer_ms)));
+                }
             }
             Response::Plan { objective, sparse, groups } => {
                 fields.push(("objective", Json::Str(objective.clone())));
@@ -1160,6 +1170,7 @@ fn decode_response_payload(
                     "fairness",
                     "l2_miss",
                     "lds_util",
+                    "transfer_ms",
                 ],
             )?;
             Ok(Response::Sim {
@@ -1169,6 +1180,11 @@ fn decode_response_payload(
                 fairness: f64_field(m, ty, "fairness")?,
                 l2_miss: f64_field(m, ty, "l2_miss")?,
                 lds_util: f64_field(m, ty, "lds_util")?,
+                transfer_ms: if m.contains_key("transfer_ms") {
+                    f64_field(m, ty, "transfer_ms")?
+                } else {
+                    0.0
+                },
             })
         }
         "plan" => {

@@ -4,20 +4,23 @@
 //! A [`ScenarioSpec`] describes a workload *composition* instead of a
 //! fixed question: what to ask ([`Ask`]: `sim`/`plan`/`sparsity`), the
 //! base kernel (`n`, `precision`, `iters`, base [`SparsityMode`]), the
-//! stream-set [`Shape`] (homogeneous / imbalanced_pair / mixed_sparse,
-//! built via [`crate::workload::generator`]), the coordinator objective
-//! (for `plan` asks), and optional [`Sweep`] axes whose cross-product —
-//! hard-capped at [`MAX_SWEEP_POINTS`] — expands into an ordered list of
-//! [`Point`]s. The service compiles every point down to the existing
-//! coordinator/sim/sparsity layers, so a single-point scenario answers
-//! byte-identically to the v1 request it generalizes (v1 `sim`/`plan`/
-//! `sparsity` requests desugar into exactly such specs inside
-//! `api::Service`).
+//! stream-set [`Shape`] (homogeneous / imbalanced_pair / mixed_sparse
+//! on one APU, data_parallel / pipeline / halo across a multi-APU
+//! [`DeviceSet`] — built via [`crate::workload::generator`]), the
+//! device set (`device_set`: 1–4 APUs plus an Infinity Fabric
+//! [`Topology`], see [`crate::fabric`] and docs/multi_apu.md), the
+//! coordinator objective (for `plan` asks), and optional [`Sweep`]
+//! axes whose cross-product — hard-capped at [`MAX_SWEEP_POINTS`] —
+//! expands into an ordered list of [`Point`]s. The service compiles
+//! every point down to the existing coordinator/sim/sparsity layers,
+//! so a single-point scenario answers byte-identically to the v1
+//! request it generalizes (v1 `sim`/`plan`/`sparsity` requests desugar
+//! into exactly such specs inside `api::Service`).
 //!
 //! Canonical form: decoding fills every default, and encoding always
 //! emits the full field set (conditional fields — `backend`,
-//! `max_error`, `max_time_ms`, `objective`, `small_n`, `sweep` — only
-//! when applicable), so decode→encode→decode
+//! `device_set`, `max_error`, `max_time_ms`, `objective`, `small_n`,
+//! `sweep` — only when applicable), so decode→encode→decode
 //! is a fixpoint and semantically identical specs collide on one cache
 //! key no matter how they were spelled (`tests/api_protocol.rs`
 //! enforces this). The per-point cache key is the canonical wire form
@@ -28,6 +31,7 @@ use super::protocol::{check_obj_fields, obj, objective_name,
                       usize_field, ApiError, ErrorCode};
 use crate::backend::BackendId;
 use crate::coordinator::Objective;
+use crate::fabric::{DeviceSet, Topology, DEVICE_RANGE};
 use crate::isa::Precision;
 use crate::sim::{KernelDesc, SparsityMode};
 use crate::util::json::Json;
@@ -46,9 +50,9 @@ pub const ITERS_RANGE: (usize, usize) = (1, 10_000);
 /// The payload keys a scenario spec may carry (sorted; shared by the
 /// request decoder and [`ScenarioSpec::from_json`]).
 pub(crate) const SPEC_FIELDS: &[&str] = &[
-    "ask", "backend", "iters", "max_error", "max_time_ms", "n",
-    "objective", "precision", "shape", "small_n", "sparsity", "streams",
-    "sweep",
+    "ask", "backend", "device_set", "iters", "max_error", "max_time_ms",
+    "n", "objective", "precision", "shape", "small_n", "sparsity",
+    "streams", "sweep",
 ];
 
 /// Range check shared by scenario validation (and, transitively, the
@@ -107,6 +111,9 @@ impl Ask {
 }
 
 /// Stream-set composition, built via [`crate::workload::generator`].
+/// The first three shapes are single-APU; the last three place work
+/// across a multi-APU [`DeviceSet`] with Infinity Fabric exchanges
+/// modeled by [`crate::fabric`] (docs/multi_apu.md).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Shape {
     /// `streams` identical kernels (the v1 request shape).
@@ -116,17 +123,35 @@ pub enum Shape {
     ImbalancedPair,
     /// Alternating sparse/dense streams (paper §7.2 "mixed").
     MixedSparse,
+    /// Replicated kernels on every device + an allreduce-style
+    /// gradient exchange each iteration.
+    DataParallel,
+    /// Depth-split stages across devices with inter-stage activation
+    /// relays (classic fill/drain pipelining).
+    Pipeline,
+    /// Row-sharded kernels with a boundary-tile neighbor exchange each
+    /// iteration.
+    Halo,
 }
 
 impl Shape {
-    pub const ALL: [Shape; 3] =
-        [Shape::Homogeneous, Shape::ImbalancedPair, Shape::MixedSparse];
+    pub const ALL: [Shape; 6] = [
+        Shape::Homogeneous,
+        Shape::ImbalancedPair,
+        Shape::MixedSparse,
+        Shape::DataParallel,
+        Shape::Pipeline,
+        Shape::Halo,
+    ];
 
     pub fn as_str(self) -> &'static str {
         match self {
             Shape::Homogeneous => "homogeneous",
             Shape::ImbalancedPair => "imbalanced_pair",
             Shape::MixedSparse => "mixed_sparse",
+            Shape::DataParallel => "data_parallel",
+            Shape::Pipeline => "pipeline",
+            Shape::Halo => "halo",
         }
     }
 
@@ -138,17 +163,31 @@ impl Shape {
     pub fn default_streams(self) -> usize {
         match self {
             Shape::ImbalancedPair => 2,
-            Shape::Homogeneous | Shape::MixedSparse => 4,
+            _ => 4,
         }
+    }
+
+    /// Whether the shape places work across a device set (and so
+    /// accepts `devices > 1`; single-device shapes refuse it). All
+    /// multi-device shapes degrade gracefully to `devices == 1` — no
+    /// transfers, plain single-APU execution — so scaling sweeps can
+    /// anchor at one device.
+    pub fn is_multi_device(self) -> bool {
+        matches!(
+            self,
+            Shape::DataParallel | Shape::Pipeline | Shape::Halo
+        )
     }
 }
 
 /// Optional sweep axes. Empty vectors mean "not swept" (the base value
 /// is the single point on that axis); points expand as the
-/// cross-product in fixed nesting order `n` → `precision` → `streams`
-/// → `iters` (last axis varies fastest).
+/// cross-product in fixed nesting order `devices` → `n` → `precision`
+/// → `streams` → `iters` (last axis varies fastest; `devices` varies
+/// slowest so scaling curves read off in order).
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct Sweep {
+    pub devices: Vec<usize>,
     pub n: Vec<usize>,
     pub precision: Vec<Precision>,
     pub streams: Vec<usize>,
@@ -157,7 +196,8 @@ pub struct Sweep {
 
 impl Sweep {
     pub fn is_empty(&self) -> bool {
-        self.n.is_empty()
+        self.devices.is_empty()
+            && self.n.is_empty()
             && self.precision.is_empty()
             && self.streams.is_empty()
             && self.iters.is_empty()
@@ -166,6 +206,7 @@ impl Sweep {
     /// Cross-product size (each absent axis counts 1).
     pub fn points(&self) -> usize {
         [
+            self.devices.len(),
             self.n.len(),
             self.precision.len(),
             self.streams.len(),
@@ -184,27 +225,44 @@ pub struct Point {
     pub precision: Precision,
     pub streams: usize,
     pub iters: usize,
+    /// Devices running the point (1 unless the spec's `device_set` or
+    /// a `devices` sweep axis says otherwise).
+    pub devices: usize,
 }
 
 impl Point {
-    /// Wire form (`{"iters":..,"n":..,"precision":..,"streams":..}`).
+    /// Wire form (`{"iters":..,"n":..,"precision":..,"streams":..}`,
+    /// plus a leading `"devices"` only when above 1 — single-device
+    /// points keep their pre-fabric bytes).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("iters", Json::Num(self.iters as f64)),
-            ("n", Json::Num(self.n as f64)),
-            (
-                "precision",
-                Json::Str(precision_wire_name(self.precision).into()),
-            ),
-            ("streams", Json::Num(self.streams as f64)),
-        ])
+        let mut fields = Vec::with_capacity(5);
+        if self.devices > 1 {
+            fields.push(("devices", Json::Num(self.devices as f64)));
+        }
+        fields.push(("iters", Json::Num(self.iters as f64)));
+        fields.push(("n", Json::Num(self.n as f64)));
+        fields.push((
+            "precision",
+            Json::Str(precision_wire_name(self.precision).into()),
+        ));
+        fields.push(("streams", Json::Num(self.streams as f64)));
+        Json::obj(fields)
     }
 
     /// Strict decode (client side of `scenario` responses).
     pub(crate) fn from_json(v: &Json, what: &str) -> Result<Point, ApiError> {
         let m = obj(v, what)?;
-        check_obj_fields(m, what, &["iters", "n", "precision", "streams"])?;
+        check_obj_fields(
+            m,
+            what,
+            &["devices", "iters", "n", "precision", "streams"],
+        )?;
         let p = str_field(m, what, "precision")?;
+        let devices = if m.contains_key("devices") {
+            usize_field(m, what, "devices")?
+        } else {
+            1
+        };
         Ok(Point {
             n: usize_field(m, what, "n")?,
             precision: Precision::parse(p).ok_or_else(|| {
@@ -212,6 +270,7 @@ impl Point {
             })?,
             streams: usize_field(m, what, "streams")?,
             iters: usize_field(m, what, "iters")?,
+            devices,
         })
     }
 }
@@ -254,6 +313,11 @@ pub struct ScenarioSpec {
     pub max_time_ms: Option<f64>,
     pub streams: usize,
     pub shape: Shape,
+    /// The APUs answering the point and their Infinity Fabric wiring
+    /// (DESIGN.md §6.11, docs/multi_apu.md). The single-device default
+    /// is omitted from the wire, keeping pre-fabric fixtures
+    /// byte-identical; `devices > 1` requires a multi-device shape.
+    pub device_set: DeviceSet,
     /// Small-kernel size for `imbalanced_pair` (default `n/4`, min 64,
     /// computed per point when absent).
     pub small_n: Option<usize>,
@@ -280,6 +344,7 @@ impl ScenarioSpec {
             max_time_ms: None,
             streams: 4,
             shape: Shape::Homogeneous,
+            device_set: DeviceSet::default(),
             small_n: None,
             objective: if ask == Ask::Plan {
                 Some(Objective::LatencySensitive)
@@ -357,6 +422,27 @@ impl ScenarioSpec {
                 ));
             }
         }
+        check_range(
+            "device_set.devices",
+            self.device_set.devices,
+            DEVICE_RANGE,
+        )?;
+        let multi_device = self.device_set.devices > 1
+            || !self.sweep.devices.is_empty();
+        if multi_device && !self.shape.is_multi_device() {
+            return Err(ApiError::bad_request(format!(
+                "shape {:?} is single-device; devices > 1 (or a devices \
+                 sweep axis) wants shape \
+                 data_parallel|pipeline|halo",
+                self.shape.as_str()
+            )));
+        }
+        if self.shape.is_multi_device() && self.ask != Ask::Sim {
+            return Err(ApiError::bad_request(format!(
+                "multi-device shape {:?} only applies to ask \"sim\"",
+                self.shape.as_str()
+            )));
+        }
         if self.shape == Shape::ImbalancedPair {
             if !self.sweep.streams.is_empty() {
                 return Err(ApiError::bad_request(
@@ -423,6 +509,7 @@ impl ScenarioSpec {
             }
         }
         check_range("iters", p.iters, ITERS_RANGE)?;
+        check_range("devices", p.devices, DEVICE_RANGE)?;
         if let Some(s) = self.small_n {
             check_range("small_n", s, SIZE_RANGE)?;
         }
@@ -442,9 +529,15 @@ impl ScenarioSpec {
     }
 
     /// Expand the sweep cross-product into ordered points (axis nesting
-    /// `n` → `precision` → `streams` → `iters`; absent axes contribute
-    /// the base value). A sweep-less spec expands to one point.
+    /// `devices` → `n` → `precision` → `streams` → `iters`; absent axes
+    /// contribute the base value). A sweep-less spec expands to one
+    /// point.
     pub fn expand(&self) -> Vec<Point> {
+        let ds = if self.sweep.devices.is_empty() {
+            vec![self.device_set.devices]
+        } else {
+            self.sweep.devices.clone()
+        };
         let ns = if self.sweep.n.is_empty() {
             vec![self.n]
         } else {
@@ -466,11 +559,19 @@ impl ScenarioSpec {
             self.sweep.iters.clone()
         };
         let mut out = Vec::with_capacity(self.sweep.points());
-        for &n in &ns {
-            for &precision in &ps {
-                for &streams in &ss {
-                    for &iters in &is {
-                        out.push(Point { n, precision, streams, iters });
+        for &devices in &ds {
+            for &n in &ns {
+                for &precision in &ps {
+                    for &streams in &ss {
+                        for &iters in &is {
+                            out.push(Point {
+                                n,
+                                precision,
+                                streams,
+                                iters,
+                                devices,
+                            });
+                        }
                     }
                 }
             }
@@ -490,6 +591,8 @@ impl ScenarioSpec {
         s.precision = p.precision;
         s.streams = p.streams;
         s.iters = p.iters;
+        s.device_set =
+            DeviceSet::normalized(p.devices, self.device_set.topology);
         s.max_error = None;
         s.max_time_ms = None;
         s.sweep = Sweep::default();
@@ -546,6 +649,38 @@ impl ScenarioSpec {
                 }
                 ks
             }
+            // Multi-device placements are uniform (replica / K-split /
+            // M-shard), so one kernel set describes every device and
+            // the engine replays it once per point.
+            Shape::DataParallel => {
+                overlay(StreamSetSpec::data_parallel_replica(
+                    p.n,
+                    p.precision,
+                    p.streams,
+                    p.iters,
+                ))
+                .kernels
+            }
+            Shape::Pipeline => {
+                overlay(StreamSetSpec::pipeline_stage(
+                    p.n,
+                    p.precision,
+                    p.devices,
+                    p.streams,
+                    p.iters,
+                ))
+                .kernels
+            }
+            Shape::Halo => {
+                overlay(StreamSetSpec::halo_shard(
+                    p.n,
+                    p.precision,
+                    p.devices,
+                    p.streams,
+                    p.iters,
+                ))
+                .kernels
+            }
         }
     }
 
@@ -566,6 +701,23 @@ impl ScenarioSpec {
         fields.push(("ask", Json::Str(self.ask.as_str().into())));
         if let Some(b) = self.backend {
             fields.push(("backend", Json::Str(b.as_str().into())));
+        }
+        if !self.device_set.is_default() {
+            fields.push((
+                "device_set",
+                Json::obj(vec![
+                    (
+                        "devices",
+                        Json::Num(self.device_set.devices as f64),
+                    ),
+                    (
+                        "topology",
+                        Json::Str(
+                            self.device_set.topology.as_str().into(),
+                        ),
+                    ),
+                ]),
+            ));
         }
         fields.push(("iters", Json::Num(self.iters as f64)));
         if let Some(e) = self.max_error {
@@ -590,6 +742,9 @@ impl ScenarioSpec {
         fields.push(("streams", Json::Num(self.streams as f64)));
         if !self.sweep.is_empty() {
             let mut sw = Vec::new();
+            if !self.sweep.devices.is_empty() {
+                sw.push(("devices", usize_arr(&self.sweep.devices)));
+            }
             if !self.sweep.iters.is_empty() {
                 sw.push(("iters", usize_arr(&self.sweep.iters)));
             }
@@ -659,7 +814,8 @@ impl ScenarioSpec {
             Some(s) => Shape::parse(s).ok_or_else(|| {
                 ApiError::bad_request(format!(
                     "{what}: bad shape {s:?} (want \
-                     homogeneous|imbalanced_pair|mixed_sparse)"
+                     homogeneous|imbalanced_pair|mixed_sparse|\
+                     data_parallel|pipeline|halo)"
                 ))
             })?,
         };
@@ -718,6 +874,10 @@ impl ScenarioSpec {
             None => Sweep::default(),
             Some(v) => decode_sweep(v, what)?,
         };
+        let device_set = match m.get("device_set") {
+            None => DeviceSet::default(),
+            Some(v) => decode_device_set(v, what)?,
+        };
         let spec = ScenarioSpec {
             ask,
             backend,
@@ -728,6 +888,7 @@ impl ScenarioSpec {
             max_time_ms,
             streams,
             shape,
+            device_set,
             small_n,
             objective,
             sparsity,
@@ -749,7 +910,7 @@ fn decode_sweep(v: &Json, what: &str) -> Result<Sweep, ApiError> {
     check_obj_fields(
         m,
         &format!("{what}: sweep"),
-        &["iters", "n", "precision", "streams"],
+        &["devices", "iters", "n", "precision", "streams"],
     )?;
     let axis_usize = |key: &str| -> Result<Vec<usize>, ApiError> {
         match m.get(key) {
@@ -791,11 +952,35 @@ fn decode_sweep(v: &Json, what: &str) -> Result<Sweep, ApiError> {
         }
     };
     Ok(Sweep {
+        devices: axis_usize("devices")?,
         n: axis_usize("n")?,
         precision,
         streams: axis_usize("streams")?,
         iters: axis_usize("iters")?,
     })
+}
+
+/// Decode a `"device_set"` object. Both subfields are optional
+/// (`devices` defaults to 1, `topology` to `fully_connected`). The
+/// decoded set is kept as written — `devices:1` with an explicit
+/// topology stays on the wire so a `devices` sweep axis can still
+/// reach it; only the per-point cache form ([`ScenarioSpec::at`])
+/// normalizes single-device sets down to the omitted default.
+fn decode_device_set(v: &Json, what: &str) -> Result<DeviceSet, ApiError> {
+    let what_ds = format!("{what}: \"device_set\"");
+    let m = obj(v, &what_ds)?;
+    check_obj_fields(m, &what_ds, &["devices", "topology"])?;
+    let devices = opt_usize(m, &what_ds, "devices")?.unwrap_or(1);
+    let topology = match opt_str(m, &what_ds, "topology")? {
+        None => Topology::default(),
+        Some(s) => Topology::parse(s).ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "{what_ds}: bad topology {s:?} (want \
+                 fully_connected|ring)"
+            ))
+        })?,
+    };
+    Ok(DeviceSet { devices, topology })
 }
 
 fn axis_arr<'a>(
@@ -1056,7 +1241,8 @@ mod tests {
                 n: 512,
                 precision: Precision::Fp8,
                 streams: 4,
-                iters: 50
+                iters: 50,
+                devices: 1
             }]
         );
     }
@@ -1086,6 +1272,7 @@ mod tests {
             precision: Precision::Fp8,
             streams: 4,
             iters: 50,
+            devices: 1,
         };
         let homog = ScenarioSpec::sim(512, Precision::Fp8, 4);
         let ks = homog.kernels(&p);
@@ -1097,7 +1284,7 @@ mod tests {
         pair.streams = 2;
         pair.n = 2048;
         let pp = Point { n: 2048, precision: Precision::Fp8, streams: 2,
-                         iters: 50 };
+                         iters: 50, devices: 1 };
         let ks = pair.kernels(&pp);
         assert_eq!(ks.len(), 2);
         assert_eq!(ks[0].m, 2048);
@@ -1151,5 +1338,194 @@ mod tests {
         assert_eq!(single.streams, 4);
         // The swept spec at its point equals the equivalent plain spec.
         assert_eq!(single, ScenarioSpec::sim(512, Precision::Fp8, 4));
+    }
+
+    #[test]
+    fn device_set_canonicalizes_and_defaults_stay_omitted() {
+        let v = Json::parse(
+            r#"{"n":512,"shape":"data_parallel","device_set":{"devices":4,"topology":"ring"}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(
+            spec.device_set,
+            DeviceSet { devices: 4, topology: Topology::Ring }
+        );
+        let canonical = spec.to_json().to_string();
+        assert!(
+            canonical.contains(
+                r#""device_set":{"devices":4,"topology":"ring"}"#
+            ),
+            "{canonical}"
+        );
+        let back =
+            ScenarioSpec::from_json(&Json::parse(&canonical).unwrap())
+                .unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string(), canonical, "fixpoint");
+        // The default set stays off the wire, keeping every pre-fabric
+        // fixture byte-identical.
+        let plain = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        assert!(!plain.to_json().to_string().contains("device_set"));
+        // A single-device set with an explicit topology is preserved
+        // as written (a devices sweep axis may still want the
+        // topology) and is its own fixpoint.
+        let line = r#"{"n":512,"shape":"halo","device_set":{"devices":1,"topology":"ring"}}"#;
+        let spec =
+            ScenarioSpec::from_json(&Json::parse(line).unwrap()).unwrap();
+        assert_eq!(spec.device_set.topology, Topology::Ring);
+        let canonical = spec.to_json().to_string();
+        assert!(
+            canonical.contains(
+                r#""device_set":{"devices":1,"topology":"ring"}"#
+            ),
+            "{canonical}"
+        );
+        let back =
+            ScenarioSpec::from_json(&Json::parse(&canonical).unwrap())
+                .unwrap();
+        assert_eq!(back.to_json().to_string(), canonical, "fixpoint");
+        // But the per-point cache form normalizes it away, so its
+        // answer shares a cache entry with the plain spec.
+        let single = spec.at(&spec.expand()[0]);
+        assert!(single.device_set.is_default());
+        assert!(!single.to_json().to_string().contains("device_set"));
+    }
+
+    #[test]
+    fn device_set_validation_is_typed() {
+        // Range: 0 and 5 devices are bad_range.
+        for line in [
+            r#"{"n":512,"shape":"data_parallel","device_set":{"devices":0}}"#,
+            r#"{"n":512,"shape":"data_parallel","device_set":{"devices":5}}"#,
+        ] {
+            let err =
+                ScenarioSpec::from_json(&Json::parse(line).unwrap())
+                    .unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRange, "{line}");
+            assert!(err.message.contains("device_set.devices"), "{err}");
+        }
+        // Unknown topology is bad_request naming the choices.
+        let err = ScenarioSpec::from_json(
+            &Json::parse(
+                r#"{"n":512,"shape":"halo","device_set":{"devices":2,"topology":"torus"}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("fully_connected|ring"), "{err}");
+        // Multi-device wants a multi-device shape...
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"device_set":{"devices":2}}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("single-device"), "{err}");
+        // ...and so does a devices sweep axis, even from a base of 1.
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"sweep":{"devices":[1,2,4]}}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        // Multi-device shapes are sim-only.
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"ask":"plan","n":512,"shape":"pipeline"}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("only applies"), "{err}");
+        // devices=1 on a multi-device shape is the scaling-curve
+        // anchor and is fine.
+        let v = Json::parse(r#"{"n":512,"shape":"data_parallel"}"#)
+            .unwrap();
+        ScenarioSpec::from_json(&v).unwrap();
+    }
+
+    #[test]
+    fn devices_axis_sweeps_outermost_and_at_normalizes() {
+        let v = Json::parse(
+            r#"{"n":512,"shape":"data_parallel","device_set":{"topology":"ring"},"sweep":{"devices":[1,2,4],"streams":[1,2]}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        let points = spec.expand();
+        assert_eq!(points.len(), 6);
+        assert_eq!(
+            points
+                .iter()
+                .map(|p| (p.devices, p.streams))
+                .collect::<Vec<_>>(),
+            vec![(1, 1), (1, 2), (2, 1), (2, 2), (4, 1), (4, 2)]
+        );
+        // at() carries devices + topology into the cache form; the
+        // devices=1 anchor normalizes to the default set so its wire
+        // form matches a plain single-device spec.
+        let d4 = spec.at(&points[4]);
+        assert_eq!(
+            d4.device_set,
+            DeviceSet { devices: 4, topology: Topology::Ring }
+        );
+        let d1 = spec.at(&points[0]);
+        assert!(d1.device_set.is_default());
+        assert!(!d1.to_json().to_string().contains("device_set"));
+        // The canonical sweep emits devices first (alphabetical).
+        let wire = spec.to_json().to_string();
+        assert!(
+            wire.contains(r#""sweep":{"devices":[1,2,4],"streams":[1,2]}"#),
+            "{wire}"
+        );
+    }
+
+    #[test]
+    fn multi_device_kernels_split_by_point_devices() {
+        let v = Json::parse(
+            r#"{"n":512,"shape":"pipeline","device_set":{"devices":4}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        let p = spec.expand()[0];
+        assert_eq!(p.devices, 4);
+        let ks = spec.kernels(&p);
+        assert!(ks.iter().all(|k| k.k == 128 && k.m == 512));
+
+        let v = Json::parse(
+            r#"{"n":512,"shape":"halo","device_set":{"devices":2}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        let ks = spec.kernels(&spec.expand()[0]);
+        assert!(ks.iter().all(|k| k.m == 256 && k.k == 512));
+
+        let v = Json::parse(
+            r#"{"n":512,"shape":"data_parallel","device_set":{"devices":4}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        let ks = spec.kernels(&spec.expand()[0]);
+        assert!(ks.iter().all(|k| k.m == 512 && k.k == 512), "replica");
+    }
+
+    #[test]
+    fn point_wire_form_omits_devices_when_single() {
+        let p = Point {
+            n: 512,
+            precision: Precision::Fp8,
+            streams: 4,
+            iters: 50,
+            devices: 1,
+        };
+        let wire = p.to_json().to_string();
+        assert!(!wire.contains("devices"), "{wire}");
+        assert_eq!(Point::from_json(&Json::parse(&wire).unwrap(), "pt")
+                       .unwrap(), p);
+        let p4 = Point { devices: 4, ..p };
+        let wire = p4.to_json().to_string();
+        assert!(wire.starts_with(r#"{"devices":4,"#), "{wire}");
+        assert_eq!(Point::from_json(&Json::parse(&wire).unwrap(), "pt")
+                       .unwrap(), p4);
     }
 }

@@ -803,6 +803,7 @@ impl Core {
                     fairness: r.fairness,
                     l2_miss: r.l2_miss,
                     lds_util: r.lds_util,
+                    transfer_ms: r.transfer_ms,
                 }
             }
             Ask::Plan => {

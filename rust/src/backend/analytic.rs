@@ -42,6 +42,7 @@ use super::{
 use crate::api::scenario::{Ask, Point, ScenarioSpec, Shape};
 use crate::config::Config;
 use crate::coordinator::expected_fairness;
+use crate::fabric::{compose, DeviceSet, Fabric};
 use crate::hw::lds::lds_utilization;
 use crate::sim::cost::CostModel;
 use crate::sim::{ConcurrencyProfile, Engine, KernelDesc};
@@ -100,7 +101,13 @@ impl Backend for AnalyticBackend {
             description: "calibrated closed forms (cost/occupancy/\
                           sparsity models), no DES stepping",
             asks: &Ask::ALL,
-            sim_shapes: &[Shape::Homogeneous, Shape::MixedSparse],
+            sim_shapes: &[
+                Shape::Homogeneous,
+                Shape::MixedSparse,
+                Shape::DataParallel,
+                Shape::Pipeline,
+                Shape::Halo,
+            ],
             deterministic: true,
             steps_des: false,
         }
@@ -186,7 +193,38 @@ impl Backend for AnalyticBackend {
         // solo speed once the faster streams have drained.
         let sigma = sigma_sum / s as f64;
         let tail_ns = (expected_max_lognormal(sigma, s) - 1.0) * solo_ns;
-        let makespan_ns = base_ns * lane_scale + tail_ns;
+        let mut makespan_ns = base_ns * lane_scale + tail_ns;
+        let mut transfer_ns = 0.0;
+        if p.devices > 1 && spec.shape.is_multi_device() {
+            // The fabric half stays closed-form: the link-saturation
+            // collective formulas at the calibrated anchors, composed
+            // with the compute estimate under the exact overlap model
+            // the DES uses — so the multi-device equivalence gap is the
+            // compute estimate's alone.
+            let fabric = Fabric::for_set(DeviceSet::normalized(
+                p.devices,
+                spec.device_set.topology,
+            ));
+            let bytes = Fabric::shape_bytes(
+                spec.shape,
+                p.n,
+                p.precision.bytes(),
+            );
+            let round_ns = match spec.shape {
+                Shape::DataParallel => fabric.allreduce_ns(bytes),
+                Shape::Pipeline => fabric.stage_ns(bytes),
+                _ => fabric.halo_ns(bytes),
+            };
+            let c = compose(
+                spec.shape,
+                p.devices,
+                makespan_ns,
+                p.iters,
+                round_ns,
+            );
+            makespan_ns = c.makespan_ns;
+            transfer_ns = c.transfer_ns;
+        }
         SimResult {
             makespan_ms: makespan_ns / 1e6,
             speedup_vs_serial: serial_ns / makespan_ns,
@@ -195,6 +233,7 @@ impl Backend for AnalyticBackend {
             // Identical model calls to the DES report path: exact match.
             l2_miss: l2.miss_ratio(ks[0].working_set(), s),
             lds_util: lds_sat,
+            transfer_ms: transfer_ns / 1e6,
         }
     }
 
@@ -281,5 +320,42 @@ mod tests {
     #[test]
     fn deterministic_per_config() {
         assert_eq!(sim_at(1024, 4), sim_at(1024, 4));
+    }
+
+    #[test]
+    fn multi_device_closed_forms_expose_growing_transfer_share() {
+        use crate::fabric::{DeviceSet, Topology};
+        use crate::util::json::Json;
+        let cfg = Config::mi300a();
+        for topology in Topology::ALL {
+            let mut spec = ScenarioSpec::from_json(
+                &Json::parse(r#"{"n":512,"shape":"data_parallel"}"#)
+                    .unwrap(),
+            )
+            .unwrap();
+            let mut prev = -1.0;
+            for devices in 1..=4 {
+                spec.device_set = DeviceSet::normalized(devices, topology);
+                let p = spec.expand()[0];
+                let r = AnalyticBackend.simulate(&cfg, &spec, &p);
+                let share = r.transfer_ms / r.makespan_ms;
+                assert!(
+                    share > prev,
+                    "{topology:?} d={devices}: {share} !> {prev}"
+                );
+                prev = share;
+            }
+        }
+        // devices=1 on a multi-device shape stays the plain answer.
+        let dp = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"shape":"data_parallel"}"#).unwrap(),
+        )
+        .unwrap();
+        let a = AnalyticBackend.simulate(&cfg, &dp, &dp.expand()[0]);
+        assert_eq!(a.transfer_ms, 0.0);
+        let homog = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        let b =
+            AnalyticBackend.simulate(&cfg, &homog, &homog.expand()[0]);
+        assert_eq!(a, b);
     }
 }

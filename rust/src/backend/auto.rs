@@ -75,6 +75,14 @@ impl TrustTable {
         if spec.shape == Shape::ImbalancedPair {
             return BackendId::Des;
         }
+        // Multi-device points route to replay until the fabric
+        // calibration corpus (tests/trust_table.rs) grows enough
+        // history to trust the closed-form composition under
+        // contention. Single-device points on multi-device shapes are
+        // plain single-APU sets and stay inside the envelope.
+        if p.devices > 1 {
+            return BackendId::Des;
+        }
         // High-contention corners fall outside the measured envelope.
         if p.streams > TRUST_MAX_STREAMS {
             return BackendId::Des;
@@ -166,7 +174,8 @@ mod tests {
     use crate::sim::SparsityMode;
 
     fn point(n: usize, streams: usize) -> Point {
-        Point { n, precision: Precision::Fp8, streams, iters: 50 }
+        Point { n, precision: Precision::Fp8, streams, iters: 50,
+                devices: 1 }
     }
 
     #[test]
@@ -205,6 +214,20 @@ mod tests {
             TrustTable::route(&pair, &point(2048, 2)),
             BackendId::Des
         );
+        // Multi-device points are replay; their single-device scaling
+        // anchor stays on the fast path.
+        let mut dp = ScenarioSpec::new(Ask::Sim);
+        dp.shape = Shape::DataParallel;
+        let d4 = Point { devices: 4, ..point(512, 4) };
+        assert_eq!(TrustTable::route(&dp, &d4), BackendId::Des);
+        assert_eq!(
+            TrustTable::route(&dp, &point(512, 4)),
+            BackendId::Analytic
+        );
+        // ...and DES-routed multi-device points are fully trusted (no
+        // refinement candidacy).
+        assert_eq!(TrustTable::confidence(&dp, &d4), 1.0);
+        assert!(!TrustTable::wants_refinement(&dp, &d4));
     }
 
     #[test]

@@ -12,8 +12,9 @@ use super::{
 };
 use crate::api::scenario::{Ask, Point, ScenarioSpec, Shape};
 use crate::config::Config;
+use crate::fabric::{compose, DeviceSet, Fabric};
 use crate::metrics::fairness::fairness;
-use crate::sim::{ConcurrencyProfile, Engine};
+use crate::sim::{ConcurrencyProfile, Engine, FabricSim};
 
 /// The reference engine: replay the dynamics, event by event.
 pub struct DesBackend;
@@ -41,17 +42,55 @@ impl Backend for DesBackend {
         let engine = Engine::new(cfg, ConcurrencyProfile::ace());
         // One concurrent simulation per point: the speedup derives from
         // this run plus the (much cheaper) serial solo makespans instead
-        // of re-simulating the set.
+        // of re-simulating the set. Multi-device placements are uniform
+        // (replica / K-split / M-shard), so this single run is every
+        // device's compute.
         let run = engine.run(&ks, cfg.seed);
-        let speedup =
-            engine.serial_makespan_ns(&ks, cfg.seed) / run.makespan_ns;
+        let serial_ns = engine.serial_makespan_ns(&ks, cfg.seed);
+        let mut makespan_ns = run.makespan_ns;
+        let mut transfer_ns = 0.0;
+        if p.devices > 1 && spec.shape.is_multi_device() {
+            // Step the shape's per-iteration exchange as first-class
+            // fabric events (processor sharing over links + egress
+            // ports, the ACE machinery's twin in `sim::fabric`), then
+            // compose it with the compute under the same overlap model
+            // the analytic backend uses.
+            let fabric = Fabric::for_set(DeviceSet::normalized(
+                p.devices,
+                spec.device_set.topology,
+            ));
+            let bytes = Fabric::shape_bytes(
+                spec.shape,
+                p.n,
+                p.precision.bytes(),
+            );
+            let sched = fabric.shape_schedule(spec.shape, bytes);
+            let stepped = FabricSim::new(fabric).run_schedule(&sched);
+            // The pipeline schedule chains one relay per stage
+            // boundary; compose wants the single-boundary relay.
+            let round_ns = if spec.shape == Shape::Pipeline {
+                stepped.elapsed_ns / (p.devices - 1) as f64
+            } else {
+                stepped.elapsed_ns
+            };
+            let c = compose(
+                spec.shape,
+                p.devices,
+                run.makespan_ns,
+                p.iters,
+                round_ns,
+            );
+            makespan_ns = c.makespan_ns;
+            transfer_ns = c.transfer_ns;
+        }
         SimResult {
-            makespan_ms: run.makespan_ns / 1e6,
-            speedup_vs_serial: speedup,
+            makespan_ms: makespan_ns / 1e6,
+            speedup_vs_serial: serial_ns / makespan_ns,
             overlap_efficiency: run.overlap_efficiency,
             fairness: fairness(&run.per_stream_totals()),
             l2_miss: run.l2_miss[0],
             lds_util: run.lds_util,
+            transfer_ms: transfer_ns / 1e6,
         }
     }
 
@@ -101,6 +140,57 @@ mod tests {
         let p = spec.expand()[0];
         let a = DesBackend.simulate(&cfg, &spec, &p);
         let b = DesBackend.simulate(&cfg, &spec, &p);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn multi_device_points_pay_fabric_time_monotonically() {
+        use crate::fabric::DeviceSet;
+        use crate::util::json::Json;
+        let cfg = Config::mi300a();
+        let mut spec = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"shape":"data_parallel"}"#).unwrap(),
+        )
+        .unwrap();
+        let mut prev_share = -1.0;
+        for devices in 1..=4 {
+            spec.device_set = DeviceSet::normalized(
+                devices,
+                spec.device_set.topology,
+            );
+            let p = spec.expand()[0];
+            assert_eq!(p.devices, devices);
+            let r = DesBackend.simulate(&cfg, &spec, &p);
+            let share = r.transfer_ms / r.makespan_ms;
+            assert!(
+                share > prev_share,
+                "d={devices}: transfer share {share} !> {prev_share}"
+            );
+            if devices == 1 {
+                assert_eq!(r.transfer_ms, 0.0, "one device, no fabric");
+            } else {
+                assert!(r.transfer_ms > 0.0);
+                assert!(r.makespan_ms > r.transfer_ms);
+            }
+            prev_share = share;
+        }
+    }
+
+    #[test]
+    fn single_device_multi_shape_matches_homogeneous() {
+        // devices=1 on data_parallel is the scaling anchor: the replica
+        // placement equals the homogeneous set, so the answer must be
+        // the plain single-APU one (no fabric terms at all).
+        use crate::util::json::Json;
+        let cfg = Config::mi300a();
+        let dp = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"shape":"data_parallel"}"#).unwrap(),
+        )
+        .unwrap();
+        let p = dp.expand()[0];
+        let a = DesBackend.simulate(&cfg, &dp, &p);
+        let homog = ScenarioSpec::sim(512, Precision::Fp8, 4);
+        let b = DesBackend.simulate(&cfg, &homog, &homog.expand()[0]);
         assert_eq!(a, b);
     }
 }

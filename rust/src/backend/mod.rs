@@ -172,6 +172,9 @@ pub struct SimResult {
     pub fairness: f64,
     pub l2_miss: f64,
     pub lds_util: f64,
+    /// Unhidden Infinity Fabric transfer time (`crate::fabric`);
+    /// exactly 0 on single-device points.
+    pub transfer_ms: f64,
 }
 
 /// One scheduled group inside a [`PlanResult`].
@@ -333,6 +336,11 @@ mod tests {
         assert!(analytic.supports(Ask::Sim, Shape::Homogeneous));
         assert!(analytic.supports(Ask::Sim, Shape::MixedSparse));
         assert!(!analytic.supports(Ask::Sim, Shape::ImbalancedPair));
+        // The multi-device shapes are closed-form on the comm side
+        // (link-saturation bounds), so analytic answers them too.
+        assert!(analytic.supports(Ask::Sim, Shape::DataParallel));
+        assert!(analytic.supports(Ask::Sim, Shape::Pipeline));
+        assert!(analytic.supports(Ask::Sim, Shape::Halo));
         // Plan/sparsity are shape-complete on every backend.
         for shape in Shape::ALL {
             assert!(analytic.supports(Ask::Plan, shape));

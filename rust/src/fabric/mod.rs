@@ -1,0 +1,578 @@
+//! Inter-APU Infinity Fabric model (DESIGN.md §6.11).
+//!
+//! The paper characterizes one MI300A; production MI300A nodes are four
+//! APUs on Infinity Fabric (xGMI). This subsystem models that node
+//! level: a [`Topology`] over 1–4 devices, a per-link latency/bandwidth
+//! cost model calibrated against the PAPERS.md deep-dive ("Inter-APU
+//! Communication on AMD MI300A Systems via Infinity Fabric"), and
+//! contention accounting over two resource classes — **directed links**
+//! (one per ordered device pair in `fully_connected`, ring edges in
+//! `ring`) and **egress ports** (each APU's aggregate outbound fabric
+//! bandwidth is capped at one link's worth, which is what makes a
+//! direct all-to-all exchange serialize per sender).
+//!
+//! Two consumers, one calibration:
+//!
+//! * the **analytic** backend evaluates the closed-form link-saturation
+//!   formulas here ([`Fabric::allreduce_ns`], [`Fabric::stage_ns`],
+//!   [`Fabric::halo_ns`]) — `time = step latency + saturated-resource
+//!   bytes / link bandwidth`;
+//! * the **DES** backend steps the same transfer schedules as
+//!   first-class events through [`crate::sim::fabric::FabricSim`]
+//!   (processor sharing over links + egress ports, mirroring the
+//!   engine's ACE machinery). On the uniform collective schedules the
+//!   two agree exactly, so the DES/analytic equivalence gap on
+//!   multi-device points comes from the *compute* estimate alone.
+//!
+//! The compute/communication overlap composition shared by both
+//! backends lives in [`compose`]: per-round exchanges are
+//! double-buffered against the next round's compute (the same
+//! async-queue overlap story the ACE profile models for kernels), and
+//! pipeline stage relays fill and drain like a classic linear pipeline.
+
+use crate::api::scenario::Shape;
+
+/// Devices per node: MI300A ships in quad-APU nodes, and the
+/// calibration source only anchors up to four endpoints.
+pub const MAX_DEVICES: usize = 4;
+
+/// Accepted `device_set.devices` range (shared with scenario
+/// validation, like the other `check_range` bounds).
+pub const DEVICE_RANGE: (usize, usize) = (1, MAX_DEVICES);
+
+/// Sustained per-link (and per-egress-port) Infinity Fabric bandwidth,
+/// in bytes/ns (= GB/s). Calibration anchor: the PAPERS.md deep-dive
+/// measures ~48 GB/s sustained unidirectional peer bandwidth per xGMI
+/// link on quad-APU MI300A nodes.
+pub const LINK_BYTES_PER_NS: f64 = 48.0;
+
+/// Small-transfer link latency in ns. Calibration anchor: the deep-dive
+/// reports ~1.9 µs end-to-end latency for small peer-to-peer copies.
+pub const LINK_LATENCY_NS: f64 = 1_900.0;
+
+/// Link topology of a device set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Every device pair owns a direct link (the MI300A quad-node
+    /// wiring); senders are still serialized by their egress port.
+    FullyConnected,
+    /// Devices form a cycle; only adjacent pairs are linked, so
+    /// collectives pay one latency step per hop.
+    Ring,
+}
+
+impl Topology {
+    pub const ALL: [Topology; 2] = [Topology::FullyConnected, Topology::Ring];
+
+    /// Wire spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Topology::FullyConnected => "fully_connected",
+            Topology::Ring => "ring",
+        }
+    }
+
+    /// Inverse of [`Topology::as_str`].
+    pub fn parse(s: &str) -> Option<Topology> {
+        Topology::ALL.iter().copied().find(|t| t.as_str() == s)
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Topology {
+        Topology::FullyConnected
+    }
+}
+
+/// The `device_set` dimension of a scenario: how many APUs run the
+/// point and how they are wired. The default (one device, the default
+/// topology) is the pre-fabric single-APU world and is omitted from the
+/// wire entirely, keeping every pre-fabric fixture byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceSet {
+    pub devices: usize,
+    pub topology: Topology,
+}
+
+impl Default for DeviceSet {
+    fn default() -> DeviceSet {
+        DeviceSet { devices: 1, topology: Topology::default() }
+    }
+}
+
+impl DeviceSet {
+    /// Canonicalizing constructor: topology is meaningless with one
+    /// device, so `devices == 1` normalizes to the default topology
+    /// (decode→encode→decode stays a fixpoint, and a `devices:[1,..]`
+    /// sweep's single-device point cache-collides with the equivalent
+    /// plain spec).
+    pub fn normalized(devices: usize, topology: Topology) -> DeviceSet {
+        if devices <= 1 {
+            DeviceSet { devices, topology: Topology::default() }
+        } else {
+            DeviceSet { devices, topology }
+        }
+    }
+
+    /// Whether this is the single-APU default (omitted from the wire).
+    pub fn is_default(self) -> bool {
+        self == DeviceSet::default()
+    }
+}
+
+/// One point-to-point copy over the fabric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+}
+
+/// A device set's wired fabric: the topology instantiated with the
+/// calibrated link cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct Fabric {
+    pub devices: usize,
+    pub topology: Topology,
+    pub latency_ns: f64,
+    pub bytes_per_ns: f64,
+}
+
+impl Fabric {
+    /// Build the node fabric for a device set at the calibrated
+    /// anchors.
+    pub fn for_set(ds: DeviceSet) -> Fabric {
+        Fabric {
+            devices: ds.devices,
+            topology: ds.topology,
+            latency_ns: LINK_LATENCY_NS,
+            bytes_per_ns: LINK_BYTES_PER_NS,
+        }
+    }
+
+    /// Hop count between two devices (1 everywhere in
+    /// `fully_connected`; minimal ring distance in `ring`).
+    pub fn hops(&self, src: usize, dst: usize) -> usize {
+        if src == dst {
+            return 0;
+        }
+        match self.topology {
+            Topology::FullyConnected => 1,
+            Topology::Ring => {
+                let d = self.devices;
+                let fwd = (dst + d - src) % d;
+                fwd.min(d - fwd)
+            }
+        }
+    }
+
+    /// Directed links in the topology.
+    pub fn link_count(&self) -> usize {
+        let d = self.devices;
+        if d <= 1 {
+            return 0;
+        }
+        match self.topology {
+            Topology::FullyConnected => d * (d - 1),
+            // d == 2 degenerates to one bidirectional pair (2 directed
+            // links), otherwise 2 directed links per ring edge.
+            Topology::Ring => {
+                if d == 2 {
+                    2
+                } else {
+                    2 * d
+                }
+            }
+        }
+    }
+
+    /// Uncontended single-hop transfer time.
+    pub fn transfer_ns(&self, bytes: f64) -> f64 {
+        self.latency_ns + bytes / self.bytes_per_ns
+    }
+
+    /// The contention resources a transfer occupies, as stable indices:
+    /// `0..devices` are egress ports, the rest directed links. Shared
+    /// by the closed-form saturation bound and the DES event stepper in
+    /// [`crate::sim::fabric`], so both account contention identically.
+    pub fn resources(&self, t: &Transfer) -> Vec<usize> {
+        let d = self.devices;
+        let mut out = Vec::with_capacity(3);
+        if t.src == t.dst || d <= 1 {
+            return out;
+        }
+        out.push(t.src);
+        match self.topology {
+            Topology::FullyConnected => {
+                out.push(d + t.src * d + t.dst);
+            }
+            Topology::Ring => {
+                let fwd = (t.dst + d - t.src) % d;
+                let go_fwd = fwd <= d - fwd;
+                let mut at = t.src;
+                while at != t.dst {
+                    let (edge, dir) = if go_fwd {
+                        (at, 0)
+                    } else {
+                        ((at + d - 1) % d, 1)
+                    };
+                    out.push(d + edge * 2 + dir);
+                    at = if go_fwd {
+                        (at + 1) % d
+                    } else {
+                        (at + d - 1) % d
+                    };
+                }
+            }
+        }
+        out
+    }
+
+    /// Generic link-saturation bound for one synchronized round of
+    /// transfers: latency for the deepest path plus the busiest
+    /// resource's bytes at link bandwidth. Resources are directed ring
+    /// edges (each hop of a routed transfer loads every edge it
+    /// crosses) plus each source's egress port. This is the closed
+    /// form the collective formulas below specialize — and what
+    /// `sim::fabric` reproduces by stepping events.
+    pub fn round_ns(&self, transfers: &[Transfer]) -> f64 {
+        if self.devices <= 1 || transfers.is_empty() {
+            return 0.0;
+        }
+        let d = self.devices;
+        // Egress ports (d) + directed edges. Fully connected: d*(d-1)
+        // pair slots; ring: 2 directions x d edges (index by start
+        // device and direction).
+        let mut egress = vec![0.0f64; d];
+        let mut link = vec![0.0f64; d * d.max(2) * 2];
+        let mut max_hops = 0usize;
+        for t in transfers {
+            if t.src == t.dst {
+                continue;
+            }
+            egress[t.src] += t.bytes;
+            max_hops = max_hops.max(self.hops(t.src, t.dst));
+            match self.topology {
+                Topology::FullyConnected => {
+                    link[t.src * d + t.dst] += t.bytes;
+                }
+                Topology::Ring => {
+                    // Route the minimal way around; ties go forward.
+                    let fwd = (t.dst + d - t.src) % d;
+                    let go_fwd = fwd <= d - fwd;
+                    let mut at = t.src;
+                    while at != t.dst {
+                        let (edge, dir) = if go_fwd {
+                            (at, 0)
+                        } else {
+                            ((at + d - 1) % d, 1)
+                        };
+                        link[edge * 2 + dir] += t.bytes;
+                        at = if go_fwd { (at + 1) % d } else { (at + d - 1) % d };
+                    }
+                }
+            }
+        }
+        let busiest = egress
+            .iter()
+            .chain(link.iter())
+            .cloned()
+            .fold(0.0f64, f64::max);
+        max_hops as f64 * self.latency_ns + busiest / self.bytes_per_ns
+    }
+
+    /// Closed-form allreduce of `bytes` across the set (the
+    /// `data_parallel` per-round exchange). Bandwidth-optimal
+    /// schedules move `2(d-1)/d x bytes` through every device's
+    /// bottleneck resource on either topology; the latency term is
+    /// what the topology changes — 2 synchronized phases
+    /// (reduce-scatter + allgather, chunks fanned over direct links)
+    /// in `fully_connected`, `2(d-1)` neighbor steps in `ring`.
+    pub fn allreduce_ns(&self, bytes: f64) -> f64 {
+        let d = self.devices as f64;
+        if self.devices <= 1 {
+            return 0.0;
+        }
+        let steps = match self.topology {
+            Topology::FullyConnected => 2.0,
+            Topology::Ring => 2.0 * (d - 1.0),
+        };
+        steps * self.latency_ns
+            + 2.0 * (d - 1.0) / d * bytes / self.bytes_per_ns
+    }
+
+    /// Closed-form inter-stage activation relay (the `pipeline`
+    /// per-iteration handoff): adjacent stages are direct neighbors on
+    /// both topologies, one hop each.
+    pub fn stage_ns(&self, bytes: f64) -> f64 {
+        if self.devices <= 1 {
+            return 0.0;
+        }
+        self.transfer_ns(bytes)
+    }
+
+    /// Closed-form halo exchange (the `halo` per-iteration neighbor
+    /// round): every device swaps `bytes` with each ring neighbor
+    /// (adjacent on both topologies, one hop). Sends to both
+    /// neighbors serialize on the egress port; receives land in
+    /// parallel. Two devices have a single neighbor.
+    pub fn halo_ns(&self, bytes: f64) -> f64 {
+        if self.devices <= 1 {
+            return 0.0;
+        }
+        let neighbors = if self.devices == 2 { 1.0 } else { 2.0 };
+        self.latency_ns + neighbors * bytes / self.bytes_per_ns
+    }
+
+    /// The per-iteration exchange the shape performs, as an explicit
+    /// transfer schedule (what the DES steps). Each inner `Vec` is one
+    /// synchronized step; steps run back to back.
+    pub fn shape_schedule(
+        &self,
+        shape: Shape,
+        bytes: f64,
+    ) -> Vec<Vec<Transfer>> {
+        let d = self.devices;
+        if d <= 1 {
+            return Vec::new();
+        }
+        match shape {
+            Shape::DataParallel => match self.topology {
+                // Direct reduce-scatter + allgather: two steps, every
+                // device fans bytes/d chunks to every peer.
+                Topology::FullyConnected => {
+                    let chunk = bytes / d as f64;
+                    let phase: Vec<Transfer> = (0..d)
+                        .flat_map(|s| {
+                            (0..d).filter(move |&t| t != s).map(move |t| {
+                                Transfer { src: s, dst: t, bytes: chunk }
+                            })
+                        })
+                        .collect();
+                    vec![phase.clone(), phase]
+                }
+                // Ring allreduce: 2(d-1) steps of neighbor chunk
+                // rotations.
+                Topology::Ring => {
+                    let chunk = bytes / d as f64;
+                    let step: Vec<Transfer> = (0..d)
+                        .map(|s| Transfer {
+                            src: s,
+                            dst: (s + 1) % d,
+                            bytes: chunk,
+                        })
+                        .collect();
+                    vec![step; 2 * (d - 1)]
+                }
+            },
+            // One activation handoff per stage boundary, relayed in
+            // stage order (stage i feeds stage i+1 the same tick its
+            // iteration retires, so the steps chain).
+            Shape::Pipeline => (0..d - 1)
+                .map(|s| vec![Transfer { src: s, dst: s + 1, bytes }])
+                .collect(),
+            // One synchronized neighbor round.
+            Shape::Halo => {
+                let mut step = Vec::new();
+                for s in 0..d {
+                    step.push(Transfer { src: s, dst: (s + 1) % d, bytes });
+                    if d > 2 {
+                        step.push(Transfer {
+                            src: s,
+                            dst: (s + d - 1) % d,
+                            bytes,
+                        });
+                    }
+                }
+                vec![step]
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// The per-iteration exchange payload for a shape at kernel size
+    /// `n` and element size `elem_bytes`: gradients (f32 accumulators,
+    /// the full output) for `data_parallel`, an activation matrix at
+    /// the compute precision for `pipeline`, one macro-tile row of
+    /// boundary per neighbor for `halo`.
+    pub fn shape_bytes(shape: Shape, n: usize, elem_bytes: usize) -> f64 {
+        match shape {
+            Shape::DataParallel => (n * n) as f64 * 4.0,
+            Shape::Pipeline => (n * n * elem_bytes) as f64,
+            Shape::Halo => {
+                let tile = crate::hw::lds::gemm_macro_tile(n);
+                (tile * n * elem_bytes) as f64
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// A composed multi-device answer: total makespan plus the exposed
+/// (non-overlapped) communication inside it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Composed {
+    pub makespan_ns: f64,
+    pub transfer_ns: f64,
+}
+
+/// Fold per-device compute and the per-iteration exchange into the
+/// node-level makespan. `compute_ns` is one device's makespan over all
+/// `iters` iterations of its (replicated or split) kernel set;
+/// `round_ns` is one iteration's exchange.
+///
+/// * `data_parallel` / `halo`: exchanges are double-buffered against
+///   the next iteration's compute (the ACE async-queue overlap story),
+///   so each of the first `iters-1` rounds exposes only its excess
+///   over an iteration of compute, and the final round is fully
+///   exposed.
+/// * `pipeline`: a classic linear pipeline — fill through `d` stages
+///   and `d-1` relays, then drain one iteration per period, where the
+///   period is the slower of compute-per-iteration and the relay.
+pub fn compose(
+    shape: Shape,
+    devices: usize,
+    compute_ns: f64,
+    iters: usize,
+    round_ns: f64,
+) -> Composed {
+    if devices <= 1 || round_ns <= 0.0 {
+        return Composed { makespan_ns: compute_ns, transfer_ns: 0.0 };
+    }
+    let iters = iters.max(1) as f64;
+    let per_iter = compute_ns / iters;
+    match shape {
+        Shape::Pipeline => {
+            let d = devices as f64;
+            let period = per_iter.max(round_ns);
+            let makespan_ns = d * per_iter
+                + (d - 1.0) * round_ns
+                + (iters - 1.0) * period;
+            // Exposed comm = everything past the compute-only pipeline
+            // ((d-1) extra stage fills + one iteration per drain step).
+            let compute_only = (d - 1.0) * per_iter + compute_ns;
+            Composed {
+                makespan_ns,
+                transfer_ns: makespan_ns - compute_only,
+            }
+        }
+        _ => {
+            let exposed = round_ns
+                + (iters - 1.0) * (round_ns - per_iter).max(0.0);
+            Composed {
+                makespan_ns: compute_ns + exposed,
+                transfer_ns: exposed,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(devices: usize, topology: Topology) -> Fabric {
+        Fabric::for_set(DeviceSet { devices, topology })
+    }
+
+    #[test]
+    fn topology_spellings_roundtrip() {
+        for t in Topology::ALL {
+            assert_eq!(Topology::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(Topology::parse("mesh"), None);
+        assert!(DeviceSet::default().is_default());
+        assert!(
+            DeviceSet::normalized(1, Topology::Ring).is_default(),
+            "one device normalizes away its topology"
+        );
+        assert!(!DeviceSet::normalized(2, Topology::Ring).is_default());
+    }
+
+    #[test]
+    fn hops_and_links_match_the_wiring() {
+        let fc = fabric(4, Topology::FullyConnected);
+        assert_eq!(fc.hops(0, 3), 1);
+        assert_eq!(fc.link_count(), 12);
+        let ring = fabric(4, Topology::Ring);
+        assert_eq!(ring.hops(0, 1), 1);
+        assert_eq!(ring.hops(0, 2), 2);
+        assert_eq!(ring.hops(0, 3), 1, "minimal distance wraps");
+        assert_eq!(ring.link_count(), 8);
+        assert_eq!(fabric(2, Topology::Ring).link_count(), 2);
+        assert_eq!(fabric(1, Topology::Ring).link_count(), 0);
+    }
+
+    #[test]
+    fn allreduce_cost_grows_monotonically_with_devices() {
+        let bytes = 512.0 * 512.0 * 4.0;
+        for t in Topology::ALL {
+            let mut prev = 0.0;
+            for d in 1..=MAX_DEVICES {
+                let ns = fabric(d, t).allreduce_ns(bytes);
+                assert!(
+                    ns > prev || d == 1,
+                    "{t:?} d={d}: {ns} !> {prev}"
+                );
+                prev = ns;
+            }
+        }
+        // The ring pays more latency steps than the direct exchange,
+        // never less bandwidth.
+        assert!(
+            fabric(4, Topology::Ring).allreduce_ns(bytes)
+                > fabric(4, Topology::FullyConnected).allreduce_ns(bytes)
+        );
+    }
+
+    #[test]
+    fn closed_forms_match_the_saturation_bound_on_their_schedules() {
+        let bytes = 1.5e6;
+        for t in Topology::ALL {
+            for d in 2..=MAX_DEVICES {
+                let f = fabric(d, t);
+                let sched = f.shape_schedule(Shape::DataParallel, bytes);
+                let stepped: f64 =
+                    sched.iter().map(|s| f.round_ns(s)).sum();
+                let closed = f.allreduce_ns(bytes);
+                assert!(
+                    (stepped - closed).abs() < 1e-6 * closed,
+                    "{t:?} d={d}: stepped {stepped} vs closed {closed}"
+                );
+                let halo = f.shape_schedule(Shape::Halo, bytes);
+                let stepped: f64 =
+                    halo.iter().map(|s| f.round_ns(s)).sum();
+                let closed = f.halo_ns(bytes);
+                assert!(
+                    (stepped - closed).abs() < 1e-6 * closed,
+                    "halo {t:?} d={d}: {stepped} vs {closed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compose_exposes_only_the_comm_excess() {
+        // Comm fully hidden behind compute: only the last round shows.
+        let c = compose(Shape::DataParallel, 4, 1000.0, 10, 50.0);
+        assert_eq!(c.transfer_ns, 50.0);
+        assert_eq!(c.makespan_ns, 1050.0);
+        // Comm-bound: every round exposes its excess.
+        let c = compose(Shape::DataParallel, 4, 1000.0, 10, 150.0);
+        assert!((c.transfer_ns - (150.0 + 9.0 * 50.0)).abs() < 1e-9);
+        // One device is the identity.
+        let c = compose(Shape::DataParallel, 1, 1000.0, 10, 150.0);
+        assert_eq!(c.makespan_ns, 1000.0);
+        assert_eq!(c.transfer_ns, 0.0);
+    }
+
+    #[test]
+    fn pipeline_compose_fills_and_drains() {
+        // 4 stages, 10 iters, relay cheaper than a stage iteration:
+        // makespan = 4*100 + 3*20 + 9*100.
+        let c = compose(Shape::Pipeline, 4, 1000.0, 10, 20.0);
+        assert!((c.makespan_ns - (400.0 + 60.0 + 900.0)).abs() < 1e-9);
+        assert!(c.transfer_ns > 0.0);
+        assert!(c.makespan_ns > 1000.0);
+    }
+}

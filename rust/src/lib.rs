@@ -35,6 +35,10 @@
 //!   a coordinator speaks the same v1 protocol and consistent-hashes
 //!   sweep points across a static worker set over [`api::Client`]
 //!   connections (docs/cluster.md).
+//! * [`fabric`] — the multi-APU Infinity Fabric model (DESIGN.md
+//!   §6.11): link topology, calibrated latency/bandwidth costs,
+//!   contention accounting, and the compute/communication overlap
+//!   composition behind `device_set` scenarios (docs/multi_apu.md).
 
 pub mod api;
 pub mod backend;
@@ -42,6 +46,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fabric;
 pub mod hw;
 pub mod isa;
 pub mod loadgen;

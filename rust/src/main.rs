@@ -49,10 +49,13 @@ USAGE:
                    [--backend des|analytic|auto]
   mi300a-char scenario [--spec FILE] [--ask sim|plan|sparsity]
                    [--size N] [--precision P] [--streams N] [--iters N]
-                   [--shape homogeneous|imbalanced_pair|mixed_sparse]
+                   [--shape homogeneous|imbalanced_pair|mixed_sparse|
+                            data_parallel|pipeline|halo]
+                   [--devices N] [--topology fully_connected|ring]
                    [--small-size N] [--objective O] [--sparsity MODE]
                    [--sweep-size A,B,..] [--sweep-streams A,B,..]
                    [--sweep-precision A,B,..] [--sweep-iters A,B,..]
+                   [--sweep-devices A,B,..]
                    [--backend des|analytic|auto] [--max-error X]
                    [--max-time-ms N] [--json] [--addr HOST:PORT]
   mi300a-char serve [--addr HOST:PORT] [--max-conns N] [--no-cache]
@@ -94,6 +97,11 @@ Cluster mode (DESIGN.md §6.9, docs/cluster.md): a coordinator speaks the
 same protocol and consistent-hashes sweep points across plain serve
 workers, so `scenario --addr` and `loadgen --addr` work unchanged:
   mi300a-char serve --addr 127.0.0.1:7400 --coordinator --workers 127.0.0.1:7301,127.0.0.1:7302
+Multi-APU device sets (DESIGN.md §6.11, docs/multi_apu.md): the
+data_parallel/pipeline/halo shapes place work across 1-4 APUs with the
+Infinity Fabric transfer model; sim answers grow a transfer_ms field:
+  mi300a-char scenario --shape data_parallel --size 512 --sweep-devices 1,2,3,4
+  mi300a-char scenario --shape pipeline --devices 4 --topology ring --sweep-size 512,1024,2048
 ";
 
 /// Parse an optional `--backend` flag into a [`BackendId`], with the
@@ -369,7 +377,8 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
         Shape::parse(args.get_or("shape", "homogeneous")).ok_or_else(|| {
             format!(
                 "unknown shape {:?} (want \
-                 homogeneous|imbalanced_pair|mixed_sparse)",
+                 homogeneous|imbalanced_pair|mixed_sparse|\
+                 data_parallel|pipeline|halo)",
                 args.get_or("shape", "homogeneous")
             )
         })?;
@@ -378,6 +387,16 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
     spec.streams = args.get_usize("streams", shape.default_streams());
     spec.n = args.get_usize("size", spec.n);
     spec.iters = args.get_usize("iters", spec.iters);
+    spec.device_set.devices =
+        args.get_usize("devices", spec.device_set.devices);
+    if let Some(t) = args.get("topology") {
+        spec.device_set.topology =
+            mi300a_char::fabric::Topology::parse(t).ok_or_else(|| {
+                format!(
+                    "unknown topology {t:?} (want fully_connected|ring)"
+                )
+            })?;
+    }
     if let Some(p) = args.get("precision") {
         spec.precision = Precision::parse(p)
             .ok_or_else(|| format!("bad precision {p:?}"))?;
@@ -423,6 +442,7 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
     spec.sweep.n = usize_list("sweep-size")?;
     spec.sweep.streams = usize_list("sweep-streams")?;
     spec.sweep.iters = usize_list("sweep-iters")?;
+    spec.sweep.devices = usize_list("sweep-devices")?;
     if let Some(v) = args.get("sweep-precision") {
         spec.sweep.precision = v
             .split(',')
@@ -438,12 +458,18 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
 fn print_scenario_points(resp: &Response) {
     if let Response::Scenario { points } = resp {
         for pr in points {
+            let devices = if pr.point.devices > 1 {
+                format!(" devices={}", pr.point.devices)
+            } else {
+                String::new()
+            };
             println!(
-                "n={} precision={} streams={} iters={}: {}",
+                "n={} precision={} streams={} iters={}{}: {}",
                 pr.point.n,
                 mi300a_char::api::precision_wire_name(pr.point.precision),
                 pr.point.streams,
                 pr.point.iters,
+                devices,
                 pr.result.to_item_json()
             );
         }

@@ -1,0 +1,182 @@
+//! Fabric transfers as first-class DES events.
+//!
+//! The `des` backend answers multi-device points by composing two
+//! event-stepped layers: the existing kernel engine
+//! ([`crate::sim::engine`]) replays one device's compute, and this
+//! module steps the inter-APU exchange of [`crate::fabric::Transfer`]s
+//! the shape's schedule prescribes. Transfers share links and egress
+//! ports by processor sharing — exactly the machinery the engine uses
+//! for ACE lanes — so a transfer's instantaneous rate is the link
+//! bandwidth divided by the congestion of its most contended resource,
+//! re-evaluated at every start/finish event.
+//!
+//! On the uniform collective schedules of `data_parallel`, `pipeline`
+//! and `halo` this stepping reproduces the closed-form link-saturation
+//! bound ([`crate::fabric::Fabric::round_ns`]) exactly, which is what
+//! keeps the DES and analytic backends byte-comparable on the
+//! communication half of a multi-device point (the equivalence gap
+//! comes from the compute estimate alone; `tests/backend_equivalence.rs`
+//! pins the combined tolerance).
+
+use crate::fabric::{Fabric, Transfer};
+
+/// One stepped exchange: elapsed wall-clock and the discrete events
+/// processed (one start + one completion per transfer).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricRun {
+    pub elapsed_ns: f64,
+    pub events: u64,
+}
+
+/// Processor-sharing event stepper over a [`Fabric`].
+pub struct FabricSim {
+    fabric: Fabric,
+}
+
+impl FabricSim {
+    pub fn new(fabric: Fabric) -> FabricSim {
+        FabricSim { fabric }
+    }
+
+    /// Step one synchronized round: every transfer pays the link
+    /// latency, then drains concurrently under processor sharing.
+    /// Returns when the last byte lands.
+    pub fn run_round(&self, transfers: &[Transfer]) -> FabricRun {
+        // (remaining bytes, resource indices) per live transfer.
+        let mut live: Vec<(f64, Vec<usize>)> = transfers
+            .iter()
+            .filter(|t| t.src != t.dst && t.bytes > 0.0)
+            .map(|t| (t.bytes, self.fabric.resources(t)))
+            .collect();
+        if live.is_empty() {
+            return FabricRun { elapsed_ns: 0.0, events: 0 };
+        }
+        let mut events = live.len() as u64; // start events
+        let mut clock = self.fabric.latency_ns;
+        let n_res = self.fabric.devices
+            + self.fabric.devices * self.fabric.devices.max(2) * 2;
+        let mut congestion = vec![0u32; n_res];
+        while !live.is_empty() {
+            for c in &mut congestion {
+                *c = 0;
+            }
+            for (_, res) in &live {
+                for &r in res {
+                    congestion[r] += 1;
+                }
+            }
+            // Each transfer drains at bw / (most contended resource).
+            let rate = |res: &[usize]| {
+                let worst =
+                    res.iter().map(|&r| congestion[r]).max().unwrap_or(1);
+                self.fabric.bytes_per_ns / worst.max(1) as f64
+            };
+            // Advance to the earliest completion at current rates.
+            let dt = live
+                .iter()
+                .map(|(rem, res)| rem / rate(res))
+                .fold(f64::INFINITY, f64::min);
+            clock += dt;
+            for (rem, res) in &mut live {
+                *rem -= rate(res) * dt;
+            }
+            live.retain(|(rem, _)| {
+                let done = *rem <= 1e-9;
+                if done {
+                    events += 1;
+                }
+                !done
+            });
+        }
+        FabricRun { elapsed_ns: clock, events }
+    }
+
+    /// Step a multi-round schedule (rounds run back to back, as the
+    /// collectives synchronize between steps).
+    pub fn run_schedule(&self, schedule: &[Vec<Transfer>]) -> FabricRun {
+        let mut total = FabricRun { elapsed_ns: 0.0, events: 0 };
+        for round in schedule {
+            let r = self.run_round(round);
+            total.elapsed_ns += r.elapsed_ns;
+            total.events += r.events;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::scenario::Shape;
+    use crate::fabric::{DeviceSet, Topology};
+
+    fn sim(devices: usize, topology: Topology) -> (Fabric, FabricSim) {
+        let f = Fabric::for_set(DeviceSet { devices, topology });
+        (f, FabricSim::new(f))
+    }
+
+    #[test]
+    fn single_transfer_costs_latency_plus_bytes_over_bw() {
+        let (f, s) = sim(2, Topology::FullyConnected);
+        let t = Transfer { src: 0, dst: 1, bytes: 4800.0 };
+        let r = s.run_round(&[t]);
+        assert!((r.elapsed_ns - f.transfer_ns(4800.0)).abs() < 1e-9);
+        assert_eq!(r.events, 2, "one start + one completion");
+    }
+
+    #[test]
+    fn stepped_collectives_match_the_closed_forms() {
+        let bytes = 512.0 * 512.0 * 4.0;
+        for t in Topology::ALL {
+            for d in 2..=4 {
+                let (f, s) = sim(d, t);
+                for (shape, closed) in [
+                    (Shape::DataParallel, f.allreduce_ns(bytes)),
+                    (Shape::Halo, f.halo_ns(bytes)),
+                ] {
+                    let sched = f.shape_schedule(shape, bytes);
+                    let r = s.run_schedule(&sched);
+                    assert!(
+                        (r.elapsed_ns - closed).abs() < 1e-6 * closed,
+                        "{shape:?} {t:?} d={d}: stepped {} vs closed \
+                         {closed}",
+                        r.elapsed_ns
+                    );
+                    assert!(r.events > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn egress_sharing_halves_the_rate_of_a_fan_out() {
+        // One source, two destinations: both transfers share the
+        // egress port, so both finish at latency + 2B/bw.
+        let (f, s) = sim(3, Topology::FullyConnected);
+        let b = 48_000.0;
+        let r = s.run_round(&[
+            Transfer { src: 0, dst: 1, bytes: b },
+            Transfer { src: 0, dst: 2, bytes: b },
+        ]);
+        let want = f.latency_ns + 2.0 * b / f.bytes_per_ns;
+        assert!((r.elapsed_ns - want).abs() < 1e-9, "{}", r.elapsed_ns);
+        // Distinct sources keep full rate.
+        let r = s.run_round(&[
+            Transfer { src: 0, dst: 1, bytes: b },
+            Transfer { src: 2, dst: 1, bytes: b },
+        ]);
+        let want = f.latency_ns + b / f.bytes_per_ns;
+        assert!((r.elapsed_ns - want).abs() < 1e-9, "{}", r.elapsed_ns);
+    }
+
+    #[test]
+    fn deterministic_and_empty_rounds_are_free() {
+        let (f, s) = sim(4, Topology::Ring);
+        let sched = f.shape_schedule(Shape::DataParallel, 1e6);
+        assert_eq!(s.run_schedule(&sched), s.run_schedule(&sched));
+        assert_eq!(
+            s.run_round(&[]),
+            FabricRun { elapsed_ns: 0.0, events: 0 }
+        );
+    }
+}

@@ -5,6 +5,7 @@
 pub mod ace;
 pub mod cost;
 pub mod engine;
+pub mod fabric;
 pub mod kernel;
 pub mod microbench;
 pub mod trace;
@@ -12,5 +13,6 @@ pub mod trace;
 pub use ace::{AceSet, QueueId};
 pub use cost::CostModel;
 pub use engine::{ConcurrencyProfile, ConcurrentRun, Engine, StreamOutcome};
+pub use fabric::{FabricRun, FabricSim};
 pub use kernel::{KernelDesc, SparsityMode};
 pub use microbench::{MicrobenchModel, OccupancyPoint};

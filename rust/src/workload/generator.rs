@@ -45,6 +45,46 @@ impl StreamSetSpec {
         }
     }
 
+    /// Data-parallel replica (multi-APU `data_parallel` shape): every
+    /// device runs the full homogeneous stream set; the fabric layer
+    /// adds the allreduce-style gradient exchange between iterations.
+    pub fn data_parallel_replica(n: usize, p: Precision, streams: usize,
+                                 iters: usize) -> StreamSetSpec {
+        StreamSetSpec::homogeneous(
+            KernelDesc::gemm(n, p).with_iters(iters),
+            streams,
+        )
+    }
+
+    /// One pipeline stage of a depth-split GEMM (multi-APU `pipeline`
+    /// shape): each of `devices` stages computes a `K/devices` slice of
+    /// every iteration and relays activations to the next stage. The
+    /// split floors at 64 so tiny kernels stay well-formed.
+    pub fn pipeline_stage(n: usize, p: Precision, devices: usize,
+                          streams: usize, iters: usize) -> StreamSetSpec {
+        let k_slice = (n / devices.max(1)).max(64).min(n);
+        StreamSetSpec::homogeneous(
+            KernelDesc::gemm(n, p)
+                .with_shape(n, n, k_slice)
+                .with_iters(iters),
+            streams,
+        )
+    }
+
+    /// One row-shard of a halo decomposition (multi-APU `halo` shape):
+    /// each of `devices` devices owns `M/devices` output rows and
+    /// swaps boundary tiles with its ring neighbors every iteration.
+    pub fn halo_shard(n: usize, p: Precision, devices: usize,
+                      streams: usize, iters: usize) -> StreamSetSpec {
+        let m_shard = (n / devices.max(1)).max(64).min(n);
+        StreamSetSpec::homogeneous(
+            KernelDesc::gemm(n, p)
+                .with_shape(m_shard, n, n)
+                .with_iters(iters),
+            streams,
+        )
+    }
+
     /// Overlay `mode` onto every kernel (the scenario layer's base
     /// sparsity; see `api::scenario`).
     pub fn with_sparsity(mut self, mode: SparsityMode) -> StreamSetSpec {
@@ -101,6 +141,29 @@ mod tests {
         let sparse_count =
             s.kernels.iter().filter(|k| k.sparsity.is_sparse()).count();
         assert_eq!(sparse_count, 2);
+    }
+
+    #[test]
+    fn device_placements_split_or_replicate() {
+        let rep = StreamSetSpec::data_parallel_replica(
+            512, Precision::Fp8, 4, 50);
+        assert_eq!(rep.kernels.len(), 4);
+        assert!(rep.kernels.iter().all(|k| k.m == 512 && k.k == 512));
+
+        let stage = StreamSetSpec::pipeline_stage(
+            512, Precision::Fp8, 4, 4, 50);
+        assert!(stage.kernels.iter().all(|k| k.k == 128 && k.m == 512));
+
+        let shard = StreamSetSpec::halo_shard(
+            512, Precision::Fp8, 4, 4, 50);
+        assert!(shard.kernels.iter().all(|k| k.m == 128 && k.k == 512));
+        // Tiny kernels floor the split at 64.
+        let tiny = StreamSetSpec::halo_shard(65, Precision::Fp8, 4, 2, 50);
+        assert!(tiny.kernels.iter().all(|k| k.m == 64));
+        // One device is the unsplit kernel.
+        let solo = StreamSetSpec::pipeline_stage(
+            512, Precision::Fp8, 1, 4, 50);
+        assert!(solo.kernels.iter().all(|k| k.k == 512));
     }
 
     #[test]

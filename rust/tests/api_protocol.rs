@@ -173,6 +173,17 @@ fn every_response_variant_roundtrips() {
         fairness: 0.51,
         l2_miss: 0.1875,
         lds_util: 0.625,
+        transfer_ms: 0.0,
+    });
+    // Multi-device sim answers carry their exposed fabric time.
+    roundtrip_response(Response::Sim {
+        makespan_ms: 12.375,
+        speedup_vs_serial: 2.5,
+        overlap_efficiency: 0.875,
+        fairness: 0.51,
+        l2_miss: 0.1875,
+        lds_util: 0.625,
+        transfer_ms: 1.5,
     });
     roundtrip_response(Response::Plan {
         objective: "throughput".into(),
@@ -283,6 +294,7 @@ fn every_response_variant_roundtrips() {
                     precision: Precision::Fp8,
                     streams: 4,
                     iters: 50,
+                    devices: 1,
                 },
                 result: Box::new(Response::Sim {
                     makespan_ms: 12.375,
@@ -291,6 +303,7 @@ fn every_response_variant_roundtrips() {
                     fairness: 0.51,
                     l2_miss: 0.1875,
                     lds_util: 0.625,
+                    transfer_ms: 0.0,
                 }),
             },
             PointResult {
@@ -299,6 +312,7 @@ fn every_response_variant_roundtrips() {
                     precision: Precision::F16,
                     streams: 2,
                     iters: 100,
+                    devices: 1,
                 },
                 result: Box::new(Response::Sparsity {
                     enable: false,
@@ -750,6 +764,94 @@ fn scenario_sweeps_roundtrip_and_order_is_preserved() {
         (points[0].precision, points[0].streams),
         (Precision::F16, 8)
     );
+}
+
+/// The multi-APU `device_set` dimension (DESIGN.md §6.11) keeps the
+/// canonical-form contract: both subfields always encode, defaults stay
+/// off the wire, a `devices` sweep axis survives with its order, and
+/// the whole surface is a decode→encode→decode fixpoint.
+#[test]
+fn scenario_device_set_canonicalization_is_a_fixpoint() {
+    let line = r#"{"v":1,"type":"scenario","n":512,"shape":"data_parallel","device_set":{"devices":4,"topology":"ring"},"sweep":{"devices":[4,1,2]}}"#;
+    let (req, _) = Request::from_json(&Json::parse(line).unwrap()).unwrap();
+    let canonical = req.to_json(None).to_string();
+    assert!(
+        canonical.contains(
+            r#""device_set":{"devices":4,"topology":"ring"}"#
+        ),
+        "{canonical}"
+    );
+    assert!(
+        canonical.contains(r#""sweep":{"devices":[4,1,2]}"#),
+        "axis order is meaningful: {canonical}"
+    );
+    let (again, _) =
+        Request::from_json(&Json::parse(&canonical).unwrap()).unwrap();
+    assert_eq!(again, req);
+    assert_eq!(again.to_json(None).to_string(), canonical, "fixpoint");
+    // Omitted topology defaults to fully_connected and then always
+    // encodes (canonical form fills every subfield).
+    let line = r#"{"v":1,"type":"scenario","n":512,"shape":"halo","device_set":{"devices":2}}"#;
+    let (req, _) = Request::from_json(&Json::parse(line).unwrap()).unwrap();
+    let canonical = req.to_json(None).to_string();
+    assert!(
+        canonical.contains(
+            r#""device_set":{"devices":2,"topology":"fully_connected"}"#
+        ),
+        "{canonical}"
+    );
+    // A default device set adds zero wire surface: the canonical bytes
+    // of a plain spec are exactly the pre-fabric ones.
+    let minimal = r#"{"v":1,"type":"scenario","n":512}"#;
+    let (req, _) =
+        Request::from_json(&Json::parse(minimal).unwrap()).unwrap();
+    assert_eq!(
+        req.to_json(None).to_string(),
+        r#"{"ask":"sim","iters":50,"n":512,"precision":"fp8","shape":"homogeneous","sparsity":"dense","streams":4,"type":"scenario","v":1}"#
+    );
+}
+
+/// Single-device requests answer byte-identically to the pre-fabric
+/// service — through the live service, on both the plain shape and the
+/// `devices=1` scaling anchor of a multi-device shape — and the
+/// multi-device answer grows exactly the `transfer_ms` field.
+#[test]
+fn single_device_answers_keep_their_pre_fabric_bytes() {
+    let svc = Service::new(Config::mi300a());
+    let v1 = Request::Sim { n: 512, precision: Precision::Fp8, streams: 4 };
+    let v1_bytes = svc.handle(&v1).to_item_json().to_string();
+    assert!(
+        !v1_bytes.contains("transfer_ms"),
+        "single-device sim answers must not grow fields: {v1_bytes}"
+    );
+    // The devices=1 anchor of data_parallel is the same replica set, so
+    // the answer bytes are identical.
+    let line = r#"{"v":1,"type":"scenario","n":512,"shape":"data_parallel"}"#;
+    let (req, _) = Request::from_json(&Json::parse(line).unwrap()).unwrap();
+    match svc.handle(&req) {
+        Response::Scenario { points } => {
+            assert_eq!(points.len(), 1);
+            assert_eq!(
+                points[0].result.to_item_json().to_string(),
+                v1_bytes
+            );
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
+    // Four devices: same surface plus transfer_ms, and the point wire
+    // form leads with its devices coordinate.
+    let line = r#"{"v":1,"type":"scenario","n":512,"shape":"data_parallel","device_set":{"devices":4}}"#;
+    let (req, _) = Request::from_json(&Json::parse(line).unwrap()).unwrap();
+    match svc.handle(&req) {
+        Response::Scenario { points } => {
+            let wire = Response::Scenario { points: points.clone() }
+                .to_json(None)
+                .to_string();
+            assert!(wire.contains(r#""devices":4"#), "{wire}");
+            assert!(wire.contains("transfer_ms"), "{wire}");
+        }
+        other => panic!("unexpected response: {other:?}"),
+    }
 }
 
 #[test]

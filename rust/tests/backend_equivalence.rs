@@ -12,7 +12,9 @@ use mi300a_char::api::{
 use mi300a_char::backend::{self, BackendId};
 use mi300a_char::config::Config;
 use mi300a_char::coordinator::Objective;
+use mi300a_char::fabric::Topology;
 use mi300a_char::isa::Precision;
+use mi300a_char::util::json::Json;
 
 /// Documented tolerance (docs/backends.md): time-domain outputs are
 /// first-order estimates.
@@ -34,8 +36,9 @@ fn assert_sim_sweep_within_tolerance(spec: &ScenarioSpec) {
         let d = des.simulate(&cfg, spec, &p);
         let a = analytic.simulate(&cfg, spec, &p);
         let ctx = format!(
-            "point n={} precision={:?} streams={}: des={d:?} analytic={a:?}",
-            p.n, p.precision, p.streams
+            "point n={} precision={:?} streams={} devices={}: \
+             des={d:?} analytic={a:?}",
+            p.n, p.precision, p.streams, p.devices
         );
         assert!(
             rel(a.makespan_ms, d.makespan_ms) <= REL_TOL_TIME,
@@ -207,4 +210,98 @@ fn omitted_backend_is_des_and_analytic_runs_zero_des_points() {
         "an analytic sweep must execute zero DES points"
     );
     assert_eq!(svc.engine_runs(), 16, "totals stay truthful");
+}
+
+/// Multi-APU points add a transfer dimension on top of the base sweep
+/// checks: the stepped fabric round and the closed forms agree exactly
+/// (pinned in `sim::fabric`), so transfer drift only enters through the
+/// per-backend compute estimate and stays inside the time tolerance on
+/// the two makespans. `devices=1` points must carry exactly zero
+/// fabric time on both backends.
+fn assert_multi_apu_sweep_within_tolerance(spec: &ScenarioSpec) {
+    assert_sim_sweep_within_tolerance(spec);
+    let cfg = Config::mi300a();
+    let des = backend::get(BackendId::Des);
+    let analytic = backend::get(BackendId::Analytic);
+    for p in spec.expand() {
+        let d = des.simulate(&cfg, spec, &p);
+        let a = analytic.simulate(&cfg, spec, &p);
+        let ctx = format!(
+            "point n={} devices={}: des={d:?} analytic={a:?}",
+            p.n, p.devices
+        );
+        if p.devices <= 1 {
+            assert_eq!(d.transfer_ms, 0.0, "des fabric at d=1: {ctx}");
+            assert_eq!(a.transfer_ms, 0.0, "analytic fabric at d=1: {ctx}");
+        } else {
+            assert!(d.transfer_ms > 0.0, "des saw no fabric: {ctx}");
+            assert!(a.transfer_ms > 0.0, "analytic saw no fabric: {ctx}");
+            assert!(
+                (a.transfer_ms - d.transfer_ms).abs()
+                    <= REL_TOL_TIME * (a.makespan_ms + d.makespan_ms),
+                "transfer drift beyond the time tolerance at {ctx}"
+            );
+        }
+    }
+}
+
+/// Multi-APU sweep 1 (docs/multi_apu.md data-parallel scaling): the
+/// replicated-GEMM allreduce across 1→4 fully-connected APUs. The
+/// devices=1 column is the scaling anchor — zero fabric on both
+/// backends, everything else within the standard tolerances.
+#[test]
+fn multi_apu_data_parallel_sweep_within_tolerance() {
+    let mut spec = ScenarioSpec::new(Ask::Sim);
+    spec.shape = Shape::DataParallel;
+    spec.n = 512;
+    spec.sweep.devices = vec![1, 2, 3, 4];
+    spec.sweep.streams = vec![2, 8];
+    assert_multi_apu_sweep_within_tolerance(&spec);
+}
+
+/// Multi-APU sweep 2 (docs/multi_apu.md pipeline break-even): K-split
+/// stages relayed over a ring — the topology with the worst collective
+/// latency multiplier, so agreement here bounds the easier
+/// fully-connected case too.
+#[test]
+fn multi_apu_pipeline_ring_sweep_within_tolerance() {
+    let mut spec = ScenarioSpec::new(Ask::Sim);
+    spec.shape = Shape::Pipeline;
+    spec.n = 1024;
+    spec.device_set.topology = Topology::Ring;
+    spec.sweep.devices = vec![1, 2, 4];
+    assert_multi_apu_sweep_within_tolerance(&spec);
+}
+
+/// Acceptance (ISSUE 9): a `devices=1` request that spells out its
+/// `device_set` answers byte-identically to the same request without
+/// one, on both backends — the fabric dimension is invisible until a
+/// second APU exists.
+#[test]
+fn single_apu_device_set_is_byte_invisible() {
+    for backend_sel in ["", r#","backend":"analytic""#] {
+        let bare = format!(
+            r#"{{"v":1,"type":"scenario","n":512,"shape":"data_parallel","iters":10{backend_sel}}}"#
+        );
+        let spelled = format!(
+            r#"{{"v":1,"type":"scenario","n":512,"shape":"data_parallel","iters":10,"device_set":{{"devices":1}}{backend_sel}}}"#
+        );
+        let decode = |line: &str| {
+            let (req, _) =
+                Request::from_json(&Json::parse(line).unwrap()).unwrap();
+            req
+        };
+        let svc = Service::new(Config::mi300a());
+        let got_bare = svc.handle(&decode(&bare)).to_json(Some(1));
+        let got_spelled = svc.handle(&decode(&spelled)).to_json(Some(1));
+        assert_eq!(
+            got_bare.to_string(),
+            got_spelled.to_string(),
+            "devices=1 must be byte-invisible (backend {backend_sel:?})"
+        );
+        assert!(
+            !got_bare.to_string().contains("transfer_ms"),
+            "single-APU answers must not grow fabric fields"
+        );
+    }
 }

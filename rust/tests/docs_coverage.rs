@@ -79,6 +79,7 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         "scenarios.md",
         "backends.md",
         "auto_backend.md",
+        "multi_apu.md",
         "performance.md",
         "cluster.md",
     ] {
@@ -136,6 +137,51 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
     assert!(
         read("README.md").contains("auto_backend.md"),
         "docs/README.md must index the auto-backend guide"
+    );
+    assert!(
+        read("README.md").contains("multi_apu.md"),
+        "docs/README.md must index the multi-APU guide"
+    );
+}
+
+/// The multi-APU guide must document the fabric surface this repo
+/// ships: both topologies, all three multi-device shapes, the
+/// `device_set` wire field and its CLI spellings, the `transfer_ms`
+/// read-out, and the calibration anchors with their source — and the
+/// backend guide must point readers at it.
+#[test]
+fn multi_apu_doc_covers_topologies_shapes_and_anchors() {
+    let doc = read("multi_apu.md");
+    for needle in [
+        "\"device_set\"",
+        "fully_connected",
+        "ring",
+        "data_parallel",
+        "pipeline",
+        "halo",
+        "transfer_ms",
+        "--devices",
+        "--topology",
+        "--sweep-devices",
+        "\"sweep\":{\"devices\"",
+        "allreduce",
+        "LINK_BYTES_PER_NS",
+        "LINK_LATENCY_NS",
+        "48",
+        "1.9",
+        "2508.11298",
+        "bad_range",
+        "backends.md",
+        "scenarios.md",
+    ] {
+        assert!(
+            doc.contains(needle),
+            "docs/multi_apu.md never documents {needle:?}"
+        );
+    }
+    assert!(
+        read("backends.md").contains("multi_apu.md"),
+        "docs/backends.md never cross-links multi_apu.md"
     );
 }
 
@@ -293,6 +339,8 @@ fn scenario_cookbook_covers_the_paper_sweeps() {
         "crossover",
         "break-even",
         "imbalanced-pair fairness",
+        "data-parallel scaling",
+        "pipeline split break-even",
     ] {
         assert!(
             doc.to_lowercase().contains(sweep),
@@ -307,6 +355,8 @@ fn scenario_cookbook_covers_the_paper_sweeps() {
         "job_status",
         "job_result",
         "job_cancel",
+        "--sweep-devices",
+        "multi_apu.md",
     ] {
         assert!(
             doc.contains(needle),

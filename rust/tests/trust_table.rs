@@ -58,11 +58,22 @@ fn calibration_corpus() -> Vec<(&'static str, ScenarioSpec)> {
     pair.iters = 10;
     pair.sweep.n = vec![1024, 2048];
 
+    // #5 multi-APU data-parallel scaling (docs/multi_apu.md): the
+    // devices=1 anchor is inside the calibrated envelope; every
+    // devices>1 point carries fabric contention the table has no
+    // calibration for and must ship to the DES.
+    let mut multi = ScenarioSpec::new(Ask::Sim);
+    multi.shape = Shape::DataParallel;
+    multi.n = 512;
+    multi.sweep.devices = vec![1, 2, 4];
+    multi.sweep.streams = vec![2, 4];
+
     vec![
         ("occupancy", occupancy),
         ("crossover", crossover),
         ("mixed_sparse", mixed),
         ("imbalanced_pair", pair),
+        ("multi_apu", multi),
     ]
 }
 
@@ -138,6 +149,7 @@ fn corpus_routes_split_exactly_at_the_trust_boundary() {
     for (name, spec) in calibration_corpus() {
         for p in spec.expand() {
             let want = if spec.shape == Shape::ImbalancedPair
+                || p.devices > 1
                 || p.streams > TRUST_MAX_STREAMS
             {
                 BackendId::Des

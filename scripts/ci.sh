@@ -11,7 +11,12 @@
 # unknown_backend on an unregistered id) plus an auto-routing smoke
 # (DESIGN.md §6.10: a budgeted `--backend auto` sweep must stream at
 # least one refinement frame and split its cold runs across both
-# concrete engines while engine_runs_auto stays 0), a loadgen smoke (a short
+# concrete engines while engine_runs_auto stays 0), a multi-APU smoke
+# (docs/multi_apu.md, DESIGN.md §6.11: a 4-APU data_parallel device
+# sweep over the wire on every available io model — transfer_ms on
+# every devices>1 point and never on devices=1, per-backend counters
+# splitting des vs analytic, and a typed bad_range probe on devices=5),
+# a loadgen smoke (a short
 # self-hosted load-generator run per available io model, writing the
 # BENCH_serve.json baseline and failing on typed errors or zero
 # throughput), and a cluster smoke (2 workers + a coordinator on
@@ -259,6 +264,76 @@ kill "$bk_pid" 2>/dev/null || true
 wait "$bk_pid" 2>/dev/null || true
 trap - EXIT
 rm -f "$bk_log"
+
+echo "== multi-APU smoke (4-APU data_parallel sweep, both io models) =="
+fab_models="threads"
+if [ "$(uname -s)" = Linux ]; then
+    fab_models="epoll threads"
+fi
+for model in $fab_models; do
+    echo "-- multi-APU --io-model $model --"
+    fab_log=$(mktemp)
+    "$bin" serve --addr 127.0.0.1:0 --io-model "$model" >"$fab_log" &
+    fab_pid=$!
+    trap 'kill "$fab_pid" 2>/dev/null || true' EXIT
+    faddr=""
+    for _ in $(seq 1 100); do
+        faddr=$(sed -n 's/^serving on //p' "$fab_log" | head -n 1)
+        [ -n "$faddr" ] && break
+        sleep 0.05
+    done
+    if [ -z "$faddr" ]; then
+        echo "multi-APU smoke serve did not print its bound address" >&2
+        exit 1
+    fi
+    # The scaling sweep from docs/scenarios.md recipe 5, on the DES:
+    # the devices=1 anchor must stay fabric-free while every devices>1
+    # point pays a transfer_ms share.
+    fresp=$("$bin" client --addr "$faddr" \
+        '{"v":1,"type":"scenario","n":256,"shape":"data_parallel","sweep":{"devices":[1,2,4]}}')
+    echo "multi-APU sweep ($model): $fresp"
+    for needle in '"points"' '"devices":4' '"transfer_ms"'; do
+        if ! printf '%s' "$fresp" | grep -qF "$needle"; then
+            echo "multi-APU sweep missing $needle" >&2
+            exit 1
+        fi
+    done
+    nfab=$(printf '%s' "$fresp" | grep -o '"transfer_ms"' | wc -l)
+    if [ "$nfab" -ne 2 ]; then
+        echo "want transfer_ms on exactly the 2 devices>1 points, got $nfab" >&2
+        exit 1
+    fi
+    # The same sweep through the analytic closed forms: counters must
+    # attribute 3 cold points to each engine (separate cache keys).
+    "$bin" client --addr "$faddr" \
+        '{"v":1,"type":"scenario","backend":"analytic","n":256,"shape":"data_parallel","sweep":{"devices":[1,2,4]}}' \
+        >/dev/null
+    fstats=$("$bin" client --addr "$faddr" '{"v":1,"type":"stats"}')
+    echo "multi-APU stats ($model): $fstats"
+    for needle in '"engine_runs_des":3' '"engine_runs_analytic":3'; do
+        if ! printf '%s' "$fstats" | grep -qF "$needle"; then
+            echo "multi-APU stats missing $needle" >&2
+            exit 1
+        fi
+    done
+    # Typed rejection: a fifth APU does not exist on an MI300A node.
+    if fbad=$("$bin" client --addr "$faddr" \
+        '{"v":1,"type":"scenario","n":256,"shape":"data_parallel","device_set":{"devices":5}}' 2>&1); then
+        echo "devices=5 did not fail the client: $fbad" >&2
+        exit 1
+    else
+        echo "bad-range probe: $fbad"
+    fi
+    if ! printf '%s' "$fbad" | grep -qF 'bad_range'; then
+        echo "expected bad_range, got: $fbad" >&2
+        exit 1
+    fi
+    kill "$fab_pid" 2>/dev/null || true
+    wait "$fab_pid" 2>/dev/null || true
+    trap - EXIT
+    rm -f "$fab_log"
+done
+echo "multi-APU smoke ok (fabric on the wire, counters split, typed range)"
 
 echo "== loadgen smoke (self-hosted, ~1s per available io model) =="
 # The load generator self-hosts an ephemeral server, drives a short
