@@ -26,6 +26,10 @@
 //! `fabric_transfer_events_per_sweep` (exact, stepped directly through
 //! `sim::fabric`), and `fabric_transfer_events_per_sec`.
 //!
+//! The trace-replay case (docs/replay.md, DESIGN.md §6.12) sweeps a
+//! 64-launch recorded timeline across three what-if transforms on the
+//! DES and adds `trace_points_per_sec` and `trace_launches_per_sec`.
+//!
 //! Smoke mode: `MI300A_BENCH_WARMUP=1 MI300A_BENCH_ITERS=1 cargo bench`
 //! (scripts/ci.sh) keeps the target compiling and running cheaply.
 
@@ -190,6 +194,54 @@ fn main() {
     extra.push((
         "fabric_transfer_events_per_sec",
         Json::Num(rf.units_per_sec(transfer_events)),
+    ));
+
+    // Trace replay (docs/replay.md, recipe 7): a 64-launch fp16
+    // timeline over 4 streams (every fourth launch data-sparse SpMM),
+    // swept across three what-if transforms — the replay engine's
+    // per-point rate on a realistic what-if comparison.
+    use mi300a_char::replay::{TraceRecord, Transform};
+    use mi300a_char::sim::kernel::KernelClass;
+    use mi300a_char::sim::SparsityMode;
+    let records: Vec<TraceRecord> = (0..64)
+        .map(|i| TraceRecord {
+            kernel: if i % 4 == 2 {
+                KernelClass::Spmm
+            } else {
+                KernelClass::Gemm
+            },
+            n: [256, 512, 1024][i % 3],
+            precision: Precision::F16,
+            sparsity: SparsityMode::Dense,
+            stream: i % 4,
+            issue_ns: (i as u64 / 4) * 150_000,
+        })
+        .collect();
+    let mut trace = ScenarioSpec::trace_replay(records).unwrap();
+    trace.sweep.transform = vec![
+        Transform::Identity,
+        Transform::PrecisionRewrite(Precision::Fp8),
+        Transform::SparsityEnable,
+    ];
+    let tpoints = trace.expand();
+    let rt = b.bench("trace/64launch_3transform_des", || {
+        for q in &tpoints {
+            Bencher::black_box(des.simulate(&cfg, &trace, q).makespan_ms);
+        }
+    });
+    let launches = (tpoints.len() * 64) as f64;
+    println!(
+        "  -> trace replay: {:.1} points/sec (~{:.0} launches/sec)",
+        rt.units_per_sec(tpoints.len() as f64),
+        rt.units_per_sec(launches)
+    );
+    extra.push((
+        "trace_points_per_sec",
+        Json::Num(rt.units_per_sec(tpoints.len() as f64)),
+    ));
+    extra.push((
+        "trace_launches_per_sec",
+        Json::Num(rt.units_per_sec(launches)),
     ));
 
     println!("\n{}", b.markdown());

@@ -321,6 +321,11 @@ pub enum Response {
         /// omitted from the wire then, keeping pre-fabric responses
         /// byte-identical.
         transfer_ms: f64,
+        /// Number of per-launch spans the trace replay produced
+        /// (shape `trace` only; see `crate::replay`). Exactly 0 on
+        /// every other shape and omitted from the wire then, keeping
+        /// pre-replay responses byte-identical.
+        spans: usize,
     },
     Plan {
         objective: String,
@@ -885,6 +890,7 @@ impl Response {
                 l2_miss,
                 lds_util,
                 transfer_ms,
+                spans,
             } => {
                 fields.push(("makespan_ms", Json::Num(*makespan_ms)));
                 fields.push((
@@ -900,6 +906,9 @@ impl Response {
                 fields.push(("lds_util", Json::Num(*lds_util)));
                 if *transfer_ms > 0.0 {
                     fields.push(("transfer_ms", Json::Num(*transfer_ms)));
+                }
+                if *spans > 0 {
+                    fields.push(("spans", Json::Num(*spans as f64)));
                 }
             }
             Response::Plan { objective, sparse, groups } => {
@@ -1171,6 +1180,7 @@ fn decode_response_payload(
                     "l2_miss",
                     "lds_util",
                     "transfer_ms",
+                    "spans",
                 ],
             )?;
             Ok(Response::Sim {
@@ -1184,6 +1194,11 @@ fn decode_response_payload(
                     f64_field(m, ty, "transfer_ms")?
                 } else {
                     0.0
+                },
+                spans: if m.contains_key("spans") {
+                    usize_field(m, ty, "spans")?
+                } else {
+                    0
                 },
             })
         }

@@ -9,7 +9,9 @@
 //! [`DeviceSet`] — built via [`crate::workload::generator`]), the
 //! device set (`device_set`: 1–4 APUs plus an Infinity Fabric
 //! [`Topology`], see [`crate::fabric`] and docs/multi_apu.md), the
-//! coordinator objective (for `plan` asks), and optional [`Sweep`]
+//! coordinator objective (for `plan` asks), an optional recorded
+//! launch timeline (`trace` + a what-if [`Transform`], shape `trace` —
+//! see [`crate::replay`] and docs/replay.md), and optional [`Sweep`]
 //! axes whose cross-product — hard-capped at [`MAX_SWEEP_POINTS`] —
 //! expands into an ordered list of [`Point`]s. The service compiles
 //! every point down to the existing coordinator/sim/sparsity layers,
@@ -20,7 +22,8 @@
 //! Canonical form: decoding fills every default, and encoding always
 //! emits the full field set (conditional fields — `backend`,
 //! `device_set`, `max_error`, `max_time_ms`, `objective`, `small_n`,
-//! `sweep` — only when applicable), so decode→encode→decode
+//! `sweep`, `trace`, `transform` — only when applicable), so
+//! decode→encode→decode
 //! is a fixpoint and semantically identical specs collide on one cache
 //! key no matter how they were spelled (`tests/api_protocol.rs`
 //! enforces this). The per-point cache key is the canonical wire form
@@ -33,6 +36,9 @@ use crate::backend::BackendId;
 use crate::coordinator::Objective;
 use crate::fabric::{DeviceSet, Topology, DEVICE_RANGE};
 use crate::isa::Precision;
+use crate::replay::{
+    TraceErrorKind, TraceRecord, TraceSpec, Transform,
+};
 use crate::sim::{KernelDesc, SparsityMode};
 use crate::util::json::Json;
 use crate::workload::generator::StreamSetSpec;
@@ -52,7 +58,7 @@ pub const ITERS_RANGE: (usize, usize) = (1, 10_000);
 pub(crate) const SPEC_FIELDS: &[&str] = &[
     "ask", "backend", "device_set", "iters", "max_error", "max_time_ms",
     "n", "objective", "precision", "shape", "small_n", "sparsity",
-    "streams", "sweep",
+    "streams", "sweep", "trace", "transform",
 ];
 
 /// Range check shared by scenario validation (and, transitively, the
@@ -132,16 +138,27 @@ pub enum Shape {
     /// Row-sharded kernels with a boundary-tile neighbor exchange each
     /// iteration.
     Halo,
+    /// Alternating data-sparse SpMM / dense GEMM streams (AsyncSparse
+    /// §5: irregular sparse work time-sharing an ACE with regular
+    /// dense work). Single-APU, sim-only.
+    SpmmMix,
+    /// A recorded kernel-launch timeline replayed with its issue
+    /// times honored (the spec's `trace` records, rewritten by its
+    /// `transform` — [`crate::replay`], docs/replay.md). Single-APU,
+    /// sim-only, DES-only.
+    Trace,
 }
 
 impl Shape {
-    pub const ALL: [Shape; 6] = [
+    pub const ALL: [Shape; 8] = [
         Shape::Homogeneous,
         Shape::ImbalancedPair,
         Shape::MixedSparse,
         Shape::DataParallel,
         Shape::Pipeline,
         Shape::Halo,
+        Shape::SpmmMix,
+        Shape::Trace,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -152,6 +169,8 @@ impl Shape {
             Shape::DataParallel => "data_parallel",
             Shape::Pipeline => "pipeline",
             Shape::Halo => "halo",
+            Shape::SpmmMix => "spmm_mix",
+            Shape::Trace => "trace",
         }
     }
 
@@ -183,8 +202,9 @@ impl Shape {
 /// Optional sweep axes. Empty vectors mean "not swept" (the base value
 /// is the single point on that axis); points expand as the
 /// cross-product in fixed nesting order `devices` → `n` → `precision`
-/// → `streams` → `iters` (last axis varies fastest; `devices` varies
-/// slowest so scaling curves read off in order).
+/// → `streams` → `iters` → `transform` (last axis varies fastest;
+/// `devices` varies slowest so scaling curves read off in order). The
+/// `transform` axis only applies to shape `trace`.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct Sweep {
     pub devices: Vec<usize>,
@@ -192,6 +212,7 @@ pub struct Sweep {
     pub precision: Vec<Precision>,
     pub streams: Vec<usize>,
     pub iters: Vec<usize>,
+    pub transform: Vec<Transform>,
 }
 
 impl Sweep {
@@ -201,6 +222,7 @@ impl Sweep {
             && self.precision.is_empty()
             && self.streams.is_empty()
             && self.iters.is_empty()
+            && self.transform.is_empty()
     }
 
     /// Cross-product size (each absent axis counts 1).
@@ -211,6 +233,7 @@ impl Sweep {
             self.precision.len(),
             self.streams.len(),
             self.iters.len(),
+            self.transform.len(),
         ]
         .iter()
         .fold(1usize, |acc, &len| acc.saturating_mul(len.max(1)))
@@ -228,14 +251,18 @@ pub struct Point {
     /// Devices running the point (1 unless the spec's `device_set` or
     /// a `devices` sweep axis says otherwise).
     pub devices: usize,
+    /// What-if trace rewrite (always [`Transform::Identity`] outside
+    /// shape `trace`).
+    pub transform: Transform,
 }
 
 impl Point {
     /// Wire form (`{"iters":..,"n":..,"precision":..,"streams":..}`,
-    /// plus a leading `"devices"` only when above 1 — single-device
-    /// points keep their pre-fabric bytes).
+    /// plus a leading `"devices"` only when above 1 and a trailing
+    /// `"transform"` only when not `identity` — points keep their
+    /// pre-fabric / pre-replay bytes on the old shapes).
     pub fn to_json(&self) -> Json {
-        let mut fields = Vec::with_capacity(5);
+        let mut fields = Vec::with_capacity(6);
         if self.devices > 1 {
             fields.push(("devices", Json::Num(self.devices as f64)));
         }
@@ -246,6 +273,9 @@ impl Point {
             Json::Str(precision_wire_name(self.precision).into()),
         ));
         fields.push(("streams", Json::Num(self.streams as f64)));
+        if self.transform != Transform::Identity {
+            fields.push(("transform", Json::Str(self.transform.name())));
+        }
         Json::obj(fields)
     }
 
@@ -255,13 +285,23 @@ impl Point {
         check_obj_fields(
             m,
             what,
-            &["devices", "iters", "n", "precision", "streams"],
+            &["devices", "iters", "n", "precision", "streams", "transform"],
         )?;
         let p = str_field(m, what, "precision")?;
         let devices = if m.contains_key("devices") {
             usize_field(m, what, "devices")?
         } else {
             1
+        };
+        let transform = if m.contains_key("transform") {
+            let t = str_field(m, what, "transform")?;
+            Transform::parse(t).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{what}: bad transform {t:?}"
+                ))
+            })?
+        } else {
+            Transform::Identity
         };
         Ok(Point {
             n: usize_field(m, what, "n")?,
@@ -271,6 +311,7 @@ impl Point {
             streams: usize_field(m, what, "streams")?,
             iters: usize_field(m, what, "iters")?,
             devices,
+            transform,
         })
     }
 }
@@ -328,6 +369,16 @@ pub struct ScenarioSpec {
     /// `lhs`).
     pub sparsity: SparsityMode,
     pub sweep: Sweep,
+    /// The recorded launch timeline (shape `trace` only, required
+    /// there — see [`crate::replay::format`]). Omitted from the wire
+    /// when empty, keeping every pre-replay fixture byte-identical.
+    /// On decode, `n` / `precision` / `streams` / `iters` are
+    /// *normalized from the trace* (max n, FLOP-dominant precision,
+    /// stream count, 1) so spelling variants collide on one cache key.
+    pub trace: Vec<TraceRecord>,
+    /// What-if rewrite applied to `trace` before replay
+    /// (docs/replay.md); `identity` stays off the wire.
+    pub transform: Transform,
 }
 
 impl ScenarioSpec {
@@ -353,7 +404,43 @@ impl ScenarioSpec {
             },
             sparsity: SparsityMode::Dense,
             sweep: Sweep::default(),
+            trace: Vec::new(),
+            transform: Transform::Identity,
         }
+    }
+
+    /// A trace-replay spec over `records` (shape `trace`, ask `sim`),
+    /// with the headline fields normalized from the validated trace —
+    /// the programmatic twin of decoding a `{"shape":"trace",...}`
+    /// payload. The records are validated up front; defects map to the
+    /// same typed errors the wire decoder produces.
+    pub fn trace_replay(
+        records: Vec<TraceRecord>,
+    ) -> Result<ScenarioSpec, ApiError> {
+        let mut s = ScenarioSpec::new(Ask::Sim);
+        s.shape = Shape::Trace;
+        s.trace = records;
+        s.normalize_trace_fields("trace spec")?;
+        Ok(s)
+    }
+
+    /// Re-derive the headline fields from the (validated) trace:
+    /// `streams` := stream count, `n` := max n, `precision` :=
+    /// FLOP-dominant precision, `iters` := 1. Called on every decode
+    /// of a trace-shaped spec, so semantically identical trace specs
+    /// collide on one canonical form no matter how the headline
+    /// fields were spelled.
+    pub(crate) fn normalize_trace_fields(
+        &mut self,
+        what: &str,
+    ) -> Result<(), ApiError> {
+        let ts = TraceSpec::from_records(self.trace.clone())
+            .map_err(|e| trace_api_error(what, &e))?;
+        self.streams = ts.stream_count();
+        self.n = ts.max_n();
+        self.precision = ts.dominant_precision();
+        self.iters = 1;
+        Ok(())
     }
 
     /// The exact desugaring of a v1 `sim` request.
@@ -421,6 +508,56 @@ impl ScenarioSpec {
                      use shape \"homogeneous\"",
                 ));
             }
+        }
+        if matches!(self.shape, Shape::SpmmMix | Shape::Trace)
+            && self.ask != Ask::Sim
+        {
+            return Err(ApiError::bad_request(format!(
+                "shape {:?} only applies to ask \"sim\"",
+                self.shape.as_str()
+            )));
+        }
+        if (self.shape == Shape::Trace) != !self.trace.is_empty() {
+            return Err(ApiError::bad_request(
+                if self.shape == Shape::Trace {
+                    "shape \"trace\" requires a \"trace\" record array"
+                        .to_string()
+                } else {
+                    format!(
+                        "\"trace\" only applies to shape \"trace\" \
+                         (shape is {:?})",
+                        self.shape.as_str()
+                    )
+                },
+            ));
+        }
+        if self.shape != Shape::Trace
+            && (self.transform != Transform::Identity
+                || !self.sweep.transform.is_empty())
+        {
+            return Err(ApiError::bad_request(format!(
+                "\"transform\" only applies to shape \"trace\" (shape \
+                 is {:?})",
+                self.shape.as_str()
+            )));
+        }
+        if self.shape == Shape::Trace {
+            // The timeline pins its own geometry; only the transform
+            // axis makes sense to sweep.
+            if !(self.sweep.devices.is_empty()
+                && self.sweep.n.is_empty()
+                && self.sweep.precision.is_empty()
+                && self.sweep.streams.is_empty()
+                && self.sweep.iters.is_empty())
+            {
+                return Err(ApiError::bad_request(
+                    "shape \"trace\" fixes n/precision/streams/iters/\
+                     devices from the trace; only the \"transform\" \
+                     sweep axis applies",
+                ));
+            }
+            TraceSpec::from_records(self.trace.clone())
+                .map_err(|e| trace_api_error("trace", &e))?;
         }
         check_range(
             "device_set.devices",
@@ -529,9 +666,9 @@ impl ScenarioSpec {
     }
 
     /// Expand the sweep cross-product into ordered points (axis nesting
-    /// `devices` → `n` → `precision` → `streams` → `iters`; absent axes
-    /// contribute the base value). A sweep-less spec expands to one
-    /// point.
+    /// `devices` → `n` → `precision` → `streams` → `iters` →
+    /// `transform`; absent axes contribute the base value). A
+    /// sweep-less spec expands to one point.
     pub fn expand(&self) -> Vec<Point> {
         let ds = if self.sweep.devices.is_empty() {
             vec![self.device_set.devices]
@@ -558,19 +695,27 @@ impl ScenarioSpec {
         } else {
             self.sweep.iters.clone()
         };
+        let ts = if self.sweep.transform.is_empty() {
+            vec![self.transform]
+        } else {
+            self.sweep.transform.clone()
+        };
         let mut out = Vec::with_capacity(self.sweep.points());
         for &devices in &ds {
             for &n in &ns {
                 for &precision in &ps {
                     for &streams in &ss {
                         for &iters in &is {
-                            out.push(Point {
-                                n,
-                                precision,
-                                streams,
-                                iters,
-                                devices,
-                            });
+                            for &transform in &ts {
+                                out.push(Point {
+                                    n,
+                                    precision,
+                                    streams,
+                                    iters,
+                                    devices,
+                                    transform,
+                                });
+                            }
                         }
                     }
                 }
@@ -596,6 +741,7 @@ impl ScenarioSpec {
         s.max_error = None;
         s.max_time_ms = None;
         s.sweep = Sweep::default();
+        s.transform = p.transform;
         s
     }
 
@@ -681,6 +827,24 @@ impl ScenarioSpec {
                 ))
                 .kernels
             }
+            Shape::SpmmMix => {
+                overlay(StreamSetSpec::spmm_mix(
+                    p.n,
+                    p.precision,
+                    p.streams,
+                    p.iters,
+                ))
+                .kernels
+            }
+            // One descriptor per launch, transform applied — the DES
+            // replay path builds its own timeline from the trace, but
+            // this keeps `kernels` total for introspection.
+            Shape::Trace => p
+                .transform
+                .apply(&self.trace)
+                .iter()
+                .map(|r| r.kernel_desc())
+                .collect(),
         }
     }
 
@@ -768,7 +932,28 @@ impl ScenarioSpec {
             if !self.sweep.streams.is_empty() {
                 sw.push(("streams", usize_arr(&self.sweep.streams)));
             }
+            if !self.sweep.transform.is_empty() {
+                sw.push((
+                    "transform",
+                    Json::Arr(
+                        self.sweep
+                            .transform
+                            .iter()
+                            .map(|t| Json::Str(t.name()))
+                            .collect(),
+                    ),
+                ));
+            }
             fields.push(("sweep", Json::obj(sw)));
+        }
+        if !self.trace.is_empty() {
+            fields.push((
+                "trace",
+                Json::Arr(self.trace.iter().map(|r| r.to_json()).collect()),
+            ));
+        }
+        if self.transform != Transform::Identity {
+            fields.push(("transform", Json::Str(self.transform.name())));
         }
     }
 
@@ -815,7 +1000,7 @@ impl ScenarioSpec {
                 ApiError::bad_request(format!(
                     "{what}: bad shape {s:?} (want \
                      homogeneous|imbalanced_pair|mixed_sparse|\
-                     data_parallel|pipeline|halo)"
+                     data_parallel|pipeline|halo|spmm_mix|trace)"
                 ))
             })?,
         };
@@ -831,7 +1016,14 @@ impl ScenarioSpec {
                 )
             })?),
         };
-        let n = usize_field(m, what, "n")?;
+        // `n` is the one required base field — except under shape
+        // `trace`, where every headline field is normalized from the
+        // trace records below and may simply be omitted.
+        let n = if shape == Shape::Trace && !m.contains_key("n") {
+            1
+        } else {
+            usize_field(m, what, "n")?
+        };
         let precision = match opt_str(m, what, "precision")? {
             None => Precision::Fp8,
             Some(s) => Precision::parse(s).ok_or_else(|| {
@@ -878,7 +1070,21 @@ impl ScenarioSpec {
             None => DeviceSet::default(),
             Some(v) => decode_device_set(v, what)?,
         };
-        let spec = ScenarioSpec {
+        let trace = match m.get("trace") {
+            None => Vec::new(),
+            Some(v) => decode_trace(v, what)?,
+        };
+        let transform = match opt_str(m, what, "transform")? {
+            None => Transform::Identity,
+            Some(s) => Transform::parse(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "{what}: bad transform {s:?} (want identity|\
+                     precision_rewrite:<precision>|sparsity_enable|\
+                     stream_remap:K|dilate:K|compress:K)"
+                ))
+            })?,
+        };
+        let mut spec = ScenarioSpec {
             ask,
             backend,
             n,
@@ -893,7 +1099,12 @@ impl ScenarioSpec {
             objective,
             sparsity,
             sweep,
+            trace,
+            transform,
         };
+        if spec.shape == Shape::Trace && !spec.trace.is_empty() {
+            spec.normalize_trace_fields(what)?;
+        }
         spec.validate().map_err(|e| {
             ApiError::new(e.code, format!("{what}: {}", e.message))
         })?;
@@ -910,7 +1121,7 @@ fn decode_sweep(v: &Json, what: &str) -> Result<Sweep, ApiError> {
     check_obj_fields(
         m,
         &format!("{what}: sweep"),
-        &["devices", "iters", "n", "precision", "streams"],
+        &["devices", "iters", "n", "precision", "streams", "transform"],
     )?;
     let axis_usize = |key: &str| -> Result<Vec<usize>, ApiError> {
         match m.get(key) {
@@ -951,13 +1162,68 @@ fn decode_sweep(v: &Json, what: &str) -> Result<Sweep, ApiError> {
                 .collect::<Result<Vec<_>, _>>()?
         }
     };
+    let transform = match m.get("transform") {
+        None => Vec::new(),
+        Some(v) => {
+            let arr = axis_arr(v, what, "transform")?;
+            arr.iter()
+                .map(|x| {
+                    x.as_str().and_then(Transform::parse).ok_or_else(|| {
+                        ApiError::bad_request(format!(
+                            "{what}: sweep axis \"transform\" wants \
+                             transform names (identity|\
+                             precision_rewrite:<precision>|\
+                             sparsity_enable|stream_remap:K|dilate:K|\
+                             compress:K)"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?
+        }
+    };
     Ok(Sweep {
         devices: axis_usize("devices")?,
         n: axis_usize("n")?,
         precision,
         streams: axis_usize("streams")?,
         iters: axis_usize("iters")?,
+        transform,
     })
+}
+
+/// Decode the `"trace"` record array (strict per-record decode with
+/// the record index in every message; the `TraceSpec` bounds and
+/// monotonicity run during normalization/validation).
+fn decode_trace(
+    v: &Json,
+    what: &str,
+) -> Result<Vec<TraceRecord>, ApiError> {
+    let arr = match v {
+        Json::Arr(a) => a.as_slice(),
+        _ => {
+            return Err(ApiError::bad_request(format!(
+                "{what}: field \"trace\" must be an array of record \
+                 objects"
+            )))
+        }
+    };
+    arr.iter()
+        .enumerate()
+        .map(|(i, r)| {
+            TraceRecord::from_json(r).map_err(|e| {
+                trace_api_error(&format!("{what}: trace record {i}"), &e)
+            })
+        })
+        .collect()
+}
+
+/// Map a replay-layer trace defect onto the wire error classes.
+fn trace_api_error(what: &str, e: &crate::replay::TraceError) -> ApiError {
+    let code = match e.kind {
+        TraceErrorKind::BadRequest => ErrorCode::BadRequest,
+        TraceErrorKind::BadRange => ErrorCode::BadRange,
+    };
+    ApiError::new(code, format!("{what}: {}", e.msg))
 }
 
 /// Decode a `"device_set"` object. Both subfields are optional
@@ -1242,7 +1508,8 @@ mod tests {
                 precision: Precision::Fp8,
                 streams: 4,
                 iters: 50,
-                devices: 1
+                devices: 1,
+                transform: Transform::Identity
             }]
         );
     }
@@ -1273,6 +1540,7 @@ mod tests {
             streams: 4,
             iters: 50,
             devices: 1,
+            transform: Transform::Identity,
         };
         let homog = ScenarioSpec::sim(512, Precision::Fp8, 4);
         let ks = homog.kernels(&p);
@@ -1284,7 +1552,8 @@ mod tests {
         pair.streams = 2;
         pair.n = 2048;
         let pp = Point { n: 2048, precision: Precision::Fp8, streams: 2,
-                         iters: 50, devices: 1 };
+                         iters: 50, devices: 1,
+                         transform: Transform::Identity };
         let ks = pair.kernels(&pp);
         assert_eq!(ks.len(), 2);
         assert_eq!(ks[0].m, 2048);
@@ -1517,6 +1786,7 @@ mod tests {
             streams: 4,
             iters: 50,
             devices: 1,
+            transform: Transform::Identity,
         };
         let wire = p.to_json().to_string();
         assert!(!wire.contains("devices"), "{wire}");
@@ -1527,5 +1797,195 @@ mod tests {
         assert!(wire.starts_with(r#"{"devices":4,"#), "{wire}");
         assert_eq!(Point::from_json(&Json::parse(&wire).unwrap(), "pt")
                        .unwrap(), p4);
+        // A non-identity transform rides the point wire form (last,
+        // alphabetical) and roundtrips.
+        let pt = Point {
+            transform: Transform::Dilate(2),
+            ..p
+        };
+        let wire = pt.to_json().to_string();
+        assert!(wire.ends_with(r#""transform":"dilate:2"}"#), "{wire}");
+        assert_eq!(Point::from_json(&Json::parse(&wire).unwrap(), "pt")
+                       .unwrap(), pt);
+    }
+
+    // A two-stream trace: a big fp16 GEMM stream interleaved with
+    // small fp8 launches.
+    const TRACE_BODY: &str = r#"[
+        {"kernel":"gemm","n":1024,"precision":"fp16","stream":0,"issue_ns":0},
+        {"n":256,"stream":1,"issue_ns":500},
+        {"kernel":"spmm","n":256,"stream":1,"issue_ns":2000},
+        {"kernel":"gemm","n":1024,"precision":"fp16","stream":0,"issue_ns":2500}
+    ]"#;
+
+    fn trace_spec(extra: &str) -> Result<ScenarioSpec, ApiError> {
+        let line =
+            format!(r#"{{"shape":"trace","trace":{TRACE_BODY}{extra}}}"#);
+        ScenarioSpec::from_json(&Json::parse(&line).unwrap())
+    }
+
+    #[test]
+    fn trace_spec_normalizes_headline_fields_and_is_a_fixpoint() {
+        let spec = trace_spec("").unwrap();
+        // streams := stream count, n := max n, precision := dominant
+        // (fp16 carries the 1024^3 launches), iters := 1.
+        assert_eq!(spec.streams, 2);
+        assert_eq!(spec.n, 1024);
+        assert_eq!(spec.precision, Precision::F16);
+        assert_eq!(spec.iters, 1);
+        assert_eq!(spec.trace.len(), 4);
+        let canonical = spec.to_json().to_string();
+        assert!(canonical.contains(r#""shape":"trace""#), "{canonical}");
+        assert!(
+            canonical.contains(r#""trace":[{"issue_ns":0,"#),
+            "{canonical}"
+        );
+        // identity transform stays off the wire.
+        assert!(!canonical.contains("transform"), "{canonical}");
+        let back =
+            ScenarioSpec::from_json(&Json::parse(&canonical).unwrap())
+                .unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string(), canonical, "fixpoint");
+        // Spelling the headline fields differently collides on the
+        // same canonical form (one cache key per timeline).
+        let respelled =
+            trace_spec(r#","n":64,"precision":"fp8","streams":9"#)
+                .unwrap();
+        assert_eq!(respelled.to_json().to_string(), canonical);
+        // The programmatic constructor is the decoder's twin.
+        let built = ScenarioSpec::trace_replay(spec.trace.clone()).unwrap();
+        assert_eq!(built.to_json().to_string(), canonical);
+        // at() keeps the trace and the point's transform; the
+        // identity point reproduces the spec itself.
+        let points = spec.expand();
+        assert_eq!(points.len(), 1);
+        assert_eq!(spec.at(&points[0]), spec);
+        spec.validated_points().unwrap();
+    }
+
+    #[test]
+    fn trace_validation_is_typed() {
+        // trace on a non-trace shape / shape trace without records.
+        let err = ScenarioSpec::from_json(
+            &Json::parse(&format!(
+                r#"{{"n":512,"trace":{TRACE_BODY}}}"#
+            ))
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("only applies"), "{err}");
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"shape":"trace"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("requires"), "{err}");
+        // transform needs shape trace.
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"n":512,"transform":"dilate:2"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.message.contains("only applies"), "{err}");
+        // Unknown transform spellings name the accepted forms.
+        let err = trace_spec(r#","transform":"reverse""#).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("sparsity_enable"), "{err}");
+        // Trace shapes are sim-only and pin their own geometry.
+        let err = trace_spec(r#","ask":"plan""#).unwrap_err();
+        assert!(err.message.contains("only applies to ask"), "{err}");
+        let err = trace_spec(r#","sweep":{"n":[256,512]}"#).unwrap_err();
+        assert!(err.message.contains("transform"), "{err}");
+        // Record defects keep the replay layer's error classes.
+        let err = ScenarioSpec::from_json(
+            &Json::parse(
+                r#"{"shape":"trace","trace":[{"n":512,"stream":99,"issue_ns":0}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRange);
+        assert!(err.message.contains("stream 99"), "{err}");
+        let err = ScenarioSpec::from_json(
+            &Json::parse(
+                r#"{"shape":"trace","trace":[{"n":512,"stream":0,"issue_ns":100},{"n":512,"stream":0,"issue_ns":50}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("non-decreasing"), "{err}");
+    }
+
+    #[test]
+    fn transform_axis_sweeps_innermost_and_rides_the_point() {
+        let spec = trace_spec(
+            r#","sweep":{"transform":["identity","precision_rewrite:fp8","stream_remap:1"]}"#,
+        )
+        .unwrap();
+        let points = spec.expand();
+        assert_eq!(points.len(), 3);
+        assert_eq!(
+            points.iter().map(|p| p.transform).collect::<Vec<_>>(),
+            vec![
+                Transform::Identity,
+                Transform::PrecisionRewrite(Precision::Fp8),
+                Transform::StreamRemap(1),
+            ]
+        );
+        // The canonical sweep spells the axis canonically and the
+        // whole spec is a fixpoint.
+        let canonical = spec.to_json().to_string();
+        assert!(
+            canonical.contains(
+                r#""sweep":{"transform":["identity","precision_rewrite:fp8","stream_remap:1"]}"#
+            ),
+            "{canonical}"
+        );
+        let back =
+            ScenarioSpec::from_json(&Json::parse(&canonical).unwrap())
+                .unwrap();
+        assert_eq!(back.to_json().to_string(), canonical, "fixpoint");
+        // Per-point cache forms differ exactly in their transform.
+        let id = spec.at(&points[0]);
+        let fp8 = spec.at(&points[1]);
+        assert_eq!(id.transform, Transform::Identity);
+        assert!(!id.to_json().to_string().contains("transform"));
+        assert!(
+            fp8.to_json()
+                .to_string()
+                .contains(r#""transform":"precision_rewrite:fp8""#),
+        );
+        spec.validated_points().unwrap();
+    }
+
+    #[test]
+    fn trace_bounds_mirror_the_service_ranges() {
+        use super::super::service::{SIM_STREAMS, SIZE_RANGE};
+        use crate::replay::{MAX_TRACE_STREAMS, TRACE_N_RANGE};
+        // The replay layer cannot import api; these pins keep its
+        // mirrored bounds honest.
+        assert_eq!(MAX_TRACE_STREAMS, SIM_STREAMS.1);
+        assert_eq!(TRACE_N_RANGE, SIZE_RANGE);
+    }
+
+    #[test]
+    fn spmm_mix_shape_alternates_kernel_classes_and_is_sim_only() {
+        use crate::sim::kernel::KernelClass;
+        let v = Json::parse(r#"{"n":512,"shape":"spmm_mix"}"#).unwrap();
+        let spec = ScenarioSpec::from_json(&v).unwrap();
+        let ks = spec.kernels(&spec.expand()[0]);
+        assert_eq!(ks.len(), 4);
+        assert_eq!(
+            ks.iter().filter(|k| k.class == KernelClass::Spmm).count(),
+            2
+        );
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"ask":"plan","n":512,"shape":"spmm_mix"}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.message.contains("only applies to ask"), "{err}");
     }
 }

@@ -71,7 +71,7 @@ use super::protocol::{
     objective_name, ApiError, BackendInfo, ErrorCode, ExperimentInfo,
     PlanGroup, Request, RequestEnvelope, Response, MAX_BATCH_ITEMS,
 };
-use super::scenario::{Ask, Point, PointResult, ScenarioSpec};
+use super::scenario::{Ask, Point, PointResult, ScenarioSpec, Sweep};
 use crate::backend::auto::TrustTable;
 use crate::backend::{self, BackendId};
 use crate::config::Config;
@@ -804,6 +804,7 @@ impl Core {
                     l2_miss: r.l2_miss,
                     lds_util: r.lds_util,
                     transfer_ms: r.transfer_ms,
+                    spans: r.spans,
                 }
             }
             Ask::Plan => {
@@ -1011,6 +1012,72 @@ mod tests {
                     "speedup {speedup_vs_serial}"
                 );
                 assert!((0.0..=1.0).contains(&fairness));
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_scenarios_replay_share_cache_and_refuse_analytic() {
+        use crate::replay::Transform;
+        use crate::util::json::Json;
+        let s = svc();
+        let spec = ScenarioSpec::from_json(
+            &Json::parse(
+                r#"{"shape":"trace","trace":[
+                    {"n":512,"stream":0,"issue_ns":0},
+                    {"n":256,"stream":1,"issue_ns":1000},
+                    {"n":512,"stream":0,"issue_ns":400000}
+                ],"sweep":{"transform":["identity","precision_rewrite:fp16"]}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let points = match s.handle(&Request::Scenario { spec: spec.clone() })
+        {
+            Response::Scenario { points } => points,
+            other => panic!("unexpected response: {other:?}"),
+        };
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].point.transform, Transform::Identity);
+        let sim = |i: usize| match points[i].result.as_ref() {
+            Response::Sim { makespan_ms, spans, .. } => {
+                (*makespan_ms, *spans)
+            }
+            other => panic!("unexpected point result: {other:?}"),
+        };
+        let (id_ms, id_spans) = sim(0);
+        let (f16_ms, f16_spans) = sim(1);
+        assert_eq!(id_spans, 3, "one span per launch");
+        assert_eq!(f16_spans, 3);
+        assert!(
+            f16_ms > id_ms,
+            "rewriting an fp8 trace to fp16 must cost time \
+             ({f16_ms} !> {id_ms})"
+        );
+        // Both points replayed on the DES, cold.
+        assert_eq!(s.backend_runs(), vec![2, 0, 0]);
+        // The identity point shares its cache entry with the
+        // untransformed spec: re-asking plain costs zero cold runs
+        // and answers byte-identically.
+        let mut plain = spec.clone();
+        plain.sweep = Sweep::default();
+        let replays =
+            match s.handle(&Request::Scenario { spec: plain }) {
+                Response::Scenario { points } => points,
+                other => panic!("unexpected response: {other:?}"),
+            };
+        assert_eq!(replays.len(), 1);
+        assert_eq!(replays[0].result, points[0].result);
+        assert_eq!(s.backend_runs(), vec![2, 0, 0], "cache shared");
+        // The analytic backend refuses issue-time replay, typed,
+        // before any point runs.
+        let mut refused = spec.clone();
+        refused.backend = Some(BackendId::Analytic);
+        match s.handle(&Request::Scenario { spec: refused }) {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::UnsupportedByBackend);
+                assert!(message.contains("trace"), "{message}");
             }
             other => panic!("unexpected response: {other:?}"),
         }

@@ -234,6 +234,7 @@ impl Backend for AnalyticBackend {
             l2_miss: l2.miss_ratio(ks[0].working_set(), s),
             lds_util: lds_sat,
             transfer_ms: transfer_ns / 1e6,
+            spans: 0,
         }
     }
 

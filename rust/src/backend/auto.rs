@@ -71,8 +71,13 @@ impl TrustTable {
             }
         }
         // Fragmentation fairness on the imbalanced pair is replay
-        // territory (the analytic backend refuses the shape outright).
-        if spec.shape == Shape::ImbalancedPair {
+        // territory (the analytic backend refuses the shape outright),
+        // and so are issue-time trace replay and irregular SpMM
+        // contention (both new shapes have no closed forms at all).
+        if matches!(
+            spec.shape,
+            Shape::ImbalancedPair | Shape::SpmmMix | Shape::Trace
+        ) {
             return BackendId::Des;
         }
         // Multi-device points route to replay until the fabric
@@ -175,7 +180,8 @@ mod tests {
 
     fn point(n: usize, streams: usize) -> Point {
         Point { n, precision: Precision::Fp8, streams, iters: 50,
-                devices: 1 }
+                devices: 1,
+                transform: crate::replay::Transform::Identity }
     }
 
     #[test]
@@ -228,6 +234,16 @@ mod tests {
         // refinement candidacy).
         assert_eq!(TrustTable::confidence(&dp, &d4), 1.0);
         assert!(!TrustTable::wants_refinement(&dp, &d4));
+        // The replay shapes are always the reference engine, fully
+        // trusted — no closed forms exist for them.
+        for shape in [Shape::SpmmMix, Shape::Trace] {
+            let mut s = ScenarioSpec::new(Ask::Sim);
+            s.shape = shape;
+            let p = point(512, 4);
+            assert_eq!(TrustTable::route(&s, &p), BackendId::Des);
+            assert_eq!(TrustTable::confidence(&s, &p), 1.0);
+            assert!(!TrustTable::wants_refinement(&s, &p));
+        }
     }
 
     #[test]

@@ -175,6 +175,9 @@ pub struct SimResult {
     /// Unhidden Infinity Fabric transfer time (`crate::fabric`);
     /// exactly 0 on single-device points.
     pub transfer_ms: f64,
+    /// Per-launch span count from trace replay (`crate::replay`);
+    /// exactly 0 on every non-`trace` shape.
+    pub spans: usize,
 }
 
 /// One scheduled group inside a [`PlanResult`].
@@ -341,6 +344,10 @@ mod tests {
         assert!(analytic.supports(Ask::Sim, Shape::DataParallel));
         assert!(analytic.supports(Ask::Sim, Shape::Pipeline));
         assert!(analytic.supports(Ask::Sim, Shape::Halo));
+        // Irregular SpMM contention and issue-time replay are replay
+        // territory: the closed forms refuse both, typed.
+        assert!(!analytic.supports(Ask::Sim, Shape::SpmmMix));
+        assert!(!analytic.supports(Ask::Sim, Shape::Trace));
         // Plan/sparsity are shape-complete on every backend.
         for shape in Shape::ALL {
             assert!(analytic.supports(Ask::Plan, shape));

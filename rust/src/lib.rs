@@ -39,6 +39,10 @@
 //!   §6.11): link topology, calibrated latency/bandwidth costs,
 //!   contention accounting, and the compute/communication overlap
 //!   composition behind `device_set` scenarios (docs/multi_apu.md).
+//! * [`replay`] — trace replay (DESIGN.md §6.12): recorded
+//!   kernel-launch timelines as a first-class `trace` scenario shape,
+//!   an issue-time-honoring DES, and sweepable what-if transforms
+//!   (docs/replay.md).
 
 pub mod api;
 pub mod backend;
@@ -51,6 +55,7 @@ pub mod hw;
 pub mod isa;
 pub mod loadgen;
 pub mod metrics;
+pub mod replay;
 pub mod report;
 pub mod runtime;
 pub mod serve;

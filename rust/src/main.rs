@@ -13,6 +13,9 @@
 //!   plan                show a coordinator execution plan for a pool
 //!   scenario            run a declarative ScenarioSpec sweep, locally
 //!                       or as an async job with progress (--addr)
+//!   replay              replay a recorded kernel-launch trace (JSON
+//!                       lines) through the DES, optionally rewritten
+//!                       by what-if transforms
 //!   serve               serve the JSON-line protocol over TCP
 //!                       (batching + result cache; --no-cache disables;
 //!                       --io-model picks epoll or threads)
@@ -31,6 +34,7 @@ use mi300a_char::backend::BackendId;
 use mi300a_char::config::Config;
 use mi300a_char::isa::Precision;
 use mi300a_char::loadgen::{LoadgenOptions, Mix};
+use mi300a_char::replay::{parse_jsonl, TraceSpec, Transform};
 use mi300a_char::runtime::Manifest;
 use mi300a_char::serve::IoModel;
 use mi300a_char::util::cli::Args;
@@ -50,7 +54,7 @@ USAGE:
   mi300a-char scenario [--spec FILE] [--ask sim|plan|sparsity]
                    [--size N] [--precision P] [--streams N] [--iters N]
                    [--shape homogeneous|imbalanced_pair|mixed_sparse|
-                            data_parallel|pipeline|halo]
+                            spmm_mix|data_parallel|pipeline|halo]
                    [--devices N] [--topology fully_connected|ring]
                    [--small-size N] [--objective O] [--sparsity MODE]
                    [--sweep-size A,B,..] [--sweep-streams A,B,..]
@@ -58,6 +62,10 @@ USAGE:
                    [--sweep-devices A,B,..]
                    [--backend des|analytic|auto] [--max-error X]
                    [--max-time-ms N] [--json] [--addr HOST:PORT]
+  mi300a-char replay --trace FILE.jsonl [--transform T]
+                   [--sweep-transform T,T,..]
+                   [--backend des|analytic|auto]
+                   [--chrome-trace OUT.json] [--json]
   mi300a-char serve [--addr HOST:PORT] [--max-conns N] [--no-cache]
                    [--backend des|analytic|auto] [--io-model epoll|threads]
                    [--coordinator --workers HOST:PORT,HOST:PORT,...]
@@ -102,6 +110,14 @@ data_parallel/pipeline/halo shapes place work across 1-4 APUs with the
 Infinity Fabric transfer model; sim answers grow a transfer_ms field:
   mi300a-char scenario --shape data_parallel --size 512 --sweep-devices 1,2,3,4
   mi300a-char scenario --shape pipeline --devices 4 --topology ring --sweep-size 512,1024,2048
+Trace replay (DESIGN.md §6.12, docs/replay.md): a recorded kernel-launch
+timeline (JSON lines, examples under docs/traces/) replays through the
+DES honoring issue times; what-if transforms (identity,
+precision_rewrite:P, sparsity_enable, stream_remap:K, dilate:K,
+compress:K) rewrite the timeline before replay and sweep as a scenario
+axis; --chrome-trace exports per-launch spans for chrome://tracing:
+  mi300a-char replay --trace docs/traces/transformer.jsonl --chrome-trace spans.json
+  mi300a-char replay --trace docs/traces/mixed_precision.jsonl --sweep-transform identity,precision_rewrite:fp8
 ";
 
 /// Parse an optional `--backend` flag into a [`BackendId`], with the
@@ -377,8 +393,9 @@ fn scenario_spec_from_args(args: &Args) -> Result<ScenarioSpec, String> {
         Shape::parse(args.get_or("shape", "homogeneous")).ok_or_else(|| {
             format!(
                 "unknown shape {:?} (want \
-                 homogeneous|imbalanced_pair|mixed_sparse|\
-                 data_parallel|pipeline|halo)",
+                 homogeneous|imbalanced_pair|mixed_sparse|spmm_mix|\
+                 data_parallel|pipeline|halo; shape \"trace\" needs \
+                 trace records — use `replay` or --spec)",
                 args.get_or("shape", "homogeneous")
             )
         })?;
@@ -463,13 +480,19 @@ fn print_scenario_points(resp: &Response) {
             } else {
                 String::new()
             };
+            let transform = if pr.point.transform != Transform::Identity {
+                format!(" transform={}", pr.point.transform.name())
+            } else {
+                String::new()
+            };
             println!(
-                "n={} precision={} streams={} iters={}{}: {}",
+                "n={} precision={} streams={} iters={}{}{}: {}",
                 pr.point.n,
                 mi300a_char::api::precision_wire_name(pr.point.precision),
                 pr.point.streams,
                 pr.point.iters,
                 devices,
+                transform,
                 pr.result.to_item_json()
             );
         }
@@ -559,6 +582,114 @@ fn cmd_scenario(args: &Args) -> i32 {
         }
         other => {
             eprintln!("scenario: unexpected response {other:?}");
+            1
+        }
+    }
+}
+
+fn cmd_replay(args: &Args) -> i32 {
+    let path = match args.get("trace") {
+        Some(p) => p.to_string(),
+        None => {
+            eprintln!(
+                "replay: missing --trace FILE.jsonl (a recorded \
+                 kernel-launch timeline, see docs/replay.md)"
+            );
+            return 2;
+        }
+    };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("replay: cannot read {path}: {e}");
+            return 2;
+        }
+    };
+    let records = match parse_jsonl(&text) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("replay: {path}: {e}");
+            return 2;
+        }
+    };
+    let mut spec = match ScenarioSpec::trace_replay(records) {
+        Ok(s) => s,
+        Err(e) => {
+            print_error("replay", e.code, &e.message);
+            return 2;
+        }
+    };
+    let parse_transform = |t: &str| -> Result<Transform, String> {
+        Transform::parse(t).ok_or_else(|| {
+            format!(
+                "unknown transform {t:?} (want identity|\
+                 precision_rewrite:P|sparsity_enable|stream_remap:K|\
+                 dilate:K|compress:K)"
+            )
+        })
+    };
+    if let Some(t) = args.get("transform") {
+        spec.transform = match parse_transform(t) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("replay: {e}");
+                return 2;
+            }
+        };
+    }
+    if let Some(v) = args.get("sweep-transform") {
+        spec.sweep.transform = match v
+            .split(',')
+            .map(|x| parse_transform(x.trim()))
+            .collect::<Result<Vec<_>, _>>()
+        {
+            Ok(ts) => ts,
+            Err(e) => {
+                eprintln!("replay: {e}");
+                return 2;
+            }
+        };
+    }
+    match backend_arg(args, "replay") {
+        Ok(Some(id)) => spec.backend = Some(id),
+        Ok(None) => {}
+        Err(code) => return code,
+    }
+    // The wire answer carries only the span *count*; the spans
+    // themselves come straight from the replay engine, so the export
+    // replays the (--transform'd) timeline once more here.
+    if let Some(out) = args.get("chrome-trace") {
+        let cfg = build_config(args);
+        let ts = TraceSpec::from_records(spec.trace.clone())
+            .expect("trace_replay validated the records");
+        let run =
+            mi300a_char::replay::replay(&cfg, &ts, spec.transform, cfg.seed);
+        let j = mi300a_char::sim::trace::chrome_trace_spans(
+            &run.spans,
+            &run.labels,
+        );
+        if let Err(e) = std::fs::write(out, j.to_string_pretty()) {
+            eprintln!("replay: cannot write {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out} ({} spans)", run.spans.len());
+    }
+    let svc = one_shot_service(args);
+    match svc.handle(&Request::Scenario { spec }) {
+        resp @ Response::Scenario { .. } => {
+            if args.flag("json") {
+                println!("{}", resp.to_json(None).to_string_pretty());
+            } else {
+                print_scenario_points(&resp);
+            }
+            0
+        }
+        Response::Error { code, message } => {
+            print_error("replay", code, &message);
+            2
+        }
+        other => {
+            eprintln!("replay: unexpected response {other:?}");
             1
         }
     }
@@ -853,6 +984,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("plan") => cmd_plan(&args),
         Some("scenario") => cmd_scenario(&args),
+        Some("replay") => cmd_replay(&args),
         Some("config") => cmd_config(&args),
         Some("list") => cmd_list(&args),
         Some("serve") => cmd_serve(&args),

@@ -1,0 +1,475 @@
+//! Trace format: JSON-lines kernel-launch records and the validated
+//! [`TraceSpec`].
+//!
+//! A trace is the recorded launch timeline of a real application — one
+//! record per kernel launch, each naming the kernel class, its GEMM
+//! dimension, precision, structured-sparsity overlay, the stream it was
+//! issued on, and the host-side issue timestamp in nanoseconds:
+//!
+//! ```text
+//! {"kernel":"gemm","n":2048,"precision":"fp16","stream":0,"issue_ns":0}
+//! {"kernel":"spmm","n":512,"precision":"fp8","stream":1,"issue_ns":1500}
+//! ```
+//!
+//! Decoding follows the `api/protocol.rs` discipline: closed field
+//! sets, typed errors, bounded record/line counts, and a canonical
+//! re-encoding (all fields present, keys sorted) that the scenario
+//! layer's fixpoint/cache-key machinery relies on. The module cannot
+//! import `api` (the scenario layer imports *us*), so errors carry a
+//! [`TraceErrorKind`] the caller maps onto the wire `ErrorCode`s.
+
+use crate::isa::Precision;
+use crate::sim::kernel::{KernelClass, KernelDesc, SparsityMode};
+use crate::util::json::Json;
+
+/// Most launches one trace may carry (also the JSON-lines line bound).
+pub const MAX_TRACE_LAUNCHES: usize = 4096;
+
+/// Exclusive stream-id bound — mirrors the service's `SIM_STREAMS` cap
+/// (a scenario test pins the two together).
+pub const MAX_TRACE_STREAMS: usize = 16;
+
+/// Accepted per-record GEMM size range — mirrors the service's
+/// `SIZE_RANGE` (pinned by the same scenario test).
+pub const TRACE_N_RANGE: (usize, usize) = (1, 16384);
+
+/// Longest accepted JSON-lines line, bytes (one record per line).
+pub const MAX_TRACE_LINE_BYTES: usize = 4096;
+
+/// Which wire error class a trace defect belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceErrorKind {
+    /// Malformed or semantically invalid content (`bad_request`).
+    BadRequest,
+    /// Well-formed but out of the accepted bounds (`bad_range`).
+    BadRange,
+}
+
+/// A typed trace defect: the wire error class plus a human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceError {
+    pub kind: TraceErrorKind,
+    pub msg: String,
+}
+
+impl TraceError {
+    pub(crate) fn request(msg: impl Into<String>) -> TraceError {
+        TraceError { kind: TraceErrorKind::BadRequest, msg: msg.into() }
+    }
+
+    pub(crate) fn range(msg: impl Into<String>) -> TraceError {
+        TraceError { kind: TraceErrorKind::BadRange, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// One recorded kernel launch.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TraceRecord {
+    /// Kernel class, resolved against `sim/kernel.rs` (default `gemm`).
+    pub kernel: KernelClass,
+    /// GEMM/SpMM dimension (N of an NxNxN launch). Required.
+    pub n: usize,
+    /// Operand precision (default `fp8`).
+    pub precision: Precision,
+    /// Structured 2:4 overlay (default `dense`).
+    pub sparsity: SparsityMode,
+    /// Stream the launch was issued on. Required, `< MAX_TRACE_STREAMS`.
+    pub stream: usize,
+    /// Host-side issue timestamp, ns from trace start. Required;
+    /// non-decreasing per stream.
+    pub issue_ns: u64,
+}
+
+/// The closed record field set, sorted (protocol discipline: any other
+/// key is a typed `bad_request`).
+pub const RECORD_FIELDS: &[&str] =
+    &["issue_ns", "kernel", "n", "precision", "sparsity", "stream"];
+
+fn rec_usize(v: &Json, field: &str) -> Result<usize, TraceError> {
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as usize),
+        _ => Err(TraceError::request(format!(
+            "trace record field {field:?} must be a non-negative integer"
+        ))),
+    }
+}
+
+impl TraceRecord {
+    /// Decode one record object. Strict: closed field set, typed
+    /// messages, no coercions.
+    pub fn from_json(v: &Json) -> Result<TraceRecord, TraceError> {
+        let m = match v {
+            Json::Obj(m) => m,
+            _ => {
+                return Err(TraceError::request(
+                    "trace records must be objects",
+                ))
+            }
+        };
+        for k in m.keys() {
+            if !RECORD_FIELDS.contains(&k.as_str()) {
+                return Err(TraceError::request(format!(
+                    "unknown trace record field {k:?} (accepted: \
+                     {RECORD_FIELDS:?})"
+                )));
+            }
+        }
+        let kernel = match m.get("kernel") {
+            None => KernelClass::Gemm,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    TraceError::request(
+                        "trace record field \"kernel\" must be a string",
+                    )
+                })?;
+                KernelClass::parse(s).ok_or_else(|| {
+                    TraceError::request(format!(
+                        "unknown trace kernel {s:?} (accepted: gemm, spmm)"
+                    ))
+                })?
+            }
+        };
+        let n = rec_usize(
+            m.get("n").ok_or_else(|| {
+                TraceError::request("trace record missing field \"n\"")
+            })?,
+            "n",
+        )?;
+        let precision = match m.get("precision") {
+            None => Precision::Fp8,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    TraceError::request(
+                        "trace record field \"precision\" must be a string",
+                    )
+                })?;
+                Precision::parse(s).ok_or_else(|| {
+                    TraceError::request(format!(
+                        "unknown trace precision {s:?}"
+                    ))
+                })?
+            }
+        };
+        let sparsity = match m.get("sparsity") {
+            None => SparsityMode::Dense,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    TraceError::request(
+                        "trace record field \"sparsity\" must be a string",
+                    )
+                })?;
+                SparsityMode::parse(s).ok_or_else(|| {
+                    TraceError::request(format!(
+                        "unknown trace sparsity {s:?}"
+                    ))
+                })?
+            }
+        };
+        let stream = rec_usize(
+            m.get("stream").ok_or_else(|| {
+                TraceError::request("trace record missing field \"stream\"")
+            })?,
+            "stream",
+        )?;
+        let issue_ns = rec_usize(
+            m.get("issue_ns").ok_or_else(|| {
+                TraceError::request(
+                    "trace record missing field \"issue_ns\"",
+                )
+            })?,
+            "issue_ns",
+        )? as u64;
+        Ok(TraceRecord { kernel, n, precision, sparsity, stream, issue_ns })
+    }
+
+    /// Canonical encoding: every field present, keys sorted. The
+    /// scenario fixpoint (`encode(decode(x))` stable after one round)
+    /// and the cache key both ride on this.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("issue_ns", Json::Num(self.issue_ns as f64)),
+            ("kernel", Json::Str(self.kernel.name().into())),
+            ("n", Json::Num(self.n as f64)),
+            (
+                "precision",
+                Json::Str(self.precision.name().to_ascii_lowercase()),
+            ),
+            ("sparsity", Json::Str(self.sparsity.name().into())),
+            ("stream", Json::Num(self.stream as f64)),
+        ])
+    }
+
+    /// Resolve this record against `sim/kernel.rs`: a one-iteration
+    /// kernel descriptor the replay engine costs.
+    pub fn kernel_desc(&self) -> KernelDesc {
+        let k = match self.kernel {
+            KernelClass::Gemm => KernelDesc::gemm(self.n, self.precision),
+            KernelClass::Spmm => KernelDesc::spmm(
+                self.n,
+                self.precision,
+                crate::sim::kernel::DEFAULT_SPMM_DENSITY_PCT,
+            ),
+        };
+        k.with_sparsity(self.sparsity).with_iters(1)
+    }
+}
+
+/// A validated launch timeline: bounded, stream ids in range, issue
+/// times non-decreasing per stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    records: Vec<TraceRecord>,
+}
+
+impl TraceSpec {
+    /// Validate and wrap a record list (the only constructor).
+    pub fn from_records(
+        records: Vec<TraceRecord>,
+    ) -> Result<TraceSpec, TraceError> {
+        if records.is_empty() {
+            return Err(TraceError::request(
+                "trace must contain at least one record",
+            ));
+        }
+        if records.len() > MAX_TRACE_LAUNCHES {
+            return Err(TraceError::range(format!(
+                "trace has {} launches (max {MAX_TRACE_LAUNCHES})",
+                records.len()
+            )));
+        }
+        let mut last_issue = [None::<u64>; MAX_TRACE_STREAMS];
+        for (i, r) in records.iter().enumerate() {
+            if r.stream >= MAX_TRACE_STREAMS {
+                return Err(TraceError::range(format!(
+                    "trace record {i}: stream {} out of range (max {})",
+                    r.stream,
+                    MAX_TRACE_STREAMS - 1
+                )));
+            }
+            if r.n < TRACE_N_RANGE.0 || r.n > TRACE_N_RANGE.1 {
+                return Err(TraceError::range(format!(
+                    "trace record {i}: n {} out of range {:?}",
+                    r.n, TRACE_N_RANGE
+                )));
+            }
+            if let Some(prev) = last_issue[r.stream] {
+                if r.issue_ns < prev {
+                    return Err(TraceError::request(format!(
+                        "trace record {i}: issue_ns {} on stream {} \
+                         precedes the stream's previous launch at {prev} \
+                         (per-stream issue times must be non-decreasing)",
+                        r.issue_ns, r.stream
+                    )));
+                }
+            }
+            last_issue[r.stream] = Some(r.issue_ns);
+        }
+        Ok(TraceSpec { records })
+    }
+
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
+    }
+
+    /// Highest stream id + 1.
+    pub fn stream_count(&self) -> usize {
+        self.records.iter().map(|r| r.stream).max().unwrap_or(0) + 1
+    }
+
+    /// Stream ids that actually carry launches, ascending.
+    pub fn used_streams(&self) -> Vec<usize> {
+        let mut used = [false; MAX_TRACE_STREAMS];
+        for r in &self.records {
+            used[r.stream] = true;
+        }
+        (0..MAX_TRACE_STREAMS).filter(|&s| used[s]).collect()
+    }
+
+    /// Largest kernel dimension in the trace (the scenario layer's
+    /// headline `n` for a trace-shaped spec).
+    pub fn max_n(&self) -> usize {
+        self.records.iter().map(|r| r.n).max().unwrap_or(1)
+    }
+
+    /// Dominant precision: the one carrying the most dense-equivalent
+    /// FLOPs (the scenario layer's headline `precision`).
+    pub fn dominant_precision(&self) -> Precision {
+        let mut by_prec: Vec<(Precision, f64)> = Vec::new();
+        for r in &self.records {
+            let f = 2.0 * (r.n as f64).powi(3);
+            match by_prec.iter_mut().find(|(p, _)| *p == r.precision) {
+                Some((_, acc)) => *acc += f,
+                None => by_prec.push((r.precision, f)),
+            }
+        }
+        by_prec
+            .into_iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(p, _)| p)
+            .unwrap_or(Precision::Fp8)
+    }
+}
+
+/// Parse a JSON-lines trace file body (the CLI `replay --trace` path).
+/// Blank lines are skipped; line length and line count are bounded.
+pub fn parse_jsonl(text: &str) -> Result<Vec<TraceRecord>, TraceError> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.len() > MAX_TRACE_LINE_BYTES {
+            return Err(TraceError::range(format!(
+                "trace line {}: {} bytes (max {MAX_TRACE_LINE_BYTES})",
+                ln + 1,
+                line.len()
+            )));
+        }
+        if out.len() >= MAX_TRACE_LAUNCHES {
+            return Err(TraceError::range(format!(
+                "trace exceeds {MAX_TRACE_LAUNCHES} records"
+            )));
+        }
+        let v = Json::parse(line).map_err(|e| {
+            TraceError::request(format!("trace line {}: {e}", ln + 1))
+        })?;
+        out.push(TraceRecord::from_json(&v).map_err(|e| {
+            TraceError { kind: e.kind, msg: format!("trace line {}: {}", ln + 1, e.msg) }
+        })?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(stream: usize, issue_ns: u64, n: usize) -> TraceRecord {
+        TraceRecord {
+            kernel: KernelClass::Gemm,
+            n,
+            precision: Precision::Fp8,
+            sparsity: SparsityMode::Dense,
+            stream,
+            issue_ns,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_canonically() {
+        let r = rec(2, 1500, 512);
+        let j = r.to_json();
+        assert_eq!(TraceRecord::from_json(&j).unwrap(), r);
+        // Canonical text is stable and sorted.
+        assert_eq!(
+            j.to_string(),
+            r#"{"issue_ns":1500,"kernel":"gemm","n":512,"precision":"fp8","sparsity":"dense","stream":2}"#
+        );
+        // Defaults fill in for omitted optional fields.
+        let sparse = Json::parse(r#"{"n":512,"stream":0,"issue_ns":0}"#)
+            .unwrap();
+        let d = TraceRecord::from_json(&sparse).unwrap();
+        assert_eq!(d.kernel, KernelClass::Gemm);
+        assert_eq!(d.precision, Precision::Fp8);
+        assert_eq!(d.sparsity, SparsityMode::Dense);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_records() {
+        let cases: Vec<(&str, TraceErrorKind)> = vec![
+            (r#"{"n":512,"stream":0}"#, TraceErrorKind::BadRequest),
+            (r#"{"stream":0,"issue_ns":0}"#, TraceErrorKind::BadRequest),
+            (
+                r#"{"n":512,"stream":0,"issue_ns":0,"warp":1}"#,
+                TraceErrorKind::BadRequest,
+            ),
+            (
+                r#"{"n":512,"stream":0,"issue_ns":-5}"#,
+                TraceErrorKind::BadRequest,
+            ),
+            (
+                r#"{"n":512,"stream":0,"issue_ns":0,"kernel":"conv"}"#,
+                TraceErrorKind::BadRequest,
+            ),
+            (
+                r#"{"n":512,"stream":0,"issue_ns":0,"precision":"int4"}"#,
+                TraceErrorKind::BadRequest,
+            ),
+            (r#"[1,2]"#, TraceErrorKind::BadRequest),
+        ];
+        for (text, kind) in cases {
+            let v = Json::parse(text).unwrap();
+            let e = TraceRecord::from_json(&v).unwrap_err();
+            assert_eq!(e.kind, kind, "{text}: {}", e.msg);
+        }
+    }
+
+    #[test]
+    fn spec_validates_bounds_and_monotonicity() {
+        // Good: interleaved streams, each non-decreasing.
+        let ok = TraceSpec::from_records(vec![
+            rec(0, 0, 512),
+            rec(1, 0, 512),
+            rec(0, 100, 512),
+            rec(1, 50, 512),
+        ])
+        .unwrap();
+        assert_eq!(ok.stream_count(), 2);
+        assert_eq!(ok.used_streams(), vec![0, 1]);
+        assert_eq!(ok.max_n(), 512);
+
+        // Non-monotone within one stream.
+        let e = TraceSpec::from_records(vec![rec(0, 100, 512), rec(0, 50, 512)])
+            .unwrap_err();
+        assert_eq!(e.kind, TraceErrorKind::BadRequest);
+
+        // Stream out of range.
+        let e = TraceSpec::from_records(vec![rec(16, 0, 512)]).unwrap_err();
+        assert_eq!(e.kind, TraceErrorKind::BadRange);
+
+        // n out of range.
+        let e = TraceSpec::from_records(vec![rec(0, 0, 100_000)]).unwrap_err();
+        assert_eq!(e.kind, TraceErrorKind::BadRange);
+
+        // Empty.
+        let e = TraceSpec::from_records(vec![]).unwrap_err();
+        assert_eq!(e.kind, TraceErrorKind::BadRequest);
+
+        // Too many launches.
+        let many = vec![rec(0, 0, 512); MAX_TRACE_LAUNCHES + 1];
+        let e = TraceSpec::from_records(many).unwrap_err();
+        assert_eq!(e.kind, TraceErrorKind::BadRange);
+    }
+
+    #[test]
+    fn jsonl_parses_and_bounds_lines() {
+        let text = "\n{\"n\":512,\"stream\":0,\"issue_ns\":0}\n\
+                    {\"n\":256,\"stream\":1,\"issue_ns\":10,\"kernel\":\"spmm\"}\n";
+        let rs = parse_jsonl(text).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[1].kernel, KernelClass::Spmm);
+        // Parse errors carry the 1-based line number.
+        let e = parse_jsonl("{\"n\":512,\"stream\":0,\"issue_ns\":0}\nnope")
+            .unwrap_err();
+        assert!(e.msg.contains("line 2"), "{}", e.msg);
+    }
+
+    #[test]
+    fn dominant_precision_is_flop_weighted() {
+        let ts = TraceSpec::from_records(vec![
+            TraceRecord { precision: Precision::F16, ..rec(0, 0, 2048) },
+            rec(1, 0, 256),
+            rec(1, 10, 256),
+        ])
+        .unwrap();
+        // One 2048^3 fp16 launch dwarfs two 256^3 fp8 launches.
+        assert_eq!(ts.dominant_precision(), Precision::F16);
+    }
+}

@@ -1,0 +1,38 @@
+//! Trace replay: recorded kernel-launch timelines as a first-class
+//! workload (DESIGN.md §6.12, docs/replay.md).
+//!
+//! The paper's case studies argue from *timelines* — sequences of
+//! launches whose occupancy, precision, and stream placement determine
+//! application-level throughput — so this subsystem turns the
+//! simulator into a what-if tool for real MI300A applications:
+//!
+//! * [`format`] — JSON-lines trace records, strict typed-error decode
+//!   (the `api/protocol.rs` discipline), and the validated
+//!   [`TraceSpec`] (bounded, per-stream-monotone issue times, kernels
+//!   resolved against `sim/kernel.rs`).
+//! * [`transform`] — declarative what-if rewrites (`precision_rewrite`,
+//!   `sparsity_enable`, `stream_remap`, `dilate`/`compress`), applied
+//!   before replay and sweepable as the scenario `transform` axis.
+//! * [`engine`] — the issue-time-honoring DES: streams idle between
+//!   launches instead of iterating back-to-back, active launches
+//!   processor-share under the `sim/engine.rs` slowdown law, and every
+//!   launch comes back as an exact span for the Chrome-trace exporter.
+//!
+//! The scenario layer (`api/scenario.rs`) embeds a trace as the
+//! `trace` spec field with `shape:"trace"`, so caching, batching,
+//! jobs, cluster sharding, and auto routing all compose with replay
+//! for free via the canonical per-point encoding. Only the DES answers
+//! trace points; the analytic backend refuses them as typed
+//! `unsupported_by_backend`.
+
+pub mod engine;
+pub mod format;
+pub mod transform;
+
+pub use engine::{replay, ReplayRun};
+pub use format::{
+    parse_jsonl, TraceError, TraceErrorKind, TraceRecord, TraceSpec,
+    MAX_TRACE_LAUNCHES, MAX_TRACE_LINE_BYTES, MAX_TRACE_STREAMS,
+    TRACE_N_RANGE,
+};
+pub use transform::{Transform, MAX_TIME_FACTOR};

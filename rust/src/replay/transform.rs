@@ -1,0 +1,240 @@
+//! What-if transforms: declarative trace rewrites applied before
+//! replay, sweepable as the scenario layer's `transform` axis.
+//!
+//! Each transform is a pure function over the record list with a
+//! canonical wire spelling (`name()`/`parse()` are exact inverses on
+//! canonical spellings), so a transform rides inside the per-point
+//! cache key and shards across a cluster like any other axis:
+//!
+//! | spelling                 | rewrite                                  |
+//! |--------------------------|------------------------------------------|
+//! | `identity`               | no-op (the recorded timeline)            |
+//! | `precision_rewrite:fp8`  | every launch re-cast to the precision    |
+//! | `sparsity_enable`        | 2:4 (`lhs`) on dense GEMM launches       |
+//! | `stream_remap:K`         | compact onto K streams (`stream % K`)    |
+//! | `dilate:K`               | issue times multiplied by integer K      |
+//! | `compress:K`             | issue times divided by integer K         |
+//!
+//! `apply` always yields a timeline that still satisfies every
+//! [`TraceSpec`](super::format::TraceSpec) invariant: `dilate`/
+//! `compress` preserve per-stream monotonicity (monotone maps), and
+//! `stream_remap` re-sorts by issue time after merging streams.
+
+use super::format::{TraceRecord, MAX_TRACE_STREAMS};
+use crate::isa::Precision;
+use crate::sim::kernel::{KernelClass, SparsityMode};
+
+/// Largest accepted `dilate`/`compress` factor.
+pub const MAX_TIME_FACTOR: usize = 1024;
+
+/// A declarative trace rewrite (see the module table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Transform {
+    Identity,
+    PrecisionRewrite(Precision),
+    SparsityEnable,
+    StreamRemap(usize),
+    Dilate(usize),
+    Compress(usize),
+}
+
+impl Default for Transform {
+    fn default() -> Transform {
+        Transform::Identity
+    }
+}
+
+impl Transform {
+    /// Canonical wire spelling.
+    pub fn name(&self) -> String {
+        match self {
+            Transform::Identity => "identity".into(),
+            Transform::PrecisionRewrite(p) => {
+                format!("precision_rewrite:{}", p.name().to_ascii_lowercase())
+            }
+            Transform::SparsityEnable => "sparsity_enable".into(),
+            Transform::StreamRemap(k) => format!("stream_remap:{k}"),
+            Transform::Dilate(f) => format!("dilate:{f}"),
+            Transform::Compress(f) => format!("compress:{f}"),
+        }
+    }
+
+    /// Parse a wire spelling; `None` for unknown verbs or out-of-range
+    /// parameters (callers answer with a typed `bad_request` naming the
+    /// accepted forms).
+    pub fn parse(s: &str) -> Option<Transform> {
+        if s == "identity" {
+            return Some(Transform::Identity);
+        }
+        if s == "sparsity_enable" {
+            return Some(Transform::SparsityEnable);
+        }
+        if let Some(p) = s.strip_prefix("precision_rewrite:") {
+            return Precision::parse(p).map(Transform::PrecisionRewrite);
+        }
+        let factor = |p: &str, max: usize| -> Option<usize> {
+            // Plain decimal only: no signs, leading zeros allowed.
+            if p.is_empty() || !p.bytes().all(|b| b.is_ascii_digit()) {
+                return None;
+            }
+            let v: usize = p.parse().ok()?;
+            (1..=max).contains(&v).then_some(v)
+        };
+        if let Some(p) = s.strip_prefix("stream_remap:") {
+            return factor(p, MAX_TRACE_STREAMS).map(Transform::StreamRemap);
+        }
+        if let Some(p) = s.strip_prefix("dilate:") {
+            return factor(p, MAX_TIME_FACTOR).map(Transform::Dilate);
+        }
+        if let Some(p) = s.strip_prefix("compress:") {
+            return factor(p, MAX_TIME_FACTOR).map(Transform::Compress);
+        }
+        None
+    }
+
+    /// Rewrite a timeline. Total: the result always re-validates as a
+    /// `TraceSpec` (counts and bounds unchanged or shrunk, per-stream
+    /// issue order restored after stream merges).
+    pub fn apply(&self, records: &[TraceRecord]) -> Vec<TraceRecord> {
+        let mut out: Vec<TraceRecord> = records.to_vec();
+        match *self {
+            Transform::Identity => {}
+            Transform::PrecisionRewrite(p) => {
+                for r in &mut out {
+                    r.precision = p;
+                }
+            }
+            Transform::SparsityEnable => {
+                for r in &mut out {
+                    if r.kernel == KernelClass::Gemm
+                        && r.sparsity == SparsityMode::Dense
+                    {
+                        r.sparsity = SparsityMode::SparseLhs;
+                    }
+                }
+            }
+            Transform::StreamRemap(k) => {
+                for r in &mut out {
+                    r.stream %= k;
+                }
+                // Merging monotone per-stream sequences can interleave
+                // out of order on the shared stream; a stable sort by
+                // issue time restores per-stream monotonicity.
+                out.sort_by_key(|r| r.issue_ns);
+            }
+            Transform::Dilate(f) => {
+                for r in &mut out {
+                    r.issue_ns = r.issue_ns.saturating_mul(f as u64);
+                }
+            }
+            Transform::Compress(f) => {
+                for r in &mut out {
+                    r.issue_ns /= f as u64;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::format::TraceSpec;
+
+    fn rec(stream: usize, issue_ns: u64) -> TraceRecord {
+        TraceRecord {
+            kernel: KernelClass::Gemm,
+            n: 512,
+            precision: Precision::F16,
+            sparsity: SparsityMode::Dense,
+            stream,
+            issue_ns,
+        }
+    }
+
+    #[test]
+    fn spellings_roundtrip() {
+        for t in [
+            Transform::Identity,
+            Transform::PrecisionRewrite(Precision::Fp8),
+            Transform::PrecisionRewrite(Precision::Bf16),
+            Transform::SparsityEnable,
+            Transform::StreamRemap(2),
+            Transform::Dilate(4),
+            Transform::Compress(1024),
+        ] {
+            assert_eq!(Transform::parse(&t.name()), Some(t), "{}", t.name());
+        }
+        for bad in [
+            "reverse",
+            "precision_rewrite:int4",
+            "stream_remap:0",
+            "stream_remap:17",
+            "dilate:0",
+            "dilate:4096",
+            "compress:-1",
+            "dilate:2.5",
+            "",
+        ] {
+            assert_eq!(Transform::parse(bad), None, "{bad:?}");
+        }
+        // Aliases canonicalize in one round.
+        let t = Transform::parse("precision_rewrite:e4m3").unwrap();
+        assert_eq!(t.name(), "precision_rewrite:fp8");
+    }
+
+    #[test]
+    fn rewrites_do_what_the_table_says() {
+        let recs = vec![rec(0, 0), rec(1, 100), rec(0, 200)];
+        let fp8 = Transform::PrecisionRewrite(Precision::Fp8).apply(&recs);
+        assert!(fp8.iter().all(|r| r.precision == Precision::Fp8));
+
+        let sp = Transform::SparsityEnable.apply(&recs);
+        assert!(sp.iter().all(|r| r.sparsity == SparsityMode::SparseLhs));
+        // ...but an spmm launch is left alone.
+        let mut spmm = recs.clone();
+        spmm[1].kernel = KernelClass::Spmm;
+        let sp2 = Transform::SparsityEnable.apply(&spmm);
+        assert_eq!(sp2[1].sparsity, SparsityMode::Dense);
+
+        let d = Transform::Dilate(3).apply(&recs);
+        assert_eq!(
+            d.iter().map(|r| r.issue_ns).collect::<Vec<_>>(),
+            vec![0, 300, 600]
+        );
+        let c = Transform::Compress(2).apply(&d);
+        assert_eq!(
+            c.iter().map(|r| r.issue_ns).collect::<Vec<_>>(),
+            vec![0, 150, 300]
+        );
+    }
+
+    #[test]
+    fn every_transform_yields_a_valid_trace() {
+        // Interleaved two-stream timeline whose merge order is hostile:
+        // stream 1's launches land between stream 0's.
+        let recs = vec![rec(0, 0), rec(1, 50), rec(0, 100), rec(1, 150)];
+        for t in [
+            Transform::Identity,
+            Transform::PrecisionRewrite(Precision::Fp8),
+            Transform::SparsityEnable,
+            Transform::StreamRemap(1),
+            Transform::StreamRemap(2),
+            Transform::Dilate(1024),
+            Transform::Compress(1024),
+        ] {
+            let out = t.apply(&recs);
+            assert_eq!(out.len(), recs.len(), "{}", t.name());
+            TraceSpec::from_records(out)
+                .unwrap_or_else(|e| panic!("{}: {}", t.name(), e.msg));
+        }
+        // The remap actually merged the streams.
+        let merged = Transform::StreamRemap(1).apply(&recs);
+        assert!(merged.iter().all(|r| r.stream == 0));
+        assert_eq!(
+            merged.iter().map(|r| r.issue_ns).collect::<Vec<_>>(),
+            vec![0, 50, 100, 150]
+        );
+    }
+}

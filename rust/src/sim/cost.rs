@@ -51,6 +51,11 @@ impl<'a> CostModel<'a> {
             // sparse solo 52.1 vs dense 59.98 GFLOPS => ~0.87).
             gf *= self.cfg.sparsity.sparse_pipe_eff;
         }
+        // Data-sparse SpMM: CSR row-length variance leaves lanes idle
+        // behind the longest row, so effective issue rate falls with
+        // the kernel's irregularity (AsyncSparse's load-imbalance
+        // finding; 0 for dense GEMM).
+        gf /= 1.0 + k.irregularity();
         gf
     }
 

@@ -454,12 +454,17 @@ impl<'a> Engine<'a> {
             let mem_w = statics.streams[i].mem_w;
             // Placement bias covers the whole iteration path
             // (launch + work): which ACE/driver lane and which
-            // CU/L2 partition the stream landed on.
+            // CU/L2 partition the stream landed on. Data-sparse SpMM
+            // streams widen the spread further: CSR row-length
+            // variance makes a stream's effective speed depend on
+            // which rows its wavefronts drew (the fairness hazard the
+            // AsyncSparse workloads exercise).
             let sigma = self.profile.bias_sigma
                 * pressure
                 * self.cfg.jitter_scale(k.precision)
                 * mem_w
-                * (1.0 + 0.02 * self.contention_level);
+                * (1.0 + 0.02 * self.contention_level)
+                * (1.0 + k.irregularity());
             let bias = srng.lognormal_unit(sigma);
             let solo = cost.solo_work_ns(k) * self.profile.work_scale;
             let launch = if self.profile.pipelined_launch && n >= 2 {
@@ -809,6 +814,45 @@ mod tests {
         assert!(
             spread(8) > spread(4),
             "imbalance must intensify at 8 streams"
+        );
+    }
+
+    #[test]
+    fn irregular_spmm_work_degrades_fairness() {
+        // The AsyncSparse scenario: half the streams run data-sparse
+        // SpMM (CSR row-length variance -> wider placement spread +
+        // structurally different work), half run the dense GEMM. The
+        // fairness machinery must see a less equitable set than the
+        // homogeneous baseline, robustly across seeds.
+        use crate::metrics::fairness::fairness;
+        let cfg = Config::mi300a();
+        let e = Engine::new(&cfg, ConcurrencyProfile::ace());
+        let homog = vec![fp32_512(20); 4];
+        let mix: Vec<KernelDesc> = (0..4)
+            .map(|i| {
+                if i % 2 == 0 {
+                    KernelDesc::spmm(512, Precision::F32, 20)
+                        .with_iters(20)
+                } else {
+                    fp32_512(20)
+                }
+            })
+            .collect();
+        let mean_fair = |ks: &[KernelDesc]| {
+            (0..8u64)
+                .map(|s| {
+                    fairness(&e.run(ks, 100 + s).per_stream_totals())
+                })
+                .sum::<f64>()
+                / 8.0
+        };
+        let fh = mean_fair(&homog);
+        let fm = mean_fair(&mix);
+        assert!((0.0..=1.0).contains(&fm) && (0.0..=1.0).contains(&fh));
+        assert!(
+            fm < fh,
+            "irregular SpMM work must degrade fairness: mix {fm} vs \
+             homogeneous {fh}"
         );
     }
 

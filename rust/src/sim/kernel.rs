@@ -44,6 +44,38 @@ impl SparsityMode {
     }
 }
 
+/// Kernel class: the dense/2:4-structured GEMM family the paper
+/// characterizes, or an AsyncSparse-style data-sparse SpMM whose
+/// sparsity lives in the operand *values* (CSR-like irregular reuse,
+/// per-lane load imbalance) rather than in a structured weight pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    Gemm,
+    Spmm,
+}
+
+impl KernelClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelClass::Gemm => "gemm",
+            KernelClass::Spmm => "spmm",
+        }
+    }
+
+    /// Inverse of [`KernelClass::name`] — the parse table trace records
+    /// and the CLI share.
+    pub fn parse(s: &str) -> Option<KernelClass> {
+        [KernelClass::Gemm, KernelClass::Spmm]
+            .into_iter()
+            .find(|c| c.name() == s)
+    }
+}
+
+/// Default nonzero density (percent) of an SpMM operand when the
+/// workload doesn't pin one: sparse-transformer attention masks and
+/// pruned MLP blocks land around this regime.
+pub const DEFAULT_SPMM_DENSITY_PCT: usize = 20;
+
 /// A GEMM kernel launch: C[M,N] += A[M,K] x B[K,N] at `precision`,
 /// repeated `iters` times on one stream (the paper's microbenchmark and
 /// case-study unit).
@@ -57,6 +89,11 @@ pub struct KernelDesc {
     /// Iterations per launch (paper: 500 for microbenchmarks, 100 for
     /// concurrency experiments, 50 for sparsity).
     pub iters: usize,
+    /// Dense GEMM or data-sparse SpMM (CSR-like A operand).
+    pub class: KernelClass,
+    /// Nonzero density of the sparse operand, in percent (100 for
+    /// dense GEMM; only meaningful for [`KernelClass::Spmm`]).
+    pub density_pct: usize,
 }
 
 impl KernelDesc {
@@ -68,6 +105,42 @@ impl KernelDesc {
             precision,
             sparsity: SparsityMode::Dense,
             iters: 100,
+            class: KernelClass::Gemm,
+            density_pct: 100,
+        }
+    }
+
+    /// Data-sparse SpMM: C[M,N] += A_csr[M,K] x B[K,N] where A keeps
+    /// `density_pct`% nonzeros in CSR form. Executed FLOPs scale with
+    /// the density; the CSR gather defeats B-operand reuse and skews
+    /// per-lane work (see [`KernelDesc::irregularity`]).
+    pub fn spmm(
+        n: usize,
+        precision: Precision,
+        density_pct: usize,
+    ) -> KernelDesc {
+        KernelDesc {
+            density_pct: density_pct.clamp(1, 100),
+            class: KernelClass::Spmm,
+            ..KernelDesc::gemm(n, precision)
+        }
+    }
+
+    /// Nonzero fraction of the sparse operand in `[0.01, 1.0]`.
+    pub fn density(&self) -> f64 {
+        self.density_pct as f64 / 100.0
+    }
+
+    /// Per-lane load-imbalance factor in `[0, 1)`: 0 for dense GEMM
+    /// (every wavefront sees identical work); grows as SpMM rows get
+    /// sparser — CSR row-length variance leaves some lanes idle while
+    /// the longest row finishes (the AsyncSparse motivation). The DES
+    /// widens its per-stream placement spread by this factor, and the
+    /// solo cost model discounts issue efficiency with it.
+    pub fn irregularity(&self) -> f64 {
+        match self.class {
+            KernelClass::Gemm => 0.0,
+            KernelClass::Spmm => 0.6 * (1.0 - self.density()),
         }
     }
 
@@ -99,11 +172,17 @@ impl KernelDesc {
     /// finding, §9.1); a custom sparse-MFMA kernel would realize
     /// `flop_fraction` (0.5).
     pub fn executed_flops(&self, cfg: &Config) -> f64 {
-        if self.sparsity.is_sparse() {
-            self.flops() * cfg.sparsity.realized_flop_fraction
-        } else {
-            self.flops()
+        // Data sparsity skips zero rows outright (a custom SpMM kernel
+        // walks nonzeros only); structured 2:4 is then governed by the
+        // software path's realized fraction as for GEMM.
+        let mut f = self.flops();
+        if self.class == KernelClass::Spmm {
+            f *= self.density();
         }
+        if self.sparsity.is_sparse() {
+            f *= cfg.sparsity.realized_flop_fraction;
+        }
+        f
     }
 
     /// HBM bytes per iteration: A + B streamed once, C written once
@@ -111,8 +190,16 @@ impl KernelDesc {
     /// model's miss term instead).
     pub fn hbm_bytes(&self, cfg: &Config) -> f64 {
         let eb = self.precision.bytes() as f64;
-        let a = self.m as f64 * self.k as f64 * eb;
-        let b = self.k as f64 * self.n as f64 * eb;
+        let mut a = self.m as f64 * self.k as f64 * eb;
+        let mut b = self.k as f64 * self.n as f64 * eb;
+        if self.class == KernelClass::Spmm {
+            // CSR A: values at density plus 4-byte column indices per
+            // nonzero plus row pointers; the irregular column gather
+            // defeats B-row reuse (re-reads ~25% of B).
+            let nnz = self.m as f64 * self.k as f64 * self.density();
+            a = nnz * (eb + 4.0) + (self.m as f64 + 1.0) * 4.0;
+            b *= 1.25;
+        }
         let c = self.m as f64 * self.n as f64 * 4.0; // f32 accumulator out
         let mem_frac = |sparse: bool| {
             if sparse {
@@ -130,12 +217,17 @@ impl KernelDesc {
         a * fa + b * fb + c
     }
 
-    /// Working set for the L2 model (A + B + C resident bytes).
+    /// Working set for the L2 model (A + B + C resident bytes; CSR
+    /// values + indices for the SpMM A operand).
     pub fn working_set(&self) -> f64 {
         let eb = self.precision.bytes() as f64;
-        (self.m * self.k) as f64 * eb
-            + (self.k * self.n) as f64 * eb
-            + (self.m * self.n) as f64 * 4.0
+        let a = match self.class {
+            KernelClass::Gemm => (self.m * self.k) as f64 * eb,
+            KernelClass::Spmm => {
+                (self.m * self.k) as f64 * self.density() * (eb + 4.0)
+            }
+        };
+        a + (self.k * self.n) as f64 * eb + (self.m * self.n) as f64 * 4.0
     }
 
     /// GEMM macro-tile side for this kernel.
@@ -178,14 +270,25 @@ impl KernelDesc {
     }
 
     pub fn label(&self) -> String {
-        format!(
-            "{}x{}x{} {} {}",
-            self.m,
-            self.n,
-            self.k,
-            self.precision.name(),
-            self.sparsity.name()
-        )
+        match self.class {
+            KernelClass::Gemm => format!(
+                "{}x{}x{} {} {}",
+                self.m,
+                self.n,
+                self.k,
+                self.precision.name(),
+                self.sparsity.name()
+            ),
+            KernelClass::Spmm => format!(
+                "spmm[{}%] {}x{}x{} {} {}",
+                self.density_pct,
+                self.m,
+                self.n,
+                self.k,
+                self.precision.name(),
+                self.sparsity.name()
+            ),
+        }
     }
 }
 
@@ -236,6 +339,31 @@ mod tests {
         assert!(KernelDesc::gemm(512, Precision::Fp8)
             .with_shape(512, 2048, 1024)
             .is_rectangular());
+    }
+
+    #[test]
+    fn spmm_scales_flops_and_bytes_with_density() {
+        let cfg = Config::mi300a();
+        let dense = KernelDesc::gemm(512, Precision::Fp8);
+        let sp20 = KernelDesc::spmm(512, Precision::Fp8, 20);
+        let sp50 = KernelDesc::spmm(512, Precision::Fp8, 50);
+        // Executed work tracks the nonzero count.
+        assert_eq!(sp20.executed_flops(&cfg), dense.flops() * 0.2);
+        assert!(sp20.executed_flops(&cfg) < sp50.executed_flops(&cfg));
+        // CSR metadata + gathered B: bytes shrink with density but a
+        // sparser matrix is also more irregular.
+        assert!(sp20.hbm_bytes(&cfg) < sp50.hbm_bytes(&cfg));
+        assert!(sp20.irregularity() > sp50.irregularity());
+        assert_eq!(dense.irregularity(), 0.0);
+        // Density clamps to a sane percent range.
+        assert_eq!(KernelDesc::spmm(512, Precision::Fp8, 0).density_pct, 1);
+        assert_eq!(
+            KernelDesc::spmm(512, Precision::Fp8, 400).density_pct,
+            100
+        );
+        assert!(sp20.label().starts_with("spmm[20%]"));
+        assert_eq!(KernelClass::parse("spmm"), Some(KernelClass::Spmm));
+        assert_eq!(KernelClass::parse("conv"), None);
     }
 
     #[test]

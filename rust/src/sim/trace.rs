@@ -34,11 +34,15 @@ pub fn spans(run: &ConcurrentRun) -> Vec<Span> {
     out
 }
 
-/// Chrome-trace JSON ("traceEvents" array of X events, µs timebase).
-pub fn chrome_trace(run: &ConcurrentRun) -> Json {
-    let events: Vec<Json> = spans(run)
-        .into_iter()
-        .map(|s| {
+/// Chrome-trace JSON ("traceEvents" array of X events, µs timebase)
+/// from an explicit span list plus one label per span. This is the
+/// shared exporter: the engine path labels spans by stream, the replay
+/// path (`crate::replay`) labels each recorded launch by its kernel.
+pub fn chrome_trace_spans(spans: &[Span], labels: &[String]) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .zip(labels)
+        .map(|(s, label)| {
             Json::obj(vec![
                 ("name", Json::Str(format!("iter {}", s.iteration))),
                 ("cat", Json::Str("kernel".into())),
@@ -47,13 +51,7 @@ pub fn chrome_trace(run: &ConcurrentRun) -> Json {
                 ("dur", Json::Num((s.end_ns - s.start_ns) / 1e3)),
                 ("pid", Json::Num(1.0)),
                 ("tid", Json::Num(s.stream as f64)),
-                (
-                    "args",
-                    Json::obj(vec![(
-                        "label",
-                        Json::Str(run.streams[s.stream].label.clone()),
-                    )]),
-                ),
+                ("args", Json::obj(vec![("label", Json::Str(label.clone()))])),
             ])
         })
         .collect();
@@ -61,6 +59,16 @@ pub fn chrome_trace(run: &ConcurrentRun) -> Json {
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::Str("ms".into())),
     ])
+}
+
+/// Chrome-trace JSON for a [`ConcurrentRun`], labelled per stream.
+pub fn chrome_trace(run: &ConcurrentRun) -> Json {
+    let sp = spans(run);
+    let labels: Vec<String> = sp
+        .iter()
+        .map(|s| run.streams[s.stream].label.clone())
+        .collect();
+    chrome_trace_spans(&sp, &labels)
 }
 
 /// Utilization histogram: fraction of the makespan with exactly `k`

@@ -2,7 +2,9 @@
 //! drivers (paper §4.2 "controlled scaling").
 
 use crate::isa::Precision;
-use crate::sim::kernel::{KernelDesc, SparsityMode};
+use crate::sim::kernel::{
+    KernelDesc, SparsityMode, DEFAULT_SPMM_DENSITY_PCT,
+};
 
 /// A multi-stream workload specification.
 #[derive(Debug, Clone)]
@@ -39,6 +41,27 @@ impl StreamSetSpec {
                         k.with_sparsity(SparsityMode::SparseLhs)
                     } else {
                         k
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Data-sparse mix (AsyncSparse-style `spmm_mix` shape): even
+    /// streams run CSR SpMM at the default density — irregular per-lane
+    /// work — while odd streams run the dense GEMM, so the set stresses
+    /// fairness under structurally unequal streams rather than the 2:4
+    /// structured overlay `mixed_sparse` models.
+    pub fn spmm_mix(n: usize, p: Precision, streams: usize,
+                    iters: usize) -> StreamSetSpec {
+        StreamSetSpec {
+            kernels: (0..streams)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        KernelDesc::spmm(n, p, DEFAULT_SPMM_DENSITY_PCT)
+                            .with_iters(iters)
+                    } else {
+                        KernelDesc::gemm(n, p).with_iters(iters)
                     }
                 })
                 .collect(),
@@ -141,6 +164,20 @@ mod tests {
         let sparse_count =
             s.kernels.iter().filter(|k| k.sparsity.is_sparse()).count();
         assert_eq!(sparse_count, 2);
+    }
+
+    #[test]
+    fn spmm_mix_alternates_kernel_classes() {
+        use crate::sim::kernel::KernelClass;
+        let s = StreamSetSpec::spmm_mix(512, Precision::Fp8, 4, 50);
+        let spmm_count = s
+            .kernels
+            .iter()
+            .filter(|k| k.class == KernelClass::Spmm)
+            .count();
+        assert_eq!(spmm_count, 2);
+        assert!(s.kernels[0].irregularity() > 0.0);
+        assert_eq!(s.kernels[1].irregularity(), 0.0);
     }
 
     #[test]

@@ -13,6 +13,7 @@ use mi300a_char::backend::BackendId;
 use mi300a_char::config::Config;
 use mi300a_char::coordinator::Objective;
 use mi300a_char::isa::Precision;
+use mi300a_char::replay::Transform;
 use mi300a_char::util::json::Json;
 
 /// Encode with an id, serialize, reparse, decode: the value and the
@@ -174,6 +175,7 @@ fn every_response_variant_roundtrips() {
         l2_miss: 0.1875,
         lds_util: 0.625,
         transfer_ms: 0.0,
+        spans: 0,
     });
     // Multi-device sim answers carry their exposed fabric time.
     roundtrip_response(Response::Sim {
@@ -184,6 +186,18 @@ fn every_response_variant_roundtrips() {
         l2_miss: 0.1875,
         lds_util: 0.625,
         transfer_ms: 1.5,
+        spans: 0,
+    });
+    // Trace-replay answers carry their per-launch span count.
+    roundtrip_response(Response::Sim {
+        makespan_ms: 12.375,
+        speedup_vs_serial: 2.5,
+        overlap_efficiency: 0.875,
+        fairness: 0.51,
+        l2_miss: 0.1875,
+        lds_util: 0.625,
+        transfer_ms: 0.0,
+        spans: 12,
     });
     roundtrip_response(Response::Plan {
         objective: "throughput".into(),
@@ -295,6 +309,7 @@ fn every_response_variant_roundtrips() {
                     streams: 4,
                     iters: 50,
                     devices: 1,
+                    transform: Transform::Identity,
                 },
                 result: Box::new(Response::Sim {
                     makespan_ms: 12.375,
@@ -304,6 +319,7 @@ fn every_response_variant_roundtrips() {
                     l2_miss: 0.1875,
                     lds_util: 0.625,
                     transfer_ms: 0.0,
+                    spans: 0,
                 }),
             },
             PointResult {
@@ -313,6 +329,7 @@ fn every_response_variant_roundtrips() {
                     streams: 2,
                     iters: 100,
                     devices: 1,
+                    transform: Transform::Identity,
                 },
                 result: Box::new(Response::Sparsity {
                     enable: false,

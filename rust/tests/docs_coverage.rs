@@ -82,6 +82,7 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         "multi_apu.md",
         "performance.md",
         "cluster.md",
+        "replay.md",
     ] {
         assert!(
             docs_dir().join(page).is_file(),
@@ -142,6 +143,64 @@ fn guidebook_pages_exist_and_serving_doc_names_every_request_type() {
         read("README.md").contains("multi_apu.md"),
         "docs/README.md must index the multi-APU guide"
     );
+    assert!(
+        read("README.md").contains("replay.md"),
+        "docs/README.md must index the trace-replay guide"
+    );
+}
+
+/// The replay guide must document the trace surface this repo ships:
+/// the record fields and their bounds, every what-if transform, the
+/// CLI spellings, the wire shape, the span read-out, and the backend
+/// story — and both checked-in example traces must exist, parse, and
+/// be referenced.
+#[test]
+fn replay_doc_covers_format_transforms_and_examples() {
+    let doc = read("replay.md");
+    for needle in [
+        "\"shape\":\"trace\"",
+        "issue_ns",
+        "`kernel`",
+        "`stream`",
+        "`spmm`",
+        "non-decreasing",
+        "4096",
+        "identity",
+        "precision_rewrite",
+        "sparsity_enable",
+        "stream_remap",
+        "dilate",
+        "compress",
+        "\"sweep\":{\"transform\"",
+        "--trace",
+        "--transform",
+        "--sweep-transform",
+        "--chrome-trace",
+        "mi300a-char replay",
+        "spans",
+        "unsupported_by_backend",
+        "bad_request",
+        "bad_range",
+        "engine_runs_des",
+        "traces/transformer.jsonl",
+        "traces/mixed_precision.jsonl",
+        "scenarios.md",
+        "backends.md",
+    ] {
+        assert!(
+            doc.contains(needle),
+            "docs/replay.md never documents {needle:?}"
+        );
+    }
+    // The example traces the guide points at are present and valid.
+    for name in ["transformer.jsonl", "mixed_precision.jsonl"] {
+        let path = docs_dir().join("traces").join(name);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let records = mi300a_char::replay::parse_jsonl(&text)
+            .unwrap_or_else(|e| panic!("docs/traces/{name}: {e}"));
+        assert!(records.len() >= 8, "docs/traces/{name} is too small");
+    }
 }
 
 /// The multi-APU guide must document the fabric surface this repo
@@ -341,6 +400,7 @@ fn scenario_cookbook_covers_the_paper_sweeps() {
         "imbalanced-pair fairness",
         "data-parallel scaling",
         "pipeline split break-even",
+        "trace what-if comparison",
     ] {
         assert!(
             doc.to_lowercase().contains(sweep),
@@ -357,6 +417,8 @@ fn scenario_cookbook_covers_the_paper_sweeps() {
         "job_cancel",
         "--sweep-devices",
         "multi_apu.md",
+        "--sweep-transform",
+        "replay.md",
     ] {
         assert!(
             doc.contains(needle),

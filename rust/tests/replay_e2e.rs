@@ -1,0 +1,210 @@
+//! Acceptance (ISSUE 10): the checked-in example traces under
+//! `docs/traces/` replay to one byte-identical answer through every
+//! path the service exposes — the `replay` CLI subcommand, a wire
+//! `scenario` request, the same request inside a `batch` envelope, and
+//! an async `submit` job — with exactly one cold DES execution across
+//! all four (the shared result cache, proven via `engine_runs_des`).
+//! The what-if contract rides along: `identity` answers byte-identically
+//! to the untransformed trace, and `precision_rewrite:fp8` strictly
+//! lowers the makespan of the fp16 transformer timeline.
+
+use mi300a_char::api::{
+    Client, ErrorCode, Request, RequestEnvelope, Response, ScenarioSpec,
+    Service,
+};
+use mi300a_char::backend::BackendId;
+use mi300a_char::config::Config;
+use mi300a_char::replay::{parse_jsonl, Transform};
+use mi300a_char::serve::serve;
+use mi300a_char::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn trace_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/traces").join(name)
+}
+
+/// Decode a checked-in trace into a ready-to-run scenario spec.
+fn checked_in_spec(name: &str) -> ScenarioSpec {
+    let path = trace_path(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let records = parse_jsonl(&text)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    ScenarioSpec::trace_replay(records).unwrap()
+}
+
+fn free_port() -> u16 {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = probe.local_addr().unwrap().port();
+    drop(probe);
+    port
+}
+
+fn spawn_server(conns: usize) -> (u16, std::thread::JoinHandle<()>) {
+    let port = free_port();
+    let handle = std::thread::spawn(move || {
+        serve(Config::mi300a(), &format!("127.0.0.1:{port}"), Some(conns))
+            .unwrap();
+    });
+    (port, handle)
+}
+
+/// One canonical comparison form per response: the wire JSON without
+/// the envelope id (compact encoding is canonical byte-for-byte).
+fn canon(resp: &Response) -> String {
+    resp.to_json(None).to_string()
+}
+
+#[test]
+fn checked_in_trace_replays_identically_via_cli_wire_batch_and_job() {
+    let spec = checked_in_spec("transformer.jsonl");
+    // The transformer timeline: 12 launches over 3 streams, all fp16.
+    assert_eq!(spec.trace.len(), 12);
+    assert_eq!(spec.streams, 3);
+
+    let (port, handle) = spawn_server(1);
+    let mut client =
+        Client::connect_retry(format!("127.0.0.1:{port}").as_str(), 200)
+            .unwrap();
+
+    // Path 1 — wire scenario request (the cold run).
+    let wire = client
+        .request(&Request::Scenario { spec: spec.clone() })
+        .unwrap();
+    let wire_bytes = canon(&wire);
+    match &wire {
+        Response::Scenario { points } => assert_eq!(points.len(), 1),
+        other => panic!("unexpected response: {other:?}"),
+    }
+    // Per-launch spans surface through the sim answer.
+    assert!(
+        wire_bytes.contains("\"spans\":12"),
+        "one span per recorded launch: {wire_bytes}"
+    );
+
+    // Path 2 — the same request inside a batch envelope.
+    let batch = client
+        .batch(&[Request::Scenario { spec: spec.clone() }])
+        .unwrap();
+    assert_eq!(canon(&batch[0]), wire_bytes, "batch path diverged");
+
+    // Path 3 — async job submit/wait.
+    let via_job = client.submit_and_wait(&spec, |_| {}).unwrap();
+    assert_eq!(canon(&via_job), wire_bytes, "job path diverged");
+
+    // All three paths shared one cache entry: exactly one cold DES run.
+    let (stats, _) = client
+        .request_json_env(&Request::Stats, &RequestEnvelope::default())
+        .unwrap();
+    assert_eq!(
+        stats.get("engine_runs_des"),
+        Some(&Json::Num(1.0)),
+        "wire/batch/job must share the cache: {stats}"
+    );
+
+    client.raw_line("QUIT").ok();
+    drop(client);
+    handle.join().unwrap();
+
+    // Path 4 — the CLI subcommand (its own process, cache disabled;
+    // determinism makes it byte-identical anyway).
+    let path = trace_path("transformer.jsonl");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_mi300a-char"))
+        .args(["replay", "--trace", path.to_str().unwrap(), "--json"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "replay CLI failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let cli = Json::parse(
+        std::str::from_utf8(&out.stdout).unwrap().trim(),
+    )
+    .unwrap();
+    assert_eq!(cli.to_string(), wire_bytes, "CLI path diverged");
+
+    // --chrome-trace exports one X event per launch, valid JSON.
+    let chrome = std::env::temp_dir()
+        .join(format!("replay_e2e_{}.json", std::process::id()));
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_mi300a-char"))
+        .args([
+            "replay",
+            "--trace",
+            path.to_str().unwrap(),
+            "--chrome-trace",
+            chrome.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "chrome-trace export failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let exported =
+        Json::parse(&std::fs::read_to_string(&chrome).unwrap()).unwrap();
+    assert_eq!(
+        exported.get("traceEvents").unwrap().as_arr().unwrap().len(),
+        12
+    );
+    std::fs::remove_file(&chrome).ok();
+}
+
+#[test]
+fn identity_is_byte_identical_and_fp8_rewrite_strictly_faster() {
+    let svc = Service::new(Config::mi300a());
+    let spec = checked_in_spec("transformer.jsonl");
+
+    let plain = svc.handle(&Request::Scenario { spec: spec.clone() });
+    let makespan = |resp: &Response| -> f64 {
+        match resp {
+            Response::Scenario { points } => points[0]
+                .result
+                .to_item_json()
+                .get("makespan_ms")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            other => panic!("unexpected response: {other:?}"),
+        }
+    };
+    let baseline = makespan(&plain);
+
+    // The explicit identity transform answers byte-identically to the
+    // untransformed trace (identity stays off the wire and off the
+    // cache key).
+    let mut identity = spec.clone();
+    identity.transform = Transform::parse("identity").unwrap();
+    let via_identity = svc.handle(&Request::Scenario { spec: identity });
+    assert_eq!(
+        canon(&via_identity),
+        canon(&plain),
+        "identity must be a no-op"
+    );
+
+    // The fp8 what-if strictly beats the recorded fp16 timeline.
+    let mut fp8 = spec.clone();
+    fp8.transform = Transform::parse("precision_rewrite:fp8").unwrap();
+    let rewritten = makespan(&svc.handle(&Request::Scenario { spec: fp8 }));
+    assert!(
+        rewritten < baseline,
+        "precision_rewrite:fp8 {rewritten} !< fp16 original {baseline}"
+    );
+
+    // The mixed trace exercises spmm + sparsity records end to end.
+    let mixed = checked_in_spec("mixed_precision.jsonl");
+    let resp = svc.handle(&Request::Scenario { spec: mixed.clone() });
+    assert!(canon(&resp).contains("\"spans\":8"), "{}", canon(&resp));
+
+    // Analytic refusal is typed, end to end.
+    let mut analytic = mixed;
+    analytic.backend = Some(BackendId::Analytic);
+    match svc.handle(&Request::Scenario { spec: analytic }) {
+        Response::Error { code, message } => {
+            assert_eq!(code, ErrorCode::UnsupportedByBackend);
+            assert!(message.contains("trace"), "{message}");
+        }
+        other => panic!("expected typed refusal, got {other:?}"),
+    }
+}

@@ -16,7 +16,11 @@
 # sweep over the wire on every available io model — transfer_ms on
 # every devices>1 point and never on devices=1, per-backend counters
 # splitting des vs analytic, and a typed bad_range probe on devices=5),
-# a loadgen smoke (a short
+# a trace-replay smoke (docs/replay.md, DESIGN.md §6.12: a transform
+# sweep over an inline trace through serve on every available io model
+# with per-point span counts, a typed unsupported_by_backend refusal
+# from `replay --backend analytic`, and a Chrome-trace export with one
+# X event per recorded launch), a loadgen smoke (a short
 # self-hosted load-generator run per available io model, writing the
 # BENCH_serve.json baseline and failing on typed errors or zero
 # throughput), and a cluster smoke (2 workers + a coordinator on
@@ -334,6 +338,78 @@ for model in $fab_models; do
     rm -f "$fab_log"
 done
 echo "multi-APU smoke ok (fabric on the wire, counters split, typed range)"
+
+echo "== trace-replay smoke (transform sweep on the wire, both io models) =="
+rp_models="threads"
+if [ "$(uname -s)" = Linux ]; then
+    rp_models="epoll threads"
+fi
+rp_trace='[{"n":512,"precision":"fp16","stream":0,"issue_ns":0},{"n":512,"precision":"fp16","stream":1,"issue_ns":1000},{"n":256,"precision":"fp16","stream":0,"issue_ns":400000}]'
+for model in $rp_models; do
+    echo "-- replay --io-model $model --"
+    rp_log=$(mktemp)
+    "$bin" serve --addr 127.0.0.1:0 --io-model "$model" >"$rp_log" &
+    rp_pid=$!
+    trap 'kill "$rp_pid" 2>/dev/null || true' EXIT
+    raddr=""
+    for _ in $(seq 1 100); do
+        raddr=$(sed -n 's/^serving on //p' "$rp_log" | head -n 1)
+        [ -n "$raddr" ] && break
+        sleep 0.05
+    done
+    if [ -z "$raddr" ]; then
+        echo "replay smoke serve did not print its bound address" >&2
+        exit 1
+    fi
+    # The what-if comparison from docs/scenarios.md recipe 7: an inline
+    # 3-launch fp16 trace swept across two transforms in one request.
+    rresp=$("$bin" client --addr "$raddr" \
+        "{\"v\":1,\"type\":\"scenario\",\"shape\":\"trace\",\"trace\":$rp_trace,\"sweep\":{\"transform\":[\"identity\",\"precision_rewrite:fp8\"]}}")
+    echo "replay sweep ($model): $rresp"
+    for needle in '"points"' '"transform":"precision_rewrite:fp8"'; do
+        if ! printf '%s' "$rresp" | grep -qF "$needle"; then
+            echo "replay sweep missing $needle" >&2
+            exit 1
+        fi
+    done
+    # Every replayed point reports one span per recorded launch.
+    nspans=$(printf '%s' "$rresp" | grep -o '"spans":3' | wc -l)
+    if [ "$nspans" -ne 2 ]; then
+        echo "want \"spans\":3 on both transform points, got $nspans" >&2
+        exit 1
+    fi
+    kill "$rp_pid" 2>/dev/null || true
+    wait "$rp_pid" 2>/dev/null || true
+    trap - EXIT
+    rm -f "$rp_log"
+done
+# Typed capability refusal: traces are DES-only, end to end.
+if rbad=$("$bin" replay --trace ../docs/traces/transformer.jsonl \
+    --backend analytic 2>&1); then
+    echo "replay --backend analytic did not fail: $rbad" >&2
+    exit 1
+else
+    echo "analytic-refusal probe: $rbad"
+fi
+if ! printf '%s' "$rbad" | grep -qF 'unsupported_by_backend'; then
+    echo "expected unsupported_by_backend, got: $rbad" >&2
+    exit 1
+fi
+# Chrome-trace export: one X event per launch of the checked-in trace.
+rp_chrome=$(mktemp)
+"$bin" replay --trace ../docs/traces/transformer.jsonl \
+    --chrome-trace "$rp_chrome" >/dev/null
+if ! grep -qF '"traceEvents"' "$rp_chrome"; then
+    echo "chrome-trace export has no traceEvents array" >&2
+    exit 1
+fi
+nev=$(grep -o '"ph": "X"' "$rp_chrome" | wc -l)
+if [ "$nev" -ne 12 ]; then
+    echo "want 12 chrome-trace events (one per launch), got $nev" >&2
+    exit 1
+fi
+rm -f "$rp_chrome"
+echo "trace-replay smoke ok (sweep on the wire, typed refusal, export)"
 
 echo "== loadgen smoke (self-hosted, ~1s per available io model) =="
 # The load generator self-hosts an ephemeral server, drives a short
